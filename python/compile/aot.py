@@ -1,0 +1,137 @@
+"""AOT lowering: JAX → HLO **text** → `artifacts/*.hlo.txt` + manifest.
+
+Interchange format is HLO text, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+
+# Default shape buckets: small enough that `make artifacts` + the pytest
+# suite stay fast, large enough to exercise the tiled kernels (V spans
+# several TILE_V tiles). `--full` adds the scaled headline bucket.
+DEFAULT_BUCKETS = [
+    # (v_r, vocab, n_docs, dim, tile_v)
+    (8, 2048, 256, 64, 256),
+    (16, 2048, 256, 64, 256),
+    (32, 2048, 256, 64, 256),
+]
+FULL_BUCKETS = [
+    (32, 10240, 512, 300, 512),
+    (64, 10240, 512, 300, 512),
+]
+
+MAX_ITER = 15
+LAMBDA = 10.0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(dims, DTYPE)
+
+
+def lower_solve(v_r, vocab, n_docs, dim, tile_v, use_pallas):
+    def fn(r, qvecs, c, vecs):
+        return model.sinkhorn_wmd(
+            r, qvecs, c, vecs,
+            lam=LAMBDA, n_iter=MAX_ITER, use_pallas=use_pallas, tile_v=tile_v,
+        )
+
+    return jax.jit(fn).lower(
+        spec(v_r), spec(v_r, dim), spec(vocab, n_docs), spec(vocab, dim)
+    )
+
+
+def lower_cdist_factors(v_r, vocab, dim, tile_v, use_pallas):
+    def fn(qvecs, vecs, r):
+        return model.cdist_factors(
+            qvecs, vecs, r, lam=LAMBDA, use_pallas=use_pallas, tile_v=tile_v
+        )
+
+    return jax.jit(fn).lower(spec(v_r, dim), spec(vocab, dim), spec(v_r))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="add the scaled headline bucket")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp path instead of the Pallas kernels")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    buckets = list(DEFAULT_BUCKETS) + (list(FULL_BUCKETS) if args.full else [])
+    entries = []
+
+    for v_r, vocab, n_docs, dim, tile_v in buckets:
+        name = f"sinkhorn_solve_vr{v_r}_v{vocab}_n{n_docs}"
+        fname = f"{name}.hlo.txt"
+        print(f"lowering {name} (pallas={use_pallas}) ...", flush=True)
+        text = to_hlo_text(lower_solve(v_r, vocab, n_docs, dim, tile_v, use_pallas))
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name, "variant": "sinkhorn_solve", "file": fname,
+            "v_r": v_r, "vocab": vocab, "n_docs": n_docs, "dim": dim,
+            "max_iter": MAX_ITER, "lambda": LAMBDA, "pallas": use_pallas,
+            "inputs": [["r", [v_r]], ["qvecs", [v_r, dim]],
+                       ["c", [vocab, n_docs]], ["vecs", [vocab, dim]]],
+            "outputs": [["wmd", [n_docs]]],
+        })
+
+    # One factor-precompute artifact per distinct (vocab, dim): used by the
+    # Rust integration test to cross-check dist::precompute_factors.
+    seen = set()
+    for v_r, vocab, n_docs, dim, tile_v in buckets:
+        key = (vocab, dim)
+        if key in seen:
+            continue
+        seen.add(key)
+        v_r_f = 16 if vocab <= 4096 else 32
+        name = f"cdist_k_vr{v_r_f}_v{vocab}"
+        fname = f"{name}.hlo.txt"
+        print(f"lowering {name} (pallas={use_pallas}) ...", flush=True)
+        text = to_hlo_text(lower_cdist_factors(v_r_f, vocab, dim, tile_v, use_pallas))
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name, "variant": "cdist_k", "file": fname,
+            "v_r": v_r_f, "vocab": vocab, "n_docs": 0, "dim": dim,
+            "max_iter": 0, "lambda": LAMBDA, "pallas": use_pallas,
+            "inputs": [["qvecs", [v_r_f, dim]], ["vecs", [vocab, dim]], ["r", [v_r_f]]],
+            "outputs": [["kt", [vocab, v_r_f]], ["kor_t", [vocab, v_r_f]],
+                        ["km_t", [vocab, v_r_f]]],
+        })
+
+    manifest = {"artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

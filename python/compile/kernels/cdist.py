@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: GEMM-formulated Euclidean distance (paper §6/Fig 7).
+
+TPU adaptation (DESIGN.md §4): the paper blocks the `j` (vocabulary) loop
+for cache; here BlockSpec tiles the vocabulary into VMEM-sized chunks and
+the cross-term `q @ yᵀ` hits the MXU as one matmul per tile — the 3-FLOP
+update becomes matmul + rank-1 epilogue on the VPU.
+
+Always lowered with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Vocabulary rows per program. VMEM estimate per program at w = 300, f64:
+#   y tile   512×300×8  ≈ 1.2 MB
+#   q        64×300×8   ≈ 150 KB
+#   out tile 64×512×8   ≈ 260 KB
+# < 2 MB total — comfortably double-bufferable in 16 MB VMEM.
+TILE_V = 512
+
+
+def _cdist_kernel(q_ref, y_ref, o_ref):
+    q = q_ref[...]  # (v_r, w) — resident across the whole grid
+    y = y_ref[...]  # (TILE_V, w)
+    qn = jnp.sum(q * q, axis=1)[:, None]  # (v_r, 1)
+    yn = jnp.sum(y * y, axis=1)[None, :]  # (1, TILE_V)
+    cross = q @ y.T  # MXU: (v_r, TILE_V)
+    d2 = jnp.maximum(qn + yn - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.sqrt(d2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v",))
+def cdist_pallas(qvecs, vecs, *, tile_v=TILE_V):
+    """Pairwise Euclidean distance (v_r, V) via the tiled Pallas kernel.
+
+    `V` must be divisible by `tile_v` (aot.py picks bucket shapes that
+    are); tests exercise ragged handling by choosing matching tiles.
+    """
+    v_r, w = qvecs.shape
+    v = vecs.shape[0]
+    assert v % tile_v == 0, f"V={v} not a multiple of tile_v={tile_v}"
+    grid = (v // tile_v,)
+    return pl.pallas_call(
+        _cdist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_r, w), lambda i: (0, 0)),  # q: replicated
+            pl.BlockSpec((tile_v, w), lambda i: (i, 0)),  # y: tiled over V
+        ],
+        out_specs=pl.BlockSpec((v_r, tile_v), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((v_r, v), qvecs.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qvecs, vecs)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the L1 kernels and the L2 model.
+
+Every Pallas kernel in this package is validated against these functions
+(`python/tests/test_kernels.py`, hypothesis sweeps) — this file is the
+single source of numerical truth for the build-time stack.
+
+Layouts follow the paper's Python reference (Fig. 2):
+  r      (v_r,)       normalized query masses
+  qvecs  (v_r, w)     query word embeddings (vecs[sel])
+  vecs   (V, w)       vocabulary embeddings
+  c      (V, N)       dense-ified target histograms (zero = absent)
+  M, K   (v_r, V)
+  x, u   (v_r, N)
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def cdist_ref(qvecs, vecs):
+    """Pairwise Euclidean distance, (v_r, V).
+
+    Uses the paper's §6 GEMM decomposition ‖q−y‖² = ‖q‖² + ‖y‖² − 2 q·y
+    (clamped at 0 against cancellation).
+    """
+    qn = jnp.sum(qvecs * qvecs, axis=1)[:, None]
+    yn = jnp.sum(vecs * vecs, axis=1)[None, :]
+    cross = qvecs @ vecs.T
+    d2 = jnp.maximum(qn + yn - 2.0 * cross, 0.0)
+    return jnp.sqrt(d2)
+
+
+def factors_ref(qvecs, vecs, r, lam):
+    """(M, K, K_over_r, KM), each (v_r, V)."""
+    m = cdist_ref(qvecs, vecs)
+    k = jnp.exp(-lam * m)
+    k_over_r = k / r[:, None]
+    km = k * m
+    return m, k, k_over_r, km
+
+
+def sinkhorn_step_ref(k, k_over_r, c, u):
+    """One Sinkhorn iterate: x_new = K_over_r @ (c ⊘ (Kᵀ @ u)).
+
+    `c` is dense with exact zeros at absent words, so the elementwise
+    multiply by `c` zeroes the entries the sparse kernel never touches.
+    """
+    ktu = k.T @ u  # (V, N) — the dense intermediate the paper eliminates
+    v = c / ktu  # zeros propagate: 0 / x = 0
+    return k_over_r @ v
+
+
+def sinkhorn_wmd_ref(r, qvecs, c, vecs, lam, n_iter):
+    """Full Algorithm 1: WMD of the query against every column of c."""
+    _, k, k_over_r, km = factors_ref(qvecs, vecs, r, lam)
+    v_r = r.shape[0]
+    n = c.shape[1]
+    x0 = jnp.full((v_r, n), 1.0 / v_r, dtype=c.dtype)
+
+    def body(_, x):
+        return sinkhorn_step_ref(k, k_over_r, c, 1.0 / x)
+
+    x = lax.fori_loop(0, n_iter, body, x0)
+    u = 1.0 / x
+    v = c / (k.T @ u)
+    wmd = jnp.sum(u * (km @ v), axis=0)
+    return wmd

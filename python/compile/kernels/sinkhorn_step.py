@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the fused Sinkhorn iterate (the paper's SDDMM_SpMM,
+re-thought for TPU — DESIGN.md §4 Hardware-Adaptation).
+
+The CPU paper removes the flops of the dense `Kᵀ@u` because the memory
+system can't feed them; on TPU the MXU gives those flops for free, so the
+win is removing the **HBM round-trip** of the `V×N` intermediate instead.
+The kernel tiles the vocabulary: each program computes its tile of
+`Kᵀu`, masks/divides by the (mostly-zero) `c` tile, and immediately folds
+it into the `K_over_r @ v` accumulator — `Kᵀu` and `v` never leave VMEM.
+
+    x_new = Σ_tiles  K_over_r[:, tile] @ (c[tile, :] ⊘ (K[:, tile]ᵀ @ u))
+
+VMEM per program at (v_r=64, N=512, TILE_V=256, f64):
+  k/kor tiles 2×64×256×8 ≈ 256 KB, c tile 256×512×8 = 1 MB,
+  u + acc 2×64×512×8 ≈ 512 KB → < 2 MB. MXU work per program:
+  two (64×256)×(256×512)-class matmuls — systolic-friendly shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_V = 256
+
+
+def _step_kernel(k_ref, kor_ref, c_ref, u_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    k_tile = k_ref[...]  # (v_r, TILE_V)
+    u = u_ref[...]  # (v_r, N)
+    ktu = k_tile.T @ u  # MXU: (TILE_V, N); strictly positive
+    v = c_ref[...] / ktu  # VPU mask-divide; zeros stay zero
+    o_ref[...] += kor_ref[...] @ v  # MXU: (v_r, N) accumulate in VMEM
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v",))
+def sinkhorn_step_pallas(k, k_over_r, c, u, *, tile_v=TILE_V):
+    """One fused iterate: x_new (v_r, N). `V % tile_v == 0`."""
+    v_r, v = k.shape
+    n = c.shape[1]
+    assert c.shape[0] == v and k_over_r.shape == (v_r, v) and u.shape == (v_r, n)
+    assert v % tile_v == 0, f"V={v} not a multiple of tile_v={tile_v}"
+    grid = (v // tile_v,)
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_r, tile_v), lambda i: (0, i)),  # K columns tile
+            pl.BlockSpec((v_r, tile_v), lambda i: (0, i)),  # K_over_r tile
+            pl.BlockSpec((tile_v, n), lambda i: (i, 0)),  # c rows tile
+            pl.BlockSpec((v_r, n), lambda i: (0, 0)),  # u: replicated
+        ],
+        out_specs=pl.BlockSpec((v_r, n), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((v_r, n), k.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(k, k_over_r, c, u)
+
+
+def _wmd_epilogue_kernel(k_ref, km_ref, c_ref, u_ref, o_ref):
+    """Final reduction tile: wmd += Σ_rows u ⊙ (KM_tile @ v_tile)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...]
+    ktu = k_ref[...].T @ u
+    v = c_ref[...] / ktu
+    kmv = km_ref[...] @ v  # (v_r, N)
+    o_ref[...] += jnp.sum(u * kmv, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v",))
+def wmd_epilogue_pallas(k, km, c, u, *, tile_v=TILE_V):
+    """The type-2 fusion: WMD row vector (1, N) from the final `u`."""
+    v_r, v = k.shape
+    n = c.shape[1]
+    assert v % tile_v == 0
+    grid = (v // tile_v,)
+    out = pl.pallas_call(
+        _wmd_epilogue_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_r, tile_v), lambda i: (0, i)),
+            pl.BlockSpec((v_r, tile_v), lambda i: (0, i)),
+            pl.BlockSpec((tile_v, n), lambda i: (i, 0)),
+            pl.BlockSpec((v_r, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), k.dtype),
+        interpret=True,
+    )(k, km, c, u)
+    return out[0]

@@ -1,0 +1,94 @@
+"""L2 — the JAX Sinkhorn-WMD model (the paper's dense Algorithm 1).
+
+This is the compute graph that `aot.py` lowers to HLO text for the Rust
+runtime. It reproduces the paper's Python baseline (Fig. 2) exactly —
+dense `Kᵀ@u` products and all — and optionally routes the two hot-spots
+through the L1 Pallas kernels (`use_pallas=True`), which fuse the same
+math into VMEM-resident tiles.
+
+Python runs ONCE, at `make artifacts`; the Rust coordinator executes the
+lowered HLO via PJRT on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.cdist import cdist_pallas
+from .kernels.sinkhorn_step import sinkhorn_step_pallas, wmd_epilogue_pallas
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def sinkhorn_wmd(r, qvecs, c, vecs, *, lam, n_iter, use_pallas, tile_v=None):
+    """One-to-many Sinkhorn WMD.
+
+    Args:
+      r:      (v_r,)   normalized query masses (f64).
+      qvecs:  (v_r, w) embeddings of the query words.
+      c:      (V, N)   dense target histograms (columns sum to 1).
+      vecs:   (V, w)   vocabulary embeddings.
+      lam:    entropic regularization strength (positive Python float).
+      n_iter: Sinkhorn iterations (Python int — unrolled into fori_loop).
+      use_pallas: route cdist + iterate through the L1 Pallas kernels.
+      tile_v: vocabulary tile for the Pallas kernels (must divide V).
+
+    Returns: 1-tuple of the WMD vector (N,) — AOT lowers with
+    return_tuple=True, and the Rust side unpacks a 1-tuple.
+    """
+    v_r = r.shape[0]
+    n = c.shape[1]
+    dtype = c.dtype
+
+    if use_pallas:
+        kwargs = {} if tile_v is None else {"tile_v": tile_v}
+        m = cdist_pallas(qvecs, vecs, **kwargs)
+    else:
+        m = ref.cdist_ref(qvecs, vecs)
+
+    # Factors are computed once and closed over by the loop body — XLA
+    # hoists them out of the while loop (verified in test_aot).
+    k = jnp.exp(-lam * m)
+    k_over_r = k / r[:, None]
+    km = k * m
+
+    x0 = jnp.full((v_r, n), 1.0 / v_r, dtype=dtype)
+
+    if use_pallas:
+        kwargs = {} if tile_v is None else {"tile_v": tile_v}
+
+        def body(_, x):
+            return sinkhorn_step_pallas(k, k_over_r, c, 1.0 / x, **kwargs)
+
+        x = lax.fori_loop(0, n_iter, body, x0)
+        wmd = wmd_epilogue_pallas(k, km, c, 1.0 / x, **kwargs)
+    else:
+
+        def body(_, x):
+            return ref.sinkhorn_step_ref(k, k_over_r, c, 1.0 / x)
+
+        x = lax.fori_loop(0, n_iter, body, x0)
+        u = 1.0 / x
+        v = c / (k.T @ u)
+        wmd = jnp.sum(u * (km @ v), axis=0)
+
+    return (wmd,)
+
+
+def cdist_factors(qvecs, vecs, r, *, lam, use_pallas, tile_v=None):
+    """The per-query factor precompute, transposed to the Rust layout.
+
+    Returns (Kᵀ, K_over_rᵀ, (K⊙M)ᵀ), each (V, v_r) — directly comparable
+    with `dist::precompute_factors` on the Rust side (integration test
+    `rust/tests/runtime_artifacts.rs`).
+    """
+    if use_pallas:
+        kwargs = {} if tile_v is None else {"tile_v": tile_v}
+        m = cdist_pallas(qvecs, vecs, **kwargs)
+    else:
+        m = ref.cdist_ref(qvecs, vecs)
+    k = jnp.exp(-lam * m)
+    k_over_r = k / r[:, None]
+    km = k * m
+    return (k.T, k_over_r.T, km.T)

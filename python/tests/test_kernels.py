@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle
+(`ref.py`), with hypothesis sweeps over shapes and dtypes — the CORE
+correctness signal of the build-time stack."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cdist import cdist_pallas
+from compile.kernels.sinkhorn_step import sinkhorn_step_pallas, wmd_epilogue_pallas
+
+
+def rand(rng, *shape, dtype=np.float64, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(dtype))
+
+
+def make_sparse_c(rng, v, n, nnz_per_col, dtype=np.float64):
+    """Column-normalized histogram matrix with exact zeros elsewhere."""
+    c = np.zeros((v, n), dtype=dtype)
+    for j in range(n):
+        rows = rng.choice(v, size=nnz_per_col, replace=False)
+        vals = rng.uniform(0.2, 1.0, size=nnz_per_col)
+        c[rows, j] = vals / vals.sum()
+    return jnp.asarray(c)
+
+
+# ---------------------------------------------------------------- cdist
+
+@settings(max_examples=20, deadline=None)
+@given(
+    v_r=st.integers(1, 24),
+    tiles=st.integers(1, 4),
+    tile_v=st.sampled_from([8, 32, 128]),
+    w=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cdist_pallas_matches_ref(v_r, tiles, tile_v, w, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, v_r, w)
+    y = rand(rng, tiles * tile_v, w)
+    got = cdist_pallas(q, y, tile_v=tile_v)
+    want = ref.cdist_ref(q, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_cdist_pallas_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = rand(rng, 5, 16, dtype=dtype)
+    y = rand(rng, 64, 16, dtype=dtype)
+    got = cdist_pallas(q, y, tile_v=32)
+    assert got.dtype == dtype
+    want = ref.cdist_ref(q, y)
+    tol = 1e-5 if dtype == np.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_cdist_self_distance_zero():
+    rng = np.random.default_rng(1)
+    y = rand(rng, 32, 8)
+    q = y[:4]
+    d = np.asarray(cdist_pallas(q, y, tile_v=32))
+    for i in range(4):
+        assert d[i, i] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_cdist_rejects_ragged_vocab():
+    rng = np.random.default_rng(2)
+    with pytest.raises(AssertionError):
+        cdist_pallas(rand(rng, 3, 4), rand(rng, 100, 4), tile_v=64)
+
+
+# --------------------------------------------------------- sinkhorn step
+
+@settings(max_examples=15, deadline=None)
+@given(
+    v_r=st.integers(1, 16),
+    tiles=st.integers(1, 3),
+    tile_v=st.sampled_from([16, 64]),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_pallas_matches_ref(v_r, tiles, tile_v, n, seed):
+    rng = np.random.default_rng(seed)
+    v = tiles * tile_v
+    k = rand(rng, v_r, v, lo=0.05, hi=1.0)
+    kor = rand(rng, v_r, v, lo=0.05, hi=2.0)
+    c = make_sparse_c(rng, v, n, nnz_per_col=min(3, v))
+    u = rand(rng, v_r, n, lo=0.1, hi=5.0)
+    got = sinkhorn_step_pallas(k, kor, c, u, tile_v=tile_v)
+    want = ref.sinkhorn_step_ref(k, kor, c, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-12)
+
+
+def test_step_zero_c_gives_zero_x():
+    rng = np.random.default_rng(3)
+    v_r, v, n = 4, 64, 6
+    k = rand(rng, v_r, v, lo=0.1, hi=1.0)
+    kor = rand(rng, v_r, v, lo=0.1, hi=1.0)
+    c = jnp.zeros((v, n), dtype=jnp.float64)
+    u = rand(rng, v_r, n, lo=0.5, hi=1.0)
+    got = np.asarray(sinkhorn_step_pallas(k, kor, c, u, tile_v=32))
+    np.testing.assert_array_equal(got, np.zeros((v_r, n)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v_r=st.integers(1, 12),
+    tiles=st.integers(1, 3),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_epilogue_matches_ref(v_r, tiles, n, seed):
+    tile_v = 32
+    rng = np.random.default_rng(seed)
+    v = tiles * tile_v
+    k = rand(rng, v_r, v, lo=0.05, hi=1.0)
+    km = rand(rng, v_r, v, lo=0.0, hi=3.0)
+    c = make_sparse_c(rng, v, n, nnz_per_col=min(4, v))
+    u = rand(rng, v_r, n, lo=0.1, hi=5.0)
+    got = wmd_epilogue_pallas(k, km, c, u, tile_v=tile_v)
+    vmat = c / (k.T @ u)
+    want = jnp.sum(u * (km @ vmat), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-12)

@@ -1,0 +1,109 @@
+"""L2 model correctness: the full JAX solve (pallas and jnp paths) vs an
+independent NumPy implementation of Algorithm 1, plus invariants."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def numpy_sinkhorn(r, qvecs, c, vecs, lam, n_iter):
+    """Independent NumPy port of the paper's Fig. 2 (no jax)."""
+    m = np.sqrt(
+        np.maximum(
+            (qvecs**2).sum(1)[:, None] + (vecs**2).sum(1)[None, :] - 2.0 * qvecs @ vecs.T,
+            0.0,
+        )
+    )
+    k = np.exp(-lam * m)
+    k_over_r = k / r[:, None]
+    km = k * m
+    v_r, n = r.shape[0], c.shape[1]
+    x = np.full((v_r, n), 1.0 / v_r)
+    for _ in range(n_iter):
+        u = 1.0 / x
+        v = c / (k.T @ u)
+        x = k_over_r @ v
+    u = 1.0 / x
+    v = c / (k.T @ u)
+    return (u * (km @ v)).sum(axis=0)
+
+
+def make_case(seed, v_r=6, v=128, n=10, w=16, nnz=4):
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0.5, 1.5, v_r)
+    r /= r.sum()
+    vecs = rng.normal(0, 0.4, (v, w))
+    qidx = rng.choice(v, v_r, replace=False)
+    qvecs = vecs[qidx]
+    c = np.zeros((v, n))
+    for j in range(n):
+        rows = rng.choice(v, nnz, replace=False)
+        vals = rng.uniform(0.2, 1.0, nnz)
+        c[rows, j] = vals / vals.sum()
+    return r, qvecs, c, vecs
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_model_matches_numpy(use_pallas):
+    r, qvecs, c, vecs = make_case(0)
+    want = numpy_sinkhorn(r, qvecs, c, vecs, lam=8.0, n_iter=12)
+    (got,) = model.sinkhorn_wmd(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs),
+        lam=8.0, n_iter=12, use_pallas=use_pallas, tile_v=32,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-9, atol=1e-12)
+
+
+def test_pallas_and_jnp_paths_agree():
+    r, qvecs, c, vecs = make_case(1, v=256)
+    args = [jnp.asarray(a) for a in (r, qvecs, c, vecs)]
+    (a,) = model.sinkhorn_wmd(*args, lam=10.0, n_iter=15, use_pallas=True, tile_v=64)
+    (b,) = model.sinkhorn_wmd(*args, lam=10.0, n_iter=15, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-12)
+
+
+def test_wmd_nonnegative_and_finite():
+    r, qvecs, c, vecs = make_case(2)
+    (got,) = model.sinkhorn_wmd(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs),
+        lam=8.0, n_iter=20, use_pallas=False,
+    )
+    got = np.asarray(got)
+    assert np.all(np.isfinite(got))
+    assert np.all(got >= 0.0)
+
+
+def test_identical_doc_has_smallest_wmd():
+    # Target 0 is the query itself: its WMD must be the minimum.
+    r, qvecs, c, vecs = make_case(3, v_r=5, nnz=5)
+    rng = np.random.default_rng(33)
+    qidx = rng.choice(vecs.shape[0], 5, replace=False)
+    qvecs = vecs[qidx]
+    c[:, 0] = 0.0
+    c[qidx, 0] = r
+    (got,) = model.sinkhorn_wmd(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs),
+        lam=20.0, n_iter=200, use_pallas=False,
+    )
+    got = np.asarray(got)
+    assert got.argmin() == 0, f"self-doc not closest: {got}"
+
+
+def test_cdist_factors_layouts():
+    r, qvecs, c, vecs = make_case(4, v=64)
+    kt, kor_t, km_t = model.cdist_factors(
+        jnp.asarray(qvecs), jnp.asarray(vecs), jnp.asarray(r),
+        lam=8.0, use_pallas=True, tile_v=32,
+    )
+    v, v_r = vecs.shape[0], r.shape[0]
+    assert kt.shape == (v, v_r) == kor_t.shape == km_t.shape
+    # Definitions hold: kor = kt / r, km = kt * M.
+    np.testing.assert_allclose(np.asarray(kor_t), np.asarray(kt) / r[None, :], rtol=1e-12)
+    m_t = -np.log(np.maximum(np.asarray(kt), 1e-300)) / 8.0
+    np.testing.assert_allclose(np.asarray(km_t), np.asarray(kt) * m_t, rtol=1e-9, atol=1e-12)

@@ -1,0 +1,105 @@
+"""Property tests on the pure-jnp oracle itself (`ref.py`) — the ground
+truth everything else is compared against deserves its own invariants."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def case(seed, v_r, v, n, w, nnz):
+    rng = np.random.default_rng(seed)
+    r = rng.uniform(0.5, 1.5, v_r)
+    r /= r.sum()
+    vecs = rng.normal(0, 0.4, (v, w))
+    qidx = rng.choice(v, v_r, replace=False)
+    c = np.zeros((v, n))
+    for j in range(n):
+        rows = rng.choice(v, nnz, replace=False)
+        vals = rng.uniform(0.2, 1.0, nnz)
+        c[rows, j] = vals / vals.sum()
+    return r, vecs[qidx], c, vecs
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    v_r=st.integers(2, 8),
+    n=st.integers(1, 8),
+)
+def test_wmd_nonnegative_finite(seed, v_r, n):
+    r, qvecs, c, vecs = case(seed, v_r, 64, n, 8, 3)
+    wmd = np.asarray(ref.sinkhorn_wmd_ref(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs),
+        lam=8.0, n_iter=30,
+    ))
+    assert np.all(np.isfinite(wmd))
+    assert np.all(wmd >= -1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_wmd_permutation_equivariant(seed):
+    r, qvecs, c, vecs = case(seed, 4, 48, 6, 8, 3)
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(6)
+    args = dict(lam=8.0, n_iter=25)
+    a = np.asarray(ref.sinkhorn_wmd_ref(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs), **args))
+    b = np.asarray(ref.sinkhorn_wmd_ref(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c[:, perm]), jnp.asarray(vecs), **args))
+    np.testing.assert_allclose(a[perm], b, rtol=1e-10, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.5, 3.0))
+def test_wmd_scales_linearly_with_embedding_scale(seed, scale):
+    # Scaling all embeddings by s scales every pairwise distance — and for
+    # λ' = λ/s the transport plan is identical, so WMD scales by s.
+    r, qvecs, c, vecs = case(seed, 4, 48, 4, 8, 3)
+    lam = 6.0
+    a = np.asarray(ref.sinkhorn_wmd_ref(
+        jnp.asarray(r), jnp.asarray(qvecs), jnp.asarray(c), jnp.asarray(vecs),
+        lam=lam, n_iter=40,
+    ))
+    b = np.asarray(ref.sinkhorn_wmd_ref(
+        jnp.asarray(r), jnp.asarray(qvecs * scale), jnp.asarray(c),
+        jnp.asarray(vecs * scale), lam=lam / scale, n_iter=40,
+    ))
+    np.testing.assert_allclose(b, a * scale, rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_cdist_ref_metric_axioms(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (6, 10))
+    d = np.asarray(ref.cdist_ref(jnp.asarray(x), jnp.asarray(x)))
+    # Symmetry + zero diagonal + triangle inequality.
+    np.testing.assert_allclose(d, d.T, atol=1e-10)
+    assert np.allclose(np.diag(d), 0.0, atol=1e-7)
+    for i in range(6):
+        for j in range(6):
+            for k in range(6):
+                assert d[i, j] <= d[i, k] + d[k, j] + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_step_ref_preserves_column_independence(seed):
+    # Each target column's iterate depends only on its own column of c —
+    # the property the coordinator's sharding relies on.
+    r, qvecs, c, vecs = case(seed, 4, 48, 5, 8, 3)
+    _, k, k_over_r, _ = ref.factors_ref(
+        jnp.asarray(qvecs), jnp.asarray(vecs), jnp.asarray(r), 8.0)
+    u = jnp.asarray(np.random.default_rng(seed).uniform(0.5, 2.0, (4, 5)))
+    full = np.asarray(ref.sinkhorn_step_ref(k, k_over_r, jnp.asarray(c), u))
+    for j in range(5):
+        single = np.asarray(ref.sinkhorn_step_ref(
+            k, k_over_r, jnp.asarray(c[:, j:j + 1]), u[:, j:j + 1]))
+        np.testing.assert_allclose(full[:, j:j + 1], single, rtol=1e-12)

@@ -1,0 +1,66 @@
+//! Ablation (paper §4, "benefits of SDDMM_SpMM"): fused vs unfused
+//! kernels, and the atomic vs privatized scatter. The paper claims fusion
+//! (1) avoids a second CSR traversal and (2) keeps SDDMM outputs out of
+//! memory; this bench quantifies both on the iterate hot loop.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{IterateKernel, SinkhornConfig, SparseSolver};
+
+fn main() {
+    let corpus = common::eval_corpus();
+    common::header(
+        "ablation_fusion",
+        "§4 — SDDMM_SpMM fusion vs unfused; atomic vs privatized scatter",
+    );
+    let query = corpus.queries.iter().max_by_key(|q| q.nnz()).unwrap();
+    println!(
+        "workload: v_r={} V={} N={} nnz={}\n",
+        query.nnz(),
+        corpus.vocab_size(),
+        corpus.num_docs(),
+        corpus.c.nnz()
+    );
+    let settings = common::settings();
+    let kernels = [
+        ("fused + atomic scatter (paper Fig. 4)", IterateKernel::FusedAtomic),
+        ("fused + private buffers", IterateKernel::FusedPrivate),
+        ("fused + transposed pattern", IterateKernel::FusedTransposed),
+        ("unfused SDDMM→SpMM (pre-fusion)", IterateKernel::Unfused),
+    ];
+
+    let mut table = Table::new([
+        "threads", "fused atomic", "fused private", "fused transposed", "unfused", "fusion win",
+    ]);
+    for &p in &common::thread_sweep() {
+        let pool = Pool::new(p);
+        let mut means = Vec::new();
+        for (_, kernel) in &kernels {
+            let solver = SparseSolver::new(SinkhornConfig {
+                lambda: 10.0,
+                max_iter: 16,
+                tolerance: 0.0,
+                kernel: *kernel,
+                ..Default::default()
+            });
+            let prep = solver.prepare(&corpus.embeddings, query, &pool);
+            let r = bench_fn("solve", &settings, || solver.solve(&prep, &corpus.c, &pool));
+            means.push(r.mean_secs());
+        }
+        let best_fused = means[0].min(means[1]).min(means[2]);
+        table.row([
+            p.to_string(),
+            format!("{:.1} ms", means[0] * 1e3),
+            format!("{:.1} ms", means[1] * 1e3),
+            format!("{:.1} ms", means[2] * 1e3),
+            format!("{:.1} ms", means[3] * 1e3),
+            format!("{:.2}x", means[3] / best_fused),
+        ]);
+    }
+    table.print();
+    println!("\nfusion win = unfused / best fused (paper's claim: fusion avoids the second CSR pass");
+    println!("and the materialized SDDMM output)");
+}

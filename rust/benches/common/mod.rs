@@ -1,0 +1,77 @@
+//! Shared bench scaffolding: scale selection, corpus construction, thread
+//! sweeps, and the standard header (paper Table 3 analogue).
+#![allow(dead_code)]
+
+use sinkhorn_wmd::bench::{BenchSettings, SysInfo};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::util::num_cpus;
+
+/// Bench scale, from `WMD_BENCH_SCALE` (quick | default | paper).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scale {
+    Quick,
+    Default,
+    Paper,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("WMD_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::Quick,
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Default,
+    }
+}
+
+pub fn settings() -> BenchSettings {
+    match scale() {
+        Scale::Quick => BenchSettings::quick(),
+        _ => BenchSettings {
+            warmup: std::time::Duration::from_millis(300),
+            measure: std::time::Duration::from_secs(2),
+            min_samples: 3,
+            max_samples: 60,
+        },
+    }
+}
+
+/// The paper's evaluation workload, scaled.
+/// (paper: V = 100 000, N = 5 000, w = 300, queries 19–43 words)
+pub fn eval_corpus() -> SyntheticCorpus {
+    let (v, n, w) = match scale() {
+        Scale::Quick => (4_000, 400, 64),
+        Scale::Default => (20_000, 2_000, 300),
+        Scale::Paper => (100_000, 5_000, 300),
+    };
+    SyntheticCorpus::builder()
+        .vocab_size(v)
+        .num_docs(n)
+        .embedding_dim(w)
+        .n_topics(8)
+        .num_queries(10)
+        .query_words(19, 43)
+        .seed(42)
+        .build()
+}
+
+/// Thread counts to sweep: 1, 2, 4, ..., plus the exact CPU count.
+pub fn thread_sweep() -> Vec<usize> {
+    let max = num_cpus();
+    let mut ts = vec![1usize];
+    while ts.last().unwrap() * 2 <= max {
+        ts.push(ts.last().unwrap() * 2);
+    }
+    if *ts.last().unwrap() != max {
+        ts.push(max);
+    }
+    ts
+}
+
+pub fn header(bench: &str, paper_ref: &str) {
+    println!("================================================================");
+    println!("bench: {bench}");
+    println!("reproduces: {paper_ref}");
+    println!("scale: {:?} (set WMD_BENCH_SCALE=quick|paper to change)", scale());
+    println!("================================================================");
+    SysInfo::capture().table().print();
+    println!();
+}

@@ -1,0 +1,90 @@
+//! Figure 6 — strong scaling over **multiple source documents** run
+//! back-to-back (the paper's 10 dbpedia queries, v_r ∈ [19, 43]),
+//! including the cold-miss effect on the first query (the paper's
+//! v_r = 31 anomaly: "it was the very first source/query file in the
+//! input list and had affected by the cold misses").
+//!
+//! Like fig5, multi-socket speedups come from the calibrated scaling
+//! model (hardware substitution, DESIGN.md §3) driven by each query's
+//! real measured t1; the cold-start penalty is measured for real.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::Table;
+use sinkhorn_wmd::parallel::simulator::{simulate, KernelProfile, Topology};
+use sinkhorn_wmd::parallel::{balanced_nnz_partition, Pool};
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use std::time::Instant;
+
+fn main() {
+    let corpus = common::eval_corpus();
+    common::header(
+        "fig6_multi_source",
+        "Figure 6 — strong scaling on 10 source docs (v_r 19..43), incl. cold-start",
+    );
+    let config = SinkhornConfig { lambda: 10.0, max_iter: 32, tolerance: 0.0, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(1);
+
+    // Cold-start pass (paper's v_r=31 effect): the very first query pays
+    // the cold caches/page faults; repeat passes don't.
+    let mut cold = Vec::new();
+    for q in &corpus.queries {
+        let t0 = Instant::now();
+        let prep = solver.prepare(&corpus.embeddings, q, &pool);
+        let _ = solver.solve(&prep, &corpus.c, &pool);
+        cold.push(t0.elapsed().as_secs_f64());
+    }
+    // Warm best-of-3.
+    let mut warm = vec![f64::INFINITY; corpus.queries.len()];
+    for _ in 0..3 {
+        for (i, q) in corpus.queries.iter().enumerate() {
+            let t0 = Instant::now();
+            let prep = solver.prepare(&corpus.embeddings, q, &pool);
+            let _ = solver.solve(&prep, &corpus.c, &pool);
+            warm[i] = warm[i].min(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    // Barrier calibration.
+    let r_barrier = sinkhorn_wmd::bench::bench_fn("barrier", &common::settings(), || {
+        pool.run(|_, _| {})
+    });
+
+    // Modeled speedups per query on CLX0 (56c) and CLX1 (96c).
+    let clx0 = Topology::clx0();
+    let clx1 = Topology::clx1();
+    let mut table = Table::new([
+        "query", "v_r", "t1 warm", "cold penalty",
+        "56c speedup (CLX0 model)", "96c speedup (CLX1 model)",
+    ]);
+    for (i, q) in corpus.queries.iter().enumerate() {
+        let profile = KernelProfile {
+            t1: warm[i],
+            mem_fraction: 0.55,
+            barrier_cost: r_barrier.mean_secs(),
+            invocations: config.max_iter,
+        };
+        let shares = |p: usize| -> Vec<f64> {
+            balanced_nnz_partition(corpus.c.row_ptr(), p)
+                .iter()
+                .map(|r| r.len() as f64)
+                .collect()
+        };
+        let s56 = simulate(&profile, &clx0, &[56], shares)[0].speedup;
+        let s96 = simulate(&profile, &clx1, &[96], shares)[0].speedup;
+        table.row([
+            i.to_string(),
+            q.nnz().to_string(),
+            format!("{:.1} ms", warm[i] * 1e3),
+            format!("{:.2}x", cold[i] / warm[i]),
+            format!("{s56:.1}x"),
+            format!("{s96:.1}x"),
+        ]);
+    }
+    table.print();
+    println!("\npaper reference: best 38x/56c (v_r=38, CLX0) and 67x/96c (v_r=37, CLX1);");
+    println!("the first input file is the cold-miss outlier — here the 'cold penalty' column");
+    println!("shows the same effect concentrated on query 0.");
+}

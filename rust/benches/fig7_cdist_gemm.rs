@@ -1,0 +1,52 @@
+//! Figure 7 — dot-product vs GEMM-type Euclidean distance (paper §6):
+//! restructuring the cdist into a blocked matmul-like kernel with the
+//! ‖q‖²+‖y‖²−2q·y decomposition. Paper: "almost no difference till 8
+//! cores and after that a slight improvement" (the query block is tall
+//! and skinny, which limits the win).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::dist::{cdist_gemm, cdist_naive};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sparse::Dense;
+
+fn main() {
+    let corpus = common::eval_corpus();
+    common::header(
+        "fig7_cdist_gemm",
+        "Figure 7 — Euclidean distance: dot-product vs blocked GEMM formulation",
+    );
+    let settings = common::settings();
+    let v = corpus.vocab_size();
+    let w = corpus.embeddings.ncols();
+
+    for &v_r in &[19usize, 43] {
+        println!("-- v_r = {v_r}, V = {v}, w = {w} --");
+        let mut query = Dense::zeros(v_r, w);
+        for k in 0..v_r {
+            query.row_mut(k).copy_from_slice(corpus.embeddings.row(k * 37 + 5));
+        }
+        let mut table = Table::new(["threads", "dot-product", "GEMM-type", "GEMM speedup"]);
+        for &p in &common::thread_sweep() {
+            let pool = Pool::new(p);
+            let mut out = Dense::zeros(v, v_r);
+            let r_naive = bench_fn("naive", &settings, || {
+                cdist_naive(&query, &corpus.embeddings, &mut out, &pool)
+            });
+            let r_gemm = bench_fn("gemm", &settings, || {
+                cdist_gemm(&query, &corpus.embeddings, &mut out, &pool)
+            });
+            table.row([
+                p.to_string(),
+                format!("{:.2} ms", r_naive.mean_secs() * 1e3),
+                format!("{:.2} ms", r_gemm.mean_secs() * 1e3),
+                format!("{:.2}x", r_naive.mean_secs() / r_gemm.mean_secs()),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+    println!("paper reference: no difference ≤ 8 cores, slight GEMM win beyond (tall-skinny limit)");
+}

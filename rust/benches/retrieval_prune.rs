@@ -1,0 +1,70 @@
+//! Retrieval ablation — the §2-cited Kusner pruning pipeline
+//! (WCD prefetch ordering + RWMD lower-bound pruning) vs brute-force
+//! one-to-many Sinkhorn for exact top-k retrieval.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::prune::{centroids, PrunedRetrieval};
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+
+fn main() {
+    common::header(
+        "retrieval_prune",
+        "§2 — pruned top-k retrieval (WCD + RWMD bounds) vs brute force",
+    );
+    // Retrieval favors many short docs; independent of the eval corpus.
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(8_000)
+        .num_docs(800)
+        .embedding_dim(64)
+        .n_topics(10)
+        .tokens_per_doc(16)
+        .num_queries(3)
+        .query_words(8, 16)
+        .seed(606)
+        .build();
+    let pool = Pool::new(sinkhorn_wmd::util::num_cpus());
+    let config = SinkhornConfig {
+        lambda: 15.0,
+        max_iter: 200,
+        tolerance: 1e-6,
+        ..Default::default()
+    };
+    let settings = common::settings();
+    let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+
+    let mut table = Table::new([
+        "query", "v_r", "k", "brute force", "pruned", "speedup", "exact evals", "pruned docs",
+    ]);
+    for (qi, query) in corpus.queries.iter().enumerate() {
+        for &k in &[1usize, 10] {
+            let solver = SparseSolver::new(config);
+            let r_brute = bench_fn("brute", &settings, || {
+                solver.wmd_one_to_many(&corpus.embeddings, query, &corpus.c, &pool).top_k(k)
+            });
+            let retrieval = PrunedRetrieval::new(config, k);
+            let r_pruned = bench_fn("pruned", &settings, || {
+                retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool)
+            });
+            let stats =
+                retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool).stats;
+            table.row([
+                qi.to_string(),
+                query.nnz().to_string(),
+                k.to_string(),
+                format!("{:.1} ms", r_brute.mean_secs() * 1e3),
+                format!("{:.1} ms", r_pruned.mean_secs() * 1e3),
+                format!("{:.2}x", r_brute.mean_secs() / r_pruned.mean_secs()),
+                format!("{}/{}", stats.exact_evals, stats.total_docs),
+                stats.pruned_by_rwmd.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nKusner et al.'s prefetch-and-prune: the bounds keep exact evaluations to a");
+    println!("fraction of the corpus while returning the exact Sinkhorn top-k (verified in tests).");
+}

@@ -1,0 +1,115 @@
+//! Table 2 — the asymptotic cost model:
+//!
+//!   1-to-N WMD total: O( V·v_r·w / p  +  t · nnz·v_r / p )
+//!                      └── prepare ──┘   └── iterate ───┘
+//!
+//! Empirically validated by sweeping each variable and fitting the
+//! two-term model by least squares; the fit's R² and the per-term
+//! linearity are the reproduced result.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::util::stats::least_squares;
+
+fn corpus(v: usize, n: usize, w: usize, vr: usize) -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(v)
+        .num_docs(n)
+        .embedding_dim(w)
+        .num_queries(1)
+        .query_words(vr, vr)
+        .seed(77)
+        .build()
+}
+
+fn main() {
+    common::header(
+        "table2_asymptotics",
+        "Table 2 — asymptotic cost O(V·v_r·w/p + t·nnz·v_r/p), empirical fit",
+    );
+    let quick = common::scale() == common::Scale::Quick;
+    let settings = common::settings();
+    let p = 4.min(sinkhorn_wmd::util::num_cpus());
+    let pool = Pool::new(p);
+    let t_iter = 16usize;
+    let config =
+        SinkhornConfig { lambda: 10.0, max_iter: t_iter, tolerance: 0.0, ..Default::default() };
+    let solver = SparseSolver::new(config);
+
+    // Sweep grid.
+    let vs: &[usize] = if quick { &[2_000, 4_000] } else { &[4_000, 8_000, 16_000] };
+    let ns: &[usize] = if quick { &[200, 400] } else { &[500, 1_000, 2_000] };
+    let vrs: &[usize] = &[8, 16, 32];
+    let w = if quick { 64 } else { 300 };
+
+    let mut feats: Vec<Vec<f64>> = Vec::new();
+    let mut prep_times = Vec::new();
+    let mut iter_times = Vec::new();
+    let mut table = Table::new(["V", "N", "v_r", "nnz", "prepare", "solve (t=16)"]);
+    for &v in vs {
+        for &n in ns {
+            for &vr in vrs {
+                let c = corpus(v, n, w, vr);
+                let q = &c.queries[0];
+                let r_prep =
+                    bench_fn("prep", &settings, || solver.prepare(&c.embeddings, q, &pool));
+                let prep = solver.prepare(&c.embeddings, q, &pool);
+                let r_solve =
+                    bench_fn("solve", &settings, || solver.solve(&prep, &c.c, &pool));
+                table.row([
+                    v.to_string(),
+                    n.to_string(),
+                    vr.to_string(),
+                    c.c.nnz().to_string(),
+                    format!("{:.2} ms", r_prep.mean_secs() * 1e3),
+                    format!("{:.2} ms", r_solve.mean_secs() * 1e3),
+                ]);
+                feats.push(vec![
+                    (v * vr * w) as f64 / p as f64,          // prepare term
+                    (t_iter * c.c.nnz() * vr) as f64 / p as f64, // iterate term
+                ]);
+                prep_times.push(r_prep.mean_secs());
+                iter_times.push(r_solve.mean_secs());
+            }
+        }
+    }
+    table.print();
+
+    // Fit each phase against its own model term.
+    let prep_feats: Vec<Vec<f64>> = feats.iter().map(|f| vec![f[0]]).collect();
+    let beta_prep = least_squares(&prep_feats, &prep_times);
+    let iter_feats: Vec<Vec<f64>> = feats.iter().map(|f| vec![f[1]]).collect();
+    let beta_iter = least_squares(&iter_feats, &iter_times);
+    let r2 = |feats: &[Vec<f64>], beta: &[f64], ys: &[f64]| {
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let ss_tot: f64 = ys.iter().map(|y| (y - mean).powi(2)).sum();
+        let ss_res: f64 = feats
+            .iter()
+            .zip(ys)
+            .map(|(f, y)| {
+                let pred: f64 = f.iter().zip(beta).map(|(x, b)| x * b).sum();
+                (y - pred).powi(2)
+            })
+            .sum();
+        1.0 - ss_res / ss_tot
+    };
+    let r2_prep = r2(&prep_feats, &beta_prep, &prep_times);
+    let r2_iter = r2(&iter_feats, &beta_iter, &iter_times);
+    println!("\nmodel fit (through origin):");
+    println!(
+        "  prepare ≈ {:.3e} · (V·v_r·w/p)      R² = {r2_prep:.4}",
+        beta_prep[0]
+    );
+    println!(
+        "  solve   ≈ {:.3e} · (t·nnz·v_r/p)    R² = {r2_iter:.4}",
+        beta_iter[0]
+    );
+    println!("\nTable 2 holds when both R² ≈ 1: each phase is linear in its model term.");
+    assert!(r2_prep > 0.8, "prepare phase deviates from O(V·v_r·w/p): R²={r2_prep}");
+    assert!(r2_iter > 0.8, "iterate phase deviates from O(t·nnz·v_r/p): R²={r2_iter}");
+}

@@ -1,0 +1,11 @@
+//! Bench-harness substrate (criterion is unavailable offline): warmup,
+//! adaptive iteration counts, summary statistics, markdown table output,
+//! and the host-spec capture that regenerates the paper's Table 3.
+
+pub mod runner;
+pub mod sysinfo;
+pub mod table;
+
+pub use runner::{bench_fn, BenchResult, BenchSettings};
+pub use sysinfo::SysInfo;
+pub use table::Table;

@@ -1,0 +1,130 @@
+//! Adaptive micro/macro benchmark runner.
+
+use crate::util::stats::Summary;
+use crate::util::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// Runner settings. Defaults suit the end-to-end solver benches; kernels
+/// with sub-millisecond runtimes get more samples automatically.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSettings {
+    /// Warmup time before measurement.
+    pub warmup: Duration,
+    /// Target measurement time (the runner packs as many samples as fit).
+    pub measure: Duration,
+    /// Lower/upper bounds on the number of recorded samples.
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchSettings {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_samples: 3,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchSettings {
+    /// Faster settings for CI-style smoke benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_samples: 2,
+            max_samples: 50,
+        }
+    }
+}
+
+/// A named measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_duration(self.summary.mean),
+            fmt_duration(self.summary.p50),
+            fmt_duration(self.summary.p95),
+            self.summary.n
+        )
+    }
+}
+
+/// Measure `f`, which performs one complete unit of work per call.
+/// The closure's return value is black-boxed to prevent dead-code
+/// elimination.
+pub fn bench_fn<T>(name: &str, settings: &BenchSettings, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < settings.warmup {
+        black_box(f());
+    }
+    // Measurement.
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < settings.measure && samples.len() < settings.max_samples)
+        || samples.len() < settings.min_samples
+    {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::from_samples(&samples) }
+}
+
+/// Opaque value barrier (std::hint::black_box stabilized in 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_work() {
+        let settings = BenchSettings {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 1000,
+        };
+        let r = bench_fn("spin", &settings, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.n >= 3);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.min <= r.summary.p50 && r.summary.p50 <= r.summary.max);
+    }
+
+    #[test]
+    fn respects_min_samples_for_slow_fn() {
+        let settings = BenchSettings {
+            warmup: Duration::ZERO,
+            measure: Duration::from_millis(1),
+            min_samples: 3,
+            max_samples: 10,
+        };
+        let r = bench_fn("sleepy", &settings, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.summary.n >= 3);
+    }
+}

@@ -1,0 +1,100 @@
+//! Host capture — regenerates the paper's Table 3 (system specifications)
+//! for the machine the benches actually ran on.
+
+use crate::util::num_cpus;
+
+/// Machine description parsed from `/proc` (Linux) with graceful fallback.
+#[derive(Clone, Debug, Default)]
+pub struct SysInfo {
+    pub model_name: String,
+    pub logical_cpus: usize,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    pub mem_total_kb: u64,
+    pub cache_sizes: Vec<(String, String)>,
+}
+
+impl SysInfo {
+    pub fn capture() -> Self {
+        let mut info = SysInfo { logical_cpus: num_cpus(), ..Default::default() };
+        if let Ok(cpuinfo) = std::fs::read_to_string("/proc/cpuinfo") {
+            let mut physical_ids = std::collections::HashSet::new();
+            let mut cores = None;
+            for line in cpuinfo.lines() {
+                let mut parts = line.splitn(2, ':');
+                let key = parts.next().unwrap_or("").trim();
+                let val = parts.next().unwrap_or("").trim();
+                match key {
+                    "model name" if info.model_name.is_empty() => info.model_name = val.to_string(),
+                    "physical id" => {
+                        physical_ids.insert(val.to_string());
+                    }
+                    "cpu cores" if cores.is_none() => cores = val.parse::<usize>().ok(),
+                    _ => {}
+                }
+            }
+            info.sockets = physical_ids.len().max(1);
+            info.cores_per_socket = cores.unwrap_or(info.logical_cpus / info.sockets.max(1));
+        }
+        if let Ok(meminfo) = std::fs::read_to_string("/proc/meminfo") {
+            for line in meminfo.lines() {
+                if let Some(rest) = line.strip_prefix("MemTotal:") {
+                    info.mem_total_kb = rest
+                        .trim()
+                        .trim_end_matches(" kB")
+                        .trim()
+                        .parse()
+                        .unwrap_or(0);
+                    break;
+                }
+            }
+        }
+        // Cache sizes from sysfs (index0.. on cpu0).
+        for idx in 0..5 {
+            let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+            let level = std::fs::read_to_string(format!("{base}/level")).ok();
+            let size = std::fs::read_to_string(format!("{base}/size")).ok();
+            let ctype = std::fs::read_to_string(format!("{base}/type")).ok();
+            if let (Some(level), Some(size)) = (level, size) {
+                let suffix = match ctype.as_deref().map(str::trim) {
+                    Some("Data") => "d",
+                    Some("Instruction") => "i",
+                    _ => "",
+                };
+                info.cache_sizes
+                    .push((format!("L{}{suffix}", level.trim()), size.trim().to_string()));
+            }
+        }
+        info
+    }
+
+    /// Render in the paper's Table-3 shape.
+    pub fn table(&self) -> crate::bench::Table {
+        let mut t = crate::bench::Table::new(["Platform", "this host"]);
+        t.row(["Model", self.model_name.as_str()]);
+        t.row(["Logical CPUs", &self.logical_cpus.to_string()]);
+        t.row(["#Numa sockets", &self.sockets.to_string()]);
+        t.row(["#Cores per socket", &self.cores_per_socket.to_string()]);
+        t.row([
+            "MemTotal",
+            &format!("{:.1} GB", self.mem_total_kb as f64 / 1024.0 / 1024.0),
+        ]);
+        for (name, size) in &self.cache_sizes {
+            t.row([name.as_str(), size.as_str()]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn captures_something() {
+        let s = SysInfo::capture();
+        assert!(s.logical_cpus >= 1);
+        let rendered = s.table().render();
+        assert!(rendered.contains("Logical CPUs"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal command-line parser (`clap` is unavailable offline):
+//! `binary <subcommand> [--key value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand + `--key value` options +
+//  bare `--flag` switches.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("serve --threads 8 --verbose --lambda=2.5 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get("lambda"), Some("2.5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 42");
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_or("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n").unwrap().is_some());
+    }
+
+    #[test]
+    fn parse_error_on_bad_number() {
+        let a = parse("x --n abc");
+        assert!(a.get_parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --slow");
+        assert!(a.flag("fast") && a.flag("slow"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

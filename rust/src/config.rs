@@ -1,0 +1,233 @@
+//! Run configuration: a TOML-subset file format (`key = value` lines under
+//! `[section]` headers — no external TOML crate offline) plus programmatic
+//! defaults. Used by the CLI binary and the examples.
+
+use crate::sinkhorn::{IterateKernel, SinkhornConfig};
+use crate::Real;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Corpus-scale parameters (defaults are the laptop-scale workload;
+/// `paper_scale()` matches the paper's evaluation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorpusConfig {
+    pub vocab_size: usize,
+    pub num_docs: usize,
+    pub embedding_dim: usize,
+    pub n_topics: usize,
+    pub tokens_per_doc: usize,
+    pub num_queries: usize,
+    pub query_words_min: usize,
+    pub query_words_max: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 10_000,
+            num_docs: 500,
+            embedding_dim: 300,
+            n_topics: 8,
+            tokens_per_doc: 60,
+            num_queries: 10,
+            query_words_min: 19,
+            query_words_max: 43,
+            seed: 42,
+        }
+    }
+}
+
+impl CorpusConfig {
+    /// The paper's full-scale workload: V = 100 k, N = 5 000, w = 300,
+    /// source docs of 19–43 words.
+    pub fn paper_scale() -> Self {
+        Self { vocab_size: 100_000, num_docs: 5_000, ..Default::default() }
+    }
+
+    pub fn build(&self) -> crate::corpus::SyntheticCorpus {
+        crate::corpus::SyntheticCorpus::builder()
+            .vocab_size(self.vocab_size)
+            .num_docs(self.num_docs)
+            .embedding_dim(self.embedding_dim)
+            .n_topics(self.n_topics)
+            .tokens_per_doc(self.tokens_per_doc)
+            .num_queries(self.num_queries)
+            .query_words(self.query_words_min, self.query_words_max)
+            .seed(self.seed)
+            .build()
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub corpus: CorpusConfig,
+    pub sinkhorn: SinkhornConfig,
+    /// Worker threads (0 → all logical CPUs).
+    pub threads: usize,
+    /// Directory of AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl RunConfig {
+    pub fn threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::num_cpus()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Parse a TOML-subset file: `[section]` headers, `key = value` lines,
+    /// `#` comments. Unknown keys are rejected (typo safety).
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let mut cfg = RunConfig {
+            artifacts_dir: "artifacts".to_string(),
+            ..Default::default()
+        };
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim().trim_matches('"');
+            cfg.apply(&section, key, value)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("cannot parse '{v}'"))
+        }
+        match (section, key) {
+            ("", "threads") => self.threads = p(value)?,
+            ("", "artifacts_dir") => self.artifacts_dir = value.to_string(),
+            ("corpus", "vocab_size") => self.corpus.vocab_size = p(value)?,
+            ("corpus", "num_docs") => self.corpus.num_docs = p(value)?,
+            ("corpus", "embedding_dim") => self.corpus.embedding_dim = p(value)?,
+            ("corpus", "n_topics") => self.corpus.n_topics = p(value)?,
+            ("corpus", "tokens_per_doc") => self.corpus.tokens_per_doc = p(value)?,
+            ("corpus", "num_queries") => self.corpus.num_queries = p(value)?,
+            ("corpus", "query_words_min") => self.corpus.query_words_min = p(value)?,
+            ("corpus", "query_words_max") => self.corpus.query_words_max = p(value)?,
+            ("corpus", "seed") => self.corpus.seed = p(value)?,
+            ("sinkhorn", "lambda") => self.sinkhorn.lambda = p::<Real>(value)?,
+            ("sinkhorn", "max_iter") => self.sinkhorn.max_iter = p(value)?,
+            ("sinkhorn", "tolerance") => self.sinkhorn.tolerance = p::<Real>(value)?,
+            ("sinkhorn", "check_every") => self.sinkhorn.check_every = p(value)?,
+            ("sinkhorn", "kernel") => {
+                self.sinkhorn.kernel = match value {
+                    "fused_atomic" => IterateKernel::FusedAtomic,
+                    "fused_private" => IterateKernel::FusedPrivate,
+                    "fused_transposed" => IterateKernel::FusedTransposed,
+                    "unfused" => IterateKernel::Unfused,
+                    other => return Err(format!("unknown kernel '{other}'")),
+                }
+            }
+            (s, k) => return Err(format!("unknown key [{s}] {k}")),
+        }
+        Ok(())
+    }
+
+    /// Render back to the file format (used by `gen-config`).
+    pub fn render(&self) -> String {
+        let mut top = BTreeMap::new();
+        top.insert("threads", self.threads.to_string());
+        top.insert("artifacts_dir", format!("\"{}\"", self.artifacts_dir));
+        let kernel = match self.sinkhorn.kernel {
+            IterateKernel::FusedAtomic => "fused_atomic",
+            IterateKernel::FusedPrivate => "fused_private",
+            IterateKernel::FusedTransposed => "fused_transposed",
+            IterateKernel::Unfused => "unfused",
+        };
+        format!(
+            "# sinkhorn-wmd run configuration\n\
+             threads = {}\nartifacts_dir = {}\n\n\
+             [corpus]\nvocab_size = {}\nnum_docs = {}\nembedding_dim = {}\n\
+             n_topics = {}\ntokens_per_doc = {}\nnum_queries = {}\n\
+             query_words_min = {}\nquery_words_max = {}\nseed = {}\n\n\
+             [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
+             check_every = {}\nkernel = \"{}\"\n",
+            top["threads"],
+            top["artifacts_dir"],
+            self.corpus.vocab_size,
+            self.corpus.num_docs,
+            self.corpus.embedding_dim,
+            self.corpus.n_topics,
+            self.corpus.tokens_per_doc,
+            self.corpus.num_queries,
+            self.corpus.query_words_min,
+            self.corpus.query_words_max,
+            self.corpus.seed,
+            self.sinkhorn.lambda,
+            self.sinkhorn.max_iter,
+            self.sinkhorn.tolerance,
+            self.sinkhorn.check_every,
+            kernel,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = RunConfig {
+            threads: 8,
+            artifacts_dir: "artifacts".into(),
+            corpus: CorpusConfig { vocab_size: 1234, ..Default::default() },
+            sinkhorn: SinkhornConfig { lambda: 7.5, kernel: IterateKernel::Unfused, ..Default::default() },
+        };
+        let text = cfg.render();
+        let back = RunConfig::from_str(&text).unwrap();
+        assert_eq!(back.threads, 8);
+        assert_eq!(back.corpus.vocab_size, 1234);
+        assert_eq!(back.sinkhorn.lambda, 7.5);
+        assert_eq!(back.sinkhorn.kernel, IterateKernel::Unfused);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(RunConfig::from_str("nonsense = 3").is_err());
+        assert!(RunConfig::from_str("[corpus]\nbogus = 3").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let cfg = RunConfig::from_str("# hi\n\nthreads = 4 # trailing\n").unwrap();
+        assert_eq!(cfg.threads, 4);
+    }
+
+    #[test]
+    fn threads_zero_means_all() {
+        let cfg = RunConfig::default();
+        assert!(cfg.threads() >= 1);
+    }
+
+    #[test]
+    fn paper_scale_dimensions() {
+        let c = CorpusConfig::paper_scale();
+        assert_eq!(c.vocab_size, 100_000);
+        assert_eq!(c.num_docs, 5_000);
+        assert_eq!(c.embedding_dim, 300);
+    }
+}

@@ -1,0 +1,191 @@
+//! Dynamic batching queue: requests accumulate until the batch is full or
+//! the oldest request has waited `max_wait` — the standard serving-system
+//! trade-off between throughput (amortized pool scheduling) and latency.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush once the oldest queued request is this old.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// MPSC batch queue: many producers `push`, one consumer `next_batch`.
+pub struct BatchQueue<T> {
+    config: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1);
+        Self {
+            config,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Returns `false` if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        inner.queue.push_back((item, Instant::now()));
+        self.cv.notify_all();
+        true
+    }
+
+    /// Dequeue the next batch. Blocks until at least one item is available
+    /// and the flush condition holds. Returns `None` once the queue is
+    /// closed *and* drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queue.is_empty() {
+                let oldest = inner.queue.front().unwrap().1;
+                let full = inner.queue.len() >= self.config.max_batch;
+                let waited = oldest.elapsed();
+                if full || waited >= self.config.max_wait || inner.closed {
+                    let take = inner.queue.len().min(self.config.max_batch);
+                    let batch: Vec<T> =
+                        inner.queue.drain(..take).map(|(item, _)| item).collect();
+                    return Some(batch);
+                }
+                // Wait out the remaining window (or a new push).
+                let remaining = self.config.max_wait - waited;
+                let (guard, _) = self.cv.wait_timeout(inner, remaining).unwrap();
+                inner = guard;
+            } else if inner.closed {
+                return None;
+            } else {
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Close the queue; producers fail fast, the consumer drains then
+    /// receives `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(60) });
+        for i in 0..3 {
+            assert!(q.push(i));
+        }
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) });
+        q.push(42);
+        let t = Instant::now();
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch, vec![42]);
+        assert!(t.elapsed() >= Duration::from_millis(4), "flushed too early");
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_secs(60) });
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.next_batch().unwrap(), vec![1, 2]);
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_all_delivered() {
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        }));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        assert!(q.push(p * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = q.next_batch() {
+                    assert!(batch.len() <= 16);
+                    seen.extend(batch);
+                    if seen.len() == 400 {
+                        break;
+                    }
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 400);
+        seen.dedup();
+        assert_eq!(seen.len(), 400, "duplicates delivered");
+    }
+
+    #[test]
+    fn batches_never_exceed_max() {
+        let q = BatchQueue::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) });
+        for i in 0..10 {
+            q.push(i);
+        }
+        q.close();
+        let mut total = 0;
+        while let Some(b) = q.next_batch() {
+            assert!(b.len() <= 4);
+            total += b.len();
+        }
+        assert_eq!(total, 10);
+    }
+}

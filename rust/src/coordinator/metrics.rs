@@ -1,0 +1,166 @@
+//! Service metrics: lock-free counters + a log₂ latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ latency buckets: bucket `i` covers `[2^i, 2^{i+1}) µs`.
+const BUCKETS: usize = 32;
+
+/// Shared service metrics. All methods are thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    total_latency_ns: AtomicU64,
+    latency_hist: [AtomicU64; BUCKETS],
+    backend_sparse: AtomicU64,
+    backend_dense: AtomicU64,
+    backend_pjrt: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_query(&self, latency: Duration, backend: super::Backend) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let ns = latency.as_nanos() as u64;
+        self.total_latency_ns.fetch_add(ns, Ordering::Relaxed);
+        let us = (ns / 1_000).max(1);
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        match backend {
+            super::Backend::SparseRust => &self.backend_sparse,
+            super::Backend::DenseRust => &self.backend_dense,
+            super::Backend::DensePjrt => &self.backend_pjrt,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, _size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let queries = self.queries.load(Ordering::Relaxed);
+        let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            queries,
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency: if queries == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_nanos(self.total_latency_ns.load(Ordering::Relaxed) / queries)
+            },
+            p50_latency: percentile_from_hist(&hist, 0.50),
+            p95_latency: percentile_from_hist(&hist, 0.95),
+            backend_sparse: self.backend_sparse.load(Ordering::Relaxed),
+            backend_dense: self.backend_dense.load(Ordering::Relaxed),
+            backend_pjrt: self.backend_pjrt.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_latency: Duration,
+    /// Bucketed percentile (upper bound of the log₂ bucket).
+    pub p50_latency: Duration,
+    pub p95_latency: Duration,
+    pub backend_sparse: u64,
+    pub backend_dense: u64,
+    pub backend_pjrt: u64,
+}
+
+fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return Duration::ZERO;
+    }
+    let target = (q * total as f64).ceil() as u64;
+    let mut acc = 0;
+    for (i, &count) in hist.iter().enumerate() {
+        acc += count;
+        if acc >= target {
+            return Duration::from_micros(1u64 << (i + 1));
+        }
+    }
+    Duration::from_micros(1u64 << hist.len())
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
+             backends: sparse={} dense={} pjrt={}",
+            self.queries,
+            self.batches,
+            self.errors,
+            self.mean_latency,
+            self.p50_latency,
+            self.p95_latency,
+            self.backend_sparse,
+            self.backend_dense,
+            self.backend_pjrt
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_query(Duration::from_micros(100), Backend::SparseRust);
+        m.record_query(Duration::from_micros(200), Backend::SparseRust);
+        m.record_query(Duration::from_millis(5), Backend::DensePjrt);
+        m.record_batch(3);
+        let s = m.snapshot();
+        assert_eq!(s.queries, 3);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.backend_sparse, 2);
+        assert_eq!(s.backend_pjrt, 1);
+        assert!(s.mean_latency >= Duration::from_micros(100));
+        assert!(s.p95_latency >= s.p50_latency);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.record_query(Duration::from_micros(50), Backend::SparseRust);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().queries, 4000);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.queries, 0);
+        assert_eq!(s.mean_latency, Duration::ZERO);
+        assert_eq!(s.p50_latency, Duration::ZERO);
+    }
+}

@@ -1,0 +1,30 @@
+//! The L3 coordinator: a one-to-many WMD query service.
+//!
+//! ```text
+//!   submit(query) ──► Batcher ──► dispatcher thread ──► Router
+//!                                      │                  │
+//!                                      ▼                  ▼
+//!                                  Pool (p threads)   backend choice:
+//!                                  SparseSolver       sparse-rust (paper)
+//!                                      │              dense-rust  (baseline)
+//!                                      ▼              dense-PJRT  (L2 artifact)
+//!                                  QueryResponse ◄────────┘
+//! ```
+//!
+//! The paper's use-case ("finding whether a given tweet is similar to any
+//! other tweets of a given day") is exactly this service: a fixed target
+//! set, a stream of source queries, each answered with the WMD vector.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod router;
+pub mod service;
+pub mod state;
+
+pub use batcher::{BatchQueue, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use pjrt_backend::PjrtBackend;
+pub use router::{Backend, Router};
+pub use service::{QueryRequest, QueryResponse, ServiceConfig, WmdService};
+pub use state::DocStore;

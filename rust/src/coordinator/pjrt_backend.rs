@@ -1,0 +1,102 @@
+//! The dense-PJRT backend: answers queries by executing the AOT-compiled
+//! L2 JAX graph (`sinkhorn_solve` artifacts) through the PJRT CPU client.
+//! This is the measured stand-in for the paper's Python/MKL baseline —
+//! and proof that the three layers compose.
+
+use super::router::Router;
+use super::state::DocStore;
+use crate::corpus::SparseVec;
+use crate::runtime::{LoadedArtifact, Manifest, Runtime};
+use crate::Real;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Loaded artifacts + pre-flattened store inputs.
+pub struct PjrtBackend {
+    _runtime: Runtime,
+    /// `v_r` bucket → compiled solve graph.
+    artifacts: BTreeMap<usize, LoadedArtifact>,
+    router: Router,
+    /// Dense row-major `vocab × n_docs` copy of `c` (an artifact input).
+    c_flat: Vec<Real>,
+    /// Flat `vocab × dim` embeddings (an artifact input).
+    vecs_flat: Vec<Real>,
+    vocab: usize,
+    n_docs: usize,
+    dim: usize,
+}
+
+impl PjrtBackend {
+    /// Load every `sinkhorn_solve` artifact whose shape matches the store.
+    /// Returns `Ok(None)` when the manifest has no matching artifacts
+    /// (e.g. `make artifacts` was run for different sizes).
+    pub fn load(dir: &Path, store: &DocStore) -> Result<Option<Self>> {
+        let manifest = Manifest::read(dir)?;
+        let vocab = store.vocab_size();
+        let n_docs = store.num_docs();
+        let dim = store.embeddings.ncols();
+        let metas: Vec<_> = manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.variant == "sinkhorn_solve"
+                    && a.vocab == vocab
+                    && a.n_docs == n_docs
+                    && a.dim == dim
+            })
+            .collect();
+        if metas.is_empty() {
+            return Ok(None);
+        }
+        let runtime = Runtime::cpu()?;
+        let mut artifacts = BTreeMap::new();
+        for meta in metas {
+            artifacts.insert(meta.v_r, runtime.load(dir, meta)?);
+        }
+        let buckets: Vec<usize> = artifacts.keys().copied().collect();
+        // Flatten store inputs once.
+        let c_dense = store.c.to_dense();
+        Ok(Some(Self {
+            _runtime: runtime,
+            artifacts,
+            router: Router::new(buckets),
+            c_flat: c_dense.as_slice().to_vec(),
+            vecs_flat: store.embeddings.as_slice().to_vec(),
+            vocab,
+            n_docs,
+            dim,
+        }))
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Max query size any bucket accepts.
+    pub fn max_v_r(&self) -> usize {
+        self.artifacts.keys().max().copied().unwrap_or(0)
+    }
+
+    /// Execute the solve graph for one query: pad to the bucket, gather the
+    /// query-word embeddings, run, return the WMD vector.
+    pub fn solve(&self, query: &SparseVec, embeddings: &crate::sparse::Dense) -> Result<Vec<Real>> {
+        let bucket = self
+            .router
+            .bucket_for(query.nnz())
+            .ok_or_else(|| anyhow!("query v_r={} exceeds all buckets", query.nnz()))?;
+        let padded = self.router.pad_query(query, bucket);
+        let art = &self.artifacts[&bucket];
+        debug_assert_eq!(art.meta.v_r, bucket);
+        // Gather query embeddings (bucket × dim).
+        let mut qvecs = Vec::with_capacity(bucket * self.dim);
+        for &w in &padded.idx {
+            qvecs.extend_from_slice(embeddings.row(w as usize));
+        }
+        let outputs = art.run(&[&padded.val, &qvecs, &self.c_flat, &self.vecs_flat])?;
+        let wmd = outputs.into_iter().next().expect("one output");
+        debug_assert_eq!(wmd.len(), self.n_docs);
+        let _ = self.vocab;
+        Ok(wmd)
+    }
+}

@@ -1,0 +1,173 @@
+//! Query routing: backend selection + size-bucket padding for the
+//! shape-specialized PJRT artifacts.
+//!
+//! HLO artifacts are compiled for fixed `v_r` buckets (DESIGN.md §6). A
+//! query with `v_r = 19` routed to the `v_r = 32` bucket is padded with
+//! `ε`-mass words; the perturbation of the WMD is `O(ε)` (tested in
+//! `rust/tests/coordinator_test.rs`).
+
+use crate::corpus::SparseVec;
+use crate::Real;
+
+/// Which solver answers a query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The paper's sparse fused SDDMM_SpMM solver (default).
+    #[default]
+    SparseRust,
+    /// The dense in-Rust baseline (profiling / Table 1).
+    DenseRust,
+    /// The dense L2 JAX graph executed through PJRT.
+    DensePjrt,
+}
+
+/// Padding strategy: the query's heaviest word is **duplicated** into
+/// `bucket − v_r + 1` co-located entries with its mass split equally.
+/// Splitting a supply point into identical copies leaves the optimal
+/// transport problem — and the Sinkhorn fixed point — *exactly* unchanged
+/// (identical cost rows scale identically), unlike ε-mass ghost words,
+/// whose `1/r` factors inject an O(1) shock into the iterate that decays
+/// only at the (slow, λ-dependent) contraction rate.
+pub const PAD_STRATEGY_NOTE: &str = "duplicate-split";
+
+/// Router: owns the available `v_r` buckets (ascending) for the PJRT
+/// backend and the padding policy.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    buckets: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        buckets.sort_unstable();
+        buckets.dedup();
+        Self { buckets }
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket that fits `v_r`, if any.
+    pub fn bucket_for(&self, v_r: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= v_r)
+    }
+
+    /// Decide the backend: honour the preference when possible, fall back
+    /// to the sparse solver (which handles any `v_r`).
+    pub fn select(&self, query: &SparseVec, prefer: Backend) -> Backend {
+        match prefer {
+            Backend::DensePjrt if self.bucket_for(query.nnz()).is_some() => Backend::DensePjrt,
+            Backend::DensePjrt => Backend::SparseRust,
+            other => other,
+        }
+    }
+
+    /// Pad a query up to `bucket` entries by duplicate-splitting its
+    /// heaviest word (see [`PAD_STRATEGY_NOTE`]): total mass per word is
+    /// preserved exactly, so the padded problem has the *same* WMD.
+    /// Returns the query unchanged when it already has `bucket` words.
+    ///
+    /// The result may contain repeated indices (the duplicates); it is
+    /// intended for solver/artifact input marshalling — `indices()` and
+    /// `val` stay aligned, and both the Rust precompute and the JAX graph
+    /// handle repeated rows by construction.
+    pub fn pad_query(&self, query: &SparseVec, bucket: usize) -> SparseVec {
+        assert!(bucket >= query.nnz(), "bucket smaller than query");
+        if query.nnz() == bucket {
+            return query.clone();
+        }
+        let extra = bucket - query.nnz();
+        // Heaviest word: splitting it keeps every split mass as large as
+        // possible (better conditioning of diag(1/r)).
+        let heavy = query
+            .val
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(pos, _)| pos)
+            .expect("non-empty query");
+        let word = query.idx[heavy];
+        let split = query.val[heavy] / (extra + 1) as Real;
+        let mut idx = Vec::with_capacity(bucket);
+        let mut val = Vec::with_capacity(bucket);
+        for (pos, (&i, &v)) in query.idx.iter().zip(&query.val).enumerate() {
+            if pos == heavy {
+                for _ in 0..=extra {
+                    idx.push(word);
+                    val.push(split);
+                }
+            } else {
+                idx.push(i);
+                val.push(v);
+            }
+        }
+        SparseVec { dim: query.dim, idx, val }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(dim: usize, words: &[(usize, usize)]) -> SparseVec {
+        SparseVec::from_counts(dim, words)
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let r = Router::new(vec![32, 8, 16, 8]);
+        assert_eq!(r.buckets(), &[8, 16, 32]);
+        assert_eq!(r.bucket_for(5), Some(8));
+        assert_eq!(r.bucket_for(8), Some(8));
+        assert_eq!(r.bucket_for(9), Some(16));
+        assert_eq!(r.bucket_for(33), None);
+    }
+
+    #[test]
+    fn select_falls_back_when_no_bucket() {
+        let r = Router::new(vec![8]);
+        let small = q(100, &[(1, 1), (2, 1)]);
+        let big_words: Vec<(usize, usize)> = (0..20).map(|i| (i, 1)).collect();
+        let big = q(100, &big_words);
+        assert_eq!(r.select(&small, Backend::DensePjrt), Backend::DensePjrt);
+        assert_eq!(r.select(&big, Backend::DensePjrt), Backend::SparseRust);
+        assert_eq!(r.select(&small, Backend::SparseRust), Backend::SparseRust);
+    }
+
+    #[test]
+    fn padding_preserves_per_word_mass() {
+        let r = Router::new(vec![8]);
+        let query = q(50, &[(10, 3), (40, 1)]);
+        let padded = r.pad_query(&query, 8);
+        assert_eq!(padded.idx.len(), 8);
+        assert!((padded.sum() - 1.0).abs() < 1e-12);
+        // Indices stay sorted (non-decreasing: duplicates are adjacent).
+        for w in padded.idx.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Per-word mass is exactly preserved (duplicate-split, not ε-mass).
+        let mass_of = |word: u32, v: &SparseVec| -> f64 {
+            v.idx.iter().zip(&v.val).filter(|(&i, _)| i == word).map(|(_, &m)| m).sum()
+        };
+        assert!((mass_of(10, &padded) - 0.75).abs() < 1e-15);
+        assert!((mass_of(40, &padded) - 0.25).abs() < 1e-15);
+        // The heaviest word (10) carries the duplicates: 7 entries.
+        assert_eq!(padded.idx.iter().filter(|&&i| i == 10).count(), 7);
+    }
+
+    #[test]
+    fn padding_noop_at_exact_size() {
+        let r = Router::new(vec![2]);
+        let query = q(10, &[(1, 1), (2, 1)]);
+        assert_eq!(r.pad_query(&query, 2), query);
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket smaller")]
+    fn padding_rejects_shrink() {
+        let r = Router::new(vec![1]);
+        let query = q(10, &[(1, 1), (2, 1)]);
+        let _ = r.pad_query(&query, 1);
+    }
+}

@@ -1,0 +1,336 @@
+//! The WMD query service: batched dispatch of one-to-many WMD queries
+//! over a shared worker pool, with pluggable backends.
+
+use super::batcher::{BatchQueue, BatcherConfig};
+use super::metrics::Metrics;
+use super::pjrt_backend::PjrtBackend;
+use super::router::Backend;
+use super::state::DocStore;
+use crate::corpus::SparseVec;
+use crate::parallel::Pool;
+use crate::sinkhorn::{DenseSolver, SinkhornConfig, SparseSolver};
+use crate::Real;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads in the solver pool (0 → all logical CPUs).
+    pub threads: usize,
+    pub sinkhorn: SinkhornConfig,
+    pub batcher: BatcherConfig,
+    /// Default backend preference (per-request override possible).
+    pub prefer: Backend,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            sinkhorn: SinkhornConfig::default(),
+            batcher: BatcherConfig::default(),
+            prefer: Backend::SparseRust,
+        }
+    }
+}
+
+/// One query submission.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    pub query: SparseVec,
+    /// Override the service-level backend preference.
+    pub prefer: Option<Backend>,
+}
+
+impl QueryRequest {
+    pub fn new(query: SparseVec) -> Self {
+        Self { query, prefer: None }
+    }
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    /// WMD to every target document (empty on error).
+    pub wmd: Vec<Real>,
+    pub iterations: usize,
+    pub backend: Backend,
+    pub latency: Duration,
+    pub error: Option<String>,
+}
+
+impl QueryResponse {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    pub fn argmin(&self) -> Option<usize> {
+        self.wmd
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+}
+
+struct Job {
+    req: QueryRequest,
+    reply: mpsc::Sender<QueryResponse>,
+}
+
+/// Handle to the running service. Dropping it shuts the dispatcher down.
+pub struct WmdService {
+    queue: Arc<BatchQueue<Job>>,
+    metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WmdService {
+    /// Start the dispatcher thread. `pjrt_dir` optionally points at the
+    /// AOT artifacts directory; the PJRT client is **not** `Send` (the
+    /// `xla` crate wraps an `Rc`), so the backend is constructed on the
+    /// dispatcher thread itself. Loading failures degrade to the sparse
+    /// backend (logged to stderr), matching "artifacts not built yet".
+    pub fn start(
+        store: Arc<DocStore>,
+        config: ServiceConfig,
+        pjrt_dir: Option<std::path::PathBuf>,
+    ) -> Self {
+        let queue = Arc::new(BatchQueue::new(config.batcher));
+        let metrics = Arc::new(Metrics::new());
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("wmd-dispatch".into())
+                .spawn(move || {
+                    let pjrt = pjrt_dir.and_then(|dir| match PjrtBackend::load(&dir, &store) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("wmd-service: PJRT backend unavailable: {e:#}");
+                            None
+                        }
+                    });
+                    dispatcher(store, config, pjrt, queue, metrics)
+                })
+                .expect("spawn dispatcher")
+        };
+        Self { queue, metrics, worker: Some(worker) }
+    }
+
+    /// Submit a query; the response arrives on the returned channel.
+    pub fn submit(&self, req: QueryRequest) -> mpsc::Receiver<QueryResponse> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Job { req, reply: tx.clone() }) {
+            let _ = tx.send(QueryResponse {
+                wmd: vec![],
+                iterations: 0,
+                backend: Backend::SparseRust,
+                latency: Duration::ZERO,
+                error: Some("service is shut down".into()),
+            });
+        }
+        rx
+    }
+
+    /// Submit and block for the answer.
+    pub fn submit_wait(&self, req: QueryRequest) -> QueryResponse {
+        self.submit(req).recv().expect("dispatcher dropped the reply channel")
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drain in-flight work, join the dispatcher.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WmdService {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher(
+    store: Arc<DocStore>,
+    config: ServiceConfig,
+    pjrt: Option<PjrtBackend>,
+    queue: Arc<BatchQueue<Job>>,
+    metrics: Arc<Metrics>,
+) {
+    let nthreads = if config.threads == 0 { crate::util::num_cpus() } else { config.threads };
+    let pool = Pool::new(nthreads);
+    let sparse = SparseSolver::new(config.sinkhorn);
+    let dense = DenseSolver::new(config.sinkhorn);
+    while let Some(batch) = queue.next_batch() {
+        metrics.record_batch(batch.len());
+        for job in batch {
+            let started = Instant::now();
+            let response = answer(&store, &config, &pool, &sparse, &dense, pjrt.as_ref(), &job.req);
+            let latency = started.elapsed();
+            match &response {
+                Ok((wmd, iterations, backend)) => {
+                    metrics.record_query(latency, *backend);
+                    let _ = job.reply.send(QueryResponse {
+                        wmd: wmd.clone(),
+                        iterations: *iterations,
+                        backend: *backend,
+                        latency,
+                        error: None,
+                    });
+                }
+                Err(msg) => {
+                    metrics.record_error();
+                    let _ = job.reply.send(QueryResponse {
+                        wmd: vec![],
+                        iterations: 0,
+                        backend: Backend::SparseRust,
+                        latency,
+                        error: Some(msg.clone()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn answer(
+    store: &DocStore,
+    config: &ServiceConfig,
+    pool: &Pool,
+    sparse: &SparseSolver,
+    dense: &DenseSolver,
+    pjrt: Option<&PjrtBackend>,
+    req: &QueryRequest,
+) -> Result<(Vec<Real>, usize, Backend), String> {
+    store.check_query(&req.query)?;
+    let prefer = req.prefer.unwrap_or(config.prefer);
+    let backend = match (prefer, pjrt) {
+        (Backend::DensePjrt, Some(b)) if b.router().bucket_for(req.query.nnz()).is_some() => {
+            Backend::DensePjrt
+        }
+        (Backend::DensePjrt, _) => Backend::SparseRust,
+        (other, _) => other,
+    };
+    match backend {
+        Backend::SparseRust => {
+            let out = sparse.wmd_one_to_many(&store.embeddings, &req.query, &store.c, pool);
+            Ok((out.wmd, out.iterations, backend))
+        }
+        Backend::DenseRust => {
+            let (out, _times) = dense.solve(&store.embeddings, &req.query, &store.c, pool);
+            Ok((out.wmd, out.iterations, backend))
+        }
+        Backend::DensePjrt => {
+            let b = pjrt.expect("checked above");
+            let wmd = b
+                .solve(&req.query, &store.embeddings)
+                .map_err(|e| format!("pjrt backend: {e:#}"))?;
+            Ok((wmd, b.max_v_r(), backend))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::SyntheticCorpus;
+
+    fn small_service() -> (WmdService, SyntheticCorpus) {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(4)
+            .query_words(5, 10)
+            .seed(3)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            store,
+            ServiceConfig { threads: 2, ..Default::default() },
+            None,
+        );
+        (service, corpus)
+    }
+
+    #[test]
+    fn answers_queries() {
+        let (service, corpus) = small_service();
+        let resp = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.wmd.len(), 40);
+        assert!(resp.argmin().is_some());
+        assert!(resp.latency > Duration::ZERO);
+        service.shutdown();
+    }
+
+    #[test]
+    fn rejects_invalid_query() {
+        let (service, _corpus) = small_service();
+        let bad = SparseVec::from_counts(7, &[(1, 1)]); // wrong dim
+        let resp = service.submit_wait(QueryRequest::new(bad));
+        assert!(!resp.is_ok());
+        assert_eq!(service.metrics().snapshot().errors, 1);
+        service.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_batch() {
+        let (service, corpus) = small_service();
+        let receivers: Vec<_> = (0..4)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        for rx in receivers {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok());
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert!(snap.batches >= 1);
+        service.shutdown();
+    }
+
+    #[test]
+    fn dense_backend_agrees_with_sparse() {
+        let (service, corpus) = small_service();
+        let q = corpus.query(1).clone();
+        let a = service.submit_wait(QueryRequest::new(q.clone()));
+        let b = service.submit_wait(QueryRequest { query: q, prefer: Some(Backend::DenseRust) });
+        assert!(a.is_ok() && b.is_ok());
+        assert_eq!(b.backend, Backend::DenseRust);
+        // Dense baseline runs fixed max_iter without early exit; compare
+        // loosely (both near the fixed point).
+        for (x, y) in a.wmd.iter().zip(&b.wmd) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_work() {
+        let (service, corpus) = small_service();
+        // Submit work, then shut down immediately: the dispatcher must
+        // drain the queue before exiting, so every reply still arrives.
+        let receivers: Vec<_> = (0..3)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        service.shutdown();
+        for rx in receivers {
+            let resp = rx.recv().expect("reply delivered before shutdown completed");
+            assert!(resp.is_ok());
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Coordinator state: the immutable document store shared by every
+//! worker — embeddings + the `V × N` target matrix + optional metadata.
+
+use crate::corpus::{SparseVec, SyntheticCorpus, TinyCorpus};
+use crate::sparse::{Csr, Dense};
+use std::sync::Arc;
+
+/// The target-set state loaded once at startup and shared (`Arc`) across
+/// the service, benches and examples.
+#[derive(Clone, Debug)]
+pub struct DocStore {
+    pub embeddings: Dense,
+    pub c: Csr,
+    /// Optional human-readable text per target document.
+    pub texts: Vec<String>,
+    /// Optional label per target document (classification examples).
+    pub labels: Vec<String>,
+}
+
+impl DocStore {
+    pub fn new(embeddings: Dense, c: Csr) -> Self {
+        assert_eq!(embeddings.nrows(), c.nrows(), "embeddings/c vocab mismatch");
+        Self { embeddings, c, texts: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn with_texts(mut self, texts: Vec<String>) -> Self {
+        assert_eq!(texts.len(), self.c.ncols());
+        self.texts = texts;
+        self
+    }
+
+    pub fn with_labels(mut self, labels: Vec<String>) -> Self {
+        assert_eq!(labels.len(), self.c.ncols());
+        self.labels = labels;
+        self
+    }
+
+    pub fn from_synthetic(corpus: &SyntheticCorpus) -> Self {
+        Self::new(corpus.embeddings.clone(), corpus.c.clone())
+            .with_labels(corpus.doc_topics.iter().map(|t| format!("topic-{t}")).collect())
+    }
+
+    pub fn from_tiny(tiny: &TinyCorpus) -> Self {
+        let c = crate::corpus::docs_to_csr(tiny.vocab.len(), &tiny.docs);
+        Self::new(tiny.embeddings.clone(), c)
+            .with_texts(tiny.sentences.iter().map(|s| s.to_string()).collect())
+            .with_labels(tiny.labels.iter().map(|l| l.to_string()).collect())
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.c.nrows()
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.c.ncols()
+    }
+
+    /// Validate a query against this store.
+    pub fn check_query(&self, query: &SparseVec) -> Result<(), String> {
+        if query.dim != self.vocab_size() {
+            return Err(format!(
+                "query dimension {} does not match vocabulary {}",
+                query.dim,
+                self.vocab_size()
+            ));
+        }
+        if query.nnz() == 0 {
+            return Err("query has no words".into());
+        }
+        let sum = query.sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("query mass {sum} is not normalized"));
+        }
+        Ok(())
+    }
+
+    pub fn into_arc(self) -> Arc<Self> {
+        Arc::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_tiny_consistent() {
+        let tiny = TinyCorpus::load();
+        let store = DocStore::from_tiny(&tiny);
+        assert_eq!(store.num_docs(), tiny.docs.len());
+        assert_eq!(store.texts.len(), store.num_docs());
+        assert_eq!(store.labels.len(), store.num_docs());
+    }
+
+    #[test]
+    fn check_query_validates() {
+        let tiny = TinyCorpus::load();
+        let store = DocStore::from_tiny(&tiny);
+        let good = tiny.histogram("obama speaks media").unwrap();
+        assert!(store.check_query(&good).is_ok());
+        let wrong_dim = SparseVec::from_counts(3, &[(0, 1)]);
+        assert!(store.check_query(&wrong_dim).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Synthetic word embeddings — the stand-in for `crawl-300d-2M.vec`.
+//!
+//! Words are assigned to semantic clusters; each embedding is its cluster
+//! center plus isotropic Gaussian noise. This preserves the property WMD
+//! relies on: words in the same topic are close, topics are separated, and
+//! the distance matrix `M` has realistic spread (neither degenerate nor
+//! uniform). Deterministic from the seed.
+
+use crate::sparse::Dense;
+use crate::util::Pcg64;
+
+/// Separation of cluster centers relative to intra-cluster noise (σ = 1).
+const CENTER_SCALE: f64 = 4.0;
+
+/// Generate `vocab_size × dim` embeddings grouped into `n_clusters`
+/// topics. Returns the embedding matrix and each word's cluster id.
+///
+/// Words are assigned to clusters round-robin over a shuffled order so
+/// every cluster contains both frequent (low-rank) and rare words — Zipf
+/// sampling then produces documents whose words span the cluster.
+pub fn synthetic_embeddings(
+    vocab_size: usize,
+    dim: usize,
+    n_clusters: usize,
+    seed: u64,
+) -> (Dense, Vec<u32>) {
+    assert!(n_clusters >= 1 && n_clusters <= vocab_size);
+    let mut rng = Pcg64::new(seed);
+    // Cluster centers.
+    let centers = Dense::from_fn(n_clusters, dim, |_, _| rng.next_gaussian() * CENTER_SCALE);
+    // Word → cluster assignment: shuffled round-robin.
+    let mut order: Vec<usize> = (0..vocab_size).collect();
+    rng.shuffle(&mut order);
+    let mut cluster = vec![0u32; vocab_size];
+    for (pos, &word) in order.iter().enumerate() {
+        cluster[word] = (pos % n_clusters) as u32;
+    }
+    // Embeddings: center + N(0, 1) noise, scaled by 1/√dim so typical
+    // pairwise distances are O(√(2(CENTER_SCALE²+1))) ≈ 5.8 regardless of
+    // dimension — keeping K = exp(−λM) far from f64 underflow at the
+    // paper's λ values (real word2vec distances are likewise O(1)).
+    let scale = 1.0 / (dim as f64).sqrt();
+    let mut emb = Dense::zeros(vocab_size, dim);
+    for word in 0..vocab_size {
+        let c = cluster[word] as usize;
+        let row = emb.row_mut(word);
+        for (k, x) in row.iter_mut().enumerate() {
+            *x = (centers.get(c, k) + rng.next_gaussian()) * scale;
+        }
+    }
+    (emb, cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dot;
+
+    fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, ca) = synthetic_embeddings(100, 16, 4, 7);
+        let (b, cb) = synthetic_embeddings(100, 16, 4, 7);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let (emb, cluster) = synthetic_embeddings(200, 32, 4, 11);
+        // Mean intra-cluster distance << mean inter-cluster distance.
+        let (mut intra, mut inter) = ((0.0, 0usize), (0.0, 0usize));
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let d = sq_dist(emb.row(i), emb.row(j));
+                if cluster[i] == cluster[j] {
+                    intra = (intra.0 + d, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + d, inter.1 + 1);
+                }
+            }
+        }
+        let intra_mean = intra.0 / intra.1 as f64;
+        let inter_mean = inter.0 / inter.1 as f64;
+        assert!(
+            inter_mean > 2.0 * intra_mean,
+            "inter {inter_mean} vs intra {intra_mean}"
+        );
+    }
+
+    #[test]
+    fn every_cluster_populated() {
+        let (_, cluster) = synthetic_embeddings(50, 8, 7, 3);
+        let mut seen = vec![false; 7];
+        for &c in &cluster {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn embeddings_not_degenerate() {
+        let (emb, _) = synthetic_embeddings(100, 16, 4, 13);
+        for i in 0..emb.nrows() {
+            assert!(dot(emb.row(i), emb.row(i)) > 0.0);
+        }
+    }
+}

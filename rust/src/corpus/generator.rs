@@ -1,0 +1,307 @@
+//! Synthetic corpus generator — the stand-in for the dbpedia target set.
+//!
+//! Documents are topic-coherent Zipf bags-of-words matched to the paper's
+//! statistics: at the paper's scale (V = 100 k, N = 5 000, ~34 distinct
+//! words/doc) the target matrix density is ≈ 0.0035 %, and source/query
+//! documents have 19–43 distinct words.
+
+use super::embedding::synthetic_embeddings;
+use super::histogram::{docs_to_csr, SparseVec};
+use crate::sparse::{Csr, Dense};
+use crate::util::{Pcg64, Zipf};
+
+/// Fraction of a document's tokens drawn from its own topic's word pool.
+const TOPIC_AFFINITY: f64 = 0.8;
+
+/// Builder for [`SyntheticCorpus`]; defaults are a laptop-scale version of
+/// the paper's workload.
+#[derive(Clone, Debug)]
+pub struct CorpusBuilder {
+    vocab_size: usize,
+    num_docs: usize,
+    embedding_dim: usize,
+    n_topics: usize,
+    tokens_per_doc: usize,
+    zipf_alpha: f64,
+    num_queries: usize,
+    query_words_min: usize,
+    query_words_max: usize,
+    seed: u64,
+}
+
+impl Default for CorpusBuilder {
+    fn default() -> Self {
+        Self {
+            vocab_size: 10_000,
+            num_docs: 500,
+            embedding_dim: 300,
+            n_topics: 8,
+            tokens_per_doc: 60, // ≈ 34 distinct words under Zipf sampling
+            zipf_alpha: 1.05,
+            num_queries: 10,
+            query_words_min: 19,
+            query_words_max: 43,
+            seed: 42,
+        }
+    }
+}
+
+macro_rules! setter {
+    ($name:ident, $ty:ty) => {
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.$name = v;
+            self
+        }
+    };
+}
+
+impl CorpusBuilder {
+    setter!(vocab_size, usize);
+    setter!(num_docs, usize);
+    setter!(embedding_dim, usize);
+    setter!(n_topics, usize);
+    setter!(tokens_per_doc, usize);
+    setter!(zipf_alpha, f64);
+    setter!(num_queries, usize);
+    setter!(seed, u64);
+
+    pub fn query_words(mut self, min: usize, max: usize) -> Self {
+        assert!(min >= 1 && min <= max);
+        self.query_words_min = min;
+        self.query_words_max = max;
+        self
+    }
+
+    pub fn build(self) -> SyntheticCorpus {
+        assert!(self.n_topics >= 1);
+        assert!(self.vocab_size >= self.n_topics * 4);
+        let mut rng = Pcg64::new(self.seed);
+        let (embeddings, word_topic) =
+            synthetic_embeddings(self.vocab_size, self.embedding_dim, self.n_topics, self.seed ^ 0x5eed);
+
+        // Per-topic word pools (ordered by global word id — Zipf rank is the
+        // pool position, so each topic has its own frequent words).
+        let mut pools: Vec<Vec<usize>> = vec![Vec::new(); self.n_topics];
+        for (w, &t) in word_topic.iter().enumerate() {
+            pools[t as usize].push(w);
+        }
+        let pool_zipfs: Vec<Zipf> =
+            pools.iter().map(|p| Zipf::new(p.len(), self.zipf_alpha)).collect();
+        let global_zipf = Zipf::new(self.vocab_size, self.zipf_alpha);
+        // Global Zipf is applied over a shuffled rank→word map so frequency
+        // is independent of word id.
+        let mut rank_to_word: Vec<usize> = (0..self.vocab_size).collect();
+        rng.shuffle(&mut rank_to_word);
+
+        let mut draw_tokens = |rng: &mut Pcg64, topic: usize, count: usize| -> Vec<usize> {
+            (0..count)
+                .map(|_| {
+                    if rng.next_f64() < TOPIC_AFFINITY {
+                        let pool = &pools[topic];
+                        pool[pool_zipfs[topic].sample(rng)]
+                    } else {
+                        rank_to_word[global_zipf.sample(rng)]
+                    }
+                })
+                .collect()
+        };
+
+        // Target documents.
+        let mut docs = Vec::with_capacity(self.num_docs);
+        let mut doc_topics = Vec::with_capacity(self.num_docs);
+        for _ in 0..self.num_docs {
+            let topic = rng.below(self.n_topics);
+            let ids = draw_tokens(&mut rng, topic, self.tokens_per_doc);
+            docs.push(SparseVec::from_token_ids(self.vocab_size, &ids));
+            doc_topics.push(topic as u32);
+        }
+        let c = docs_to_csr(self.vocab_size, &docs);
+
+        // Queries with exact distinct-word counts spanning [min, max].
+        let mut queries = Vec::with_capacity(self.num_queries);
+        let mut query_topics = Vec::with_capacity(self.num_queries);
+        for q in 0..self.num_queries {
+            let topic = rng.below(self.n_topics);
+            let v_r = if self.num_queries <= 1 {
+                self.query_words_min
+            } else {
+                // Spread query sizes evenly over [min, max] like the
+                // paper's 10 source files with v_r ∈ [19, 43].
+                self.query_words_min
+                    + q * (self.query_words_max - self.query_words_min) / (self.num_queries - 1)
+            };
+            queries.push(Self::query_with_exact_words(
+                &mut rng,
+                &mut draw_tokens,
+                topic,
+                v_r,
+                self.vocab_size,
+            ));
+            query_topics.push(topic as u32);
+        }
+
+        SyntheticCorpus {
+            embeddings,
+            word_topic,
+            c,
+            docs,
+            doc_topics,
+            queries,
+            query_topics,
+        }
+    }
+
+    fn query_with_exact_words(
+        rng: &mut Pcg64,
+        draw_tokens: &mut impl FnMut(&mut Pcg64, usize, usize) -> Vec<usize>,
+        topic: usize,
+        v_r: usize,
+        vocab_size: usize,
+    ) -> SparseVec {
+        // Draw tokens until the distinct count reaches v_r, then truncate
+        // the count map to exactly v_r words.
+        let mut counts = std::collections::HashMap::new();
+        let mut guard = 0;
+        while counts.len() < v_r {
+            for id in draw_tokens(rng, topic, v_r * 2) {
+                if counts.len() < v_r || counts.contains_key(&id) {
+                    *counts.entry(id).or_insert(0usize) += 1;
+                }
+            }
+            guard += 1;
+            assert!(guard < 1000, "query generation failed to reach v_r={v_r}");
+        }
+        let pairs: Vec<(usize, usize)> = counts.into_iter().take(v_r).collect();
+        SparseVec::from_counts(vocab_size, &pairs)
+    }
+}
+
+/// A fully materialized synthetic workload: embeddings, the target matrix
+/// `c`, and a set of source/query documents.
+#[derive(Clone, Debug)]
+pub struct SyntheticCorpus {
+    /// `V × w` word embeddings.
+    pub embeddings: Dense,
+    /// Topic id of every vocabulary word.
+    pub word_topic: Vec<u32>,
+    /// `V × N` normalized target histograms (CSR).
+    pub c: Csr,
+    /// The target documents as sparse histograms (column content of `c`).
+    pub docs: Vec<SparseVec>,
+    /// Topic id of every target document.
+    pub doc_topics: Vec<u32>,
+    /// Query documents.
+    pub queries: Vec<SparseVec>,
+    /// Topic id of every query.
+    pub query_topics: Vec<u32>,
+}
+
+impl SyntheticCorpus {
+    pub fn builder() -> CorpusBuilder {
+        CorpusBuilder::default()
+    }
+
+    pub fn query(&self, i: usize) -> &SparseVec {
+        &self.queries[i]
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.embeddings.nrows()
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.c.ncols()
+    }
+
+    /// Density of the target matrix (paper: ≈ 3.5e-5 at full scale).
+    pub fn density(&self) -> f64 {
+        self.c.density()
+    }
+
+    /// Mean distinct words per target document.
+    pub fn mean_doc_words(&self) -> f64 {
+        self.c.nnz() as f64 / self.num_docs() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SyntheticCorpus {
+        SyntheticCorpus::builder()
+            .vocab_size(2_000)
+            .num_docs(100)
+            .embedding_dim(32)
+            .n_topics(4)
+            .num_queries(5)
+            .query_words(10, 20)
+            .seed(7)
+            .build()
+    }
+
+    #[test]
+    fn shapes_and_normalization() {
+        let corpus = small();
+        assert_eq!(corpus.c.nrows(), 2_000);
+        assert_eq!(corpus.c.ncols(), 100);
+        assert_eq!(corpus.queries.len(), 5);
+        for s in corpus.c.column_sums() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        for q in &corpus.queries {
+            assert!((q.sum() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn query_sizes_span_requested_range() {
+        let corpus = small();
+        let sizes: Vec<usize> = corpus.queries.iter().map(|q| q.nnz()).collect();
+        assert_eq!(*sizes.first().unwrap(), 10);
+        assert_eq!(*sizes.last().unwrap(), 20);
+        for w in sizes.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.doc_topics, b.doc_topics);
+    }
+
+    #[test]
+    fn docs_lean_toward_their_topic() {
+        let corpus = small();
+        let mut in_topic = 0usize;
+        let mut total = 0usize;
+        for (doc, &topic) in corpus.docs.iter().zip(&corpus.doc_topics) {
+            for &w in &doc.idx {
+                total += 1;
+                if corpus.word_topic[w as usize] == topic {
+                    in_topic += 1;
+                }
+            }
+        }
+        let frac = in_topic as f64 / total as f64;
+        assert!(frac > 0.6, "topic coherence too low: {frac}");
+    }
+
+    #[test]
+    fn density_matches_paper_band_at_scale() {
+        // At a mid scale, distinct words per doc should be in the paper's
+        // ballpark (~34 at 60 tokens/doc under Zipf).
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(20_000)
+            .num_docs(200)
+            .embedding_dim(16)
+            .seed(9)
+            .build();
+        let mean = corpus.mean_doc_words();
+        assert!((20.0..50.0).contains(&mean), "mean distinct words {mean}");
+    }
+}

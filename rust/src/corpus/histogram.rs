@@ -1,0 +1,145 @@
+//! Normalized word-frequency histograms: the `r` vector of a query and
+//! the columns of the target matrix `c` (paper §3: `sum(r) = 1`,
+//! `sum(c[:, j]) = 1`).
+
+use crate::sparse::{Coo, Csr};
+use crate::Real;
+
+/// A sparse normalized histogram over a `dim`-word vocabulary.
+/// Indices are strictly ascending; values are positive and sum to 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<Real>,
+}
+
+impl SparseVec {
+    /// Build from raw `(word, count)` pairs (duplicates summed), then
+    /// normalize to unit mass.
+    pub fn from_counts(dim: usize, counts: &[(usize, usize)]) -> Self {
+        let mut pairs: Vec<(usize, Real)> = Vec::with_capacity(counts.len());
+        for &(w, k) in counts {
+            assert!(w < dim, "word {w} out of vocabulary {dim}");
+            if k > 0 {
+                pairs.push((w, k as Real));
+            }
+        }
+        pairs.sort_unstable_by_key(|&(w, _)| w);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<Real> = Vec::with_capacity(pairs.len());
+        for (w, k) in pairs {
+            if idx.last() == Some(&(w as u32)) {
+                *val.last_mut().unwrap() += k;
+            } else {
+                idx.push(w as u32);
+                val.push(k);
+            }
+        }
+        let total: Real = val.iter().sum();
+        assert!(total > 0.0, "empty histogram");
+        for v in &mut val {
+            *v /= total;
+        }
+        Self { dim, idx, val }
+    }
+
+    /// Build from a token-id stream.
+    pub fn from_token_ids(dim: usize, ids: &[usize]) -> Self {
+        let mut counts = std::collections::HashMap::new();
+        for &id in ids {
+            *counts.entry(id).or_insert(0usize) += 1;
+        }
+        let counts: Vec<(usize, usize)> = counts.into_iter().collect();
+        Self::from_counts(dim, &counts)
+    }
+
+    /// Number of distinct words (the paper's `v_r`).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Total mass (should be 1 after construction).
+    pub fn sum(&self) -> Real {
+        self.val.iter().sum()
+    }
+
+    /// Selected indices as `usize` (solver input).
+    pub fn indices(&self) -> Vec<usize> {
+        self.idx.iter().map(|&i| i as usize).collect()
+    }
+
+    /// Dense expansion (for oracles/tests).
+    pub fn to_dense(&self) -> Vec<Real> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// Assemble target documents into the `V × N` CSR matrix `c`
+/// (column `j` = histogram of document `j`; every column sums to 1).
+pub fn docs_to_csr(dim: usize, docs: &[SparseVec]) -> Csr {
+    let nnz: usize = docs.iter().map(|d| d.nnz()).sum();
+    let mut coo = Coo::with_capacity(dim, docs.len(), nnz);
+    for (j, doc) in docs.iter().enumerate() {
+        assert_eq!(doc.dim, dim, "document dimension mismatch");
+        for (&i, &v) in doc.idx.iter().zip(&doc.val) {
+            coo.push(i as usize, j, v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_to_unit_mass() {
+        let h = SparseVec::from_counts(10, &[(3, 2), (7, 6)]);
+        assert_eq!(h.nnz(), 2);
+        assert!((h.sum() - 1.0).abs() < 1e-15);
+        assert!((h.val[0] - 0.25).abs() < 1e-15);
+        assert!((h.val[1] - 0.75).abs() < 1e-15);
+    }
+
+    #[test]
+    fn duplicates_and_zeros_handled() {
+        let h = SparseVec::from_counts(10, &[(5, 1), (5, 1), (2, 0), (1, 2)]);
+        assert_eq!(h.idx, vec![1, 5]);
+        assert!((h.val[0] - 0.5).abs() < 1e-15);
+        assert!((h.val[1] - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_token_ids_counts() {
+        let h = SparseVec::from_token_ids(10, &[4, 4, 9, 4, 9]);
+        assert_eq!(h.idx, vec![4, 9]);
+        assert!((h.val[0] - 0.6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn docs_to_csr_columns_normalized() {
+        let d0 = SparseVec::from_counts(6, &[(0, 1), (3, 1)]);
+        let d1 = SparseVec::from_counts(6, &[(3, 2), (5, 2)]);
+        let c = docs_to_csr(6, &[d0, d1]);
+        assert_eq!(c.nrows(), 6);
+        assert_eq!(c.ncols(), 2);
+        let sums = c.column_sums();
+        for s in sums {
+            assert!((s - 1.0).abs() < 1e-15);
+        }
+        assert_eq!(c.get(3, 0), 0.5);
+        assert_eq!(c.get(3, 1), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty histogram")]
+    fn empty_histogram_panics() {
+        let _ = SparseVec::from_counts(4, &[]);
+    }
+}

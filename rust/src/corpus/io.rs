@@ -1,0 +1,218 @@
+//! Binary persistence for corpora ("gen once, serve many"): a simple
+//! little-endian container (`WMDC` magic) holding the embeddings, the CSR
+//! target matrix, queries and topic metadata. No external serialization
+//! crates exist offline; the format is versioned and length-prefixed.
+
+use super::generator::SyntheticCorpus;
+use super::histogram::SparseVec;
+use crate::sparse::{Csr, Dense};
+use crate::Real;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"WMDC";
+const VERSION: u32 = 1;
+
+fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn write_f64s(w: &mut impl Write, xs: &[Real]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s(r: &mut impl Read) -> io::Result<Vec<Real>> {
+    let n = read_u64(r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 8];
+    for _ in 0..n {
+        r.read_exact(&mut buf)?;
+        out.push(Real::from_le_bytes(buf));
+    }
+    Ok(out)
+}
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut impl Read) -> io::Result<Vec<u32>> {
+    let n = read_u64(r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut buf)?;
+        out.push(u32::from_le_bytes(buf));
+    }
+    Ok(out)
+}
+
+fn write_usizes(w: &mut impl Write, xs: &[usize]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        write_u64(w, x as u64)?;
+    }
+    Ok(())
+}
+
+fn read_usizes(r: &mut impl Read) -> io::Result<Vec<usize>> {
+    let n = read_u64(r)? as usize;
+    (0..n).map(|_| read_u64(r).map(|v| v as usize)).collect()
+}
+
+fn write_dense(w: &mut impl Write, d: &Dense) -> io::Result<()> {
+    write_u64(w, d.nrows() as u64)?;
+    write_u64(w, d.ncols() as u64)?;
+    write_f64s(w, d.as_slice())
+}
+
+fn read_dense(r: &mut impl Read) -> io::Result<Dense> {
+    let nrows = read_u64(r)? as usize;
+    let ncols = read_u64(r)? as usize;
+    let data = read_f64s(r)?;
+    if data.len() != nrows * ncols {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "dense shape mismatch"));
+    }
+    Ok(Dense::from_vec(nrows, ncols, data))
+}
+
+fn write_csr(w: &mut impl Write, m: &Csr) -> io::Result<()> {
+    write_u64(w, m.nrows() as u64)?;
+    write_u64(w, m.ncols() as u64)?;
+    write_usizes(w, m.row_ptr())?;
+    write_u32s(w, m.col_idx())?;
+    write_f64s(w, m.values())
+}
+
+fn read_csr(r: &mut impl Read) -> io::Result<Csr> {
+    let nrows = read_u64(r)? as usize;
+    let ncols = read_u64(r)? as usize;
+    let row_ptr = read_usizes(r)?;
+    let col_idx = read_u32s(r)?;
+    let values = read_f64s(r)?;
+    // from_parts validates; map panics into io errors via catch is ugly —
+    // validate manually first.
+    if row_ptr.len() != nrows + 1
+        || col_idx.len() != values.len()
+        || *row_ptr.last().unwrap_or(&usize::MAX) != values.len()
+    {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "CSR structure invalid"));
+    }
+    Ok(Csr::from_parts(nrows, ncols, row_ptr, col_idx, values))
+}
+
+fn write_sparsevec(w: &mut impl Write, v: &SparseVec) -> io::Result<()> {
+    write_u64(w, v.dim as u64)?;
+    write_u32s(w, &v.idx)?;
+    write_f64s(w, &v.val)
+}
+
+fn read_sparsevec(r: &mut impl Read) -> io::Result<SparseVec> {
+    let dim = read_u64(r)? as usize;
+    let idx = read_u32s(r)?;
+    let val = read_f64s(r)?;
+    if idx.len() != val.len() {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "sparse vec mismatch"));
+    }
+    Ok(SparseVec { dim, idx, val })
+}
+
+/// Serialize a full corpus to `path`.
+pub fn save_corpus(path: &Path, corpus: &SyntheticCorpus) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    write_dense(&mut w, &corpus.embeddings)?;
+    write_u32s(&mut w, &corpus.word_topic)?;
+    write_csr(&mut w, &corpus.c)?;
+    write_u64(&mut w, corpus.docs.len() as u64)?;
+    for d in &corpus.docs {
+        write_sparsevec(&mut w, d)?;
+    }
+    write_u32s(&mut w, &corpus.doc_topics)?;
+    write_u64(&mut w, corpus.queries.len() as u64)?;
+    for q in &corpus.queries {
+        write_sparsevec(&mut w, q)?;
+    }
+    write_u32s(&mut w, &corpus.query_topics)?;
+    w.flush()
+}
+
+/// Load a corpus previously written by [`save_corpus`].
+pub fn load_corpus(path: &Path) -> io::Result<SyntheticCorpus> {
+    let file = std::fs::File::open(path)?;
+    let mut r = io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a WMDC file"));
+    }
+    let mut ver = [0u8; 4];
+    r.read_exact(&mut ver)?;
+    if u32::from_le_bytes(ver) != VERSION {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "unsupported WMDC version"));
+    }
+    let embeddings = read_dense(&mut r)?;
+    let word_topic = read_u32s(&mut r)?;
+    let c = read_csr(&mut r)?;
+    let ndocs = read_u64(&mut r)? as usize;
+    let docs = (0..ndocs).map(|_| read_sparsevec(&mut r)).collect::<io::Result<Vec<_>>>()?;
+    let doc_topics = read_u32s(&mut r)?;
+    let nq = read_u64(&mut r)? as usize;
+    let queries = (0..nq).map(|_| read_sparsevec(&mut r)).collect::<io::Result<Vec<_>>>()?;
+    let query_topics = read_u32s(&mut r)?;
+    Ok(SyntheticCorpus { embeddings, word_topic, c, docs, doc_topics, queries, query_topics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_corpus() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(300)
+            .num_docs(25)
+            .embedding_dim(12)
+            .num_queries(3)
+            .query_words(4, 8)
+            .seed(9)
+            .build();
+        let dir = std::env::temp_dir().join(format!("wmdc-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.wmdc");
+        save_corpus(&path, &corpus).unwrap();
+        let back = load_corpus(&path).unwrap();
+        assert_eq!(back.embeddings, corpus.embeddings);
+        assert_eq!(back.c, corpus.c);
+        assert_eq!(back.queries, corpus.queries);
+        assert_eq!(back.doc_topics, corpus.doc_topics);
+        assert_eq!(back.word_topic, corpus.word_topic);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join(format!("wmdc-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.wmdc");
+        std::fs::write(&path, b"not a corpus at all").unwrap();
+        assert!(load_corpus(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

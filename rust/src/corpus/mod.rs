@@ -1,0 +1,24 @@
+//! Corpus substrate: vocabulary, tokenization, histograms, synthetic
+//! embeddings and document generation.
+//!
+//! The paper's evaluation uses the `crawl-300d-2M` embeddings (100 k words
+//! × 300 dims, fp64) and the first 5 000 dbpedia documents (c density
+//! ≈ 0.0035 %, source docs of 19–43 words). Neither asset is available
+//! offline, so this module provides statistically matched synthetic
+//! substitutes (see DESIGN.md §3) plus a tiny *real* hand-embedded corpus
+//! for semantic sanity tests (the paper's Obama/President example).
+
+pub mod embedding;
+pub mod generator;
+pub mod histogram;
+pub mod io;
+pub mod tiny;
+pub mod tokenizer;
+pub mod vocab;
+
+pub use embedding::synthetic_embeddings;
+pub use generator::{CorpusBuilder, SyntheticCorpus};
+pub use histogram::{docs_to_csr, SparseVec};
+pub use tiny::TinyCorpus;
+pub use tokenizer::{tokenize, tokenize_filtered};
+pub use vocab::Vocabulary;

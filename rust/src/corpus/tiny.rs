@@ -1,0 +1,213 @@
+//! A tiny **real** corpus with hand-crafted semantic embeddings — enough
+//! to run the paper's motivating example end-to-end without the 2 GB
+//! `crawl-300d-2M` download: "Obama speaks to the media in Illinois" must
+//! come out closer to "The President greets the press in Chicago" than to
+//! unrelated sentences (paper §2, Fig. 1).
+//!
+//! Words are embedded in a 12-dimensional interpretable feature space
+//! (politics, person, city, media, speech-act, food, sport, tech, ...);
+//! synonyms share feature patterns, so Euclidean distance reflects
+//! semantic relatedness the same way word2vec neighborhoods do.
+
+use super::histogram::SparseVec;
+use super::tokenizer::tokenize_filtered;
+use super::vocab::Vocabulary;
+use crate::sparse::Dense;
+use crate::Real;
+
+/// Feature dimensions of the hand-crafted embedding space.
+pub const TINY_DIM: usize = 12;
+
+// (word, 12-dim feature vector). Related words differ by small offsets.
+#[rustfmt::skip]
+const WORDS: &[(&str, [f32; TINY_DIM])] = &[
+    // politics / people         pol  per  cit  med  spk  foo  spo  tec  nat  fin  art  x
+    ("obama",      [ 1.0, 1.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.2, 0.0, 0.0, 0.10]),
+    ("president",  [ 1.0, 0.9, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.2, 0.0, 0.0, 0.15]),
+    ("senator",    [ 0.9, 0.9, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.2, 0.0, 0.0, 0.25]),
+    ("governor",   [ 0.9, 0.9, 0.1, 0.0, 0.1, 0.0, 0.0, 0.0, 0.2, 0.0, 0.0, 0.30]),
+    ("minister",   [ 0.9, 0.9, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.3, 0.0, 0.0, 0.35]),
+    ("election",   [ 1.0, 0.1, 0.0, 0.1, 0.0, 0.0, 0.0, 0.0, 0.3, 0.0, 0.0, 0.40]),
+    ("vote",       [ 0.9, 0.1, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.2, 0.0, 0.0, 0.45]),
+    // cities / places
+    ("illinois",   [ 0.1, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.10]),
+    ("chicago",    [ 0.1, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.15]),
+    ("japan",      [ 0.1, 0.0, 0.9, 0.0, 0.0, 0.1, 0.0, 0.1, 0.9, 0.0, 0.0, 0.30]),
+    ("bangladesh", [ 0.1, 0.0, 0.9, 0.0, 0.0, 0.1, 0.0, 0.0, 0.9, 0.0, 0.0, 0.35]),
+    ("city",       [ 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.4, 0.0, 0.0, 0.40]),
+    ("stadium",    [ 0.0, 0.0, 0.7, 0.0, 0.0, 0.0, 0.6, 0.0, 0.2, 0.0, 0.0, 0.45]),
+    // media / speech acts
+    ("media",      [ 0.1, 0.0, 0.0, 1.0, 0.3, 0.0, 0.0, 0.1, 0.0, 0.0, 0.1, 0.10]),
+    ("press",      [ 0.1, 0.0, 0.0, 1.0, 0.3, 0.0, 0.0, 0.0, 0.0, 0.0, 0.1, 0.15]),
+    ("journalist", [ 0.1, 0.5, 0.0, 0.9, 0.3, 0.0, 0.0, 0.0, 0.0, 0.0, 0.1, 0.20]),
+    ("news",       [ 0.1, 0.0, 0.0, 0.9, 0.2, 0.0, 0.0, 0.1, 0.0, 0.0, 0.1, 0.25]),
+    ("speaks",     [ 0.1, 0.2, 0.0, 0.3, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.10]),
+    ("greets",     [ 0.1, 0.2, 0.0, 0.2, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.15]),
+    ("talks",      [ 0.1, 0.2, 0.0, 0.3, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.20]),
+    ("announces",  [ 0.2, 0.2, 0.0, 0.4, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.25]),
+    // food
+    ("sushi",      [ 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.10]),
+    ("biriyani",   [ 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.15]),
+    ("restaurant", [ 0.0, 0.0, 0.3, 0.0, 0.0, 0.9, 0.0, 0.0, 0.1, 0.1, 0.0, 0.20]),
+    ("chef",       [ 0.0, 0.6, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.1, 0.0, 0.0, 0.25]),
+    ("dinner",     [ 0.0, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.30]),
+    ("cooks",      [ 0.0, 0.2, 0.0, 0.0, 0.2, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.35]),
+    ("noodles",    [ 0.0, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.4, 0.0, 0.0, 0.40]),
+    // sports
+    ("football",   [ 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 1.0, 0.0, 0.1, 0.0, 0.0, 0.10]),
+    ("match",      [ 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.15]),
+    ("team",       [ 0.0, 0.3, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.20]),
+    ("player",     [ 0.0, 0.7, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.25]),
+    ("wins",       [ 0.0, 0.1, 0.0, 0.1, 0.0, 0.0, 0.9, 0.0, 0.0, 0.1, 0.0, 0.30]),
+    ("coach",      [ 0.0, 0.7, 0.0, 0.0, 0.2, 0.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.35]),
+    // tech
+    ("computer",   [ 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.10]),
+    ("software",   [ 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 1.0, 0.0, 0.1, 0.0, 0.15]),
+    ("algorithm",  [ 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.1, 0.20]),
+    ("startup",    [ 0.0, 0.2, 0.1, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.5, 0.0, 0.25]),
+    ("releases",   [ 0.0, 0.1, 0.0, 0.3, 0.3, 0.0, 0.0, 0.8, 0.0, 0.0, 0.0, 0.30]),
+    ("engineer",   [ 0.0, 0.7, 0.0, 0.0, 0.0, 0.0, 0.0, 0.9, 0.0, 0.0, 0.0, 0.35]),
+    // misc fillers
+    ("amy",        [ 0.0, 0.9, 0.0, 0.1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.6, 0.40]),
+    ("adams",      [ 0.0, 0.9, 0.0, 0.1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.6, 0.45]),
+    ("deepfake",   [ 0.0, 0.1, 0.0, 0.4, 0.0, 0.0, 0.0, 0.8, 0.0, 0.0, 0.3, 0.50]),
+    ("movie",      [ 0.0, 0.1, 0.0, 0.3, 0.0, 0.0, 0.0, 0.1, 0.0, 0.0, 0.9, 0.55]),
+    ("actor",      [ 0.0, 0.8, 0.0, 0.2, 0.1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.8, 0.60]),
+    ("market",     [ 0.1, 0.0, 0.1, 0.1, 0.0, 0.1, 0.0, 0.1, 0.0, 0.9, 0.0, 0.65]),
+    ("bank",       [ 0.1, 0.0, 0.2, 0.0, 0.0, 0.0, 0.0, 0.1, 0.0, 1.0, 0.0, 0.70]),
+    ("stocks",     [ 0.1, 0.0, 0.0, 0.1, 0.0, 0.0, 0.0, 0.1, 0.0, 1.0, 0.0, 0.75]),
+];
+
+/// `(sentence, topic-label)` documents.
+#[rustfmt::skip]
+pub const SENTENCES: &[(&str, &str)] = &[
+    ("The President greets the press in Chicago",        "politics"),
+    ("The senator talks to journalists about the election", "politics"),
+    ("The governor announces the vote in Illinois",      "politics"),
+    ("The minister speaks to the media about the election", "politics"),
+    ("The chef cooks sushi for dinner in Japan",         "food"),
+    ("A restaurant in Bangladesh serves biriyani and noodles", "food"),
+    ("The chef cooks noodles at the restaurant",         "food"),
+    ("The team wins the football match at the stadium",  "sports"),
+    ("The coach greets the player after the match",      "sports"),
+    ("The player speaks to the press after the football match", "sports"),
+    ("The startup releases new software for the computer", "tech"),
+    ("An engineer talks about the algorithm and software", "tech"),
+    ("The startup engineer releases a computer algorithm", "tech"),
+    ("Amy Adams was in deepFake",                        "misc"),
+    ("The actor speaks about the movie to the press",    "misc"),
+    ("The bank announces stocks news to the market",     "finance"),
+];
+
+/// The loaded tiny corpus: vocabulary, embeddings, and labeled documents.
+pub struct TinyCorpus {
+    pub vocab: Vocabulary,
+    pub embeddings: Dense,
+    pub docs: Vec<SparseVec>,
+    pub labels: Vec<&'static str>,
+    pub sentences: Vec<&'static str>,
+}
+
+impl TinyCorpus {
+    pub fn load() -> Self {
+        let vocab = Vocabulary::from_words(WORDS.iter().map(|(w, _)| w.to_string()));
+        let embeddings = Dense::from_fn(WORDS.len(), TINY_DIM, |i, j| {
+            // Scale up so distances are O(1)-separated like real word2vec.
+            WORDS[i].1[j] as Real * 3.0
+        });
+        let mut docs = Vec::new();
+        let mut labels = Vec::new();
+        let mut sentences = Vec::new();
+        let tiny = Self {
+            vocab: vocab.clone(),
+            embeddings: embeddings.clone(),
+            docs: vec![],
+            labels: vec![],
+            sentences: vec![],
+        };
+        for (text, label) in SENTENCES {
+            let h = tiny.histogram(text).unwrap_or_else(|| {
+                panic!("tiny corpus sentence has no in-vocabulary words: {text}")
+            });
+            docs.push(h);
+            labels.push(*label);
+            sentences.push(*text);
+        }
+        Self { vocab, embeddings, docs, labels, sentences }
+    }
+
+    /// Tokenize a sentence and build its normalized histogram over the
+    /// tiny vocabulary. Returns `None` when no token is in-vocabulary.
+    pub fn histogram(&self, text: &str) -> Option<SparseVec> {
+        let ids: Vec<usize> = tokenize_filtered(text)
+            .into_iter()
+            .filter_map(|t| self.vocab.id(&t).map(|i| i as usize))
+            .collect();
+        if ids.is_empty() {
+            None
+        } else {
+            Some(SparseVec::from_token_ids(self.vocab.len(), &ids))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_with_consistent_shapes() {
+        let t = TinyCorpus::load();
+        assert_eq!(t.embeddings.nrows(), t.vocab.len());
+        assert_eq!(t.embeddings.ncols(), TINY_DIM);
+        assert_eq!(t.docs.len(), SENTENCES.len());
+        for d in &t.docs {
+            assert!((d.sum() - 1.0).abs() < 1e-12);
+            assert!(d.nnz() >= 2);
+        }
+    }
+
+    #[test]
+    fn no_duplicate_words() {
+        let t = TinyCorpus::load();
+        for i in 0..t.vocab.len() {
+            assert_eq!(t.vocab.id(t.vocab.word(i)), Some(i as u32));
+        }
+    }
+
+    #[test]
+    fn paper_analogy_geometry() {
+        // m(media, press) < m(media, obama) — paper §2.
+        let t = TinyCorpus::load();
+        let d = |a: &str, b: &str| {
+            let ia = t.vocab.id(a).unwrap() as usize;
+            let ib = t.vocab.id(b).unwrap() as usize;
+            t.embeddings
+                .row(ia)
+                .iter()
+                .zip(t.embeddings.row(ib))
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(d("media", "press") < d("media", "obama"));
+        assert!(d("obama", "president") < d("obama", "sushi"));
+        assert!(d("illinois", "chicago") < d("illinois", "software"));
+        // Japan:sushi ≈ Bangladesh:biriyani relational structure.
+        assert!(d("japan", "sushi") < d("japan", "football"));
+        assert!(d("bangladesh", "biriyani") < d("bangladesh", "computer"));
+    }
+
+    #[test]
+    fn histogram_of_unknown_text_is_none() {
+        let t = TinyCorpus::load();
+        assert!(t.histogram("zzz qqq unknownword").is_none());
+    }
+
+    #[test]
+    fn obama_sentence_histogram() {
+        let t = TinyCorpus::load();
+        let h = t.histogram("Obama speaks to the media in Illinois").unwrap();
+        assert_eq!(h.nnz(), 4); // obama, speaks, media, illinois
+    }
+}

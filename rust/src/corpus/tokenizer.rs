@@ -1,0 +1,65 @@
+//! Tokenization + stop-word filtering — the paper's preprocessing:
+//! *"throwing away the information about word order, capitalization and
+//! removing the frequent and uninformative stop-words"* (§2).
+
+/// The uninformative high-frequency words dropped before histogramming.
+/// Matches the paper's example: A = "Obama speaks to the media in
+/// Illinois" → ['illinois', 'media', 'speaks', 'obama'].
+pub const STOPWORDS: &[&str] = &[
+    "a", "an", "and", "are", "as", "at", "be", "but", "by", "for", "from", "has", "he", "her",
+    "his", "i", "in", "is", "it", "its", "of", "on", "or", "our", "she", "that", "the", "their",
+    "they", "this", "to", "was", "we", "were", "will", "with", "you",
+];
+
+/// Lowercase and split on non-alphanumeric boundaries.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch.is_alphanumeric() || ch == '\'' {
+            cur.extend(ch.to_lowercase());
+        } else if !cur.is_empty() {
+            tokens.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        tokens.push(cur);
+    }
+    tokens
+}
+
+/// Tokenize and drop stop-words.
+pub fn tokenize_filtered(text: &str) -> Vec<String> {
+    tokenize(text)
+        .into_iter()
+        .filter(|t| !STOPWORDS.contains(&t.as_str()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_sentence_a() {
+        let toks = tokenize_filtered("Obama speaks to the media in Illinois");
+        assert_eq!(toks, vec!["obama", "speaks", "media", "illinois"]);
+    }
+
+    #[test]
+    fn paper_example_sentence_b() {
+        let toks = tokenize_filtered("The President greets the press in Chicago.");
+        assert_eq!(toks, vec!["president", "greets", "press", "chicago"]);
+    }
+
+    #[test]
+    fn punctuation_and_case() {
+        assert_eq!(tokenize("Hello, WORLD! 42x"), vec!["hello", "world", "42x"]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("  ,.;  ").is_empty());
+    }
+}

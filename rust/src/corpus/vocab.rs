@@ -1,0 +1,75 @@
+//! Vocabulary: word ↔ index mapping.
+
+use std::collections::HashMap;
+
+/// An immutable word list with a reverse index.
+#[derive(Clone, Debug, Default)]
+pub struct Vocabulary {
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocabulary {
+    pub fn from_words<I: IntoIterator<Item = String>>(words: I) -> Self {
+        let words: Vec<String> = words.into_iter().collect();
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Self { words, index }
+    }
+
+    /// Synthetic vocabulary `w0000000..`, used when only the geometry of
+    /// the embedding space matters.
+    pub fn synthetic(n: usize) -> Self {
+        Self::from_words((0..n).map(|i| format!("w{i:07}")))
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    #[inline]
+    pub fn word(&self, i: usize) -> &str {
+        &self.words[i]
+    }
+
+    #[inline]
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    pub fn contains(&self, word: &str) -> bool {
+        self.index.contains_key(word)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = Vocabulary::from_words(["alpha", "beta", "gamma"].map(String::from));
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.id("beta"), Some(1));
+        assert_eq!(v.word(2), "gamma");
+        assert_eq!(v.id("delta"), None);
+    }
+
+    #[test]
+    fn synthetic_unique() {
+        let v = Vocabulary::synthetic(1000);
+        assert_eq!(v.len(), 1000);
+        for i in 0..1000 {
+            assert_eq!(v.id(v.word(i)), Some(i as u32));
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! # sinkhorn-wmd
+//!
+//! A shared-memory parallel Sinkhorn-Knopp solver for the Word Mover's
+//! Distance (WMD), reproducing *"An Efficient Shared-memory Parallel
+//! Sinkhorn-Knopp Algorithm to Compute the Word Mover's Distance"*
+//! (Tithi & Petrini, 2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a sparse, fused
+//!   `SDDMM_SpMM` Sinkhorn iteration with nnz-balanced work partitioning
+//!   over a hand-rolled OpenMP-style thread pool, wrapped in a query
+//!   service (router → batcher → scheduler → workers).
+//! * **L2** — the dense baseline written in JAX (`python/compile/model.py`),
+//!   AOT-lowered to HLO text and executed from Rust through PJRT
+//!   ([`runtime`]). Python never runs on the request path.
+//! * **L1** — Pallas kernels for the compute hot-spots
+//!   (`python/compile/kernels/`), lowered into the same HLO artifacts.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sinkhorn_wmd::corpus::SyntheticCorpus;
+//! use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+//! use sinkhorn_wmd::parallel::Pool;
+//!
+//! let corpus = SyntheticCorpus::builder()
+//!     .vocab_size(10_000)
+//!     .num_docs(500)
+//!     .embedding_dim(300)
+//!     .seed(42)
+//!     .build();
+//! let pool = Pool::new(8);
+//! let solver = SparseSolver::new(SinkhornConfig::default());
+//! let prep = solver.prepare(&corpus.embeddings, corpus.query(0), &pool);
+//! let wmd = solver.solve(&prep, &corpus.c, &pool);
+//! println!("closest doc: {:?}", wmd.argmin());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod dist;
+pub mod emd;
+pub mod parallel;
+pub mod prune;
+pub mod runtime;
+pub mod sinkhorn;
+pub mod sparse;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide floating point type for solver state (the paper uses fp64).
+pub type Real = f64;

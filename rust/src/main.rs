@@ -1,0 +1,240 @@
+//! `sinkhorn-wmd` — CLI for the parallel Sinkhorn-Knopp WMD system.
+//!
+//! Subcommands:
+//!   info          host specs (Table 3) + artifact manifest
+//!   gen-corpus    build a synthetic corpus, print its statistics
+//!   query         WMD of a sentence against the tiny real corpus
+//!   solve         run queries on a synthetic corpus, print top-k + timing
+//!   serve-demo    drive the batched query service on a synthetic stream
+//!   gen-config    print a default config file
+
+use sinkhorn_wmd::cli::Args;
+use sinkhorn_wmd::config::RunConfig;
+use sinkhorn_wmd::coordinator::{
+    Backend, DocStore, QueryRequest, ServiceConfig, WmdService,
+};
+use sinkhorn_wmd::corpus::TinyCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::bench::{SysInfo, Table};
+use std::time::Instant;
+
+const USAGE: &str = "\
+sinkhorn-wmd <subcommand> [options]
+
+Subcommands:
+  info                         host specs + loaded artifact manifest
+  gen-corpus [--vocab N] [--docs N] [--dim N] [--seed S]
+  query --text \"...\"           WMD against the tiny real corpus
+  solve [--threads P] [--queries K] [--vocab N] [--docs N]
+  serve-demo [--threads P] [--requests K] [--prefer sparse|dense|pjrt]
+  gen-config                   print a default run configuration
+
+Common options:
+  --config FILE                load a RunConfig file (TOML subset)
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("gen-corpus") => cmd_gen_corpus(&args),
+        Some("query") => cmd_query(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        Some("gen-config") => {
+            println!("{}", RunConfig::default().render());
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig, String> {
+    match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path)),
+        None => Ok(RunConfig { artifacts_dir: "artifacts".into(), ..Default::default() }),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    println!("== Host (paper Table 3) ==");
+    SysInfo::capture().table().print();
+    println!();
+    let dir = std::path::Path::new(&cfg.artifacts_dir);
+    match sinkhorn_wmd::runtime::Manifest::read(dir) {
+        Ok(m) => {
+            println!("== AOT artifacts ({}) ==", cfg.artifacts_dir);
+            let mut t = Table::new(["name", "variant", "v_r", "vocab", "n_docs", "dim", "pallas"]);
+            for a in &m.artifacts {
+                t.row([
+                    a.name.clone(),
+                    a.variant.clone(),
+                    a.v_r.to_string(),
+                    a.vocab.to_string(),
+                    a.n_docs.to_string(),
+                    a.dim.to_string(),
+                    a.pallas.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("(no artifacts: {e:#})"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<(), String> {
+    let mut cfg = load_config(args)?;
+    cfg.corpus.vocab_size = args.get_or("vocab", cfg.corpus.vocab_size)?;
+    cfg.corpus.num_docs = args.get_or("docs", cfg.corpus.num_docs)?;
+    cfg.corpus.embedding_dim = args.get_or("dim", cfg.corpus.embedding_dim)?;
+    cfg.corpus.seed = args.get_or("seed", cfg.corpus.seed)?;
+    let t0 = Instant::now();
+    let corpus = cfg.corpus.build();
+    if let Some(out) = args.get("out") {
+        sinkhorn_wmd::corpus::io::save_corpus(std::path::Path::new(out), &corpus)
+            .map_err(|e| format!("saving corpus: {e}"))?;
+        println!("saved corpus to {out}");
+    }
+    println!(
+        "built corpus in {:.2}s: V={} N={} w={} nnz(c)={} density={:.6}% mean-words/doc={:.1}",
+        t0.elapsed().as_secs_f64(),
+        corpus.vocab_size(),
+        corpus.num_docs(),
+        corpus.embeddings.ncols(),
+        corpus.c.nnz(),
+        corpus.density() * 100.0,
+        corpus.mean_doc_words(),
+    );
+    for (i, q) in corpus.queries.iter().enumerate() {
+        println!("  query {i}: v_r={}", q.nnz());
+    }
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<(), String> {
+    let text = args.get("text").ok_or("query requires --text \"...\"")?;
+    let tiny = TinyCorpus::load();
+    let query = tiny
+        .histogram(text)
+        .ok_or("no in-vocabulary words in the query (tiny corpus has ~48 words)")?;
+    let store = DocStore::from_tiny(&tiny);
+    let pool = Pool::new(args.get_or("threads", 2)?);
+    let solver = SparseSolver::new(SinkhornConfig { lambda: 30.0, ..Default::default() });
+    let out = solver.wmd_one_to_many(&store.embeddings, &query, &store.c, &pool);
+    println!("query: {text:?}  (v_r={})", query.nnz());
+    let mut t = Table::new(["rank", "wmd", "label", "sentence"]);
+    for (rank, (j, d)) in out.top_k(store.num_docs()).into_iter().enumerate() {
+        t.row([
+            (rank + 1).to_string(),
+            format!("{d:.4}"),
+            store.labels[j].clone(),
+            store.texts[j].clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let mut cfg = load_config(args)?;
+    cfg.corpus.vocab_size = args.get_or("vocab", cfg.corpus.vocab_size)?;
+    cfg.corpus.num_docs = args.get_or("docs", cfg.corpus.num_docs)?;
+    cfg.corpus.num_queries = args.get_or("queries", cfg.corpus.num_queries)?;
+    let threads = args.get_or("threads", cfg.threads())?;
+    let corpus = if let Some(path) = args.get("corpus") {
+        println!("loading corpus from {path} ...");
+        sinkhorn_wmd::corpus::io::load_corpus(std::path::Path::new(path))
+            .map_err(|e| format!("loading corpus: {e}"))?
+    } else {
+        println!("building corpus V={} N={} ...", cfg.corpus.vocab_size, cfg.corpus.num_docs);
+        cfg.corpus.build()
+    };
+    let pool = Pool::new(threads);
+    let solver = SparseSolver::new(cfg.sinkhorn);
+    println!(
+        "solving {} queries on {} threads (λ={}, max_iter={})",
+        corpus.queries.len(),
+        threads,
+        cfg.sinkhorn.lambda,
+        cfg.sinkhorn.max_iter
+    );
+    let mut t = Table::new(["query", "v_r", "iters", "time", "best doc", "best wmd"]);
+    for (i, q) in corpus.queries.iter().enumerate() {
+        let t0 = Instant::now();
+        let out = solver.wmd_one_to_many(&corpus.embeddings, q, &corpus.c, &pool);
+        let dt = t0.elapsed();
+        let best = out.argmin().unwrap();
+        t.row([
+            i.to_string(),
+            q.nnz().to_string(),
+            out.iterations.to_string(),
+            format!("{:.1} ms", dt.as_secs_f64() * 1e3),
+            best.to_string(),
+            format!("{:.4}", out.wmd[best]),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let threads = args.get_or("threads", cfg.threads())?;
+    let requests = args.get_or("requests", 20usize)?;
+    let prefer = match args.get("prefer").unwrap_or("sparse") {
+        "sparse" => Backend::SparseRust,
+        "dense" => Backend::DenseRust,
+        "pjrt" => Backend::DensePjrt,
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let corpus = cfg.corpus.build();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let pjrt_dir = (prefer == Backend::DensePjrt)
+        .then(|| std::path::PathBuf::from(&cfg.artifacts_dir));
+    let service = WmdService::start(
+        store,
+        ServiceConfig {
+            threads,
+            sinkhorn: cfg.sinkhorn,
+            prefer,
+            ..Default::default()
+        },
+        pjrt_dir,
+    );
+    println!("submitting {requests} requests ...");
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| service.submit(QueryRequest::new(corpus.query(i % corpus.queries.len()).clone())))
+        .collect();
+    let mut ok = 0;
+    for rx in receivers {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "done: {ok}/{requests} ok in {:.2}s ({:.1} queries/s)",
+        wall.as_secs_f64(),
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", service.metrics().snapshot().report());
+    service.shutdown();
+    Ok(())
+}

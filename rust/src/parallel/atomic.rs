@@ -1,0 +1,87 @@
+//! Atomic f64 accumulation — the Rust equivalent of the paper's
+//! `#pragma omp atomic` update in the SpMM scatter (Fig. 3, line 5).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// View a mutable f64 slice as atomics for concurrent `+=` scatter.
+/// All access during the view's lifetime must go through atomic ops.
+pub struct AtomicF64Slice<'a> {
+    cells: &'a [AtomicU64],
+}
+
+impl<'a> AtomicF64Slice<'a> {
+    /// Reinterpret `&mut [f64]` as `&[AtomicU64]`.
+    ///
+    /// Sound because the mutable borrow guarantees exclusive provenance,
+    /// `f64` and `AtomicU64` have identical size/alignment, and all writes
+    /// during the borrow go through atomic operations.
+    pub fn new(data: &'a mut [f64]) -> Self {
+        let cells = unsafe {
+            std::slice::from_raw_parts(data.as_mut_ptr() as *const AtomicU64, data.len())
+        };
+        Self { cells }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// `data[i] += v` via CAS loop (x86-64 has no native f64 fetch-add).
+    #[inline]
+    pub fn fetch_add(&self, i: usize, v: f64) {
+        let cell = &self.cells[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Non-atomic read — only valid when no concurrent writers exist
+    /// (e.g. after the parallel region's implicit barrier).
+    #[inline]
+    pub fn load(&self, i: usize) -> f64 {
+        f64::from_bits(self.cells[i].load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::Pool;
+
+    #[test]
+    fn concurrent_adds_are_lossless() {
+        let mut data = vec![0.0f64; 16];
+        let view = AtomicF64Slice::new(&mut data);
+        let pool = Pool::new(8);
+        let per_thread = 10_000;
+        pool.run(|_tid, _nt| {
+            for k in 0..per_thread {
+                view.fetch_add(k % 16, 1.0);
+            }
+        });
+        drop(view);
+        let total: f64 = data.iter().sum();
+        assert_eq!(total, (8 * per_thread) as f64);
+    }
+
+    #[test]
+    fn fetch_add_accumulates_fractions() {
+        let mut data = vec![0.0f64; 1];
+        let view = AtomicF64Slice::new(&mut data);
+        for _ in 0..1000 {
+            view.fetch_add(0, 0.25);
+        }
+        assert_eq!(view.load(0), 250.0);
+    }
+}

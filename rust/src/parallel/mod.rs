@@ -1,0 +1,73 @@
+//! Shared-memory parallelism substrate — the OpenMP surrogate.
+//!
+//! The paper's implementation is C/OpenMP (`#pragma omp parallel for`,
+//! static scheduling, atomics in the type-1 SpMM scatter). This module
+//! provides the equivalent primitives on `std`:
+//!
+//! * [`Pool`] — a persistent worker pool executing SPMD regions
+//!   (`pool.run(|tid, nthreads| ...)`) and `parallel_for` loops with
+//!   static or dynamic (guided) chunking.
+//! * [`partition`] — work partitioning, including the paper's
+//!   nnz-balanced split: each thread binary-searches its starting
+//!   position inside the CSR `row_ptr` so every thread owns the same
+//!   number of non-zeros ("guarantees an equal work distribution across
+//!   threads", §4).
+
+pub mod atomic;
+pub mod partition;
+pub mod pool;
+pub mod simulator;
+
+pub use atomic::AtomicF64Slice;
+pub use partition::{balanced_nnz_partition, even_rows_partition, NnzRange};
+pub use pool::Pool;
+
+/// Static contiguous chunk of `0..n` for thread `tid` of `nthreads`.
+/// The first `n % nthreads` threads get one extra element.
+#[inline]
+pub fn static_chunk(n: usize, tid: usize, nthreads: usize) -> std::ops::Range<usize> {
+    debug_assert!(tid < nthreads);
+    let base = n / nthreads;
+    let rem = n % nthreads;
+    let start = tid * base + tid.min(rem);
+    let len = base + usize::from(tid < rem);
+    start..(start + len).min(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_chunks_cover_and_disjoint() {
+        for n in [0usize, 1, 7, 64, 1000, 1001] {
+            for p in [1usize, 2, 3, 8, 17] {
+                let mut covered = vec![false; n];
+                let mut prev_end = 0;
+                for t in 0..p {
+                    let r = static_chunk(n, t, p);
+                    assert_eq!(r.start, prev_end, "n={n} p={p} t={t}");
+                    prev_end = r.end;
+                    for i in r {
+                        assert!(!covered[i]);
+                        covered[i] = true;
+                    }
+                }
+                assert_eq!(prev_end, n);
+                assert!(covered.iter().all(|&c| c));
+            }
+        }
+    }
+
+    #[test]
+    fn static_chunks_balanced() {
+        for n in [100usize, 101, 999] {
+            for p in [3usize, 7, 16] {
+                let sizes: Vec<usize> = (0..p).map(|t| static_chunk(n, t, p).len()).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "n={n} p={p} sizes={sizes:?}");
+            }
+        }
+    }
+}

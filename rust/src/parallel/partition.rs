@@ -1,0 +1,190 @@
+//! Work partitioning for CSR traversals.
+//!
+//! The paper (§4, "load-balancing"): *"we have divided the number of
+//! non-zeros in c matrix evenly among the threads and each thread in
+//! parallel determines its starting exploration point inside the CSR using
+//! a binary search which guarantees an equal work distribution across
+//! threads."* [`balanced_nnz_partition`] implements exactly that;
+//! [`even_rows_partition`] is the naive row split kept as the ablation
+//! baseline (`benches/ablation_balance.rs`).
+
+/// A thread's share of CSR non-zeros: the half-open nnz range
+/// `[nnz_start, nnz_end)` plus the row containing `nnz_start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NnzRange {
+    /// First nnz index owned by this thread.
+    pub nnz_start: usize,
+    /// One past the last nnz index owned by this thread.
+    pub nnz_end: usize,
+    /// Row containing `nnz_start` (first row with `row_ptr[r+1] > nnz_start`).
+    pub start_row: usize,
+}
+
+impl NnzRange {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nnz_end - self.nnz_start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nnz_start == self.nnz_end
+    }
+}
+
+/// Split `nnz` non-zeros evenly across `nthreads`, locating each thread's
+/// starting row by binary search over `row_ptr` (cost `O(log V)` per
+/// thread, as in the paper's analysis).
+///
+/// `row_ptr` is the CSR row pointer of length `nrows + 1` with
+/// `row_ptr[nrows] == nnz`.
+pub fn balanced_nnz_partition(row_ptr: &[usize], nthreads: usize) -> Vec<NnzRange> {
+    assert!(!row_ptr.is_empty());
+    assert!(nthreads >= 1);
+    let nnz = *row_ptr.last().unwrap();
+    (0..nthreads)
+        .map(|t| {
+            let nnz_start = t * nnz / nthreads;
+            let nnz_end = (t + 1) * nnz / nthreads;
+            NnzRange { nnz_start, nnz_end, start_row: row_of(row_ptr, nnz_start) }
+        })
+        .collect()
+}
+
+/// Row containing nnz index `k`: the last row `r` with `row_ptr[r] <= k`.
+/// For `k == nnz` returns `nrows` (the end sentinel). Skips empty rows.
+#[inline]
+pub fn row_of(row_ptr: &[usize], k: usize) -> usize {
+    // partition_point gives the first index with row_ptr[i] > k; the row is
+    // that index minus one. Empty rows share a row_ptr value; the row that
+    // *contains* k is the last one whose start is <= k and whose end is > k,
+    // which is exactly `partition_point - 1` on the strictly-increasing
+    // subsequence; for runs of equal values we land past the empty rows.
+    row_ptr.partition_point(|&p| p <= k).saturating_sub(1)
+}
+
+/// Naive split: rows divided evenly regardless of their nnz counts.
+/// Returned in the same `NnzRange` shape for a drop-in ablation.
+pub fn even_rows_partition(row_ptr: &[usize], nthreads: usize) -> Vec<NnzRange> {
+    let nrows = row_ptr.len() - 1;
+    (0..nthreads)
+        .map(|t| {
+            let rows = super::static_chunk(nrows, t, nthreads);
+            NnzRange {
+                nnz_start: row_ptr[rows.start],
+                nnz_end: row_ptr[rows.end],
+                start_row: rows.start,
+            }
+        })
+        .collect()
+}
+
+/// Imbalance factor of a partition: `max share / mean share` (1.0 = perfect).
+pub fn imbalance(parts: &[NnzRange]) -> f64 {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / parts.len() as f64;
+    let max = parts.iter().map(|p| p.len()).max().unwrap() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_row_ptr(rng: &mut Pcg64, nrows: usize, max_row_nnz: usize) -> Vec<usize> {
+        let mut rp = Vec::with_capacity(nrows + 1);
+        rp.push(0);
+        for _ in 0..nrows {
+            let k = rng.below(max_row_nnz + 1);
+            rp.push(rp.last().unwrap() + k);
+        }
+        rp
+    }
+
+    #[test]
+    fn covers_all_nnz_disjointly() {
+        let mut rng = Pcg64::new(11);
+        for _ in 0..50 {
+            let nrows = rng.range(1, 200);
+            let rp = random_row_ptr(&mut rng, nrows, 17);
+            let nnz = *rp.last().unwrap();
+            for p in [1usize, 2, 5, 16] {
+                let parts = balanced_nnz_partition(&rp, p);
+                assert_eq!(parts.len(), p);
+                assert_eq!(parts[0].nnz_start, 0);
+                assert_eq!(parts[p - 1].nnz_end, nnz);
+                for w in parts.windows(2) {
+                    assert_eq!(w[0].nnz_end, w[1].nnz_start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_within_one() {
+        let mut rng = Pcg64::new(12);
+        let rp = random_row_ptr(&mut rng, 1000, 9);
+        for p in [2usize, 7, 32] {
+            let parts = balanced_nnz_partition(&rp, p);
+            let sizes: Vec<usize> = parts.iter().map(|x| x.len()).collect();
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().min().unwrap();
+            assert!(max - min <= 1, "p={p} sizes={sizes:?}");
+        }
+    }
+
+    #[test]
+    fn start_row_is_correct() {
+        let rp = vec![0usize, 3, 3, 3, 7, 10];
+        // nnz index 0,1,2 -> row 0; 3..7 -> row 3 (rows 1,2 empty); 7..10 -> row 4.
+        assert_eq!(row_of(&rp, 0), 0);
+        assert_eq!(row_of(&rp, 2), 0);
+        assert_eq!(row_of(&rp, 3), 3);
+        assert_eq!(row_of(&rp, 6), 3);
+        assert_eq!(row_of(&rp, 7), 4);
+        assert_eq!(row_of(&rp, 9), 4);
+    }
+
+    #[test]
+    fn start_row_contains_start_nnz() {
+        let mut rng = Pcg64::new(13);
+        for _ in 0..50 {
+            let nrows = rng.range(1, 300);
+            let rp = random_row_ptr(&mut rng, nrows, 11);
+            for p in [3usize, 8] {
+                for part in balanced_nnz_partition(&rp, p) {
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let r = part.start_row;
+                    assert!(rp[r] <= part.nnz_start, "{rp:?} {part:?}");
+                    assert!(rp[r + 1] > part.nnz_start, "{rp:?} {part:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_matrix_balance_beats_row_split() {
+        // One pathological heavy row followed by many light rows.
+        let mut rp = vec![0usize, 10_000];
+        for i in 1..100 {
+            rp.push(10_000 + i);
+        }
+        let nnz_parts = balanced_nnz_partition(&rp, 8);
+        let row_parts = even_rows_partition(&rp, 8);
+        assert!(imbalance(&nnz_parts) < 1.01);
+        assert!(imbalance(&row_parts) > 4.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let rp = vec![0usize, 0, 0];
+        let parts = balanced_nnz_partition(&rp, 4);
+        assert!(parts.iter().all(|p| p.is_empty()));
+    }
+}

@@ -1,0 +1,310 @@
+//! Persistent worker pool executing SPMD regions, the moral equivalent of
+//! an OpenMP parallel region. Workers park on a condvar between regions so
+//! the per-region overhead is one broadcast + one join barrier (the
+//! `O(log p)` term in the paper's cost model), not a thread spawn.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased SPMD region: called once per worker with `(tid, nthreads)`.
+type Region = *const (dyn Fn(usize, usize) + Sync);
+
+struct Shared {
+    /// Current region pointer + epoch. `None` means "no work".
+    job: Mutex<JobSlot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct JobSlot {
+    /// Incremented for each region; workers run a region exactly once.
+    epoch: u64,
+    /// Raw pointer to the caller's closure, valid while `pending > 0`.
+    region: Option<Region>,
+    /// Workers still running the current region.
+    pending: usize,
+    shutdown: bool,
+}
+
+// SAFETY: `region` is only dereferenced while the submitting thread blocks
+// in `Pool::run`, which keeps the referent alive; the Mutex provides the
+// necessary synchronization for the pointer itself.
+unsafe impl Send for JobSlot {}
+
+/// A fixed-size worker pool. `Pool::new(1)` degenerates to inline
+/// execution on the caller (so a "1 thread" bench measures zero pool
+/// overhead, matching a sequential OpenMP run).
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    nthreads: usize,
+    /// Dynamic-scheduling cursor shared with workers via `run`.
+    cursor: Arc<AtomicUsize>,
+}
+
+impl Pool {
+    /// Spawn a pool with `nthreads` workers (including the caller: the
+    /// caller itself executes tid 0, so only `nthreads - 1` OS threads are
+    /// created — mirroring OpenMP where the master thread participates).
+    pub fn new(nthreads: usize) -> Self {
+        assert!(nthreads >= 1, "pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            job: Mutex::new(JobSlot { epoch: 0, region: None, pending: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(nthreads.saturating_sub(1));
+        for tid in 1..nthreads {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("wmd-worker-{tid}"))
+                    .spawn(move || worker_loop(shared, tid, nthreads))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { shared, handles, nthreads, cursor: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Number of threads (including the caller).
+    #[inline]
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Execute an SPMD region: `f(tid, nthreads)` runs once on every
+    /// thread, and `run` returns after all have finished (implicit
+    /// barrier, like the end of an OpenMP parallel region).
+    pub fn run<F>(&self, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if self.nthreads == 1 {
+            f(0, 1);
+            return;
+        }
+        let region_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: we erase the lifetime; the closure outlives the region
+        // because this function blocks until `pending == 0`.
+        let region: Region = unsafe { std::mem::transmute(region_ref) };
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            debug_assert!(slot.region.is_none(), "nested Pool::run on the same pool");
+            slot.epoch += 1;
+            slot.region = Some(region);
+            slot.pending = self.nthreads - 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller participates as tid 0.
+        f(0, self.nthreads);
+        // Join barrier.
+        let mut slot = self.shared.job.lock().unwrap();
+        while slot.pending > 0 {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        slot.region = None;
+    }
+
+    /// Statically-chunked parallel for over `0..n`: each thread receives
+    /// one contiguous range (OpenMP `schedule(static)`).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.run(|tid, nt| {
+            let r = super::static_chunk(n, tid, nt);
+            if !r.is_empty() {
+                f(r);
+            }
+        });
+    }
+
+    /// Dynamically-chunked parallel for (OpenMP `schedule(dynamic, chunk)`)
+    /// — threads grab `chunk`-sized ranges from a shared cursor. Used where
+    /// per-row cost is irregular.
+    pub fn parallel_for_dynamic<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        assert!(chunk > 0);
+        self.cursor.store(0, Ordering::Relaxed);
+        let cursor = &self.cursor;
+        self.run(|_tid, _nt| loop {
+            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            f(start..(start + chunk).min(n));
+        });
+    }
+
+    /// Per-thread reduction: every thread computes a partial value over its
+    /// static chunk; partials are combined on the caller.
+    pub fn parallel_reduce<T, F, R>(&self, n: usize, identity: T, f: F, reduce: R) -> T
+    where
+        T: Clone + Send + Sync,
+        F: Fn(Range<usize>, &mut T) + Sync,
+        R: Fn(T, T) -> T,
+    {
+        let partials: Vec<Mutex<T>> =
+            (0..self.nthreads).map(|_| Mutex::new(identity.clone())).collect();
+        self.run(|tid, nt| {
+            let r = super::static_chunk(n, tid, nt);
+            let mut acc = identity.clone();
+            if !r.is_empty() {
+                f(r, &mut acc);
+            }
+            *partials[tid].lock().unwrap() = acc;
+        });
+        partials
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .fold(identity, |a, b| reduce(a, b))
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, tid: usize, nthreads: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let region = {
+            let mut slot = shared.job.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen_epoch {
+                    if let Some(r) = slot.region {
+                        seen_epoch = slot.epoch;
+                        break r;
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        // SAFETY: the submitter blocks in `run` until we decrement
+        // `pending`, keeping the closure alive.
+        unsafe { (*region)(tid, nthreads) };
+        let mut slot = shared.job.lock().unwrap();
+        slot.pending -= 1;
+        if slot.pending == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_executes_once_per_thread() {
+        for p in [1usize, 2, 4, 8] {
+            let pool = Pool::new(p);
+            let hits = AtomicUsize::new(0);
+            let tids = Mutex::new(Vec::new());
+            pool.run(|tid, nt| {
+                assert_eq!(nt, p);
+                hits.fetch_add(1, Ordering::SeqCst);
+                tids.lock().unwrap().push(tid);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), p);
+            let mut seen = tids.into_inner().unwrap();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..p).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let pool = Pool::new(4);
+        let n = 100_000;
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(n, |r| {
+            let local: u64 = r.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn parallel_for_dynamic_covers_range() {
+        let pool = Pool::new(3);
+        let n = 10_007;
+        let count = AtomicUsize::new(0);
+        pool.parallel_for_dynamic(n, 64, |r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let pool = Pool::new(4);
+        let n = 1_000;
+        let total = pool.parallel_reduce(
+            n,
+            0u64,
+            |r, acc| {
+                for i in r {
+                    *acc += i as u64;
+                }
+            },
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(|tid, nt| {
+            assert_eq!((tid, nt), (0, 1));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.parallel_for(10, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    fn many_regions_back_to_back() {
+        let pool = Pool::new(4);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(|_, _| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 800);
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(data.len(), |r| {
+            let local: u64 = data[r].iter().sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! WCD — the word-centroid-distance lower bound:
+//! `WCD(r, c_j) = ‖Xᵀr − Xᵀc_j‖₂ ≤ WMD(r, c_j)` (Jensen/convexity of the
+//! norm over the transport plan's marginals).
+
+use crate::corpus::SparseVec;
+use crate::parallel::Pool;
+use crate::sparse::{Csr, Dense};
+use crate::util::SharedSlice;
+use crate::Real;
+
+/// Mass-weighted centroid embedding of every target document:
+/// `centroids[j, :] = Σ_i c[i, j] · embeddings[i, :]` — one O(nnz·w)
+/// corpus pass, reused across queries.
+pub fn centroids(embeddings: &Dense, c: &Csr, pool: &Pool) -> Dense {
+    let n = c.ncols();
+    let w = embeddings.ncols();
+    assert_eq!(embeddings.nrows(), c.nrows());
+    let mut out = Dense::zeros(n, w);
+    // Column-owned accumulation via the transposed pattern (no atomics).
+    let tp = crate::sparse::ops::TransposedPattern::build(c);
+    let values = c.values();
+    let view = SharedSlice::new(out.as_mut_slice());
+    let col_parts = tp.column_parts(pool.nthreads());
+    pool.run(|tid, _| {
+        let part = col_parts[tid];
+        crate::sparse::ops::for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+            let i = tp.src_row[e] as usize;
+            let mass = values[tp.src_pos[e] as usize];
+            // SAFETY: column j (row j of `out`) is owned by this thread.
+            let row = unsafe { view.slice_mut(j * w, w) };
+            crate::sparse::axpy(row, mass, embeddings.row(i));
+        });
+    });
+    out
+}
+
+/// Centroid of a single sparse histogram.
+pub fn query_centroid(embeddings: &Dense, q: &SparseVec) -> Vec<Real> {
+    let w = embeddings.ncols();
+    let mut acc = vec![0.0; w];
+    for (&i, &mass) in q.idx.iter().zip(&q.val) {
+        crate::sparse::axpy(&mut acc, mass, embeddings.row(i as usize));
+    }
+    acc
+}
+
+/// WCD of a query against every document (given precomputed centroids).
+pub fn wcd_lower_bound(
+    embeddings: &Dense,
+    query: &SparseVec,
+    doc_centroids: &Dense,
+    pool: &Pool,
+) -> Vec<Real> {
+    let qc = query_centroid(embeddings, query);
+    let n = doc_centroids.nrows();
+    let mut out = vec![0.0; n];
+    let view = SharedSlice::new(&mut out);
+    pool.parallel_for(n, |range| {
+        for j in range {
+            let row = doc_centroids.row(j);
+            let mut acc = 0.0;
+            for (a, b) in qc.iter().zip(row) {
+                let d = a - b;
+                acc += d * d;
+            }
+            // SAFETY: disjoint chunks.
+            unsafe { view.write(j, acc.sqrt()) };
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{docs_to_csr, SyntheticCorpus};
+    use crate::emd::exact_wmd;
+
+    #[test]
+    fn centroid_of_single_word_doc_is_embedding() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(50)
+            .num_docs(5)
+            .embedding_dim(8)
+            .num_queries(1)
+            .query_words(3, 3)
+            .seed(1)
+            .build();
+        let doc = crate::corpus::SparseVec::from_counts(50, &[(7, 3)]);
+        let c = docs_to_csr(50, &[doc]);
+        let pool = Pool::new(2);
+        let cents = centroids(&corpus.embeddings, &c, &pool);
+        for k in 0..8 {
+            assert!((cents.get(0, k) - corpus.embeddings.get(7, k)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn wcd_lower_bounds_exact_wmd() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(200)
+            .num_docs(25)
+            .embedding_dim(12)
+            .num_queries(2)
+            .query_words(4, 8)
+            .seed(2)
+            .build();
+        let pool = Pool::new(2);
+        let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+        for q in &corpus.queries {
+            let wcd = wcd_lower_bound(&corpus.embeddings, q, &cents, &pool);
+            for (j, doc) in corpus.docs.iter().enumerate() {
+                let exact = exact_wmd(&corpus.embeddings, q, doc);
+                assert!(
+                    wcd[j] <= exact + 1e-9,
+                    "WCD {} exceeds exact WMD {} for doc {j}",
+                    wcd[j],
+                    exact
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_centroids_match_serial() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(150)
+            .num_docs(30)
+            .embedding_dim(10)
+            .num_queries(1)
+            .query_words(3, 3)
+            .seed(3)
+            .build();
+        let serial = centroids(&corpus.embeddings, &corpus.c, &Pool::new(1));
+        let parallel = centroids(&corpus.embeddings, &corpus.c, &Pool::new(4));
+        assert!(serial.max_abs_diff(&parallel) < 1e-12);
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by `aot.py`,
+//! read here with the in-repo JSON parser. Each entry describes one
+//! HLO-text file: its variant, shape bucket, and input/output signature.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Metadata of one compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Unique artifact name, e.g. `sinkhorn_solve_vr16_v2048_n256`.
+    pub name: String,
+    /// Variant family: `sinkhorn_solve` | `cdist_k` | `sinkhorn_step`.
+    pub variant: String,
+    /// HLO text filename inside the artifacts dir.
+    pub file: String,
+    /// Shape bucket.
+    pub v_r: usize,
+    pub vocab: usize,
+    pub n_docs: usize,
+    pub dim: usize,
+    /// Solver parameters baked into the graph.
+    pub max_iter: usize,
+    pub lambda: f64,
+    /// Ordered input/output signature.
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Whether the L1 Pallas kernel path was used when lowering.
+    pub pallas: bool,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Read `<dir>/manifest.json`.
+    pub fn read(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for item in arr {
+            artifacts.push(parse_meta(item)?);
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Find by variant and shape bucket.
+    pub fn find(&self, variant: &str, v_r: usize, vocab: usize, n_docs: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.variant == variant && a.v_r == v_r && a.vocab == vocab && a.n_docs == n_docs)
+    }
+
+    /// All v_r buckets available for a `(variant, vocab, n_docs)` pair,
+    /// ascending — the router picks the smallest bucket ≥ the query size.
+    pub fn v_r_buckets(&self, variant: &str, vocab: usize, n_docs: usize) -> Vec<usize> {
+        let mut buckets: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.vocab == vocab && a.n_docs == n_docs)
+            .map(|a| a.v_r)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        buckets
+    }
+}
+
+fn parse_meta(j: &Json) -> Result<ArtifactMeta> {
+    let s = |key: &str| -> Result<String> {
+        j.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("manifest entry: missing string '{key}'"))
+    };
+    let u = |key: &str| -> Result<usize> {
+        j.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest entry: missing integer '{key}'"))
+    };
+    let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+        let arr = j
+            .get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest entry: missing '{key}'"))?;
+        arr.iter()
+            .map(|t| {
+                let pair = t.as_arr().ok_or_else(|| anyhow!("bad tensor spec in '{key}'"))?;
+                if pair.len() != 2 {
+                    bail!("tensor spec must be [name, dims]");
+                }
+                let name = pair[0].as_str().ok_or_else(|| anyhow!("tensor name"))?.to_string();
+                let dims = pair[1]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("tensor dims"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("tensor dim")))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(TensorSpec { name, dims })
+            })
+            .collect()
+    };
+    Ok(ArtifactMeta {
+        name: s("name")?,
+        variant: s("variant")?,
+        file: s("file")?,
+        v_r: u("v_r")?,
+        vocab: u("vocab")?,
+        n_docs: u("n_docs")?,
+        dim: u("dim")?,
+        max_iter: u("max_iter")?,
+        lambda: j
+            .get("lambda")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("manifest entry: missing 'lambda'"))?,
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+        pallas: matches!(j.get("pallas"), Some(Json::Bool(true))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "sinkhorn_solve_vr16_v2048_n256", "variant": "sinkhorn_solve",
+         "file": "sinkhorn_solve_vr16_v2048_n256.hlo.txt",
+         "v_r": 16, "vocab": 2048, "n_docs": 256, "dim": 64,
+         "max_iter": 15, "lambda": 10.0, "pallas": true,
+         "inputs": [["r", [16]], ["qvecs", [16, 64]], ["c", [2048, 256]], ["vecs", [2048, 64]]],
+         "outputs": [["wmd", [256]]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.variant, "sinkhorn_solve");
+        assert_eq!(a.v_r, 16);
+        assert!(a.pallas);
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[2].dims, vec![2048, 256]);
+        assert_eq!(a.outputs[0].element_count(), 256);
+    }
+
+    #[test]
+    fn find_and_buckets() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("sinkhorn_solve", 16, 2048, 256).is_some());
+        assert!(m.find("sinkhorn_solve", 8, 2048, 256).is_none());
+        assert_eq!(m.v_r_buckets("sinkhorn_solve", 2048, 256), vec![16]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text**; see `/opt/xla-example/README.md`
+//! for why text, not serialized protos) and executes them from the Rust
+//! request path. Python never runs at serve time.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorSpec};
+pub use executor::LoadedArtifact;
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client. Creating a client is expensive; the coordinator
+/// holds one for the process lifetime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile one artifact by metadata entry.
+    pub fn load(&self, dir: &std::path::Path, meta: &ArtifactMeta) -> Result<LoadedArtifact> {
+        executor::load_artifact(self, dir, meta)
+    }
+
+    /// Load the manifest and compile every artifact in it.
+    pub fn load_all(&self, dir: &std::path::Path) -> Result<Vec<LoadedArtifact>> {
+        let manifest = Manifest::read(dir)?;
+        manifest.artifacts.iter().map(|m| self.load(dir, m)).collect()
+    }
+}

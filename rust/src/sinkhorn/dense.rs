@@ -1,0 +1,338 @@
+//! The **dense baseline**: a faithful Rust port of the paper's Python
+//! implementation (Fig. 2) — dense `Kᵀ@u` products of size `V×N`, sparse
+//! element-wise multiply against `c`, a CSC conversion every iteration —
+//! with per-stage timers that regenerate Table 1's profile.
+//!
+//! This solver exists to be *measured against*, not to be fast: it
+//! materializes the `V × N` dense intermediate that the sparse transform
+//! eliminates (91.9 % + 6.1 % of the baseline's runtime in Table 1).
+
+use crate::dist::QueryFactors;
+use crate::parallel::Pool;
+use crate::sparse::ops::TransposedPattern;
+use crate::sparse::{axpy, Csr, Dense};
+use crate::corpus::SparseVec;
+use crate::util::SharedSlice;
+use crate::Real;
+use std::time::{Duration, Instant};
+
+use super::solver::{SinkhornConfig, SolveOutput};
+
+/// Wall-clock per pipeline stage (the Table-1 rows).
+#[derive(Clone, Debug, Default)]
+pub struct DenseStageTimes {
+    /// `M = cdist(vecs[sel], vecs)` + `K`/`K_over_r`/`K⊙M` precompute.
+    pub cdist_precompute: Duration,
+    /// Dense `Kᵀ @ u` (the `(100000×v_r) @ (v_r×5000)` product).
+    pub kt_matmul: Duration,
+    /// Sparse elementwise `c.multiply(1 / (Kᵀ@u))`.
+    pub sparse_multiply: Duration,
+    /// `v.tocsc()` conversion.
+    pub tocsc: Duration,
+    /// `x = K_over_r @ v_csc` (dense × sparse).
+    pub spmm: Duration,
+    /// `u = 1/x` updates.
+    pub update_u: Duration,
+    /// Final `(u ⊙ ((K⊙M)@v)).sum(axis=0)`.
+    pub finish: Duration,
+}
+
+impl DenseStageTimes {
+    pub fn total(&self) -> Duration {
+        self.cdist_precompute
+            + self.kt_matmul
+            + self.sparse_multiply
+            + self.tocsc
+            + self.spmm
+            + self.update_u
+            + self.finish
+    }
+
+    /// `(stage name, seconds, percent)` rows, Table-1 style.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mk = |name, d: Duration| (name, d.as_secs_f64(), 100.0 * d.as_secs_f64() / total);
+        vec![
+            mk("M = cdist(vecs[sel], vecs); K; K_over_r", self.cdist_precompute),
+            mk("KT @ u (dense matmul)", self.kt_matmul),
+            mk("c.multiply(1/(KT@u)) (sparse elementwise)", self.sparse_multiply),
+            mk("v.tocsc()", self.tocsc),
+            mk("x = K_over_r @ v_csc (dense x sparse)", self.spmm),
+            mk("u = 1.0 / x", self.update_u),
+            mk("final (u * ((K*M)@v)).sum(axis=0)", self.finish),
+        ]
+    }
+}
+
+/// The dense Algorithm-1 pipeline.
+pub struct DenseSolver {
+    config: SinkhornConfig,
+    /// Refuse to allocate dense intermediates beyond this (bytes); the
+    /// paper-scale `V×N` product is 4 GB — run the baseline scaled down.
+    pub max_dense_bytes: usize,
+}
+
+impl DenseSolver {
+    pub fn new(config: SinkhornConfig) -> Self {
+        Self { config, max_dense_bytes: 1 << 31 }
+    }
+
+    /// Solve one query against all columns of `c`, returning the WMD
+    /// vector and the per-stage profile.
+    pub fn solve(
+        &self,
+        embeddings: &Dense,
+        query: &SparseVec,
+        c: &Csr,
+        pool: &Pool,
+    ) -> (SolveOutput, DenseStageTimes) {
+        let v = c.nrows();
+        let n = c.ncols();
+        assert_eq!(embeddings.nrows(), v);
+        let dense_bytes = v * n * std::mem::size_of::<Real>();
+        assert!(
+            dense_bytes <= self.max_dense_bytes,
+            "dense baseline would allocate {dense_bytes} B for the V x N intermediate; \
+             run it at a scaled size (see DESIGN.md §3)"
+        );
+        let mut times = DenseStageTimes::default();
+
+        // --- Precompute (reuses the factor kernel; the dense pipeline's
+        // K/K_over_r/KM are the same numbers, stored transposed).
+        let t0 = Instant::now();
+        let sel = query.indices();
+        let factors =
+            crate::dist::precompute_factors(embeddings, &sel, &query.val, self.config.lambda, pool);
+        times.cdist_precompute = t0.elapsed();
+        let v_r = factors.v_r();
+
+        // Python state layout: x, u are v_r × N row-major.
+        let mut x = Dense::filled(v_r, n, 1.0 / v_r as Real);
+        let mut u = Dense::zeros(v_r, n);
+        let mut ktu = Dense::zeros(v, n);
+        let mut w = vec![0.0; c.nnz()];
+
+        for _ in 0..self.config.max_iter {
+            // u = 1 / x
+            let t = Instant::now();
+            elementwise_recip(&x, &mut u, pool);
+            times.update_u += t.elapsed();
+
+            // KT @ u  — the dense V×N product.
+            let t = Instant::now();
+            dense_matmul_kt_u(&factors, &u, &mut ktu, pool);
+            times.kt_matmul += t.elapsed();
+
+            // v = c.multiply(1 / (KT@u)) at the pattern of c.
+            let t = Instant::now();
+            sparse_multiply(c, &ktu, &mut w, pool);
+            times.sparse_multiply += t.elapsed();
+
+            // v.tocsc() — full conversion every iteration, like scipy.
+            let t = Instant::now();
+            let pattern = TransposedPattern::build(c);
+            times.tocsc += t.elapsed();
+
+            // x = K_over_r @ v_csc (dense × sparse, strided column reads).
+            let t = Instant::now();
+            dense_spmm_columns(&factors, &pattern, &w, &mut x, pool);
+            times.spmm += t.elapsed();
+        }
+
+        // Final: u = 1/x; v = c.multiply(1/(KT@u)); WMD = (u*((K⊙M)@v)).sum(0).
+        let t = Instant::now();
+        elementwise_recip(&x, &mut u, pool);
+        times.update_u += t.elapsed();
+        let t = Instant::now();
+        dense_matmul_kt_u(&factors, &u, &mut ktu, pool);
+        times.kt_matmul += t.elapsed();
+        let t = Instant::now();
+        sparse_multiply(c, &ktu, &mut w, pool);
+        times.sparse_multiply += t.elapsed();
+
+        let t = Instant::now();
+        let pattern = TransposedPattern::build(c);
+        let mut kmv = Dense::zeros(v_r, n);
+        dense_spmm_columns_km(&factors, &pattern, &w, &mut kmv, pool);
+        let mut wmd = vec![0.0; n];
+        for i in 0..v_r {
+            let urow = u.row(i);
+            let krow = kmv.row(i);
+            for j in 0..n {
+                wmd[j] += urow[j] * krow[j];
+            }
+        }
+        times.finish = t.elapsed();
+
+        (
+            SolveOutput { wmd, iterations: self.config.max_iter, converged: false },
+            times,
+        )
+    }
+}
+
+/// `u = 1 / x`, parallel elementwise.
+fn elementwise_recip(x: &Dense, u: &mut Dense, pool: &Pool) {
+    let xs = x.as_slice();
+    let view = SharedSlice::new(u.as_mut_slice());
+    pool.parallel_for(xs.len(), |range| {
+        for i in range {
+            // SAFETY: disjoint static chunks.
+            unsafe { view.write(i, 1.0 / xs[i]) };
+        }
+    });
+}
+
+/// `ktu = Kᵀ @ u`: `V×v_r` (row-major `kt`) times `v_r×N` → `V×N`.
+/// Parallel over vocabulary rows; inner axpy over documents.
+fn dense_matmul_kt_u(f: &QueryFactors, u: &Dense, ktu: &mut Dense, pool: &Pool) {
+    let v = f.kt.nrows();
+    let v_r = f.kt.ncols();
+    let n = u.ncols();
+    debug_assert_eq!(u.nrows(), v_r);
+    let view = SharedSlice::new(ktu.as_mut_slice());
+    pool.parallel_for(v, |rows| {
+        for i in rows {
+            // SAFETY: row i owned by one thread.
+            let out = unsafe { view.slice_mut(i * n, n) };
+            out.fill(0.0);
+            let ktrow = f.kt.row(i);
+            for k in 0..v_r {
+                axpy(out, ktrow[k], u.row(k));
+            }
+        }
+    });
+}
+
+/// `w[e] = c.values[e] / ktu[i, j]` over the pattern of `c`.
+fn sparse_multiply(c: &Csr, ktu: &Dense, w: &mut [Real], pool: &Pool) {
+    let parts = crate::parallel::balanced_nnz_partition(c.row_ptr(), pool.nthreads());
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    let n = ktu.ncols();
+    let view = SharedSlice::new(w);
+    pool.run(|tid, _| {
+        let part = parts[tid];
+        crate::sparse::ops::for_each_nnz_in(part, row_ptr, |e, row| {
+            let j = col_idx[e] as usize;
+            // SAFETY: nnz ranges disjoint.
+            unsafe { view.write(e, values[e] / ktu.as_slice()[row * n + j]) };
+        });
+    });
+}
+
+/// `x = K_over_r @ v_csc`: columns of `K_over_r` are strided reads of
+/// `kor_t` rows — the faithful scipy-style dense×sparse.
+fn dense_spmm_columns(
+    f: &QueryFactors,
+    pattern: &TransposedPattern,
+    w: &[Real],
+    x: &mut Dense,
+    pool: &Pool,
+) {
+    spmm_cols_from(&f.kor_t, pattern, w, x, pool);
+}
+
+/// `(K⊙M) @ v_csc` for the epilogue.
+fn dense_spmm_columns_km(
+    f: &QueryFactors,
+    pattern: &TransposedPattern,
+    w: &[Real],
+    out: &mut Dense,
+    pool: &Pool,
+) {
+    spmm_cols_from(&f.km_t, pattern, w, out, pool);
+}
+
+fn spmm_cols_from(
+    factor_t: &Dense, // V × v_r
+    pattern: &TransposedPattern,
+    w: &[Real],
+    out: &mut Dense, // v_r × N
+    pool: &Pool,
+) {
+    let v_r = out.nrows();
+    let n = out.ncols();
+    debug_assert_eq!(factor_t.ncols(), v_r);
+    let view = SharedSlice::new(out.as_mut_slice());
+    pool.parallel_for(n, |cols| {
+        for j in cols {
+            // Column j of `out` is strided with stride N — each thread owns
+            // whole columns, so writes stay disjoint.
+            let mut acc = vec![0.0; v_r];
+            for e in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
+                let i = pattern.src_row[e] as usize;
+                let val = w[pattern.src_pos[e] as usize];
+                axpy(&mut acc, val, factor_t.row(i));
+            }
+            for (k, &a) in acc.iter().enumerate() {
+                // SAFETY: column j owned by this thread.
+                unsafe { view.write(k * n + j, a) };
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::SyntheticCorpus;
+    use crate::sinkhorn::{SinkhornConfig, SparseSolver};
+
+    #[test]
+    fn dense_matches_sparse_solver() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(2)
+            .query_words(6, 10)
+            .seed(23)
+            .build();
+        let pool = Pool::new(4);
+        let config = SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() };
+        let sparse = SparseSolver::new(config);
+        let dense = DenseSolver::new(config);
+        for q in 0..2 {
+            let a = sparse.wmd_one_to_many(&corpus.embeddings, corpus.query(q), &corpus.c, &pool);
+            let (b, times) = dense.solve(&corpus.embeddings, corpus.query(q), &corpus.c, &pool);
+            for (x, y) in a.wmd.iter().zip(&b.wmd) {
+                assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+            assert!(times.total() > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn stage_rows_sum_to_100_percent() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(300)
+            .num_docs(20)
+            .embedding_dim(8)
+            .num_queries(1)
+            .query_words(5, 5)
+            .seed(29)
+            .build();
+        let pool = Pool::new(2);
+        let dense = DenseSolver::new(SinkhornConfig { max_iter: 5, ..Default::default() });
+        let (_, times) = dense.solve(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+        let pct: f64 = times.rows().iter().map(|(_, _, p)| p).sum();
+        assert!((pct - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "scaled size")]
+    fn refuses_paper_scale_dense_intermediate() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(1000)
+            .num_docs(100)
+            .embedding_dim(4)
+            .num_queries(1)
+            .query_words(3, 3)
+            .seed(31)
+            .build();
+        let pool = Pool::new(1);
+        let mut dense = DenseSolver::new(SinkhornConfig::default());
+        dense.max_dense_bytes = 1024; // force the guard
+        let _ = dense.solve(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+    }
+}

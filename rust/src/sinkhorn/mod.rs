@@ -1,0 +1,17 @@
+//! The Sinkhorn-Knopp WMD solvers.
+//!
+//! * [`SparseSolver`] — the paper's contribution: the sparse, fused
+//!   `SDDMM_SpMM` iteration over the CSR target matrix.
+//! * [`dense::DenseSolver`] — the faithful port of the Python/MKL
+//!   baseline (Fig. 2): dense `Kᵀ@u` products, sparse element-wise
+//!   multiply, CSC conversion — with per-stage timers that regenerate
+//!   Table 1.
+//!
+//! Both compute `WMD[j] = d_M^λ(r, c[:, j])` for one source histogram `r`
+//! against all `N` target columns of `c` (Algorithm 1).
+
+pub mod dense;
+pub mod solver;
+
+pub use dense::{DenseSolver, DenseStageTimes};
+pub use solver::{IterateKernel, Prepared, SinkhornConfig, SolveOutput, SparseSolver};

@@ -1,0 +1,93 @@
+//! COO (triplet) sparse format — the assembly format: corpus builders emit
+//! triplets, which are sorted/deduplicated into CSR.
+
+use crate::Real;
+
+/// Coordinate-format sparse matrix (row, col, value triplets).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub values: Vec<Real>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        assert!(nrows <= u32::MAX as usize && ncols <= u32::MAX as usize);
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        let mut c = Self::new(nrows, ncols);
+        c.rows.reserve(cap);
+        c.cols.reserve(cap);
+        c.values.reserve(cap);
+        c
+    }
+
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, value: Real) {
+        debug_assert!(row < self.nrows && col < self.ncols);
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.values.push(value);
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sort by (row, col) and sum duplicate coordinates.
+    pub fn compact(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by_key(|&e| (self.rows[e], self.cols[e]));
+        let mut rows = Vec::with_capacity(n);
+        let mut cols = Vec::with_capacity(n);
+        let mut values = Vec::with_capacity(n);
+        for &e in &order {
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == self.rows[e] && lc == self.cols[e] {
+                    *values.last_mut().unwrap() += self.values[e];
+                    continue;
+                }
+            }
+            rows.push(self.rows[e]);
+            cols.push(self.cols[e]);
+            values.push(self.values[e]);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.values = values;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_nnz() {
+        let mut m = Coo::new(4, 4);
+        m.push(0, 1, 1.0);
+        m.push(3, 2, 2.0);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn compact_sorts_and_dedups() {
+        let mut m = Coo::new(3, 3);
+        m.push(2, 2, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(2, 2, 3.0);
+        m.push(0, 0, 4.0);
+        m.compact();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.rows, vec![0, 0, 2]);
+        assert_eq!(m.cols, vec![0, 1, 2]);
+        assert_eq!(m.values, vec![4.0, 2.0, 4.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! CSC (compressed sparse column) matrix. The Python baseline calls
+//! `v.tocsc()` every iteration (Table 1); we keep the format (and the
+//! conversion) so the dense-baseline port is faithful, while the sparse
+//! fused kernel never needs it.
+
+use super::{Csr, Dense};
+use crate::Real;
+
+/// CSC sparse matrix: `col_ptr` (len `ncols+1`), `row_idx`/`values`
+/// (len nnz), rows ascending within each column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    nrows: usize,
+    ncols: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    values: Vec<Real>,
+}
+
+impl Csc {
+    /// Internal: reinterpret a CSR-of-the-transpose as CSC of the original.
+    pub(crate) fn from_transposed_csr(t: Csr) -> Self {
+        Self {
+            nrows: t.ncols(),
+            ncols: t.nrows(),
+            col_ptr: t.row_ptr().to_vec(),
+            row_idx: t.col_idx().to_vec(),
+            values: t.values().to_vec(),
+        }
+    }
+
+    pub fn from_csr(m: &Csr) -> Self {
+        m.to_csc()
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline(always)]
+    pub fn col_ptr(&self) -> &[usize] {
+        &self.col_ptr
+    }
+
+    #[inline(always)]
+    pub fn row_idx(&self) -> &[u32] {
+        &self.row_idx
+    }
+
+    #[inline(always)]
+    pub fn values(&self) -> &[Real] {
+        &self.values
+    }
+
+    /// `(row_idx, values)` of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[Real]) {
+        let span = self.col_ptr[j]..self.col_ptr[j + 1];
+        (&self.row_idx[span.clone()], &self.values[span])
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                d.set(i as usize, j, v);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn csc_matches_csr() {
+        let mut rng = Pcg64::new(31);
+        for _ in 0..20 {
+            let (nr, nc) = (rng.range(1, 20), rng.range(1, 20));
+            let mut coo = Coo::new(nr, nc);
+            for _ in 0..rng.below(50) {
+                coo.push(rng.below(nr), rng.below(nc), rng.next_f64());
+            }
+            let csr = Csr::from_coo(coo);
+            let csc = Csc::from_csr(&csr);
+            assert_eq!(csc.nnz(), csr.nnz());
+            assert_eq!(csc.to_dense(), csr.to_dense());
+        }
+    }
+
+    #[test]
+    fn column_access() {
+        let mut coo = Coo::new(4, 3);
+        coo.push(0, 1, 1.0);
+        coo.push(2, 1, 2.0);
+        coo.push(3, 0, 3.0);
+        let csc = Csc::from_csr(&Csr::from_coo(coo));
+        let (rows, vals) = csc.col(1);
+        assert_eq!(rows, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        let (rows0, vals0) = csc.col(0);
+        assert_eq!(rows0, &[3]);
+        assert_eq!(vals0, &[3.0]);
+        assert!(csc.col(2).0.is_empty());
+    }
+}

@@ -1,0 +1,337 @@
+//! CSR (compressed sparse row) matrix — the working format for `c`
+//! (vocab × docs target histograms) in the sparse Sinkhorn solver.
+
+use super::{Coo, Csc, Dense};
+use crate::Real;
+
+/// CSR sparse matrix: `row_ptr` (len `nrows+1`), `col_idx`/`values`
+/// (len nnz), columns ascending within each row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<Real>,
+}
+
+impl Csr {
+    /// Build from COO (the triplets are compacted first).
+    pub fn from_coo(mut coo: Coo) -> Self {
+        coo.compact();
+        let mut row_ptr = vec![0usize; coo.nrows + 1];
+        for &r in &coo.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Self {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            row_ptr,
+            col_idx: coo.cols,
+            values: coo.values,
+        }
+    }
+
+    /// Build directly from parts (validated).
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        values: Vec<Real>,
+    ) -> Self {
+        let m = Self { nrows, ncols, row_ptr, col_idx, values };
+        m.validate().expect("invalid CSR parts");
+        m
+    }
+
+    /// Build from a dense matrix, keeping entries with |v| > 0.
+    pub fn from_dense(d: &Dense) -> Self {
+        let mut coo = Coo::new(d.nrows(), d.ncols());
+        for i in 0..d.nrows() {
+            for j in 0..d.ncols() {
+                let v = d.get(i, j);
+                if v != 0.0 {
+                    coo.push(i, j, v);
+                }
+            }
+        }
+        Self::from_coo(coo)
+    }
+
+    /// Structural + ordering invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.values.len() {
+            return Err("row_ptr endpoints".into());
+        }
+        if self.col_idx.len() != self.values.len() {
+            return Err("col/val length mismatch".into());
+        }
+        for i in 0..self.nrows {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                return Err(format!("row_ptr not monotone at {i}"));
+            }
+            let cols = &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]];
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("columns not strictly ascending in row {i}"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.ncols {
+                    return Err(format!("column out of range in row {i}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline(always)]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline(always)]
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    #[inline(always)]
+    pub fn col_idx(&self) -> &[u32] {
+        &self.col_idx
+    }
+
+    #[inline(always)]
+    pub fn values(&self) -> &[Real] {
+        &self.values
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// `(col_idx, values)` of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[Real]) {
+        let span = self.row_ptr[i]..self.row_ptr[i + 1];
+        (&self.col_idx[span.clone()], &self.values[span])
+    }
+
+    /// Iterate `(row, col, value)` triplets in CSR order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, Real)> + '_ {
+        (0..self.nrows).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter().zip(vals).map(move |(&c, &v)| (i, c as usize, v))
+        })
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> Real {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for (i, j, v) in self.iter() {
+            d.set(i, j, v);
+        }
+        d
+    }
+
+    /// CSR of the transpose (counting sort over columns, O(nnz + ncols)).
+    pub fn transpose(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.ncols + 1];
+        for &c in &self.col_idx {
+            row_ptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut cursor = row_ptr.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for (i, j, v) in self.iter() {
+            let dst = cursor[j];
+            cursor[j] += 1;
+            col_idx[dst] = i as u32;
+            values[dst] = v;
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, row_ptr, col_idx, values }
+    }
+
+    /// Convert to CSC (same numbers, column-major compression).
+    pub fn to_csc(&self) -> Csc {
+        let t = self.transpose();
+        Csc::from_transposed_csr(t)
+    }
+
+    /// Scale each column `j` by `s[j]` (used to column-normalize `c`).
+    pub fn scale_columns(&mut self, s: &[Real]) {
+        assert_eq!(s.len(), self.ncols);
+        for (c, v) in self.col_idx.iter().zip(self.values.iter_mut()) {
+            *v *= s[*c as usize];
+        }
+    }
+
+    /// Per-column sums (length `ncols`).
+    pub fn column_sums(&self) -> Vec<Real> {
+        let mut sums = vec![0.0; self.ncols];
+        for (c, v) in self.col_idx.iter().zip(&self.values) {
+            sums[*c as usize] += *v;
+        }
+        sums
+    }
+
+    /// Keep only the columns in `keep` (old column `keep[t]` becomes new
+    /// column `t`). Used by the pruned-retrieval pipeline to solve against
+    /// a single candidate document.
+    pub fn select_columns(&self, keep: &[usize]) -> Csr {
+        let remap: std::collections::HashMap<u32, u32> = keep
+            .iter()
+            .enumerate()
+            .map(|(new, &old)| (old as u32, new as u32))
+            .collect();
+        let mut row_ptr = Vec::with_capacity(self.nrows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut pairs: Vec<(u32, Real)> = cols
+                .iter()
+                .zip(vals)
+                .filter_map(|(c, &v)| remap.get(c).map(|&nc| (nc, v)))
+                .collect();
+            pairs.sort_unstable_by_key(|&(c, _)| c);
+            for (c, v) in pairs {
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { nrows: self.nrows, ncols: keep.len(), row_ptr, col_idx, values }
+    }
+
+    /// Keep only the rows in `keep` (by index, ascending); the result has
+    /// `keep.len()` rows. Used to restrict `c` to a query's support.
+    pub fn select_rows(&self, keep: &[usize]) -> Csr {
+        let mut row_ptr = Vec::with_capacity(keep.len() + 1);
+        row_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for &r in keep {
+            let (cols, vals) = self.row(r);
+            col_idx.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            row_ptr.push(col_idx.len());
+        }
+        Csr { nrows: keep.len(), ncols: self.ncols, row_ptr, col_idx, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    pub(crate) fn random_csr(rng: &mut Pcg64, nrows: usize, ncols: usize, nnz: usize) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for _ in 0..nnz {
+            coo.push(rng.below(nrows), rng.below(ncols), rng.next_f64() + 0.01);
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn from_coo_roundtrip_dense() {
+        let mut rng = Pcg64::new(21);
+        for _ in 0..20 {
+            let (nr, nc, nnz) = (rng.range(1, 20), rng.range(1, 20), rng.below(60));
+            let m = random_csr(&mut rng, nr, nc, nnz);
+            m.validate().unwrap();
+            let d = m.to_dense();
+            let back = Csr::from_dense(&d);
+            assert_eq!(back.to_dense(), d);
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Pcg64::new(22);
+        for _ in 0..20 {
+            let (nr, nc, nnz) = (rng.range(1, 15), rng.range(1, 15), rng.below(40));
+            let m = random_csr(&mut rng, nr, nc, nnz);
+            let t = m.transpose();
+            t.validate().unwrap();
+            assert_eq!(t.to_dense(), m.to_dense().transpose());
+        }
+    }
+
+    #[test]
+    fn get_reads_entries() {
+        let mut coo = Coo::new(3, 4);
+        coo.push(1, 2, 7.0);
+        coo.push(1, 0, 3.0);
+        let m = Csr::from_coo(coo);
+        assert_eq!(m.get(1, 2), 7.0);
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn column_sums_and_scaling() {
+        let mut coo = Coo::new(3, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 3.0);
+        coo.push(2, 1, 2.0);
+        let mut m = Csr::from_coo(coo);
+        assert_eq!(m.column_sums(), vec![4.0, 2.0]);
+        m.scale_columns(&[0.25, 0.5]);
+        assert_eq!(m.column_sums(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let mut rng = Pcg64::new(23);
+        let m = random_csr(&mut rng, 10, 8, 30);
+        let keep = vec![1usize, 4, 9];
+        let s = m.select_rows(&keep);
+        s.validate().unwrap();
+        assert_eq!(s.nrows(), 3);
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            for j in 0..8 {
+                assert_eq!(s.get(new_i, j), m.get(old_i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_coo_entries_sum() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.5);
+        coo.push(0, 0, 2.5);
+        let m = Csr::from_coo(coo);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(0, 0), 4.0);
+    }
+}

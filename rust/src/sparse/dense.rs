@@ -1,0 +1,229 @@
+//! Row-major dense matrix used for the solver state (`x`, `u` transposed),
+//! precomputed factors (`Kᵀ`, `K_over_rᵀ`, `(K⊙M)ᵀ`) and the dense
+//! baseline pipeline.
+
+use crate::Real;
+
+/// Row-major dense matrix of `Real` (f64).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<Real>,
+}
+
+impl Dense {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn filled(nrows: usize, ncols: usize, value: Real) -> Self {
+        Self { nrows, ncols, data: vec![value; nrows * ncols] }
+    }
+
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<Real>) -> Self {
+        assert_eq!(data.len(), nrows * ncols, "shape/data mismatch");
+        Self { nrows, ncols, data }
+    }
+
+    /// Build from a row-generator closure.
+    pub fn from_fn(nrows: usize, ncols: usize, mut f: impl FnMut(usize, usize) -> Real) -> Self {
+        let mut data = Vec::with_capacity(nrows * ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                data.push(f(i, j));
+            }
+        }
+        Self { nrows, ncols, data }
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> Real {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i * self.ncols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: Real) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[i * self.ncols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[Real] {
+        debug_assert!(i < self.nrows);
+        &self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [Real] {
+        debug_assert!(i < self.nrows);
+        &mut self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[Real] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [Real] {
+        &mut self.data
+    }
+
+    pub fn fill(&mut self, v: Real) {
+        self.data.fill(v);
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Dense {
+        let mut out = Dense::zeros(self.ncols, self.nrows);
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                out.data[j * self.nrows + i] = self.data[i * self.ncols + j];
+            }
+        }
+        out
+    }
+
+    /// Dense matmul `self @ rhs` — reference implementation (ikj loop
+    /// order); the performance-relevant GEMM lives in `dist::gemm` and the
+    /// dense baseline uses the parallel version in `sinkhorn::dense`.
+    pub fn matmul(&self, rhs: &Dense) -> Dense {
+        assert_eq!(self.ncols, rhs.nrows, "matmul shape mismatch");
+        let mut out = Dense::zeros(self.nrows, rhs.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let a = self.data[i * self.ncols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = &rhs.data[k * rhs.ncols..(k + 1) * rhs.ncols];
+                let orow = &mut out.data[i * rhs.ncols..(i + 1) * rhs.ncols];
+                for j in 0..rhs.ncols {
+                    orow[j] += a * rrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(Real) -> Real) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Dense) -> Real {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, Real::max)
+    }
+}
+
+/// Unit-stride dot product with 4-way unrolling — the innermost loop of
+/// every SDDMM in the solver (the paper's "basic unrolling ...
+/// vectorizations" bullet). Written so LLVM autovectorizes to AVX.
+#[inline]
+pub fn dot(a: &[Real], b: &[Real]) -> Real {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    // Pointer-arithmetic hot loop (bounds checks hoisted).
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += *pa.add(i) * *pb.add(i);
+            acc[1] += *pa.add(i + 1) * *pb.add(i + 1);
+            acc[2] += *pa.add(i + 2) * *pb.add(i + 2);
+            acc[3] += *pa.add(i + 3) * *pb.add(i + 3);
+        }
+        let mut tail = 0.0;
+        for i in chunks * 4..a.len() {
+            tail += *pa.add(i) * *pb.add(i);
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    }
+}
+
+/// `out[k] += s * b[k]` — the axpy used in the SpMM accumulation.
+#[inline]
+pub fn axpy(out: &mut [Real], s: Real, b: &[Real]) {
+    debug_assert_eq!(out.len(), b.len());
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o += s * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = Dense::zeros(3, 4);
+        m.set(1, 2, 5.5);
+        assert_eq!(m.get(1, 2), 5.5);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.5, 0.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Dense::from_fn(3, 5, |i, j| (i * 10 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.nrows(), 5);
+        assert_eq!(t.get(2, 1), m.get(1, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = Dense::from_fn(4, 4, |i, j| (i + 2 * j) as f64);
+        let id = Dense::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_eq!(m.matmul(&id), m);
+        assert_eq!(id.matmul(&m), m);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Dense::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        for n in [0usize, 1, 3, 4, 7, 64, 301] {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 3.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut out = vec![1.0, 2.0, 3.0];
+        axpy(&mut out, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(out, vec![21.0, 42.0, 63.0]);
+    }
+}

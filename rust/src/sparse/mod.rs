@@ -1,0 +1,18 @@
+//! Sparse-matrix substrate: COO/CSR/CSC storage, conversions, and the
+//! paper's sparse kernels (SDDMM, SpMM, and the fused `SDDMM_SpMM`).
+//!
+//! The Sinkhorn target-histogram matrix `c` is `V × N` with density
+//! ~0.0035 % at paper scale; every iterate touches it once, so the CSR
+//! layout plus nnz-balanced partitioning dominates the solver's runtime
+//! profile (paper Table 1: 98 % of time in the sparse-masked products).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod ops;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::{axpy, dot, Dense};

@@ -1,0 +1,322 @@
+//! The paper's new kernel: **SDDMM_SpMM** — one pass over the CSR that
+//! computes each SDDMM value and immediately feeds it to the SpMM
+//! accumulation ("the output values from SDDMM can be fed directly to the
+//! SpMM and would not need to be stored in memory", §4).
+//!
+//! * [`fused_type1`] — the solver-loop iterate:
+//!   `x = K_over_r @ (c ⊘ (Kᵀ@u))`, scatter under atomics (paper Fig. 4).
+//! * [`fused_type1_private`] — atomic-free variant with per-thread output
+//!   buffers + tree reduction (perf-pass alternative; see §Perf).
+//! * [`fused_type2`] — the epilogue:
+//!   `WMD[j] = Σ_e w_e · ⟨(K⊙M)ᵀ[row], uᵀ[col]⟩`, which is algebraically
+//!   `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` restricted to the pattern of `c`.
+
+use super::for_each_nnz_in;
+use crate::parallel::{AtomicF64Slice, NnzRange, Pool};
+use crate::sparse::{axpy, dot, Csr, Dense};
+use crate::util::SharedSlice;
+use crate::Real;
+
+/// Fused iterate (type 1): for each nnz `(i, j)` of `c`,
+/// `w = c[i,j] / ⟨ktᵀ[i,:], uᵀ[j,:]⟩` then `xᵀ[j,:] += w · kor_tᵀ[i,:]`
+/// (atomic adds — threads share output rows).
+pub fn fused_type1(
+    c: &Csr,
+    kt: &Dense,
+    kor_t: &Dense,
+    u_t: &Dense,
+    x_t: &mut Dense,
+    pool: &Pool,
+    parts: &[NnzRange],
+) {
+    let vr = kt.ncols();
+    debug_assert_eq!(kor_t.ncols(), vr);
+    debug_assert_eq!(u_t.ncols(), vr);
+    debug_assert_eq!(x_t.ncols(), vr);
+    debug_assert_eq!(kt.nrows(), c.nrows());
+    debug_assert_eq!(u_t.nrows(), c.ncols());
+    x_t.fill(0.0);
+    // Serial fast path: a CAS-loop per element costs ~7× even without
+    // contention (it defeats vectorization of the axpy), so a single
+    // thread writes directly (§Perf in EXPERIMENTS.md).
+    if pool.nthreads() == 1 {
+        let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+        let x = x_t.as_mut_slice();
+        for row in 0..c.nrows() {
+            let kt_row = kt.row(row);
+            let kor_row = kor_t.row(row);
+            for e in row_ptr[row]..row_ptr[row + 1] {
+                let j = col_idx[e] as usize;
+                let w = values[e] / dot(kt_row, u_t.row(j));
+                axpy(&mut x[j * vr..(j + 1) * vr], w, kor_row);
+            }
+        }
+        return;
+    }
+    let x_atomic = AtomicF64Slice::new(x_t.as_mut_slice());
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    pool.run(|tid, _nt| {
+        let part = parts[tid];
+        for_each_nnz_in(part, row_ptr, |e, row| {
+            let j = col_idx[e] as usize;
+            let u_row = u_t.row(j);
+            // SDDMM step.
+            let s = dot(kt.row(row), u_row);
+            let w = values[e] / s;
+            // SpMM step, fused: no w store, straight into x.
+            let k_row = kor_t.row(row);
+            let base = j * vr;
+            for (k, &kv) in k_row.iter().enumerate() {
+                x_atomic.fetch_add(base + k, w * kv);
+            }
+        });
+    });
+}
+
+/// Fused iterate with per-thread private accumulation buffers: each thread
+/// scatters into its own `N×v_r` copy; buffers are then reduced in
+/// parallel over disjoint slices. Trades `p·N·v_r` scratch memory for
+/// atomic-free inner loops.
+pub struct PrivateBuffers {
+    bufs: Vec<Vec<Real>>,
+}
+
+impl PrivateBuffers {
+    pub fn new(nthreads: usize, n: usize, vr: usize) -> Self {
+        Self { bufs: (0..nthreads).map(|_| vec![0.0; n * vr]).collect() }
+    }
+
+    pub fn matches(&self, nthreads: usize, len: usize) -> bool {
+        self.bufs.len() == nthreads && self.bufs.first().map_or(false, |b| b.len() == len)
+    }
+}
+
+pub fn fused_type1_private(
+    c: &Csr,
+    kt: &Dense,
+    kor_t: &Dense,
+    u_t: &Dense,
+    x_t: &mut Dense,
+    pool: &Pool,
+    parts: &[NnzRange],
+    scratch: &mut PrivateBuffers,
+) {
+    let vr = kt.ncols();
+    let len = x_t.nrows() * vr;
+    assert!(scratch.matches(pool.nthreads(), len), "scratch shape mismatch");
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    // Phase 1: private scatter. Each thread owns scratch.bufs[tid].
+    {
+        let buf_ptrs: Vec<SharedSlice<Real>> =
+            scratch.bufs.iter_mut().map(|b| SharedSlice::new(b.as_mut_slice())).collect();
+        pool.run(|tid, _nt| {
+            let part = parts[tid];
+            // SAFETY: buffer `tid` is written only by thread `tid`.
+            let buf = unsafe { buf_ptrs[tid].slice_mut(0, len) };
+            buf.fill(0.0);
+            for_each_nnz_in(part, row_ptr, |e, row| {
+                let j = col_idx[e] as usize;
+                let w = values[e] / dot(kt.row(row), u_t.row(j));
+                axpy(&mut buf[j * vr..(j + 1) * vr], w, kor_t.row(row));
+            });
+        });
+    }
+    // Phase 2: parallel reduction over disjoint element ranges.
+    let bufs = &scratch.bufs;
+    let x_view = SharedSlice::new(x_t.as_mut_slice());
+    pool.run(|tid, nt| {
+        let r = crate::parallel::static_chunk(len, tid, nt);
+        // SAFETY: element ranges are disjoint per thread.
+        let out = unsafe { x_view.slice_mut(r.start, r.len()) };
+        out.fill(0.0);
+        for buf in bufs {
+            for (o, &v) in out.iter_mut().zip(&buf[r.clone()]) {
+                *o += v;
+            }
+        }
+    });
+}
+
+/// Fused iterate over the **transposed pattern** — atomic-free: each
+/// thread owns whole documents (columns of `c`, i.e. rows of `xᵀ`), so
+/// the SDDMM value feeds the SpMM axpy with no synchronization at all.
+/// The pattern is built once per query (`c`'s sparsity is
+/// iteration-invariant) and reused across all Sinkhorn iterations; the
+/// document's `uᵀ` row also stays hot across the column's entries —
+/// the cache-reuse idea of the paper's §9 tiling discussion.
+pub fn fused_type1_transposed(
+    c: &Csr,
+    tp: &super::spmm::TransposedPattern,
+    kt: &Dense,
+    kor_t: &Dense,
+    u_t: &Dense,
+    x_t: &mut Dense,
+    pool: &Pool,
+    col_parts: &[NnzRange],
+) {
+    let vr = kt.ncols();
+    debug_assert_eq!(x_t.nrows() + 1, tp.col_ptr.len());
+    debug_assert_eq!(x_t.ncols(), vr);
+    x_t.fill(0.0);
+    let values = c.values();
+    let x_view = SharedSlice::new(x_t.as_mut_slice());
+    pool.run(|tid, _nt| {
+        let part = col_parts[tid];
+        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+            let i = tp.src_row[e] as usize;
+            let u_row = u_t.row(j);
+            let w = values[tp.src_pos[e] as usize] / dot(kt.row(i), u_row);
+            // SAFETY: column j (x_t row j) is owned by this thread — the
+            // column partition never splits a column.
+            let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
+            axpy(x_row, w, kor_t.row(i));
+        });
+    });
+}
+
+/// Fused epilogue (type 2): the final WMD vector.
+///
+/// `WMD[j] = Σ_{(i,j) ∈ nnz(c)} (c[i,j] / ⟨ktᵀ[i], uᵀ[j]⟩) · ⟨km_tᵀ[i], uᵀ[j]⟩`
+///
+/// equals `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` from Algorithm 1. Accumulated in
+/// per-thread partial vectors (length `N`), reduced after the region — the
+/// scatter target is a scalar per doc, so privatization is cheap.
+pub fn fused_type2(
+    c: &Csr,
+    kt: &Dense,
+    km_t: &Dense,
+    u_t: &Dense,
+    wmd: &mut [Real],
+    pool: &Pool,
+    parts: &[NnzRange],
+) {
+    let n = c.ncols();
+    assert_eq!(wmd.len(), n);
+    let nthreads = pool.nthreads();
+    let mut partials = vec![0.0; nthreads * n];
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    {
+        let pview = SharedSlice::new(&mut partials);
+        pool.run(|tid, _nt| {
+            let part = parts[tid];
+            // SAFETY: each thread owns partial slice tid.
+            let acc = unsafe { pview.slice_mut(tid * n, n) };
+            for_each_nnz_in(part, row_ptr, |e, row| {
+                let j = col_idx[e] as usize;
+                let u_row = u_t.row(j);
+                let w = values[e] / dot(kt.row(row), u_row);
+                acc[j] += w * dot(km_t.row(row), u_row);
+            });
+        });
+    }
+    wmd.fill(0.0);
+    for t in 0..nthreads {
+        for j in 0..n {
+            wmd[j] += partials[t * n + j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::balanced_nnz_partition;
+    use crate::sparse::ops::{sddmm_serial, spmm_serial};
+    use crate::sparse::Coo;
+    use crate::util::Pcg64;
+
+    fn case(rng: &mut Pcg64, v: usize, n: usize, vr: usize, nnz: usize) -> (Csr, Dense, Dense, Dense, Dense) {
+        let mut coo = Coo::new(v, n);
+        for _ in 0..nnz {
+            coo.push(rng.below(v), rng.below(n), rng.next_f64() + 0.1);
+        }
+        let c = Csr::from_coo(coo);
+        let kt = Dense::from_fn(v, vr, |_, _| rng.next_f64() + 0.2);
+        let kor_t = Dense::from_fn(v, vr, |_, _| rng.next_f64() + 0.2);
+        let km_t = Dense::from_fn(v, vr, |_, _| rng.next_f64());
+        let u_t = Dense::from_fn(n, vr, |_, _| rng.next_f64() + 0.2);
+        (c, kt, kor_t, km_t, u_t)
+    }
+
+    #[test]
+    fn type1_equals_unfused() {
+        let mut rng = Pcg64::new(71);
+        for p in [1usize, 4, 8] {
+            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 35, 14, 6, 120);
+            // Unfused serial reference: SDDMM then SpMM.
+            let mut w = vec![0.0; c.nnz()];
+            sddmm_serial(&c, &kt, &u_t, &mut w);
+            let mut x_ref = Dense::zeros(14, 6);
+            spmm_serial(&c, &w, &kor_t, &mut x_ref);
+            // Fused parallel.
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut x_t = Dense::zeros(14, 6);
+            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_t, &pool, &parts);
+            assert!(x_t.max_abs_diff(&x_ref) < 1e-11, "p={p}");
+        }
+    }
+
+    #[test]
+    fn type1_private_equals_atomic() {
+        let mut rng = Pcg64::new(72);
+        for p in [1usize, 3, 6] {
+            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 50, 21, 9, 300);
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut x_a = Dense::zeros(21, 9);
+            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_a, &pool, &parts);
+            let mut x_p = Dense::zeros(21, 9);
+            let mut scratch = PrivateBuffers::new(p, 21, 9);
+            fused_type1_private(&c, &kt, &kor_t, &u_t, &mut x_p, &pool, &parts, &mut scratch);
+            assert!(x_a.max_abs_diff(&x_p) < 1e-11, "p={p}");
+        }
+    }
+
+    #[test]
+    fn type1_transposed_equals_atomic() {
+        let mut rng = Pcg64::new(74);
+        for p in [1usize, 4, 7] {
+            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 60, 25, 7, 400);
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut x_a = Dense::zeros(25, 7);
+            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_a, &pool, &parts);
+            let tp = crate::sparse::ops::TransposedPattern::build(&c);
+            let col_parts = tp.column_parts(p);
+            let mut x_t = Dense::zeros(25, 7);
+            fused_type1_transposed(&c, &tp, &kt, &kor_t, &u_t, &mut x_t, &pool, &col_parts);
+            assert!(x_a.max_abs_diff(&x_t) < 1e-11, "p={p}");
+        }
+    }
+
+    #[test]
+    fn type2_equals_dense_formula() {
+        let mut rng = Pcg64::new(73);
+        for p in [1usize, 4] {
+            let (c, kt, _kor, km_t, u_t) = case(&mut rng, 20, 9, 5, 60);
+            // Dense oracle: v = c / (KT@u) at pattern; WMD = (u * (KM@v)).sum(0).
+            let u = u_t.transpose(); // v_r × N... careful: u in Algorithm 1 is v_r×N
+            let ktu = kt.matmul(&u_t.transpose()); // V×N
+            let mut vdense = Dense::zeros(c.nrows(), c.ncols());
+            for (i, j, cv) in c.iter() {
+                vdense.set(i, j, cv / ktu.get(i, j));
+            }
+            let km = km_t.transpose(); // v_r × V
+            let kmv = km.matmul(&vdense); // v_r × N
+            let mut oracle = vec![0.0; c.ncols()];
+            for jj in 0..c.ncols() {
+                for ii in 0..u.nrows() {
+                    oracle[jj] += u.get(ii, jj) * kmv.get(ii, jj);
+                }
+            }
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut wmd = vec![0.0; c.ncols()];
+            fused_type2(&c, &kt, &km_t, &u_t, &mut wmd, &pool, &parts);
+            for (a, b) in wmd.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-11 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! The paper's sparse kernels over CSR `c`:
+//!
+//! * [`sddmm`] — sampled dense-dense matmul: a dot product *only* at the
+//!   non-zero positions of `c` (Fig. 3 left).
+//! * [`spmm`] — sparse × dense scatter (Fig. 3 right), atomic and
+//!   pattern-transposed (atomic-free) variants.
+//! * [`fused`] — the paper's new `SDDMM_SpMM` kernel: one CSR pass,
+//!   SDDMM values fed straight into the SpMM accumulation (Fig. 4 left);
+//!   `type1` produces the next iterate `x`, `type2` produces the final
+//!   WMD reduction.
+//!
+//! All kernels take a precomputed nnz-balanced partition
+//! ([`crate::parallel::balanced_nnz_partition`]) so benches can ablate the
+//! partitioning strategy independently of the kernel.
+
+pub mod fused;
+pub mod sddmm;
+pub mod spmm;
+
+pub use fused::{
+    fused_type1, fused_type1_private, fused_type1_transposed, fused_type2, PrivateBuffers,
+};
+pub use sddmm::{sddmm, sddmm_serial};
+pub use spmm::{spmm_atomic, spmm_serial, spmm_transposed, TransposedPattern};
+
+use crate::parallel::NnzRange;
+
+/// Walk a thread's nnz range `[part.nnz_start, part.nnz_end)` keeping the
+/// current row in sync with the cursor, starting at `part.start_row`
+/// (found by binary search in the partitioner). Calls `f(e, row)` per nnz.
+#[inline]
+pub(crate) fn for_each_nnz_in(part: NnzRange, row_ptr: &[usize], mut f: impl FnMut(usize, usize)) {
+    let mut row = part.start_row;
+    for e in part.nnz_start..part.nnz_end {
+        // Advance past row boundaries (handles empty rows).
+        while e >= row_ptr[row + 1] {
+            row += 1;
+        }
+        f(e, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::balanced_nnz_partition;
+    use crate::sparse::{Coo, Csr};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn cursor_visits_every_nnz_with_correct_row() {
+        let mut rng = Pcg64::new(41);
+        for _ in 0..30 {
+            let nrows = rng.range(1, 40);
+            let mut coo = Coo::new(nrows, 10);
+            for _ in 0..rng.below(120) {
+                coo.push(rng.below(nrows), rng.below(10), 1.0);
+            }
+            let m = Csr::from_coo(coo);
+            for p in [1usize, 3, 8] {
+                let mut seen = vec![None::<usize>; m.nnz()];
+                for part in balanced_nnz_partition(m.row_ptr(), p) {
+                    for_each_nnz_in(part, m.row_ptr(), |e, row| {
+                        assert!(seen[e].is_none(), "nnz {e} visited twice");
+                        seen[e] = Some(row);
+                    });
+                }
+                // Every nnz visited exactly once with its true row.
+                for (e, row) in seen.iter().enumerate() {
+                    let row = row.expect("nnz not visited");
+                    assert!(m.row_ptr()[row] <= e && e < m.row_ptr()[row + 1]);
+                }
+            }
+        }
+    }
+}

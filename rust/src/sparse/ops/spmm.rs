@@ -1,0 +1,218 @@
+//! SpMM — sparse × dense scatter: `x = K_over_r @ v` where `v` shares the
+//! sparsity pattern of `c` and is given by its CSR-ordered values `w`.
+//!
+//! With `x` stored transposed (`N×v_r`) and `K_over_rᵀ` stored `V×v_r`,
+//! the update per non-zero `(i, j)` is the unit-stride axpy
+//! `xᵀ[j, :] += w[e] · K_over_rᵀ[i, :]`.
+//!
+//! Two parallel strategies:
+//! * [`spmm_atomic`] — the paper's Fig. 3 kernel: nnz-partitioned, scatter
+//!   guarded by atomics (`#pragma omp atomic`).
+//! * [`spmm_transposed`] — atomic-free: a one-time [`TransposedPattern`]
+//!   of `c` (its pattern never changes across Sinkhorn iterations) lets
+//!   threads own whole output rows `xᵀ[j, :]`. This is the perf-pass
+//!   alternative benchmarked in `ablation_fusion`/§Perf.
+
+use super::for_each_nnz_in;
+use crate::parallel::{balanced_nnz_partition, AtomicF64Slice, NnzRange, Pool};
+use crate::sparse::{axpy, Csr, Dense};
+use crate::Real;
+
+/// Paper-faithful atomic SpMM. `x_t` (`N×v_r`) is zeroed, then every
+/// non-zero scatters into it under per-element atomics.
+pub fn spmm_atomic(
+    c: &Csr,
+    w: &[Real],
+    kor_t: &Dense,
+    x_t: &mut Dense,
+    pool: &Pool,
+    parts: &[NnzRange],
+) {
+    assert_eq!(w.len(), c.nnz());
+    assert_eq!(kor_t.nrows(), c.nrows());
+    assert_eq!(x_t.nrows(), c.ncols());
+    let vr = kor_t.ncols();
+    assert_eq!(x_t.ncols(), vr);
+    x_t.fill(0.0);
+    // Serial fast path — see fused_type1 (§Perf): avoid the CAS loop.
+    if pool.nthreads() == 1 {
+        for (e, (row, col, _)) in c.iter().enumerate() {
+            axpy(x_t.row_mut(col), w[e], kor_t.row(row));
+        }
+        return;
+    }
+    let x_atomic = AtomicF64Slice::new(x_t.as_mut_slice());
+    let (row_ptr, col_idx) = (c.row_ptr(), c.col_idx());
+    pool.run(|tid, _nt| {
+        let part = parts[tid];
+        for_each_nnz_in(part, row_ptr, |e, row| {
+            let j = col_idx[e] as usize;
+            let s = w[e];
+            let k_row = kor_t.row(row);
+            let base = j * vr;
+            for (k, &kv) in k_row.iter().enumerate() {
+                x_atomic.fetch_add(base + k, s * kv);
+            }
+        });
+    });
+}
+
+/// Serial reference SpMM.
+pub fn spmm_serial(c: &Csr, w: &[Real], kor_t: &Dense, x_t: &mut Dense) {
+    assert_eq!(w.len(), c.nnz());
+    x_t.fill(0.0);
+    for (e, (row, col, _)) in c.iter().enumerate() {
+        axpy(x_t.row_mut(col), w[e], kor_t.row(row));
+    }
+}
+
+/// Precomputed transpose of a CSR *pattern*: for each column `j`, the list
+/// of (source row, CSR value position) pairs. Built once per query (the
+/// pattern of `c` is iteration-invariant), reused every Sinkhorn step.
+#[derive(Clone, Debug)]
+pub struct TransposedPattern {
+    /// `col_ptr[j]..col_ptr[j+1]` spans column `j`'s entries.
+    pub col_ptr: Vec<usize>,
+    /// Source row of each entry, in column-major order.
+    pub src_row: Vec<u32>,
+    /// Position in the CSR `values`/`w` array of each entry.
+    pub src_pos: Vec<u32>,
+}
+
+impl TransposedPattern {
+    pub fn build(c: &Csr) -> Self {
+        let ncols = c.ncols();
+        let mut col_ptr = vec![0usize; ncols + 1];
+        for &j in c.col_idx() {
+            col_ptr[j as usize + 1] += 1;
+        }
+        for j in 0..ncols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut cursor = col_ptr.clone();
+        let mut src_row = vec![0u32; c.nnz()];
+        let mut src_pos = vec![0u32; c.nnz()];
+        for (e, (i, j, _)) in c.iter().enumerate() {
+            let dst = cursor[j];
+            cursor[j] += 1;
+            src_row[dst] = i as u32;
+            src_pos[dst] = e as u32;
+        }
+        Self { col_ptr, src_row, src_pos }
+    }
+
+    /// nnz-balanced partition over *columns* (each thread owns whole
+    /// columns, hence whole `xᵀ` rows — no atomics).
+    pub fn column_parts(&self, nthreads: usize) -> Vec<NnzRange> {
+        balanced_nnz_partition(&self.col_ptr, nthreads)
+    }
+}
+
+/// Atomic-free SpMM via the transposed pattern: thread owning column `j`
+/// accumulates `xᵀ[j, :]` privately.
+pub fn spmm_transposed(
+    tp: &TransposedPattern,
+    w: &[Real],
+    kor_t: &Dense,
+    x_t: &mut Dense,
+    pool: &Pool,
+    col_parts: &[NnzRange],
+) {
+    let vr = kor_t.ncols();
+    assert_eq!(x_t.ncols(), vr);
+    assert_eq!(x_t.nrows() + 1, tp.col_ptr.len());
+    x_t.fill(0.0);
+    let x_view = crate::util::SharedSlice::new(x_t.as_mut_slice());
+    pool.run(|tid, _nt| {
+        let part = col_parts[tid];
+        // Column ranges never split a column (balanced over col_ptr), so
+        // each thread's writes to x_t rows are disjoint.
+        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+            let row = tp.src_row[e] as usize;
+            let s = w[tp.src_pos[e] as usize];
+            // SAFETY: row j of x_t is owned by this thread.
+            let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
+            axpy(x_row, s, kor_t.row(row));
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Pcg64;
+
+    fn random_case(rng: &mut Pcg64, v: usize, n: usize, vr: usize, nnz: usize) -> (Csr, Vec<Real>, Dense) {
+        let mut coo = Coo::new(v, n);
+        for _ in 0..nnz {
+            coo.push(rng.below(v), rng.below(n), rng.next_f64() + 0.1);
+        }
+        let c = Csr::from_coo(coo);
+        let w: Vec<Real> = (0..c.nnz()).map(|_| rng.next_f64() - 0.3).collect();
+        let kor_t = Dense::from_fn(v, vr, |_, _| rng.next_f64());
+        (c, w, kor_t)
+    }
+
+    /// Dense oracle: materialize v (sparse, values w at pattern of c) and
+    /// compute K_over_r @ v densely, then transpose.
+    fn dense_oracle(c: &Csr, w: &[Real], kor_t: &Dense) -> Dense {
+        let kor = kor_t.transpose(); // v_r × V
+        let mut vmat = Dense::zeros(c.nrows(), c.ncols());
+        for (e, (i, j, _)) in c.iter().enumerate() {
+            vmat.set(i, j, w[e]);
+        }
+        kor.matmul(&vmat).transpose() // N × v_r
+    }
+
+    #[test]
+    fn atomic_matches_oracle() {
+        let mut rng = Pcg64::new(61);
+        for p in [1usize, 4, 9] {
+            let (c, w, kor_t) = random_case(&mut rng, 25, 13, 6, 70);
+            let oracle = dense_oracle(&c, &w, &kor_t);
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut x_t = Dense::zeros(13, 6);
+            spmm_atomic(&c, &w, &kor_t, &mut x_t, &pool, &parts);
+            assert!(x_t.max_abs_diff(&oracle) < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn transposed_matches_serial() {
+        let mut rng = Pcg64::new(62);
+        for p in [1usize, 3, 8] {
+            let (c, w, kor_t) = random_case(&mut rng, 40, 17, 5, 150);
+            let mut x_serial = Dense::zeros(17, 5);
+            spmm_serial(&c, &w, &kor_t, &mut x_serial);
+            let tp = TransposedPattern::build(&c);
+            let pool = Pool::new(p);
+            let col_parts = tp.column_parts(p);
+            let mut x_t = Dense::zeros(17, 5);
+            spmm_transposed(&tp, &w, &kor_t, &mut x_t, &pool, &col_parts);
+            assert!(x_t.max_abs_diff(&x_serial) < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn transposed_pattern_is_column_sorted_permutation() {
+        let mut rng = Pcg64::new(63);
+        let (c, _, _) = random_case(&mut rng, 30, 11, 4, 90);
+        let tp = TransposedPattern::build(&c);
+        assert_eq!(*tp.col_ptr.last().unwrap(), c.nnz());
+        // src_pos is a permutation of 0..nnz.
+        let mut pos: Vec<u32> = tp.src_pos.clone();
+        pos.sort_unstable();
+        assert_eq!(pos, (0..c.nnz() as u32).collect::<Vec<_>>());
+        // Each entry agrees with the CSR triplet.
+        let triplets: Vec<(usize, usize, Real)> = c.iter().collect();
+        for j in 0..c.ncols() {
+            for e in tp.col_ptr[j]..tp.col_ptr[j + 1] {
+                let (ti, tj, _) = triplets[tp.src_pos[e] as usize];
+                assert_eq!(tj, j);
+                assert_eq!(ti, tp.src_row[e] as usize);
+            }
+        }
+    }
+}

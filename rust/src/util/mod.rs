@@ -1,0 +1,63 @@
+//! Small self-contained utilities: a deterministic PRNG, statistics
+//! helpers, a minimal JSON reader/writer (the offline environment has no
+//! `serde`), and a shared-slice wrapper for disjoint parallel writes.
+
+pub mod json;
+pub mod prng;
+pub mod shared;
+pub mod stats;
+
+pub use prng::{Pcg64, Zipf};
+pub use shared::SharedSlice;
+
+/// Align `n` up to a multiple of `m` (m > 0).
+#[inline]
+pub fn align_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable duration formatting for bench/metric output.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Number of logical CPUs visible to this process.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+        assert_eq!(align_up(17, 5), 20);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with(" ms"));
+        assert!(fmt_duration(2.5e-6).ends_with(" µs"));
+        assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! `SharedSlice` — a `Send + Sync` raw view over a mutable slice used for
+//! **disjoint** parallel writes from the thread pool (the OpenMP idiom
+//! `#pragma omp parallel for` over an output array). Callers must ensure
+//! distinct threads write distinct indices; all kernel call-sites in this
+//! crate partition the index space before writing.
+
+use std::marker::PhantomData;
+
+/// Unsafe shared mutable view over `&mut [T]` for partitioned parallel
+/// writes. Cheap to copy into worker closures.
+#[derive(Clone, Copy)]
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access discipline is "disjoint indices per thread", enforced by
+// the partitioning at every call-site.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element. Caller guarantees `i` is owned by this thread.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread reads or writes index `i` concurrently.
+    #[inline(always)]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = value };
+    }
+
+    /// Read one element.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread writes index `i` concurrently.
+    #[inline(always)]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) }
+    }
+
+    /// Mutable sub-slice `[start, start+len)` owned by the calling thread.
+    ///
+    /// # Safety
+    /// The range is in-bounds and disjoint from every other thread's range.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+
+    /// Raw pointer access for pointer-arithmetic hot loops (the paper's
+    /// "optimized pointer arithmetics" bullet).
+    #[inline(always)]
+    pub fn as_ptr(&self) -> *mut T {
+        self.ptr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::Pool;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let n = 10_000;
+        let mut data = vec![0u64; n];
+        let view = SharedSlice::new(&mut data);
+        let pool = Pool::new(4);
+        pool.run(|tid, nthreads| {
+            let chunk = n.div_ceil(nthreads);
+            let start = tid * chunk;
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                unsafe { view.write(i, i as u64 * 3) };
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn slice_mut_partition() {
+        let mut data = vec![0u32; 100];
+        let view = SharedSlice::new(&mut data);
+        let pool = Pool::new(5);
+        pool.run(|tid, nthreads| {
+            let chunk = 100 / nthreads;
+            let s = unsafe { view.slice_mut(tid * chunk, chunk) };
+            s.fill(tid as u32 + 1);
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / 20) as u32 + 1);
+        }
+    }
+}

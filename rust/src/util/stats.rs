@@ -1,0 +1,156 @@
+//! Sample statistics used by the bench harness and the asymptotic-fit
+//! experiment (Table 2): mean/stddev/percentiles and ordinary
+//! least-squares fits.
+
+/// Summary of a sample of measurements (seconds, counts, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample set");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares `y ≈ a + b·x`. Returns `(a, b, r²)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Multi-variable least squares `y ≈ Σ_k beta_k · x_k` (no intercept),
+/// solved by normal equations + Gaussian elimination. Used to fit the
+/// paper's Table-2 cost model `t ≈ β₀·(V·v_r·w/p) + β₁·(t_it·nnz·v_r/p)`.
+pub fn least_squares(features: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
+    let m = features.len();
+    assert!(m > 0);
+    let k = features[0].len();
+    assert!(features.iter().all(|f| f.len() == k));
+    assert_eq!(ys.len(), m);
+    // Normal matrix A = XᵀX (k×k), rhs b = Xᵀy.
+    let mut a = vec![vec![0.0f64; k + 1]; k];
+    for i in 0..k {
+        for j in 0..k {
+            a[i][j] = (0..m).map(|s| features[s][i] * features[s][j]).sum();
+        }
+        a[i][k] = (0..m).map(|s| features[s][i] * ys[s]).sum();
+    }
+    // Gaussian elimination with partial pivoting.
+    for col in 0..k {
+        let piv = (col..k).max_by(|&p, &q| a[p][col].abs().partial_cmp(&a[q][col].abs()).unwrap()).unwrap();
+        a.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-300, "singular normal matrix");
+        for j in col..=k {
+            a[col][j] /= d;
+        }
+        for row in 0..k {
+            if row != col {
+                let f = a[row][col];
+                for j in col..=k {
+                    a[row][j] -= f * a[col][j];
+                }
+            }
+        }
+    }
+    (0..k).map(|i| a[i][k]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.95) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn least_squares_two_features() {
+        // y = 2*x0 + 0.5*x1, exactly.
+        let feats: Vec<Vec<f64>> =
+            vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0], vec![2.0, 3.0], vec![5.0, 1.0]];
+        let ys: Vec<f64> = feats.iter().map(|f| 2.0 * f[0] + 0.5 * f[1]).collect();
+        let beta = least_squares(&feats, &ys);
+        assert!((beta[0] - 2.0).abs() < 1e-9);
+        assert!((beta[1] - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,217 @@
+//! Coordinator invariants, property-style (DESIGN.md §7), via the in-repo
+//! mini-proptest framework.
+
+use sinkhorn_wmd::coordinator::{
+    Backend, BatchQueue, BatcherConfig, DocStore, QueryRequest, Router, ServiceConfig, WmdService,
+};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::{balanced_nnz_partition, even_rows_partition};
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sparse::{Coo, Csr};
+use sinkhorn_wmd::testing::property;
+use std::time::Duration;
+
+#[test]
+fn prop_partition_covers_and_balances() {
+    property("nnz partition covers/disjoint/balanced", 60, |g| {
+        let nrows = g.usize_in(1..300);
+        let mut row_ptr = vec![0usize];
+        for _ in 0..nrows {
+            let k = g.usize_in(0..9);
+            row_ptr.push(row_ptr.last().unwrap() + k);
+        }
+        let p = g.usize_in(1..17);
+        let parts = balanced_nnz_partition(&row_ptr, p);
+        assert_eq!(parts.len(), p);
+        assert_eq!(parts[0].nnz_start, 0);
+        assert_eq!(parts[p - 1].nnz_end, *row_ptr.last().unwrap());
+        let mut max = 0;
+        let mut min = usize::MAX;
+        for (i, w) in parts.iter().enumerate() {
+            if i > 0 {
+                assert_eq!(parts[i - 1].nnz_end, w.nnz_start);
+            }
+            max = max.max(w.len());
+            min = min.min(w.len());
+        }
+        assert!(max - min <= 1, "imbalance {max}-{min}");
+        // Row split covers the same range.
+        let rows = even_rows_partition(&row_ptr, p);
+        assert_eq!(rows[p - 1].nnz_end, *row_ptr.last().unwrap());
+    });
+}
+
+#[test]
+fn prop_router_bucket_monotone_and_padding_normalized() {
+    property("router buckets + padding", 60, |g| {
+        let nb = g.usize_in(1..5);
+        let buckets: Vec<usize> = (0..nb).map(|_| g.usize_in(2..64)).collect();
+        let router = Router::new(buckets.clone());
+        // bucket_for is monotone: larger v_r never gets a smaller bucket.
+        let a = g.usize_in(1..70);
+        let b = g.usize_in(1..70);
+        let (lo, hi) = (a.min(b), a.max(b));
+        match (router.bucket_for(lo), router.bucket_for(hi)) {
+            (Some(x), Some(y)) => assert!(x <= y),
+            (None, Some(_)) => panic!("smaller v_r unroutable but larger routable"),
+            _ => {}
+        }
+        // Padding keeps normalization, sortedness, and per-word mass.
+        let dim = g.usize_in(100..400);
+        let nnz = g.usize_in(1..20);
+        let q = g.histogram(dim, nnz);
+        if let Some(bucket) = router.bucket_for(nnz) {
+            let padded = router.pad_query(&q, bucket);
+            assert_eq!(padded.idx.len(), bucket);
+            assert!((padded.sum() - 1.0).abs() < 1e-9);
+            for w in padded.idx.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            // Per-word mass exactly preserved.
+            for (&i, &v) in q.idx.iter().zip(&q.val) {
+                let m: f64 = padded
+                    .idx
+                    .iter()
+                    .zip(&padded.val)
+                    .filter(|(&pi, _)| pi == i)
+                    .map(|(_, &pv)| pv)
+                    .sum();
+                assert!((m - v).abs() < 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_never_drops_never_reorders_within_batch() {
+    property("batcher delivery", 20, |g| {
+        let max_batch = g.usize_in(1..9);
+        let n_items = g.usize_in(1..40);
+        let q = BatchQueue::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+        });
+        for i in 0..n_items {
+            assert!(q.push(i));
+        }
+        q.close();
+        let mut seen = Vec::new();
+        while let Some(batch) = q.next_batch() {
+            assert!(!batch.is_empty() && batch.len() <= max_batch);
+            seen.extend(batch);
+        }
+        // FIFO overall (single consumer): order preserved exactly.
+        assert_eq!(seen, (0..n_items).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_solver_permutation_equivariant() {
+    // Permuting the target documents permutes the WMD vector — the
+    // coordinator relies on this to shard/rebalance safely.
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(300)
+        .num_docs(20)
+        .embedding_dim(8)
+        .num_queries(1)
+        .query_words(6, 6)
+        .seed(55)
+        .build();
+    let pool = Pool::new(4);
+    let solver = SparseSolver::new(SinkhornConfig {
+        tolerance: 0.0,
+        max_iter: 10,
+        ..Default::default()
+    });
+    let base = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+    property("solver permutation equivariance", 10, |g| {
+        // Random permutation of columns.
+        let n = corpus.c.ncols();
+        let mut perm: Vec<usize> = (0..n).collect();
+        g.rng().shuffle(&mut perm);
+        let mut coo = Coo::new(corpus.c.nrows(), n);
+        for (i, j, v) in corpus.c.iter() {
+            coo.push(i, perm[j], v);
+        }
+        let permuted = Csr::from_coo(coo);
+        let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &permuted, &pool);
+        for j in 0..n {
+            let a = base.wmd[j];
+            let b = out.wmd[perm[j]];
+            assert!((a - b).abs() < 1e-10 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn service_end_to_end_with_mixed_backends() {
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(600)
+        .num_docs(50)
+        .embedding_dim(16)
+        .num_queries(6)
+        .query_words(5, 15)
+        .seed(77)
+        .build();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let service = WmdService::start(
+        store,
+        ServiceConfig {
+            threads: 3,
+            sinkhorn: SinkhornConfig { max_iter: 10, tolerance: 0.0, ..Default::default() },
+            ..Default::default()
+        },
+        None,
+    );
+    // Interleave sparse and dense requests.
+    let mut receivers = Vec::new();
+    for (i, q) in corpus.queries.iter().enumerate() {
+        let prefer = if i % 2 == 0 { None } else { Some(Backend::DenseRust) };
+        receivers.push((i, service.submit(QueryRequest { query: q.clone(), prefer })));
+    }
+    for (i, rx) in receivers {
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_ok(), "query {i}: {:?}", resp.error);
+        assert_eq!(resp.wmd.len(), 50);
+        if i % 2 == 1 {
+            assert_eq!(resp.backend, Backend::DenseRust);
+        }
+    }
+    let snap = service.metrics().snapshot();
+    assert_eq!(snap.queries, 6);
+    assert_eq!(snap.backend_dense, 3);
+    assert_eq!(snap.errors, 0);
+    service.shutdown();
+}
+
+#[test]
+fn service_survives_error_storm() {
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(200)
+        .num_docs(10)
+        .embedding_dim(8)
+        .num_queries(1)
+        .query_words(4, 4)
+        .seed(88)
+        .build();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let service = WmdService::start(
+        store,
+        ServiceConfig { threads: 2, ..Default::default() },
+        None,
+    );
+    // Bad queries (wrong dim) interleaved with good ones.
+    use sinkhorn_wmd::corpus::SparseVec;
+    for round in 0..5 {
+        let bad = SparseVec::from_counts(3, &[(0, 1)]);
+        let r1 = service.submit_wait(QueryRequest::new(bad));
+        assert!(!r1.is_ok(), "round {round}");
+        let r2 = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        assert!(r2.is_ok(), "round {round}: service broke after error");
+    }
+    let snap = service.metrics().snapshot();
+    assert_eq!(snap.errors, 5);
+    assert_eq!(snap.queries, 5);
+    service.shutdown();
+}

@@ -1,0 +1,132 @@
+//! Cuturi's theorem, empirically: the Sinkhorn distance converges to the
+//! exact EMD as λ → ∞ (paper §2 cites the proof; we validate the
+//! implementation against the in-repo exact transportation solver).
+
+use sinkhorn_wmd::corpus::{docs_to_csr, SparseVec, TinyCorpus};
+use sinkhorn_wmd::emd::exact_wmd;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sparse::Dense;
+use sinkhorn_wmd::util::Pcg64;
+
+/// Sinkhorn 1-to-1 distance via the one-to-many solver with a single
+/// target column.
+fn sinkhorn_one_to_one(
+    embeddings: &Dense,
+    a: &SparseVec,
+    b: &SparseVec,
+    lambda: f64,
+    max_iter: usize,
+) -> f64 {
+    let c = docs_to_csr(a.dim, std::slice::from_ref(b));
+    let pool = Pool::new(2);
+    let solver = SparseSolver::new(SinkhornConfig {
+        lambda,
+        max_iter,
+        tolerance: 1e-10,
+        check_every: 8,
+        ..Default::default()
+    });
+    solver.wmd_one_to_many(embeddings, a, &c, &pool).wmd[0]
+}
+
+fn random_pair(rng: &mut Pcg64, dim: usize, nnz: usize) -> (SparseVec, SparseVec) {
+    let mk = |rng: &mut Pcg64| {
+        let idx = rng.sample_indices(dim, nnz);
+        let counts: Vec<(usize, usize)> = idx.into_iter().map(|i| (i, rng.range(1, 5))).collect();
+        SparseVec::from_counts(dim, &counts)
+    };
+    (mk(rng), mk(rng))
+}
+
+#[test]
+fn sinkhorn_upper_bounds_and_approaches_exact_emd() {
+    let mut rng = Pcg64::new(404);
+    let dim = 60;
+    let emb = Dense::from_fn(dim, 8, |_, _| rng.next_gaussian() * 0.5);
+    for case in 0..5 {
+        let (a, b) = random_pair(&mut rng, dim, 5);
+        let exact = exact_wmd(&emb, &a, &b);
+        // Entropic smoothing keeps the plan away from the optimal vertex,
+        // so the regularized transport cost is ≥ exact; the gap shrinks
+        // with λ.
+        let d_small = sinkhorn_one_to_one(&emb, &a, &b, 5.0, 4000);
+        let d_large = sinkhorn_one_to_one(&emb, &a, &b, 40.0, 20000);
+        assert!(
+            d_small >= exact - 1e-6,
+            "case {case}: sinkhorn λ=5 ({d_small}) below exact ({exact})"
+        );
+        let gap_small = (d_small - exact).abs();
+        let gap_large = (d_large - exact).abs();
+        assert!(
+            gap_large <= gap_small + 1e-9,
+            "case {case}: gap did not shrink with λ: {gap_small} -> {gap_large}"
+        );
+        assert!(
+            gap_large < 0.05 * exact.max(0.1),
+            "case {case}: λ=40 gap too large: exact={exact} sinkhorn={d_large}"
+        );
+    }
+}
+
+#[test]
+fn self_distance_is_near_zero_for_large_lambda() {
+    let tiny = TinyCorpus::load();
+    let doc = &tiny.docs[0];
+    let d = sinkhorn_one_to_one(&tiny.embeddings, doc, doc, 60.0, 20000);
+    // Exact EMD(a, a) = 0; entropic smoothing leaves a small positive bias.
+    assert!(d >= -1e-12);
+    assert!(d < 0.05, "self-distance {d} too large");
+}
+
+#[test]
+fn tiny_corpus_semantics_match_paper_example() {
+    // WMD("Obama speaks to the media in Illinois",
+    //     "The President greets the press in Chicago")
+    //   < WMD(obama-sentence, food/sports/misc sentences)  — paper Fig. 1.
+    let tiny = TinyCorpus::load();
+    let query = tiny.histogram("Obama speaks to the media in Illinois").unwrap();
+    let president = tiny.histogram("The President greets the press in Chicago").unwrap();
+    let food = tiny.histogram("The chef cooks sushi for dinner in Japan").unwrap();
+    let misc = tiny.histogram("Amy Adams was in deepFake").unwrap();
+    let d = |b: &SparseVec| sinkhorn_one_to_one(&tiny.embeddings, &query, b, 30.0, 8000);
+    let d_pres = d(&president);
+    let d_food = d(&food);
+    let d_misc = d(&misc);
+    assert!(d_pres < d_food, "president {d_pres} !< food {d_food}");
+    assert!(d_pres < d_misc, "president {d_pres} !< misc {d_misc}");
+    // And the exact EMD agrees on the ordering.
+    let e_pres = exact_wmd(&tiny.embeddings, &query, &president);
+    let e_food = exact_wmd(&tiny.embeddings, &query, &food);
+    assert!(e_pres < e_food);
+}
+
+#[test]
+fn exact_emd_symmetry() {
+    let mut rng = Pcg64::new(405);
+    let dim = 40;
+    let emb = Dense::from_fn(dim, 6, |_, _| rng.next_gaussian());
+    for _ in 0..5 {
+        let (a, b) = random_pair(&mut rng, dim, 4);
+        let ab = exact_wmd(&emb, &a, &b);
+        let ba = exact_wmd(&emb, &b, &a);
+        assert!((ab - ba).abs() < 1e-9, "{ab} vs {ba}");
+    }
+}
+
+#[test]
+fn exact_emd_triangle_inequality() {
+    // EMD with a metric ground cost is a metric; spot-check the triangle
+    // inequality on random triples.
+    let mut rng = Pcg64::new(406);
+    let dim = 30;
+    let emb = Dense::from_fn(dim, 5, |_, _| rng.next_gaussian());
+    for _ in 0..10 {
+        let (a, b) = random_pair(&mut rng, dim, 3);
+        let (c, _) = random_pair(&mut rng, dim, 3);
+        let ab = exact_wmd(&emb, &a, &b);
+        let bc = exact_wmd(&emb, &b, &c);
+        let ac = exact_wmd(&emb, &a, &c);
+        assert!(ac <= ab + bc + 1e-9, "triangle violated: {ac} > {ab} + {bc}");
+    }
+}

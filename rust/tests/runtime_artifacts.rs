@@ -1,0 +1,188 @@
+//! Three-layer integration: the AOT-compiled L2/L1 artifacts (JAX +
+//! Pallas, loaded via PJRT) must reproduce the Rust sparse solver's
+//! numbers. Skipped (with a notice) when `artifacts/` hasn't been built —
+//! run `make artifacts` first.
+
+use sinkhorn_wmd::coordinator::{DocStore, PjrtBackend};
+use sinkhorn_wmd::corpus::{SparseVec, SyntheticCorpus};
+use sinkhorn_wmd::dist::precompute_factors;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::runtime::{Manifest, Runtime};
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json not found — run `make artifacts`");
+        None
+    }
+}
+
+/// Corpus matching the default artifact bucket shapes.
+fn bucket_corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(2048)
+        .num_docs(256)
+        .embedding_dim(64)
+        .n_topics(4)
+        .num_queries(2)
+        .query_words(10, 20)
+        .seed(99)
+        .build()
+}
+
+/// A query with exactly `v_r` distinct words (bucket-exact, no padding).
+fn exact_query(corpus: &SyntheticCorpus, v_r: usize) -> SparseVec {
+    let counts: Vec<(usize, usize)> = (0..v_r).map(|k| (37 * k + 11, k % 3 + 1)).collect();
+    SparseVec::from_counts(corpus.vocab_size(), &counts)
+}
+
+#[test]
+fn pjrt_solve_matches_rust_sparse_at_exact_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let corpus = bucket_corpus();
+    let store = DocStore::from_synthetic(&corpus);
+    let backend = PjrtBackend::load(dir, &store)
+        .expect("backend load")
+        .expect("no artifacts match the bucket corpus shape");
+    let manifest = Manifest::read(dir).unwrap();
+    let pool = Pool::new(4);
+    for &v_r in &manifest.v_r_buckets("sinkhorn_solve", 2048, 256) {
+        let meta = manifest.find("sinkhorn_solve", v_r, 2048, 256).unwrap();
+        let query = exact_query(&corpus, v_r);
+        let wmd_pjrt = backend.solve(&query, &store.embeddings).expect("pjrt solve");
+        // Same λ and iteration count as the artifact, no early exit.
+        let solver = SparseSolver::new(SinkhornConfig {
+            lambda: meta.lambda,
+            max_iter: meta.max_iter,
+            tolerance: 0.0,
+            ..Default::default()
+        });
+        let out = solver.wmd_one_to_many(&corpus.embeddings, &query, &corpus.c, &pool);
+        let max_rel = wmd_pjrt
+            .iter()
+            .zip(&out.wmd)
+            .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
+            .fold(0.0f64, f64::max);
+        // Tolerance: XLA's matmul accumulation order differs from our
+        // 4-lane dot, and the GEMM-form cdist amplifies cancellation
+        // noise near zero distances by √ then ×λ — a few 1e-9 relative
+        // after 15 iterations is fp-expected, not a logic divergence.
+        assert!(
+            max_rel < 1e-7,
+            "v_r={v_r}: PJRT and Rust sparse disagree by {max_rel:.3e}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_padding_perturbation_is_small_at_convergence() {
+    // ε-padding changes the transient, not the limit: compare a padded
+    // query at high iteration count against the unpadded solve.
+    let Some(dir) = artifacts_dir() else { return };
+    let corpus = bucket_corpus();
+    let store = DocStore::from_synthetic(&corpus);
+    let backend = PjrtBackend::load(dir, &store).unwrap().unwrap();
+    let pool = Pool::new(4);
+    // v_r = 13 pads to bucket 16.
+    let query = exact_query(&corpus, 13);
+    let bucket = backend.router().bucket_for(13).expect("bucket");
+    let padded = backend.router().pad_query(&query, bucket);
+    let solver = SparseSolver::new(SinkhornConfig {
+        lambda: 10.0,
+        max_iter: 400,
+        tolerance: 0.0,
+        ..Default::default()
+    });
+    let unpadded = solver.wmd_one_to_many(&corpus.embeddings, &query, &corpus.c, &pool);
+    let padded_out = solver.wmd_one_to_many(&corpus.embeddings, &padded, &corpus.c, &pool);
+    let max_rel = unpadded
+        .wmd
+        .iter()
+        .zip(&padded_out.wmd)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
+        .fold(0.0f64, f64::max);
+    assert!(max_rel < 1e-4, "padding perturbs converged WMD by {max_rel:.3e}");
+}
+
+#[test]
+fn cdist_k_artifact_matches_rust_precompute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::read(dir).unwrap();
+    let Some(meta) = manifest.artifacts.iter().find(|a| a.variant == "cdist_k") else {
+        eprintln!("SKIP: no cdist_k artifact");
+        return;
+    };
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(meta.vocab)
+        .num_docs(8)
+        .embedding_dim(meta.dim)
+        .num_queries(1)
+        .query_words(meta.v_r, meta.v_r)
+        .seed(7)
+        .build();
+    let query = &corpus.queries[0];
+    assert_eq!(query.nnz(), meta.v_r);
+    let rt = Runtime::cpu().expect("pjrt client");
+    let art = rt.load(dir, meta).expect("compile cdist_k");
+    // Inputs: qvecs, vecs, r.
+    let mut qvecs = Vec::new();
+    for &w in &query.idx {
+        qvecs.extend_from_slice(corpus.embeddings.row(w as usize));
+    }
+    let outs = art
+        .run(&[&qvecs, corpus.embeddings.as_slice(), &query.val])
+        .expect("run cdist_k");
+    let (kt_jax, kor_jax, km_jax) = (&outs[0], &outs[1], &outs[2]);
+    // Rust factors.
+    let pool = Pool::new(4);
+    let f = precompute_factors(&corpus.embeddings, &query.indices(), &query.val, meta.lambda, &pool);
+    for (name, jax, rust) in [
+        ("kt", kt_jax, f.kt.as_slice()),
+        ("kor_t", kor_jax, f.kor_t.as_slice()),
+        ("km_t", km_jax, f.km_t.as_slice()),
+    ] {
+        assert_eq!(jax.len(), rust.len(), "{name} length");
+        let max_mixed = jax
+            .iter()
+            .zip(rust)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f64, f64::max);
+        // The GEMM-form d² = ‖q‖²+‖y‖²−2q·y has absolute cancellation
+        // noise ~1e-16·‖q‖² near d = 0; √ turns that into ~1e-8 on d and
+        // exp(−λd) into ~1e-6 on K near self-distances (amplified by 1/r
+        // for K_over_r). Both sides do the same math with different
+        // rounding orders, so a mixed abs/rel bound of 1e-5 is the honest
+        // cross-implementation tolerance (entries away from d≈0 agree to
+        // 1e-12).
+        assert!(max_mixed < 1e-5, "{name}: L1 Pallas vs Rust differ by {max_mixed:.3e}");
+    }
+}
+
+#[test]
+fn manifest_signatures_are_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::read(dir).unwrap();
+    assert!(!manifest.artifacts.is_empty());
+    for a in &manifest.artifacts {
+        assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+        match a.variant.as_str() {
+            "sinkhorn_solve" => {
+                assert_eq!(a.inputs.len(), 4, "{}", a.name);
+                assert_eq!(a.inputs[0].dims, vec![a.v_r]);
+                assert_eq!(a.inputs[2].dims, vec![a.vocab, a.n_docs]);
+                assert_eq!(a.outputs[0].dims, vec![a.n_docs]);
+            }
+            "cdist_k" => {
+                assert_eq!(a.outputs.len(), 3, "{}", a.name);
+                for o in &a.outputs {
+                    assert_eq!(o.dims, vec![a.vocab, a.v_r]);
+                }
+            }
+            other => panic!("unknown variant {other}"),
+        }
+    }
+}

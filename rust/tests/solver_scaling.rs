@@ -1,0 +1,127 @@
+//! Cross-cutting solver invariants at a mid-size workload: determinism
+//! across thread counts and kernels, Table-2 cost-model sanity, and the
+//! paper-scale statistics of the generator.
+
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{DenseSolver, IterateKernel, SinkhornConfig, SparseSolver};
+
+fn mid_corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(4_000)
+        .num_docs(200)
+        .embedding_dim(64)
+        .n_topics(6)
+        .num_queries(3)
+        .query_words(19, 43)
+        .seed(2024)
+        .build()
+}
+
+#[test]
+fn kernels_and_threads_commute_at_mid_scale() {
+    let corpus = mid_corpus();
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 10, ..Default::default() };
+    let reference = {
+        let pool = Pool::new(1);
+        SparseSolver::new(config).wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool)
+    };
+    for kernel in [IterateKernel::FusedAtomic, IterateKernel::FusedPrivate, IterateKernel::Unfused] {
+        for p in [2usize, 6] {
+            let pool = Pool::new(p);
+            let solver = SparseSolver::new(SinkhornConfig { kernel, ..config });
+            let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+            let max_rel = out
+                .wmd
+                .iter()
+                .zip(&reference.wmd)
+                .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
+                .fold(0.0f64, f64::max);
+            assert!(max_rel < 1e-9, "{kernel:?} p={p}: {max_rel:.2e}");
+        }
+    }
+}
+
+#[test]
+fn dense_baseline_agrees_at_mid_scale() {
+    let corpus = mid_corpus();
+    let pool = Pool::new(4);
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 8, ..Default::default() };
+    let sparse = SparseSolver::new(config)
+        .wmd_one_to_many(&corpus.embeddings, corpus.query(1), &corpus.c, &pool);
+    let (dense, times) =
+        DenseSolver::new(config).solve(&corpus.embeddings, corpus.query(1), &corpus.c, &pool);
+    let max_rel = sparse
+        .wmd
+        .iter()
+        .zip(&dense.wmd)
+        .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
+        .fold(0.0f64, f64::max);
+    assert!(max_rel < 1e-9, "dense vs sparse: {max_rel:.2e}");
+    // The Table-1 shape: the dense matmul dominates the dense pipeline.
+    let rows = times.rows();
+    let matmul_pct = rows.iter().find(|r| r.0.contains("KT @ u")).unwrap().2;
+    let spmm_pct = rows.iter().find(|r| r.0.contains("dense x sparse")).unwrap().2;
+    assert!(
+        matmul_pct > spmm_pct,
+        "dense matmul ({matmul_pct:.1}%) should dominate the sparse-side spmm ({spmm_pct:.1}%)"
+    );
+}
+
+#[test]
+fn corpus_statistics_track_paper() {
+    let corpus = mid_corpus();
+    // Queries span the paper's 19..43 range.
+    let sizes: Vec<usize> = corpus.queries.iter().map(|q| q.nnz()).collect();
+    assert_eq!(sizes[0], 19);
+    assert_eq!(*sizes.last().unwrap(), 43);
+    // Document density matches the paper's "tens of words per doc".
+    let mean = corpus.mean_doc_words();
+    assert!((15.0..60.0).contains(&mean), "mean doc words {mean}");
+}
+
+#[test]
+fn runtime_scales_with_nnz_not_with_dense_size() {
+    // Table 2's dominant iterate term is t·nnz·v_r/p: doubling only N
+    // (and thus nnz) should roughly double iterate time, while the dense
+    // pipeline's V×N term grows the same way — the *sparse* advantage is
+    // the V-independence of the iterate. Verify solve time is much less
+    // than proportional to V·N.
+    let small = SyntheticCorpus::builder()
+        .vocab_size(2_000)
+        .num_docs(100)
+        .embedding_dim(32)
+        .num_queries(1)
+        .query_words(20, 20)
+        .seed(31)
+        .build();
+    let big_vocab = SyntheticCorpus::builder()
+        .vocab_size(16_000) // 8× vocabulary
+        .num_docs(100)
+        .embedding_dim(32)
+        .num_queries(1)
+        .query_words(20, 20)
+        .seed(31)
+        .build();
+    let pool = Pool::new(2);
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 30, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    // Warm + measure the iterate-dominated solve (prepare is excluded:
+    // the precompute *is* O(V) by design).
+    let prep_s = solver.prepare(&small.embeddings, small.query(0), &pool);
+    let prep_b = solver.prepare(&big_vocab.embeddings, big_vocab.query(0), &pool);
+    let time = |prep, c: &sinkhorn_wmd::sparse::Csr| {
+        let t0 = std::time::Instant::now();
+        let _ = solver.solve(prep, c, &pool);
+        t0.elapsed().as_secs_f64()
+    };
+    let _ = time(&prep_s, &small.c);
+    let t_small = time(&prep_s, &small.c);
+    let t_big = time(&prep_b, &big_vocab.c);
+    // nnz is comparable (same docs × words/doc); an 8× vocab must not
+    // cost anywhere near 8× — allow generous slack for cache effects.
+    assert!(
+        t_big < t_small * 4.0,
+        "iterate scaled with V: {t_small:.4}s -> {t_big:.4}s"
+    );
+}
