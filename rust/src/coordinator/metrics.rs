@@ -17,6 +17,8 @@ pub struct Metrics {
     backend_sparse: AtomicU64,
     backend_dense: AtomicU64,
     backend_pjrt: AtomicU64,
+    prepare_cache_hits: AtomicU64,
+    prepare_cache_misses: AtomicU64,
 }
 
 impl Metrics {
@@ -47,6 +49,15 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One prepared-factor cache lookup on the serving path.
+    pub fn record_prepare_cache(&self, hit: bool) {
+        if hit {
+            self.prepare_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.prepare_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -64,6 +75,8 @@ impl Metrics {
             backend_sparse: self.backend_sparse.load(Ordering::Relaxed),
             backend_dense: self.backend_dense.load(Ordering::Relaxed),
             backend_pjrt: self.backend_pjrt.load(Ordering::Relaxed),
+            prepare_cache_hits: self.prepare_cache_hits.load(Ordering::Relaxed),
+            prepare_cache_misses: self.prepare_cache_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -81,6 +94,11 @@ pub struct MetricsSnapshot {
     pub backend_sparse: u64,
     pub backend_dense: u64,
     pub backend_pjrt: u64,
+    /// Prepared-factor cache lookups that reused cached `dist` factors.
+    pub prepare_cache_hits: u64,
+    /// Lookups that ran `precompute_factors` (plus uncached solves: 0/0
+    /// when the cache is disabled).
+    pub prepare_cache_misses: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -103,7 +121,7 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
-             backends: sparse={} dense={} pjrt={}",
+             backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={}",
             self.queries,
             self.batches,
             self.errors,
@@ -112,7 +130,9 @@ impl MetricsSnapshot {
             self.p95_latency,
             self.backend_sparse,
             self.backend_dense,
-            self.backend_pjrt
+            self.backend_pjrt,
+            self.prepare_cache_hits,
+            self.prepare_cache_misses
         )
     }
 }
@@ -162,5 +182,19 @@ mod tests {
         assert_eq!(s.queries, 0);
         assert_eq!(s.mean_latency, Duration::ZERO);
         assert_eq!(s.p50_latency, Duration::ZERO);
+        assert_eq!(s.prepare_cache_hits, 0);
+        assert_eq!(s.prepare_cache_misses, 0);
+    }
+
+    #[test]
+    fn prepare_cache_counters() {
+        let m = Metrics::new();
+        m.record_prepare_cache(false);
+        m.record_prepare_cache(true);
+        m.record_prepare_cache(true);
+        let s = m.snapshot();
+        assert_eq!(s.prepare_cache_hits, 2);
+        assert_eq!(s.prepare_cache_misses, 1);
+        assert!(s.report().contains("hits=2"));
     }
 }

@@ -27,4 +27,4 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use pjrt_backend::PjrtBackend;
 pub use router::{Backend, Router};
 pub use service::{QueryRequest, QueryResponse, ServiceConfig, WmdService};
-pub use state::DocStore;
+pub use state::{DocStore, PreparedCache, PreparedKey};

@@ -1,14 +1,15 @@
 //! The WMD query service: batched dispatch of one-to-many WMD queries
-//! over a shared worker pool, with pluggable backends.
+//! over a shared worker pool, with pluggable backends and a bounded
+//! prepared-factor cache so repeated queries skip the `dist` precompute.
 
 use super::batcher::{BatchQueue, BatcherConfig};
 use super::metrics::Metrics;
 use super::pjrt_backend::PjrtBackend;
 use super::router::Backend;
-use super::state::DocStore;
+use super::state::{DocStore, PreparedCache, PreparedKey};
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
-use crate::sinkhorn::{DenseSolver, SinkhornConfig, SparseSolver};
+use crate::sinkhorn::{DenseSolver, Prepared, SinkhornConfig, SparseSolver};
 use crate::Real;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -23,6 +24,13 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Default backend preference (per-request override possible).
     pub prefer: Backend,
+    /// Capacity (entries) of the prepared-factor cache keyed on query
+    /// fingerprint; `0` disables caching. Each entry holds the three
+    /// `V × v_r` factor matrices (~`24·V·v_r` bytes).
+    pub prepare_cache: usize,
+    /// Byte budget over the cached factors (LRU-evicted past it); `0`
+    /// means entry-count bound only.
+    pub prepare_cache_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -32,6 +40,8 @@ impl Default for ServiceConfig {
             sinkhorn: SinkhornConfig::default(),
             batcher: BatcherConfig::default(),
             prefer: Backend::SparseRust,
+            prepare_cache: 32,
+            prepare_cache_bytes: 512 << 20,
         }
     }
 }
@@ -174,11 +184,30 @@ fn dispatcher(
     let pool = Pool::new(nthreads);
     let sparse = SparseSolver::new(config.sinkhorn);
     let dense = DenseSolver::new(config.sinkhorn);
+    // The cache lives on the dispatcher thread — no locking on the hot path.
+    let mut cache = (config.prepare_cache > 0).then(|| {
+        let cache = PreparedCache::new(config.prepare_cache);
+        if config.prepare_cache_bytes > 0 {
+            cache.with_max_bytes(config.prepare_cache_bytes)
+        } else {
+            cache
+        }
+    });
     while let Some(batch) = queue.next_batch() {
         metrics.record_batch(batch.len());
         for job in batch {
             let started = Instant::now();
-            let response = answer(&store, &config, &pool, &sparse, &dense, pjrt.as_ref(), &job.req);
+            let response = answer(
+                &store,
+                &config,
+                &pool,
+                &sparse,
+                &dense,
+                pjrt.as_ref(),
+                cache.as_mut(),
+                &metrics,
+                &job.req,
+            );
             let latency = started.elapsed();
             match &response {
                 Ok((wmd, iterations, backend)) => {
@@ -206,6 +235,7 @@ fn dispatcher(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn answer(
     store: &DocStore,
     config: &ServiceConfig,
@@ -213,6 +243,8 @@ fn answer(
     sparse: &SparseSolver,
     dense: &DenseSolver,
     pjrt: Option<&PjrtBackend>,
+    cache: Option<&mut PreparedCache>,
+    metrics: &Metrics,
     req: &QueryRequest,
 ) -> Result<(Vec<Real>, usize, Backend), String> {
     store.check_query(&req.query)?;
@@ -224,22 +256,42 @@ fn answer(
         (Backend::DensePjrt, _) => Backend::SparseRust,
         (other, _) => other,
     };
+    // The PJRT graph bakes its own precompute in; only the in-process
+    // solvers consume `dist` factors (and hence the cache).
+    if backend == Backend::DensePjrt {
+        let b = pjrt.expect("checked above");
+        let wmd = b
+            .solve(&req.query, &store.embeddings)
+            .map_err(|e| format!("pjrt backend: {e:#}"))?;
+        return Ok((wmd, b.max_v_r(), backend));
+    }
+    // Resolve the prepared factors: cache hit, cache fill, or (cache
+    // disabled) a one-shot local prepare. Both solvers share the same
+    // factors — `precompute_factors` with the service λ.
+    let prepare = || sparse.prepare(&store.embeddings, &req.query, pool);
+    let local;
+    let prep: &Prepared = match cache {
+        Some(cache) => {
+            let key = PreparedKey::new(&req.query, config.sinkhorn.lambda);
+            let (prep, hit) = cache.get_or_insert_with(key, prepare);
+            metrics.record_prepare_cache(hit);
+            prep
+        }
+        None => {
+            local = prepare();
+            &local
+        }
+    };
     match backend {
         Backend::SparseRust => {
-            let out = sparse.wmd_one_to_many(&store.embeddings, &req.query, &store.c, pool);
+            let out = sparse.solve(prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
         Backend::DenseRust => {
-            let (out, _times) = dense.solve(&store.embeddings, &req.query, &store.c, pool);
+            let (out, _times) = dense.solve_prepared(prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
-        Backend::DensePjrt => {
-            let b = pjrt.expect("checked above");
-            let wmd = b
-                .solve(&req.query, &store.embeddings)
-                .map_err(|e| format!("pjrt backend: {e:#}"))?;
-            Ok((wmd, b.max_v_r(), backend))
-        }
+        Backend::DensePjrt => unreachable!("handled above"),
     }
 }
 
@@ -316,6 +368,71 @@ mod tests {
         for (x, y) in a.wmd.iter().zip(&b.wmd) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
         }
+        service.shutdown();
+    }
+
+    #[test]
+    fn prepared_cache_hit_is_bitwise_identical_and_skips_precompute() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(2)
+            .query_words(5, 9)
+            .seed(19)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        // One solver thread → a fully deterministic solve, so a warm
+        // answer must reproduce the cold answer bit for bit.
+        let service = WmdService::start(
+            store,
+            ServiceConfig { threads: 1, ..Default::default() },
+            None,
+        );
+        let q = corpus.query(0).clone();
+        let cold = service.submit_wait(QueryRequest::new(q.clone()));
+        let warm = service.submit_wait(QueryRequest::new(q));
+        assert!(cold.is_ok() && warm.is_ok());
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.prepare_cache_misses, 1, "cold solve fills the cache");
+        assert_eq!(snap.prepare_cache_hits, 1, "warm solve skips precompute_factors");
+        assert_eq!(cold.wmd, warm.wmd, "cache hit must not perturb the WMD");
+        // A different query is a miss, not a false hit.
+        let other = service.submit_wait(QueryRequest::new(corpus.query(1).clone()));
+        assert!(other.is_ok());
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.prepare_cache_misses, 2);
+        assert_eq!(snap.prepare_cache_hits, 1);
+        assert_ne!(other.wmd, cold.wmd);
+        service.shutdown();
+    }
+
+    #[test]
+    fn cache_disabled_still_answers() {
+        let (service, corpus) = {
+            let corpus = SyntheticCorpus::builder()
+                .vocab_size(300)
+                .num_docs(20)
+                .embedding_dim(8)
+                .num_queries(1)
+                .query_words(4, 4)
+                .seed(5)
+                .build();
+            let store = DocStore::from_synthetic(&corpus).into_arc();
+            let service = WmdService::start(
+                store,
+                ServiceConfig { threads: 1, prepare_cache: 0, ..Default::default() },
+                None,
+            );
+            (service, corpus)
+        };
+        let a = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        let b = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        assert!(a.is_ok() && b.is_ok());
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.prepare_cache_hits, 0);
+        assert_eq!(snap.prepare_cache_misses, 0);
+        assert_eq!(a.wmd, b.wmd);
         service.shutdown();
     }
 

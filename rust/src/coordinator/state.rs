@@ -1,8 +1,11 @@
 //! Coordinator state: the immutable document store shared by every
-//! worker — embeddings + the `V × N` target matrix + optional metadata.
+//! worker — embeddings + the `V × N` target matrix + optional metadata —
+//! and the per-dispatcher [`PreparedCache`] of `dist`-layer query factors.
 
 use crate::corpus::{SparseVec, SyntheticCorpus, TinyCorpus};
+use crate::sinkhorn::Prepared;
 use crate::sparse::{Csr, Dense};
+use crate::Real;
 use std::sync::Arc;
 
 /// The target-set state loaded once at startup and shared (`Arc`) across
@@ -55,7 +58,11 @@ impl DocStore {
         self.c.ncols()
     }
 
-    /// Validate a query against this store.
+    /// Validate a query against this store. Enforces every structural
+    /// invariant the `dist` precompute asserts (`SparseVec` fields are
+    /// public, so a hand-built query can violate them) — a malformed
+    /// request must come back as a per-request error, never panic the
+    /// shared dispatcher thread.
     pub fn check_query(&self, query: &SparseVec) -> Result<(), String> {
         if query.dim != self.vocab_size() {
             return Err(format!(
@@ -64,8 +71,28 @@ impl DocStore {
                 self.vocab_size()
             ));
         }
+        if query.idx.len() != query.val.len() {
+            return Err(format!(
+                "query idx/val length mismatch: {} vs {}",
+                query.idx.len(),
+                query.val.len()
+            ));
+        }
         if query.nnz() == 0 {
             return Err("query has no words".into());
+        }
+        let mut prev = 0u32;
+        for (&i, &v) in query.idx.iter().zip(&query.val) {
+            if i as usize >= query.dim {
+                return Err(format!("query word {i} out of vocabulary {}", query.dim));
+            }
+            if i < prev {
+                return Err("query indices are not sorted".into());
+            }
+            prev = i;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("query mass {v} for word {i} is not positive"));
+            }
         }
         let sum = query.sum();
         if (sum - 1.0).abs() > 1e-6 {
@@ -76,6 +103,148 @@ impl DocStore {
 
     pub fn into_arc(self) -> Arc<Self> {
         Arc::new(self)
+    }
+}
+
+/// Content key of a prepared query: the full histogram plus the λ the
+/// factors were built with. Two requests share an entry iff every word,
+/// every mass bit and λ agree — float bits, not float equality, so NaN or
+/// −0.0 oddities can never alias distinct factor sets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PreparedKey {
+    dim: usize,
+    idx: Vec<u32>,
+    val_bits: Vec<u64>,
+    lambda_bits: u64,
+}
+
+impl PreparedKey {
+    pub fn new(query: &SparseVec, lambda: Real) -> Self {
+        Self {
+            dim: query.dim,
+            idx: query.idx.clone(),
+            val_bits: query.val.iter().map(|v| v.to_bits()).collect(),
+            lambda_bits: lambda.to_bits(),
+        }
+    }
+
+    /// FNV-1a fingerprint — the cheap first-pass comparison; full key
+    /// equality is always checked behind it (collisions cannot serve the
+    /// wrong factors, only slow a lookup down).
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(self.dim as u64);
+        eat(self.lambda_bits);
+        eat(self.idx.len() as u64);
+        for &i in &self.idx {
+            eat(i as u64);
+        }
+        for &v in &self.val_bits {
+            eat(v);
+        }
+        h
+    }
+}
+
+struct CacheEntry {
+    fingerprint: u64,
+    key: PreparedKey,
+    prep: Prepared,
+    last_used: u64,
+}
+
+/// Bounded LRU cache of prepared query factors, keyed on the query's
+/// content fingerprint. Owned by the dispatcher thread (no interior
+/// locking): a repeated query skips the O(v_r·V·w) `dist` precompute on
+/// the hot serving path and reuses the exact same [`Prepared`] value, so
+/// a warm solve is bitwise identical to the cold one that filled the
+/// entry.
+pub struct PreparedCache {
+    capacity: usize,
+    /// Byte budget over the cached factors (entry count alone is a poor
+    /// bound: one entry is ~`24·V·v_r` bytes, ~100 MB at paper scale).
+    max_bytes: usize,
+    tick: u64,
+    entries: Vec<CacheEntry>,
+}
+
+impl PreparedCache {
+    /// A cache holding at most `capacity` prepared queries (≥ 1; a
+    /// disabled cache is represented by not constructing one), with no
+    /// byte budget — compose with [`PreparedCache::with_max_bytes`].
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "use Option<PreparedCache> to disable caching");
+        Self { capacity, max_bytes: usize::MAX, tick: 0, entries: Vec::new() }
+    }
+
+    /// Additionally bound the factor bytes held; LRU entries are evicted
+    /// until the budget holds. A single entry above the budget is still
+    /// cached (the alternative — preparing it on every request — costs
+    /// the same memory transiently and all the time).
+    pub fn with_max_bytes(mut self, max_bytes: usize) -> Self {
+        assert!(max_bytes > 0, "use Option<PreparedCache> to disable caching");
+        self.max_bytes = max_bytes;
+        self
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Approximate heap held by the cached factors.
+    pub fn memory_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.prep.factors.memory_bytes()).sum()
+    }
+
+    /// Look up `key`, preparing and inserting on a miss (evicting the
+    /// least-recently-used entry at capacity). Returns the cached factors
+    /// and whether this was a hit.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: PreparedKey,
+        prepare: impl FnOnce() -> Prepared,
+    ) -> (&Prepared, bool) {
+        self.tick += 1;
+        let tick = self.tick;
+        let fp = key.fingerprint();
+        let found = self.entries.iter().position(|e| e.fingerprint == fp && e.key == key);
+        if let Some(pos) = found {
+            self.entries[pos].last_used = tick;
+            return (&self.entries[pos].prep, true);
+        }
+        let prep = prepare();
+        // Evict (LRU first) until both bounds admit the new entry. Done
+        // before the push so the fresh entry is never its own victim.
+        let new_bytes = prep.factors.memory_bytes();
+        while !self.entries.is_empty()
+            && (self.entries.len() >= self.capacity
+                || self.memory_bytes() + new_bytes > self.max_bytes)
+        {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("checked non-empty");
+            self.entries.swap_remove(lru);
+        }
+        self.entries.push(CacheEntry { fingerprint: fp, key, prep, last_used: tick });
+        (&self.entries.last().expect("just pushed").prep, false)
     }
 }
 
@@ -100,5 +269,108 @@ mod tests {
         assert!(store.check_query(&good).is_ok());
         let wrong_dim = SparseVec::from_counts(3, &[(0, 1)]);
         assert!(store.check_query(&wrong_dim).is_err());
+    }
+
+    fn dummy_prep(tag: f64) -> Prepared {
+        Prepared {
+            factors: crate::dist::QueryFactors {
+                kt: Dense::filled(4, 2, tag),
+                kor_t: Dense::filled(4, 2, tag),
+                km_t: Dense::filled(4, 2, tag),
+                r: vec![0.5, 0.5],
+            },
+        }
+    }
+
+    fn key(words: &[(usize, usize)], lambda: f64) -> PreparedKey {
+        PreparedKey::new(&SparseVec::from_counts(100, words), lambda)
+    }
+
+    #[test]
+    fn cache_hits_repeat_and_skips_prepare() {
+        let mut cache = PreparedCache::new(4);
+        let calls = std::cell::Cell::new(0usize);
+        let mk = |tag: f64| {
+            calls.set(calls.get() + 1);
+            dummy_prep(tag)
+        };
+        let (p, hit) = cache.get_or_insert_with(key(&[(3, 1), (7, 2)], 10.0), || mk(1.0));
+        assert!(!hit);
+        assert_eq!(p.factors.kt.get(0, 0), 1.0);
+        let (p, hit) = cache.get_or_insert_with(key(&[(3, 1), (7, 2)], 10.0), || mk(2.0));
+        assert!(hit, "repeated query must hit");
+        assert_eq!(p.factors.kt.get(0, 0), 1.0, "hit returns the original factors");
+        assert_eq!(calls.get(), 1, "prepare ran once");
+        assert_eq!(cache.len(), 1);
+        assert!(cache.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn cache_distinguishes_lambda_and_content() {
+        let mut cache = PreparedCache::new(4);
+        let (_, h1) = cache.get_or_insert_with(key(&[(1, 1)], 10.0), || dummy_prep(1.0));
+        let (_, h2) = cache.get_or_insert_with(key(&[(1, 1)], 20.0), || dummy_prep(2.0));
+        let (_, h3) = cache.get_or_insert_with(key(&[(2, 1)], 10.0), || dummy_prep(3.0));
+        assert!(!h1 && !h2 && !h3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let mut cache = PreparedCache::new(2);
+        let a = || key(&[(1, 1)], 10.0);
+        let b = || key(&[(2, 1)], 10.0);
+        let c = || key(&[(3, 1)], 10.0);
+        cache.get_or_insert_with(a(), || dummy_prep(1.0));
+        cache.get_or_insert_with(b(), || dummy_prep(2.0));
+        // Touch `a` so `b` becomes the LRU, then insert `c`.
+        assert!(cache.get_or_insert_with(a(), || unreachable!()).1);
+        cache.get_or_insert_with(c(), || dummy_prep(3.0));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get_or_insert_with(a(), || dummy_prep(9.0)).1, "a survived");
+        assert!(!cache.get_or_insert_with(b(), || dummy_prep(9.0)).1, "b was evicted");
+    }
+
+    #[test]
+    fn cache_byte_budget_evicts() {
+        // Each dummy entry is 3·4·2·8 + 2·8 = 208 bytes; budget two.
+        let entry_bytes = dummy_prep(0.0).factors.memory_bytes();
+        let mut cache = PreparedCache::new(100).with_max_bytes(2 * entry_bytes);
+        cache.get_or_insert_with(key(&[(1, 1)], 10.0), || dummy_prep(1.0));
+        cache.get_or_insert_with(key(&[(2, 1)], 10.0), || dummy_prep(2.0));
+        assert_eq!(cache.len(), 2);
+        cache.get_or_insert_with(key(&[(3, 1)], 10.0), || dummy_prep(3.0));
+        assert_eq!(cache.len(), 2, "byte budget must evict");
+        assert!(cache.memory_bytes() <= 2 * entry_bytes);
+        assert!(!cache.get_or_insert_with(key(&[(1, 1)], 10.0), || dummy_prep(1.0)).1);
+    }
+
+    #[test]
+    fn check_query_rejects_malformed_hand_built_queries() {
+        let tiny = TinyCorpus::load();
+        let store = DocStore::from_tiny(&tiny);
+        let dim = store.vocab_size();
+        // Zero-mass entry, normalized sum: must be rejected, not panic
+        // the dispatcher inside precompute_factors.
+        let zero_mass = SparseVec { dim, idx: vec![0, 1], val: vec![1.0, 0.0] };
+        assert!(store.check_query(&zero_mass).is_err());
+        // Out-of-vocabulary index with matching dim.
+        let oov = SparseVec { dim, idx: vec![dim as u32], val: vec![1.0] };
+        assert!(store.check_query(&oov).is_err());
+        // Unsorted indices.
+        let unsorted = SparseVec { dim, idx: vec![2, 1], val: vec![0.5, 0.5] };
+        assert!(store.check_query(&unsorted).is_err());
+        // idx/val length mismatch.
+        let ragged = SparseVec { dim, idx: vec![1], val: vec![0.5, 0.5] };
+        assert!(store.check_query(&ragged).is_err());
+        // NaN mass.
+        let nan = SparseVec { dim, idx: vec![1], val: vec![f64::NAN] };
+        assert!(store.check_query(&nan).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_content_stable() {
+        assert_eq!(key(&[(5, 2), (9, 1)], 10.0).fingerprint(), key(&[(5, 2), (9, 1)], 10.0).fingerprint());
+        assert_ne!(key(&[(5, 2)], 10.0).fingerprint(), key(&[(5, 3)], 10.0).fingerprint());
     }
 }

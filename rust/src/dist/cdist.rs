@@ -1,0 +1,179 @@
+//! Pairwise Euclidean distance, the paper's §6 dot-product vs GEMM
+//! comparison (Fig. 7).
+//!
+//! Both kernels fill `out[i][k] = ‖query[k] − vecs[i]‖₂` with the output
+//! **transposed** (`V × v_r`): the factor consumers read vocabulary rows,
+//! so the transposed layout gives them unit-stride access and lets one
+//! thread own a whole output row (no synchronization).
+//!
+//! * [`cdist_naive`] — the textbook 3-op inner loop
+//!   `Σ_j (q[k][j] − y[i][j])²`, one query row at a time.
+//! * [`cdist_gemm`] — the `‖q‖² + ‖y‖² − 2 q·y` decomposition: per
+//!   output element one fused-multiply-add dot plus a rank-1 epilogue
+//!   (the matmul-like restructuring the paper evaluates), with `‖q‖²`
+//!   hoisted out of the vocabulary loop and `y[i]` resident across the
+//!   whole query panel.
+//!
+//! Exactness note: every norm **and** every cross term goes through the
+//! same unrolled [`dot`], so for identical vectors the decomposition
+//! cancels bitwise (`q·q + y·y − 2·q·y = 0` exactly) and self-distances
+//! are exactly zero — a different accumulation order for the cross term
+//! would leave ~√ε·‖q‖ cancellation noise right where `K = exp(−λd)`
+//! peaks.
+
+use crate::parallel::Pool;
+use crate::sparse::{dot, Dense};
+use crate::util::SharedSlice;
+use crate::Real;
+
+fn check_shapes(query: &Dense, vecs: &Dense, out: &Dense) {
+    assert_eq!(query.ncols(), vecs.ncols(), "embedding width mismatch");
+    assert_eq!(out.nrows(), vecs.nrows(), "out rows must cover the vocabulary");
+    assert_eq!(out.ncols(), query.nrows(), "out cols must cover the query words");
+}
+
+/// Textbook pairwise distance: `out[i][k] = sqrt(Σ_j (q[k][j] − y[i][j])²)`.
+/// Parallel over vocabulary rows (each thread owns whole output rows).
+pub fn cdist_naive(query: &Dense, vecs: &Dense, out: &mut Dense, pool: &Pool) {
+    check_shapes(query, vecs, out);
+    let v_r = query.nrows();
+    let view = SharedSlice::new(out.as_mut_slice());
+    pool.parallel_for(vecs.nrows(), |rows| {
+        for i in rows {
+            let y = vecs.row(i);
+            // SAFETY: row i is owned by exactly one thread.
+            let o = unsafe { view.slice_mut(i * v_r, v_r) };
+            for (k, ok) in o.iter_mut().enumerate() {
+                let q = query.row(k);
+                let mut d2 = 0.0;
+                for (a, b) in q.iter().zip(y) {
+                    let diff = a - b;
+                    d2 += diff * diff;
+                }
+                *ok = d2.sqrt();
+            }
+        }
+    });
+}
+
+/// GEMM-formulated pairwise distance (paper §6):
+/// `d² = ‖q‖² + ‖y‖² − 2 q·y`, clamped at 0 against cancellation. `‖q‖²`
+/// is hoisted out of the vocabulary loop; per vocabulary row `y` stays
+/// resident while the query panel streams against it, every product
+/// through the shared unrolled [`dot`] (see the module-level exactness
+/// note).
+pub fn cdist_gemm(query: &Dense, vecs: &Dense, out: &mut Dense, pool: &Pool) {
+    check_shapes(query, vecs, out);
+    let v_r = query.nrows();
+    // ‖q‖² per query word, computed once (the tall-skinny side is tiny).
+    let qn: Vec<Real> = (0..v_r).map(|k| dot(query.row(k), query.row(k))).collect();
+    let view = SharedSlice::new(out.as_mut_slice());
+    pool.parallel_for(vecs.nrows(), |rows| {
+        for i in rows {
+            let y = vecs.row(i);
+            let yn = dot(y, y);
+            // SAFETY: row i is owned by exactly one thread.
+            let o = unsafe { view.slice_mut(i * v_r, v_r) };
+            for (k, ok) in o.iter_mut().enumerate() {
+                *ok = gemm_distance(qn[k], yn, dot(query.row(k), y));
+            }
+        }
+    });
+}
+
+/// The rank-1 epilogue: `sqrt(max(qn + yn − 2·cross, 0))`.
+#[inline(always)]
+fn gemm_distance(qn: Real, yn: Real, cross: Real) -> Real {
+    (qn + yn - 2.0 * cross).max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_dense(rng: &mut Pcg64, nrows: usize, ncols: usize) -> Dense {
+        Dense::from_fn(nrows, ncols, |_, _| rng.next_f64() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn gemm_matches_naive_across_shapes() {
+        let mut rng = Pcg64::new(1234);
+        // Shapes chosen to hit w not a multiple of the dot unroll, a
+        // single-word query, and tiny embeddings.
+        for &(v, v_r, w) in &[(50usize, 8usize, 16usize), (33, 7, 31), (64, 1, 300), (10, 3, 5)] {
+            let query = random_dense(&mut rng, v_r, w);
+            let vecs = random_dense(&mut rng, v, w);
+            for p in [1usize, 4] {
+                let pool = Pool::new(p);
+                let mut a = Dense::zeros(v, v_r);
+                let mut b = Dense::zeros(v, v_r);
+                cdist_naive(&query, &vecs, &mut a, &pool);
+                cdist_gemm(&query, &vecs, &mut b, &pool);
+                for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                    assert!(
+                        (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                        "p={p} v={v} v_r={v_r} w={w}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_distance_is_exactly_zero() {
+        // The shared-`dot` accumulation makes the decomposition cancel
+        // bitwise for identical vectors — checked at v_r both below and
+        // above the dot unroll width.
+        let mut rng = Pcg64::new(7);
+        let vecs = random_dense(&mut rng, 20, 12);
+        let sel = [4usize, 9, 17, 2, 11, 6];
+        let mut query = Dense::zeros(sel.len(), 12);
+        for (k, &i) in sel.iter().enumerate() {
+            query.row_mut(k).copy_from_slice(vecs.row(i));
+        }
+        let pool = Pool::new(2);
+        let mut out = Dense::zeros(20, sel.len());
+        cdist_gemm(&query, &vecs, &mut out, &pool);
+        for (k, &i) in sel.iter().enumerate() {
+            assert_eq!(out.get(i, k), 0.0, "d(sel[{k}], sel[{k}]) must cancel exactly");
+        }
+    }
+
+    #[test]
+    fn distances_are_symmetric_in_roles() {
+        // d(a, b) computed with a as query equals d computed with b as
+        // query (transposed output).
+        let mut rng = Pcg64::new(8);
+        let a = random_dense(&mut rng, 6, 10);
+        let b = random_dense(&mut rng, 9, 10);
+        let pool = Pool::new(1);
+        let mut ab = Dense::zeros(9, 6);
+        let mut ba = Dense::zeros(6, 9);
+        cdist_gemm(&a, &b, &mut ab, &pool);
+        cdist_gemm(&b, &a, &mut ba, &pool);
+        for i in 0..9 {
+            for k in 0..6 {
+                let x = ab.get(i, k);
+                let y = ba.get(k, i);
+                assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bitwise_irrelevant() {
+        // Each output row is computed by one thread with an identical
+        // instruction sequence, so the partition cannot change the bits.
+        let mut rng = Pcg64::new(9);
+        let query = random_dense(&mut rng, 5, 64);
+        let vecs = random_dense(&mut rng, 41, 64);
+        let mut base = Dense::zeros(41, 5);
+        cdist_gemm(&query, &vecs, &mut base, &Pool::new(1));
+        for p in [2usize, 3, 8] {
+            let mut out = Dense::zeros(41, 5);
+            cdist_gemm(&query, &vecs, &mut out, &Pool::new(p));
+            assert_eq!(out, base, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! The prepared per-query factors and their fused precompute.
+//!
+//! [`precompute_factors`] folds `M = cdist(vecs[sel], vecs)`, `K`,
+//! `K_over_r` and `K⊙M` into **one** parallel traversal of the embedding
+//! table: per `(vocab row, query word)` pair the distance is computed in
+//! the §6 GEMM form and immediately expanded into the three factor
+//! entries, so the `v_r × V` distance matrix is never materialized and
+//! every factor element is written exactly once (Fig. 7's restructuring,
+//! fused one stage further).
+
+use crate::parallel::Pool;
+use crate::sparse::{dot, Dense};
+use crate::util::SharedSlice;
+use crate::Real;
+
+/// The prepared, cacheable per-query artifact: the three factor matrices
+/// (stored transposed, `V × v_r` row-major, so sparse kernels read rows
+/// with unit stride) plus the query histogram `r` over the selected words.
+///
+/// Invariants: `kt`, `kor_t`, `km_t` share the shape `vocab_size() × v_r()`;
+/// `kt[i][k] = exp(−λ·d(sel[k], i)) ∈ (0, 1]`,
+/// `kor_t[i][k] = kt[i][k] / r[k]`, `km_t[i][k] = kt[i][k] · d(sel[k], i)`.
+#[derive(Clone, Debug)]
+pub struct QueryFactors {
+    /// `Kᵀ` — `exp(−λ·M)ᵀ`.
+    pub kt: Dense,
+    /// `(K / r)ᵀ` — `K` with row `k` divided by `r[k]`.
+    pub kor_t: Dense,
+    /// `(K ⊙ M)ᵀ` — elementwise product, for the final WMD reduction.
+    pub km_t: Dense,
+    /// The query's histogram over its selected words (the paper's `r`).
+    pub r: Vec<Real>,
+}
+
+impl QueryFactors {
+    /// Number of selected query words (the paper's `v_r`).
+    #[inline]
+    pub fn v_r(&self) -> usize {
+        self.r.len()
+    }
+
+    /// Vocabulary rows the factors cover.
+    #[inline]
+    pub fn vocab_size(&self) -> usize {
+        self.kt.nrows()
+    }
+
+    /// Approximate heap footprint — what a bounded factor cache accounts.
+    pub fn memory_bytes(&self) -> usize {
+        (3 * self.vocab_size() * self.v_r() + self.v_r()) * std::mem::size_of::<Real>()
+    }
+
+    /// Restrict the factors to a subset of vocabulary rows: row `t` of the
+    /// result is row `rows[t]` of `self`. `r` is untouched — the query
+    /// side of the transport problem is unchanged.
+    ///
+    /// This is the composition point for `prune/`: the sparse kernels only
+    /// read factor rows where the target matrix has non-zeros, so solving
+    /// against `c.select_rows(rows)` with `restrict_rows(rows)` gives the
+    /// same WMD as the full solve while the per-candidate row walk drops
+    /// from O(V) to O(|rows|).
+    pub fn restrict_rows(&self, rows: &[usize]) -> QueryFactors {
+        let v_r = self.v_r();
+        let gather = |m: &Dense| -> Dense {
+            let mut out = Dense::zeros(rows.len(), v_r);
+            for (t, &i) in rows.iter().enumerate() {
+                out.row_mut(t).copy_from_slice(m.row(i));
+            }
+            out
+        };
+        QueryFactors {
+            kt: gather(&self.kt),
+            kor_t: gather(&self.kor_t),
+            km_t: gather(&self.km_t),
+            r: self.r.clone(),
+        }
+    }
+}
+
+/// Fused factor precompute: one parallel pass over the vocabulary builds
+/// `Kᵀ`, `(K/r)ᵀ` and `(K⊙M)ᵀ` for the selected query words.
+///
+/// * `embeddings` — the `V × w` table.
+/// * `sel` — vocabulary ids of the query's words (repeats allowed — the
+///   router's duplicate-split padding produces them).
+/// * `vals` — the query histogram over `sel` (`r`, positive).
+/// * `lambda` — entropic regularization strength (> 0).
+///
+/// Each thread owns whole vocabulary rows and runs an identical
+/// instruction sequence per row, so the result is bitwise independent of
+/// the pool size.
+pub fn precompute_factors(
+    embeddings: &Dense,
+    sel: &[usize],
+    vals: &[Real],
+    lambda: Real,
+    pool: &Pool,
+) -> QueryFactors {
+    let v = embeddings.nrows();
+    let v_r = sel.len();
+    assert_eq!(vals.len(), v_r, "sel/vals length mismatch");
+    assert!(v_r > 0, "empty query selection");
+    assert!(lambda > 0.0, "lambda must be positive");
+    assert!(sel.iter().all(|&i| i < v), "selected word out of vocabulary");
+    assert!(vals.iter().all(|&x| x > 0.0), "query masses must be positive");
+
+    // Gather the query panel once: `qvecs[k] = embeddings[sel[k]]`.
+    let w = embeddings.ncols();
+    let mut qvecs = Dense::zeros(v_r, w);
+    for (k, &i) in sel.iter().enumerate() {
+        qvecs.row_mut(k).copy_from_slice(embeddings.row(i));
+    }
+    let qn: Vec<Real> = (0..v_r).map(|k| dot(qvecs.row(k), qvecs.row(k))).collect();
+    let inv_r: Vec<Real> = vals.iter().map(|&x| 1.0 / x).collect();
+
+    let mut kt = Dense::zeros(v, v_r);
+    let mut kor_t = Dense::zeros(v, v_r);
+    let mut km_t = Dense::zeros(v, v_r);
+    let kt_view = SharedSlice::new(kt.as_mut_slice());
+    let kor_view = SharedSlice::new(kor_t.as_mut_slice());
+    let km_view = SharedSlice::new(km_t.as_mut_slice());
+    pool.parallel_for(v, |rows| {
+        for i in rows {
+            let y = embeddings.row(i);
+            let yn = dot(y, y);
+            // SAFETY: row i is owned by exactly one thread.
+            let kt_row = unsafe { kt_view.slice_mut(i * v_r, v_r) };
+            let kor_row = unsafe { kor_view.slice_mut(i * v_r, v_r) };
+            let km_row = unsafe { km_view.slice_mut(i * v_r, v_r) };
+            for k in 0..v_r {
+                // §6 GEMM form, clamped against cancellation.
+                let d2 = (qn[k] + yn - 2.0 * dot(qvecs.row(k), y)).max(0.0);
+                let d = d2.sqrt();
+                let kv = (-lambda * d).exp();
+                kt_row[k] = kv;
+                kor_row[k] = kv * inv_r[k];
+                km_row[k] = kv * d;
+            }
+        }
+    });
+
+    QueryFactors { kt, kor_t, km_t, r: vals.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::SyntheticCorpus;
+
+    fn toy() -> SyntheticCorpus {
+        SyntheticCorpus::builder()
+            .vocab_size(300)
+            .num_docs(20)
+            .embedding_dim(24)
+            .num_queries(1)
+            .query_words(9, 9)
+            .seed(61)
+            .build()
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let corpus = toy();
+        let pool = Pool::new(3);
+        let q = corpus.query(0);
+        let f = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, 10.0, &pool);
+        assert_eq!(f.v_r(), 9);
+        assert_eq!(f.vocab_size(), 300);
+        for m in [&f.kt, &f.kor_t, &f.km_t] {
+            assert_eq!((m.nrows(), m.ncols()), (300, 9));
+        }
+        assert!(f.kt.as_slice().iter().all(|&x| x > 0.0 && x <= 1.0));
+        assert!(f.kor_t.as_slice().iter().all(|&x| x > 0.0));
+        assert!(f.km_t.as_slice().iter().all(|&x| x >= 0.0));
+        assert!(f.memory_bytes() >= 3 * 300 * 9 * 8);
+    }
+
+    #[test]
+    fn factor_identities_hold() {
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let q = corpus.query(0);
+        let lambda = 7.5;
+        let f = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, lambda, &pool);
+        // Cross-check against the unfused path: an explicit cdist, then
+        // the scalar definitions.
+        let mut qvecs = Dense::zeros(q.nnz(), corpus.embeddings.ncols());
+        for (k, &i) in q.idx.iter().enumerate() {
+            qvecs.row_mut(k).copy_from_slice(corpus.embeddings.row(i as usize));
+        }
+        let mut m_t = Dense::zeros(300, q.nnz());
+        crate::dist::cdist_gemm(&qvecs, &corpus.embeddings, &mut m_t, &pool);
+        // The panel micro-kernel and the fused path accumulate the cross
+        // term in different orders; compare to fp tolerance, not bits.
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * (1.0 + b.abs());
+        for i in 0..300 {
+            for k in 0..q.nnz() {
+                let d = m_t.get(i, k);
+                let kv = (-lambda * d).exp();
+                assert!(close(f.kt.get(i, k), kv), "kt[{i}][{k}]");
+                assert!(close(f.kor_t.get(i, k), kv / q.val[k]), "kor_t[{i}][{k}]");
+                assert!(close(f.km_t.get(i, k), kv * d), "km_t[{i}][{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn selected_words_have_unit_kernel() {
+        // d(sel[k], sel[k]) is exactly 0 in the GEMM form (the clamp eats
+        // the cancellation), so K at the word's own row is exactly 1.
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let q = corpus.query(0);
+        let f = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, 10.0, &pool);
+        for (k, &i) in q.idx.iter().enumerate() {
+            assert_eq!(f.kt.get(i as usize, k), 1.0);
+            assert_eq!(f.km_t.get(i as usize, k), 0.0);
+        }
+    }
+
+    #[test]
+    fn restrict_rows_gathers() {
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let q = corpus.query(0);
+        let f = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, 10.0, &pool);
+        let rows = vec![0usize, 17, 123, 299];
+        let sub = f.restrict_rows(&rows);
+        assert_eq!(sub.vocab_size(), 4);
+        assert_eq!(sub.v_r(), f.v_r());
+        assert_eq!(sub.r, f.r);
+        for (t, &i) in rows.iter().enumerate() {
+            assert_eq!(sub.kt.row(t), f.kt.row(i));
+            assert_eq!(sub.kor_t.row(t), f.kor_t.row(i));
+            assert_eq!(sub.km_t.row(t), f.km_t.row(i));
+        }
+    }
+
+    #[test]
+    fn pool_size_does_not_change_bits() {
+        let corpus = toy();
+        let q = corpus.query(0);
+        let base = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, 10.0, &Pool::new(1));
+        for p in [2usize, 5] {
+            let f = precompute_factors(&corpus.embeddings, &q.indices(), &q.val, 10.0, &Pool::new(p));
+            assert_eq!(f.kt, base.kt, "p={p}");
+            assert_eq!(f.kor_t, base.kor_t);
+            assert_eq!(f.km_t, base.km_t);
+        }
+    }
+
+    #[test]
+    fn duplicate_selection_rows_are_consistent() {
+        // The router's duplicate-split padding repeats a word id; the
+        // repeated columns must be identical except for the 1/r scaling.
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let sel = vec![5usize, 5, 40];
+        let vals = vec![0.25, 0.25, 0.5];
+        let f = precompute_factors(&corpus.embeddings, &sel, &vals, 10.0, &pool);
+        for i in 0..f.vocab_size() {
+            assert_eq!(f.kt.get(i, 0), f.kt.get(i, 1));
+            assert_eq!(f.km_t.get(i, 0), f.km_t.get(i, 1));
+            assert_eq!(f.kor_t.get(i, 0), f.kor_t.get(i, 1));
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The factor-precompute layer: everything that happens between "a query
+//! arrives" and "the Sinkhorn iterate can run".
+//!
+//! The paper's per-query preparation (§4, Fig. 7) is
+//!
+//! ```text
+//!   M  = cdist(vecs[sel], vecs)        (v_r × V Euclidean distances)
+//!   K  = exp(−λ·M)
+//!   K_over_r = K / r[:, None]
+//!   K⊙M                                 (for the final WMD reduction)
+//! ```
+//!
+//! and Table 1 shows it is the *only* dense-side stage the sparse solver
+//! keeps, so it is built here as a first-class subsystem instead of a
+//! throwaway local:
+//!
+//! * [`cdist_naive`] / [`cdist_gemm`] — the paper's §6 comparison: the
+//!   textbook subtract-square distance vs the blocked
+//!   `‖a‖² + ‖b‖² − 2a·b` GEMM formulation (`benches/fig7_cdist_gemm`).
+//! * [`precompute_factors`] — the fused pass producing [`QueryFactors`]:
+//!   one traversal of the embedding table computes distance, `K`,
+//!   `K_over_r` and `K⊙M` per element, so `M` is never materialized.
+//! * [`QueryFactors`] — the prepared, cacheable artifact. Stored
+//!   **transposed** (`V × v_r`, row-major) so every sparse kernel reads
+//!   factor rows with unit stride; [`QueryFactors::restrict_rows`] is the
+//!   row-restriction `prune/` composes with to solve candidate
+//!   sub-problems without re-running the O(v_r·V·w) precompute, and the
+//!   coordinator's prepared-factor cache
+//!   ([`crate::coordinator::PreparedCache`]) holds whole `QueryFactors`
+//!   so repeated queries skip this layer entirely.
+
+pub mod cdist;
+pub mod factors;
+
+pub use cdist::{cdist_gemm, cdist_naive};
+pub use factors::{precompute_factors, QueryFactors};

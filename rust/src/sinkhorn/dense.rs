@@ -16,7 +16,7 @@ use crate::util::SharedSlice;
 use crate::Real;
 use std::time::{Duration, Instant};
 
-use super::solver::{SinkhornConfig, SolveOutput};
+use super::solver::{Prepared, SinkhornConfig, SolveOutput};
 
 /// Wall-clock per pipeline stage (the Table-1 rows).
 #[derive(Clone, Debug, Default)]
@@ -77,8 +77,15 @@ impl DenseSolver {
         Self { config, max_dense_bytes: 1 << 31 }
     }
 
+    /// Phase 1, shared with the sparse solver: the `dist`-layer factor
+    /// precompute. The dense pipeline's `K`/`K_over_r`/`K⊙M` are the same
+    /// numbers, stored transposed.
+    pub fn prepare(&self, embeddings: &Dense, query: &SparseVec, pool: &Pool) -> Prepared {
+        self.config.prepare(embeddings, query, pool)
+    }
+
     /// Solve one query against all columns of `c`, returning the WMD
-    /// vector and the per-stage profile.
+    /// vector and the per-stage profile (prepare + iterate).
     pub fn solve(
         &self,
         embeddings: &Dense,
@@ -86,9 +93,36 @@ impl DenseSolver {
         c: &Csr,
         pool: &Pool,
     ) -> (SolveOutput, DenseStageTimes) {
+        assert_eq!(embeddings.nrows(), c.nrows());
+        // Fail fast on the V×N guard *before* paying the O(v_r·V·w)
+        // precompute or allocating the factor matrices.
+        let dense_bytes = c.nrows() * c.ncols() * std::mem::size_of::<Real>();
+        assert!(
+            dense_bytes <= self.max_dense_bytes,
+            "dense baseline would allocate {dense_bytes} B for the V x N intermediate; \
+             run it at a scaled size (see DESIGN.md §3)"
+        );
+        let t0 = Instant::now();
+        let prep = self.prepare(embeddings, query, pool);
+        let cdist_precompute = t0.elapsed();
+        let (out, mut times) = self.solve_prepared(&prep, c, pool);
+        times.cdist_precompute = cdist_precompute;
+        (out, times)
+    }
+
+    /// Phase 2: run the dense Algorithm-1 pipeline on already-prepared
+    /// factors (borrowed — the caller, e.g. the coordinator's
+    /// prepared-factor cache, keeps ownership). The returned profile has
+    /// `cdist_precompute` at zero: preparation happened elsewhere.
+    pub fn solve_prepared(
+        &self,
+        prep: &Prepared,
+        c: &Csr,
+        pool: &Pool,
+    ) -> (SolveOutput, DenseStageTimes) {
         let v = c.nrows();
         let n = c.ncols();
-        assert_eq!(embeddings.nrows(), v);
+        assert_eq!(prep.factors.vocab_size(), v, "factors/c vocabulary mismatch");
         let dense_bytes = v * n * std::mem::size_of::<Real>();
         assert!(
             dense_bytes <= self.max_dense_bytes,
@@ -96,14 +130,7 @@ impl DenseSolver {
              run it at a scaled size (see DESIGN.md §3)"
         );
         let mut times = DenseStageTimes::default();
-
-        // --- Precompute (reuses the factor kernel; the dense pipeline's
-        // K/K_over_r/KM are the same numbers, stored transposed).
-        let t0 = Instant::now();
-        let sel = query.indices();
-        let factors =
-            crate::dist::precompute_factors(embeddings, &sel, &query.val, self.config.lambda, pool);
-        times.cdist_precompute = t0.elapsed();
+        let factors = &prep.factors;
         let v_r = factors.v_r();
 
         // Python state layout: x, u are v_r × N row-major.
@@ -120,7 +147,7 @@ impl DenseSolver {
 
             // KT @ u  — the dense V×N product.
             let t = Instant::now();
-            dense_matmul_kt_u(&factors, &u, &mut ktu, pool);
+            dense_matmul_kt_u(factors, &u, &mut ktu, pool);
             times.kt_matmul += t.elapsed();
 
             // v = c.multiply(1 / (KT@u)) at the pattern of c.
@@ -135,7 +162,7 @@ impl DenseSolver {
 
             // x = K_over_r @ v_csc (dense × sparse, strided column reads).
             let t = Instant::now();
-            dense_spmm_columns(&factors, &pattern, &w, &mut x, pool);
+            dense_spmm_columns(factors, &pattern, &w, &mut x, pool);
             times.spmm += t.elapsed();
         }
 
@@ -144,7 +171,7 @@ impl DenseSolver {
         elementwise_recip(&x, &mut u, pool);
         times.update_u += t.elapsed();
         let t = Instant::now();
-        dense_matmul_kt_u(&factors, &u, &mut ktu, pool);
+        dense_matmul_kt_u(factors, &u, &mut ktu, pool);
         times.kt_matmul += t.elapsed();
         let t = Instant::now();
         sparse_multiply(c, &ktu, &mut w, pool);
@@ -153,7 +180,7 @@ impl DenseSolver {
         let t = Instant::now();
         let pattern = TransposedPattern::build(c);
         let mut kmv = Dense::zeros(v_r, n);
-        dense_spmm_columns_km(&factors, &pattern, &w, &mut kmv, pool);
+        dense_spmm_columns_km(factors, &pattern, &w, &mut kmv, pool);
         let mut wmd = vec![0.0; n];
         for i in 0..v_r {
             let urow = u.row(i);
@@ -300,6 +327,26 @@ mod tests {
             }
             assert!(times.total() > Duration::ZERO);
         }
+    }
+
+    #[test]
+    fn solve_prepared_matches_one_shot_solve() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(350)
+            .num_docs(25)
+            .embedding_dim(10)
+            .num_queries(1)
+            .query_words(6, 6)
+            .seed(41)
+            .build();
+        let pool = Pool::new(2);
+        let config = SinkhornConfig { tolerance: 0.0, max_iter: 6, ..Default::default() };
+        let dense = DenseSolver::new(config);
+        let (a, _) = dense.solve(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+        let prep = dense.prepare(&corpus.embeddings, corpus.query(0), &pool);
+        let (b, times) = dense.solve_prepared(&prep, &corpus.c, &pool);
+        assert_eq!(a.wmd, b.wmd, "shared factors must give the identical pipeline result");
+        assert_eq!(times.cdist_precompute, Duration::ZERO, "preparation happened elsewhere");
     }
 
     #[test]

@@ -70,6 +70,18 @@ impl Default for SinkhornConfig {
     }
 }
 
+impl SinkhornConfig {
+    /// Phase-1 preparation shared by every solver consuming `dist`
+    /// factors (sparse and dense alike): select the query's non-zero
+    /// words and run the fused precompute with this config's λ.
+    pub fn prepare(&self, embeddings: &Dense, query: &SparseVec, pool: &Pool) -> Prepared {
+        assert_eq!(embeddings.nrows(), query.dim, "embedding/vocab mismatch");
+        let sel = query.indices();
+        let factors = precompute_factors(embeddings, &sel, &query.val, self.lambda, pool);
+        Prepared { factors }
+    }
+}
+
 /// Precomputed per-query state: factors + the query's histogram.
 #[derive(Clone, Debug)]
 pub struct Prepared {
@@ -135,10 +147,7 @@ impl SparseSolver {
 
     /// Phase 1: select non-zero query words and precompute the factors.
     pub fn prepare(&self, embeddings: &Dense, query: &SparseVec, pool: &Pool) -> Prepared {
-        assert_eq!(embeddings.nrows(), query.dim, "embedding/vocab mismatch");
-        let sel = query.indices();
-        let factors = precompute_factors(embeddings, &sel, &query.val, self.config.lambda, pool);
-        Prepared { factors }
+        self.config.prepare(embeddings, query, pool)
     }
 
     /// Phase 2: iterate to the WMD vector against all columns of `c`.

@@ -97,8 +97,9 @@ impl Dense {
     }
 
     /// Dense matmul `self @ rhs` — reference implementation (ikj loop
-    /// order); the performance-relevant GEMM lives in `dist::gemm` and the
-    /// dense baseline uses the parallel version in `sinkhorn::dense`.
+    /// order); the performance-relevant GEMM-form kernel lives in
+    /// [`crate::dist::cdist_gemm`] and the dense baseline uses the
+    /// parallel version in `sinkhorn::dense`.
     pub fn matmul(&self, rhs: &Dense) -> Dense {
         assert_eq!(self.ncols, rhs.nrows, "matmul shape mismatch");
         let mut out = Dense::zeros(self.nrows, rhs.ncols);

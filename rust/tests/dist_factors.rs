@@ -1,0 +1,132 @@
+//! Integration tests for the `dist` factor-precompute layer: kernel
+//! agreement (§6), prepared-factor properties, and the row-restriction
+//! contract that `prune/` builds on.
+
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::dist::{cdist_gemm, cdist_naive, precompute_factors};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{Prepared, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sparse::Dense;
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(1_500)
+        .num_docs(80)
+        .embedding_dim(48)
+        .n_topics(5)
+        .num_queries(3)
+        .query_words(7, 21)
+        .seed(404)
+        .build()
+}
+
+/// Gather a query's word embeddings into a `v_r × w` panel.
+fn query_panel(corpus: &SyntheticCorpus, q: usize) -> Dense {
+    let query = corpus.query(q);
+    let w = corpus.embeddings.ncols();
+    let mut panel = Dense::zeros(query.nnz(), w);
+    for (k, &i) in query.idx.iter().enumerate() {
+        panel.row_mut(k).copy_from_slice(corpus.embeddings.row(i as usize));
+    }
+    panel
+}
+
+#[test]
+fn cdist_gemm_agrees_with_naive_within_1e9() {
+    let corpus = corpus();
+    for q in 0..3 {
+        let panel = query_panel(&corpus, q);
+        let v = corpus.vocab_size();
+        let v_r = panel.nrows();
+        for p in [1usize, 2, 6] {
+            let pool = Pool::new(p);
+            let mut naive = Dense::zeros(v, v_r);
+            let mut gemm = Dense::zeros(v, v_r);
+            cdist_naive(&panel, &corpus.embeddings, &mut naive, &pool);
+            cdist_gemm(&panel, &corpus.embeddings, &mut gemm, &pool);
+            for (a, b) in gemm.as_slice().iter().zip(naive.as_slice()) {
+                assert!(
+                    (a - b).abs() <= 1e-9 * (1.0 + b.abs()),
+                    "q={q} p={p}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn precompute_factors_shape_and_positivity() {
+    let corpus = corpus();
+    let pool = Pool::new(4);
+    for q in 0..3 {
+        let query = corpus.query(q);
+        let f = precompute_factors(&corpus.embeddings, &query.indices(), &query.val, 10.0, &pool);
+        let (v, v_r) = (corpus.vocab_size(), query.nnz());
+        assert_eq!(f.vocab_size(), v);
+        assert_eq!(f.v_r(), v_r);
+        for (name, m) in [("kt", &f.kt), ("kor_t", &f.kor_t), ("km_t", &f.km_t)] {
+            assert_eq!((m.nrows(), m.ncols()), (v, v_r), "{name} shape");
+            assert!(m.as_slice().iter().all(|x| x.is_finite()), "{name} finite");
+        }
+        // K ∈ (0, 1]; K/r > 0; K⊙M ≥ 0 with zeros exactly at d = 0.
+        assert!(f.kt.as_slice().iter().all(|&x| x > 0.0 && x <= 1.0));
+        assert!(f.kor_t.as_slice().iter().all(|&x| x > 0.0));
+        assert!(f.km_t.as_slice().iter().all(|&x| x >= 0.0));
+        assert_eq!(f.r, query.val);
+        // The factor triple is internally consistent: kor_t = kt / r.
+        for i in (0..v).step_by(97) {
+            for k in 0..v_r {
+                let expect = f.kt.get(i, k) / f.r[k];
+                let got = f.kor_t.get(i, k);
+                assert!((got - expect).abs() <= 1e-12 * (1.0 + expect.abs()));
+            }
+        }
+    }
+}
+
+#[test]
+fn restricted_factors_solve_matches_full_solve() {
+    // The sparse kernels only read factor rows where `c` has non-zeros,
+    // so restricting both `c` and the factors to any row superset of the
+    // support must reproduce the full WMD exactly.
+    let corpus = corpus();
+    let pool = Pool::new(1); // serial → bitwise-comparable solves
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let query = corpus.query(1);
+    let prep = solver.prepare(&corpus.embeddings, query, &pool);
+    let full = solver.solve(&prep, &corpus.c, &pool);
+
+    // Support = every vocabulary row that any document uses.
+    let row_ptr = corpus.c.row_ptr();
+    let support: Vec<usize> =
+        (0..corpus.vocab_size()).filter(|&i| row_ptr[i + 1] > row_ptr[i]).collect();
+    assert!(support.len() < corpus.vocab_size(), "corpus should have unused words");
+    let sub_c = corpus.c.select_rows(&support);
+    let sub_prep = Prepared { factors: prep.factors.restrict_rows(&support) };
+    assert_eq!(sub_prep.factors.vocab_size(), support.len());
+    let restricted = solver.solve(&sub_prep, &sub_c, &pool);
+
+    assert_eq!(full.wmd.len(), restricted.wmd.len());
+    for (a, b) in restricted.wmd.iter().zip(&full.wmd) {
+        assert_eq!(a, b, "row restriction must not change the WMD");
+    }
+}
+
+#[test]
+fn prepare_then_solve_equals_one_shot() {
+    let corpus = corpus();
+    let pool = Pool::new(3);
+    let solver = SparseSolver::new(SinkhornConfig {
+        tolerance: 0.0,
+        max_iter: 10,
+        ..Default::default()
+    });
+    let query = corpus.query(2);
+    let prep = solver.prepare(&corpus.embeddings, query, &pool);
+    let a = solver.solve(&prep, &corpus.c, &pool);
+    let b = solver.wmd_one_to_many(&corpus.embeddings, query, &corpus.c, &pool);
+    for (x, y) in a.wmd.iter().zip(&b.wmd) {
+        assert!((x - y).abs() <= 1e-9 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+}
