@@ -1,0 +1,161 @@
+//! Cross-query batched dispatch (ROADMAP item): `B` prepared queries
+//! iterated in **one** fused pass over `c` per Sinkhorn step, so the CSR
+//! row-pointer walk, its branch logic and the `c` cache misses are paid
+//! once per nnz instead of once per (nnz, query) — the amortization the
+//! PIUMA follow-up (arXiv:2107.06433) and Atasu et al.'s batched GPU
+//! formulation (arXiv:1711.07227) build their throughput on.
+//!
+//! Two levels:
+//! * kernel/solver: `SparseSolver::solve_batch` vs a per-query `solve`
+//!   loop over the same prepared queries, at B ∈ {1, 4, 8};
+//! * service: the dispatcher with `cross_query_batch` on vs off driving
+//!   the same repeated-query stream.
+//!
+//! The workload is dispatcher-shaped: short (tweet-like) queries against
+//! a large target set — small `v_r` makes the shared traversal, not the
+//! per-query dot/axpy payload, the dominant per-nnz cost, which is
+//! exactly the serving regime the coordinator batches for.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::coordinator::{
+    BatcherConfig, DocStore, QueryRequest, ServiceConfig, WmdService,
+};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{IterateKernel, Prepared, SinkhornConfig, SparseSolver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const BATCH: usize = 8;
+
+fn main() {
+    common::header(
+        "batch_dispatch",
+        "cross-query batched dispatch: one fused CSR pass serves B queries",
+    );
+    let settings = common::settings();
+    let (v, n, w) = match common::scale() {
+        common::Scale::Quick => (4_000, 800, 32),
+        common::Scale::Default => (20_000, 3_000, 64),
+        common::Scale::Paper => (100_000, 5_000, 300),
+    };
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(v)
+        .num_docs(n)
+        .embedding_dim(w)
+        .n_topics(8)
+        .num_queries(BATCH)
+        .query_words(3, 8)
+        .seed(99)
+        .build();
+    let config =
+        SinkhornConfig { lambda: 10.0, max_iter: 16, tolerance: 0.0, ..Default::default() };
+    println!(
+        "workload: V={v} N={n} w={w} nnz(c)={} query v_r={:?}\n",
+        corpus.c.nnz(),
+        corpus.queries.iter().map(|q| q.nnz()).collect::<Vec<_>>()
+    );
+
+    // --- Solver level: per-query loop vs one batched solve.
+    for kernel in [IterateKernel::FusedAtomic, IterateKernel::FusedTransposed] {
+        let solver = SparseSolver::new(SinkhornConfig { kernel, ..config });
+        println!("-- kernel: {kernel:?}");
+        let mut table =
+            Table::new(["threads", "B", "per-query loop", "batched", "speedup", "batched q/s"]);
+        for &p in &common::thread_sweep() {
+            let pool = Pool::new(p);
+            let preps: Vec<Prepared> = corpus
+                .queries
+                .iter()
+                .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+                .collect();
+            for &bsz in &[1usize, 4, BATCH] {
+                let prefs: Vec<&Prepared> = preps[..bsz].iter().collect();
+                let r_loop = bench_fn("per-query", &settings, || {
+                    let mut acc = 0.0;
+                    for &prep in &prefs {
+                        acc += solver.solve(prep, &corpus.c, &pool).wmd[0];
+                    }
+                    acc
+                });
+                let r_batch = bench_fn("batched", &settings, || {
+                    solver
+                        .solve_batch(&prefs, &corpus.c, &pool)
+                        .iter()
+                        .map(|o| o.wmd[0])
+                        .sum::<f64>()
+                });
+                let speedup = r_loop.mean_secs() / r_batch.mean_secs();
+                table.row([
+                    p.to_string(),
+                    bsz.to_string(),
+                    format!("{:.2} ms", r_loop.mean_secs() * 1e3),
+                    format!("{:.2} ms", r_batch.mean_secs() * 1e3),
+                    format!("{speedup:.2}x"),
+                    format!("{:.1}", bsz as f64 / r_batch.mean_secs()),
+                ]);
+            }
+        }
+        table.print();
+        println!();
+    }
+
+    // --- Service level: the dispatcher end to end, batching on vs off.
+    // Byte budget off so the repeated-query cache accounting stays exact
+    // (cf. serve_cache); max_wait generous so each round coalesces into
+    // one full batch.
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let rounds = 6usize;
+    let mut throughput = [0.0f64; 2];
+    for (slot, (label, batched)) in
+        [("per-query dispatch", false), ("cross-query batched", true)].iter().enumerate()
+    {
+        let service = WmdService::start(
+            Arc::clone(&store),
+            ServiceConfig {
+                sinkhorn: config,
+                cross_query_batch: *batched,
+                prepare_cache_bytes: 0,
+                batcher: BatcherConfig {
+                    max_batch: BATCH,
+                    max_wait: Duration::from_millis(50),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        // Warm the prepared-factor cache so both modes measure dispatch +
+        // solve, not the one-time precompute.
+        for q in &corpus.queries {
+            assert!(service.submit_wait(QueryRequest::new(q.clone())).is_ok());
+        }
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            let receivers: Vec<_> = corpus
+                .queries
+                .iter()
+                .map(|q| service.submit(QueryRequest::new(q.clone())))
+                .collect();
+            for rx in receivers {
+                assert!(rx.recv().expect("reply").is_ok());
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        throughput[slot] = (rounds * BATCH) as f64 / wall;
+        let snap = service.metrics().snapshot();
+        if *batched {
+            assert!(snap.batched_solves > 0, "batched dispatch never engaged");
+        } else {
+            assert_eq!(snap.batched_solves, 0);
+        }
+        println!("{label}: {:.1} queries/s — {}", throughput[slot], snap.report());
+        service.shutdown();
+    }
+    println!(
+        "\ndispatcher speedup at B={BATCH}: {:.2}x (batched vs per-query loop)",
+        throughput[1] / throughput[0]
+    );
+}

@@ -58,7 +58,7 @@ fn main() {
         let r_warm = bench_fn("warm", &settings, || {
             let (prep, _) = cache
                 .get_or_insert_with(PreparedKey::new(query, config.lambda), || unreachable!());
-            solver.solve(prep, &corpus.c, &pool)
+            solver.solve(&prep, &corpus.c, &pool)
         });
         table.row([
             p.to_string(),

@@ -1,7 +1,18 @@
 //! Minimal command-line parser (`clap` is unavailable offline):
-//! `binary <subcommand> [--key value] [--flag]`.
+//! `binary <subcommand> [--key value] [--flag] [--] [positional...]`.
+//!
+//! Boolean switches are **declared** ([`BOOL_FLAGS`]): a bare `--key`
+//! outside that list must be followed by a value. Without the
+//! declaration, `--verbose corpus.bin` would silently consume the
+//! positional `corpus.bin` as the flag's value — the classic greedy-parse
+//! bug. A standalone `--` ends option parsing; everything after it is
+//! positional (so filenames that start with `--` remain expressible).
 
 use std::collections::BTreeMap;
+
+/// Bare switches the parser recognizes as boolean flags. Everything else
+/// written `--key` must carry a value (`--key value` or `--key=value`).
+pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "help"];
 
 /// Parsed arguments: one optional subcommand + `--key value` options +
 //  bare `--flag` switches.
@@ -14,23 +25,55 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding argv[0]), with the
+    /// crate's standard boolean flags ([`BOOL_FLAGS`]).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        Self::parse_with_flags(argv, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag declaration (tests, embedders).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        argv: I,
+        bool_flags: &[&str],
+    ) -> Result<Self, String> {
         let mut args = Args::default();
-        let mut iter = argv.into_iter().peekable();
+        let mut iter = argv.into_iter();
+        let mut options_done = false;
         while let Some(tok) = iter.next() {
-            if let Some(key) = tok.strip_prefix("--") {
-                if key.is_empty() {
-                    return Err("bare '--' not supported".into());
+            if !options_done && tok == "--" {
+                options_done = true;
+                continue;
+            }
+            if !options_done {
+                if let Some(key) = tok.strip_prefix("--") {
+                    if let Some((k, v)) = key.split_once('=') {
+                        if k.is_empty() {
+                            return Err(format!("malformed option '{tok}'"));
+                        }
+                        if bool_flags.contains(&k) {
+                            return Err(format!("flag --{k} takes no value (got '{v}')"));
+                        }
+                        args.options.insert(k.to_string(), v.to_string());
+                    } else if bool_flags.contains(&key) {
+                        args.flags.push(key.to_string());
+                    } else {
+                        match iter.next() {
+                            Some(v) if !v.starts_with("--") => {
+                                args.options.insert(key.to_string(), v);
+                            }
+                            Some(other) => {
+                                return Err(format!(
+                                    "option --{key} requires a value, found '{other}' \
+                                     (use --{key}=VALUE if the value starts with '--')"
+                                ));
+                            }
+                            None => return Err(format!("option --{key} requires a value")),
+                        }
+                    }
+                    continue;
                 }
-                if let Some((k, v)) = key.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
-                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
-                    args.options.insert(key.to_string(), iter.next().unwrap());
-                } else {
-                    args.flags.push(key.to_string());
-                }
-            } else if args.subcommand.is_none() && args.positional.is_empty() {
+            }
+            if args.subcommand.is_none() && args.positional.is_empty() && !options_done {
                 args.subcommand = Some(tok);
             } else {
                 args.positional.push(tok);
@@ -89,6 +132,51 @@ mod tests {
     }
 
     #[test]
+    fn declared_flag_does_not_swallow_positional() {
+        // Regression: `--verbose corpus.bin` used to consume the
+        // positional as the flag's value.
+        let a = parse("solve --verbose corpus.bin");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.positional(), &["corpus.bin".to_string()]);
+    }
+
+    #[test]
+    fn double_dash_terminates_options() {
+        let a = parse("solve --threads 2 -- --not-an-option also-positional");
+        assert_eq!(a.get("threads"), Some("2"));
+        assert_eq!(
+            a.positional(),
+            &["--not-an-option".to_string(), "also-positional".to_string()]
+        );
+        assert!(!a.flag("not-an-option"));
+    }
+
+    #[test]
+    fn dangling_option_at_end_is_an_error() {
+        // Regression: a trailing `--threads` used to become a silent flag.
+        let err = Args::parse(["solve", "--threads"].map(String::from)).unwrap_err();
+        assert!(err.contains("--threads requires a value"), "{err}");
+    }
+
+    #[test]
+    fn option_followed_by_option_is_an_error() {
+        let err = Args::parse(["solve", "--threads", "--docs", "5"].map(String::from)).unwrap_err();
+        assert!(err.contains("--threads requires a value"), "{err}");
+    }
+
+    #[test]
+    fn declared_flags_may_stack() {
+        let a = Args::parse_with_flags(
+            ["run", "--fast", "--slow"].map(String::from),
+            &["fast", "slow"],
+        )
+        .unwrap();
+        assert!(a.flag("fast") && a.flag("slow"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
     fn typed_getters() {
         let a = parse("x --n 42");
         assert_eq!(a.get_or("n", 0usize).unwrap(), 42);
@@ -103,9 +191,15 @@ mod tests {
     }
 
     #[test]
-    fn flag_followed_by_flag() {
-        let a = parse("run --fast --slow");
-        assert!(a.flag("fast") && a.flag("slow"));
-        assert_eq!(a.get("fast"), None);
+    fn malformed_equals_option_is_an_error() {
+        assert!(Args::parse(["x", "--=5"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn declared_flag_with_value_is_an_error() {
+        // `--verbose=1` must not silently become an option the flag()
+        // lookup misses.
+        let err = Args::parse(["solve", "--verbose=1"].map(String::from)).unwrap_err();
+        assert!(err.contains("--verbose takes no value"), "{err}");
     }
 }

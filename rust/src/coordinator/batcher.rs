@@ -115,12 +115,48 @@ mod tests {
 
     #[test]
     fn flushes_on_deadline() {
-        let q = BatchQueue::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) });
-        q.push(42);
+        // A single queued item — far below max_batch — must still come out
+        // once its wait window lapses, in arrival order and fully drained.
+        //
+        // The old version started its stopwatch AFTER the push and asserted
+        // `elapsed >= window - 1ms`: any descheduling between push and
+        // stopwatch start shrinks the measured wait below the queue's real
+        // (push-anchored) deadline, so the test flaked under CI load. The
+        // stopwatch now starts BEFORE the push: the flush fires no earlier
+        // than push + window ≥ start + window, a lower bound scheduling
+        // delays can only lengthen — this still catches an early-flush
+        // regression (next_batch ignoring max_wait) without the flake.
+        let window = Duration::from_millis(5);
+        let q = BatchQueue::new(BatcherConfig { max_batch: 100, max_wait: window });
         let t = Instant::now();
+        q.push(42);
+        q.push(43);
         let batch = q.next_batch().unwrap();
-        assert_eq!(batch, vec![42]);
-        assert!(t.elapsed() >= Duration::from_millis(4), "flushed too early");
+        assert!(t.elapsed() >= window, "flushed before the wait window");
+        assert_eq!(batch, vec![42, 43], "deadline flush must preserve arrival order");
+        assert!(q.is_empty(), "deadline flush must drain everything queued");
+    }
+
+    #[test]
+    fn close_while_consumer_waits_flushes_immediately() {
+        // The consumer sits inside the deadline wait (60 s window); a
+        // close from another thread must wake it and hand over the partial
+        // batch at once — the test would time out otherwise.
+        let q = Arc::new(BatchQueue::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(60),
+        }));
+        q.push(7);
+        let closer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                q.close();
+            })
+        };
+        assert_eq!(q.next_batch().unwrap(), vec![7]);
+        assert!(q.next_batch().is_none(), "closed and drained → None");
+        closer.join().unwrap();
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub struct Metrics {
     backend_pjrt: AtomicU64,
     prepare_cache_hits: AtomicU64,
     prepare_cache_misses: AtomicU64,
+    batched_solves: AtomicU64,
+    batched_queries: AtomicU64,
 }
 
 impl Metrics {
@@ -58,6 +60,13 @@ impl Metrics {
         }
     }
 
+    /// One cross-query batched solve serving `size` (≥ 2) queries in a
+    /// single fused pass over `c`.
+    pub fn record_batched_solve(&self, size: usize) {
+        self.batched_solves.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -77,6 +86,8 @@ impl Metrics {
             backend_pjrt: self.backend_pjrt.load(Ordering::Relaxed),
             prepare_cache_hits: self.prepare_cache_hits.load(Ordering::Relaxed),
             prepare_cache_misses: self.prepare_cache_misses.load(Ordering::Relaxed),
+            batched_solves: self.batched_solves.load(Ordering::Relaxed),
+            batched_queries: self.batched_queries.load(Ordering::Relaxed),
         }
     }
 }
@@ -99,6 +110,11 @@ pub struct MetricsSnapshot {
     /// Lookups that ran `precompute_factors` (plus uncached solves: 0/0
     /// when the cache is disabled).
     pub prepare_cache_misses: u64,
+    /// Cross-query batched solves executed (each serving ≥ 2 queries in
+    /// one fused pass over `c`).
+    pub batched_solves: u64,
+    /// Queries answered through a batched solve.
+    pub batched_queries: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -121,7 +137,8 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
-             backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={}",
+             backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={} \
+             batched: solves={} queries={}",
             self.queries,
             self.batches,
             self.errors,
@@ -132,7 +149,9 @@ impl MetricsSnapshot {
             self.backend_dense,
             self.backend_pjrt,
             self.prepare_cache_hits,
-            self.prepare_cache_misses
+            self.prepare_cache_misses,
+            self.batched_solves,
+            self.batched_queries
         )
     }
 }
@@ -184,6 +203,17 @@ mod tests {
         assert_eq!(s.p50_latency, Duration::ZERO);
         assert_eq!(s.prepare_cache_hits, 0);
         assert_eq!(s.prepare_cache_misses, 0);
+    }
+
+    #[test]
+    fn batched_solve_counters() {
+        let m = Metrics::new();
+        m.record_batched_solve(4);
+        m.record_batched_solve(2);
+        let s = m.snapshot();
+        assert_eq!(s.batched_solves, 2);
+        assert_eq!(s.batched_queries, 6);
+        assert!(s.report().contains("batched: solves=2 queries=6"));
     }
 
     #[test]

@@ -84,7 +84,7 @@ impl Router {
             .val
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(pos, _)| pos)
             .expect("non-empty query");
         let word = query.idx[heavy];

@@ -31,6 +31,11 @@ pub struct ServiceConfig {
     /// Byte budget over the cached factors (LRU-evicted past it); `0`
     /// means entry-count bound only.
     pub prepare_cache_bytes: usize,
+    /// Solve all sparse-backend queries of a popped batch in **one**
+    /// fused pass over `c` ([`SparseSolver::solve_batch`]) instead of a
+    /// per-query loop. `false` restores the per-query dispatch (the
+    /// ablation baseline for `benches/batch_dispatch`).
+    pub cross_query_batch: bool,
 }
 
 impl Default for ServiceConfig {
@@ -42,6 +47,7 @@ impl Default for ServiceConfig {
             prefer: Backend::SparseRust,
             prepare_cache: 32,
             prepare_cache_bytes: 512 << 20,
+            cross_query_batch: true,
         }
     }
 }
@@ -81,7 +87,7 @@ impl QueryResponse {
             .iter()
             .enumerate()
             .filter(|(_, v)| v.is_finite())
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
     }
 }
@@ -89,6 +95,18 @@ impl QueryResponse {
 struct Job {
     req: QueryRequest,
     reply: mpsc::Sender<QueryResponse>,
+}
+
+/// The single shape of an error reply (the backend field is nominal — no
+/// solver ran).
+fn error_response(msg: String, latency: Duration) -> QueryResponse {
+    QueryResponse {
+        wmd: vec![],
+        iterations: 0,
+        backend: Backend::SparseRust,
+        latency,
+        error: Some(msg),
+    }
 }
 
 /// Handle to the running service. Dropping it shuts the dispatcher down.
@@ -135,13 +153,7 @@ impl WmdService {
     pub fn submit(&self, req: QueryRequest) -> mpsc::Receiver<QueryResponse> {
         let (tx, rx) = mpsc::channel();
         if !self.queue.push(Job { req, reply: tx.clone() }) {
-            let _ = tx.send(QueryResponse {
-                wmd: vec![],
-                iterations: 0,
-                backend: Backend::SparseRust,
-                latency: Duration::ZERO,
-                error: Some("service is shut down".into()),
-            });
+            let _ = tx.send(error_response("service is shut down".into(), Duration::ZERO));
         }
         rx
     }
@@ -195,11 +207,30 @@ fn dispatcher(
     });
     while let Some(batch) = queue.next_batch() {
         metrics.record_batch(batch.len());
+        // Phase 1: validate, route and prepare every job of the popped
+        // batch. Sparse-backend jobs are deferred so the whole group runs
+        // as ONE fused pass over `c` per Sinkhorn step; dense/PJRT jobs
+        // (and everything when `cross_query_batch` is off) answer inline.
+        let mut sparse_jobs: Vec<(Job, Arc<Prepared>, Instant)> = Vec::new();
         for job in batch {
             let started = Instant::now();
+            if let Err(msg) = store.check_query(&job.req.query) {
+                metrics.record_error();
+                let _ = job.reply.send(error_response(msg, started.elapsed()));
+                continue;
+            }
+            let prefer = job.req.prefer.unwrap_or(config.prefer);
+            let backend = resolve_backend(prefer, pjrt.as_ref(), &job.req.query);
+            if backend == Backend::SparseRust && config.cross_query_batch {
+                let query = &job.req.query;
+                let prep =
+                    resolve_prepared(&store, &pool, &sparse, cache.as_mut(), &metrics, query);
+                sparse_jobs.push((job, prep, started));
+                continue;
+            }
             let response = answer(
                 &store,
-                &config,
+                backend,
                 &pool,
                 &sparse,
                 &dense,
@@ -209,36 +240,92 @@ fn dispatcher(
                 &job.req,
             );
             let latency = started.elapsed();
-            match &response {
+            match response {
                 Ok((wmd, iterations, backend)) => {
-                    metrics.record_query(latency, *backend);
+                    metrics.record_query(latency, backend);
                     let _ = job.reply.send(QueryResponse {
-                        wmd: wmd.clone(),
-                        iterations: *iterations,
-                        backend: *backend,
+                        wmd,
+                        iterations,
+                        backend,
                         latency,
                         error: None,
                     });
                 }
                 Err(msg) => {
                     metrics.record_error();
-                    let _ = job.reply.send(QueryResponse {
-                        wmd: vec![],
-                        iterations: 0,
-                        backend: Backend::SparseRust,
-                        latency,
-                        error: Some(msg.clone()),
-                    });
+                    let _ = job.reply.send(error_response(msg, latency));
                 }
             }
         }
+        // Phase 2: the cross-query batched solve, fanned back out to the
+        // per-request reply channels.
+        if !sparse_jobs.is_empty() {
+            let preps: Vec<&Prepared> = sparse_jobs.iter().map(|(_, p, _)| p.as_ref()).collect();
+            let outs = sparse.solve_batch(&preps, &store.c, &pool);
+            // Only count real fused batches: solve_batch falls back to a
+            // per-query loop for kernels without a batched variant.
+            if sparse_jobs.len() > 1 && config.sinkhorn.kernel.has_batched_path() {
+                metrics.record_batched_solve(sparse_jobs.len());
+            }
+            for ((job, _prep, started), out) in sparse_jobs.into_iter().zip(outs) {
+                let latency = started.elapsed();
+                metrics.record_query(latency, Backend::SparseRust);
+                let _ = job.reply.send(QueryResponse {
+                    wmd: out.wmd,
+                    iterations: out.iterations,
+                    backend: Backend::SparseRust,
+                    latency,
+                    error: None,
+                });
+            }
+        }
+    }
+}
+
+/// Per-request backend resolution: the PJRT preference degrades to the
+/// sparse backend when the runtime is unavailable or the query's word
+/// count fits no compiled bucket.
+fn resolve_backend(
+    prefer: Backend,
+    pjrt: Option<&PjrtBackend>,
+    query: &SparseVec,
+) -> Backend {
+    match (prefer, pjrt) {
+        (Backend::DensePjrt, Some(b)) if b.router().bucket_for(query.nnz()).is_some() => {
+            Backend::DensePjrt
+        }
+        (Backend::DensePjrt, _) => Backend::SparseRust,
+        (other, _) => other,
+    }
+}
+
+/// Resolve the prepared factors: cache hit, cache fill, or (cache
+/// disabled) a one-shot prepare. The `Arc` lets the dispatcher hold a
+/// whole batch of prepared queries across one batched solve.
+fn resolve_prepared(
+    store: &DocStore,
+    pool: &Pool,
+    sparse: &SparseSolver,
+    cache: Option<&mut PreparedCache>,
+    metrics: &Metrics,
+    query: &SparseVec,
+) -> Arc<Prepared> {
+    let prepare = || sparse.prepare(&store.embeddings, query, pool);
+    match cache {
+        Some(cache) => {
+            let key = PreparedKey::new(query, sparse.config().lambda);
+            let (prep, hit) = cache.get_or_insert_with(key, prepare);
+            metrics.record_prepare_cache(hit);
+            prep
+        }
+        None => Arc::new(prepare()),
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn answer(
     store: &DocStore,
-    config: &ServiceConfig,
+    backend: Backend,
     pool: &Pool,
     sparse: &SparseSolver,
     dense: &DenseSolver,
@@ -247,48 +334,25 @@ fn answer(
     metrics: &Metrics,
     req: &QueryRequest,
 ) -> Result<(Vec<Real>, usize, Backend), String> {
-    store.check_query(&req.query)?;
-    let prefer = req.prefer.unwrap_or(config.prefer);
-    let backend = match (prefer, pjrt) {
-        (Backend::DensePjrt, Some(b)) if b.router().bucket_for(req.query.nnz()).is_some() => {
-            Backend::DensePjrt
-        }
-        (Backend::DensePjrt, _) => Backend::SparseRust,
-        (other, _) => other,
-    };
     // The PJRT graph bakes its own precompute in; only the in-process
     // solvers consume `dist` factors (and hence the cache).
     if backend == Backend::DensePjrt {
-        let b = pjrt.expect("checked above");
+        let b = pjrt.expect("resolve_backend only picks an available PJRT runtime");
         let wmd = b
             .solve(&req.query, &store.embeddings)
             .map_err(|e| format!("pjrt backend: {e:#}"))?;
         return Ok((wmd, b.max_v_r(), backend));
     }
-    // Resolve the prepared factors: cache hit, cache fill, or (cache
-    // disabled) a one-shot local prepare. Both solvers share the same
-    // factors — `precompute_factors` with the service λ.
-    let prepare = || sparse.prepare(&store.embeddings, &req.query, pool);
-    let local;
-    let prep: &Prepared = match cache {
-        Some(cache) => {
-            let key = PreparedKey::new(&req.query, config.sinkhorn.lambda);
-            let (prep, hit) = cache.get_or_insert_with(key, prepare);
-            metrics.record_prepare_cache(hit);
-            prep
-        }
-        None => {
-            local = prepare();
-            &local
-        }
-    };
+    // Both in-process solvers share the same factors — `precompute_factors`
+    // with the service λ.
+    let prep = resolve_prepared(store, pool, sparse, cache, metrics, &req.query);
     match backend {
         Backend::SparseRust => {
-            let out = sparse.solve(prep, &store.c, pool);
+            let out = sparse.solve(&prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
         Backend::DenseRust => {
-            let (out, _times) = dense.solve_prepared(prep, &store.c, pool);
+            let (out, _times) = dense.solve_prepared(&prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
         Backend::DensePjrt => unreachable!("handled above"),
@@ -352,6 +416,152 @@ mod tests {
         let snap = service.metrics().snapshot();
         assert_eq!(snap.queries, 4);
         assert!(snap.batches >= 1);
+        service.shutdown();
+    }
+
+    #[test]
+    fn batched_dispatch_matches_per_query_solve() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(4)
+            .query_words(5, 10)
+            .seed(11)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        // One solver thread → the batched serial path is bitwise identical
+        // to the per-query solve; a generous wait window + max_batch 4 so
+        // all four submissions coalesce into one batched solve.
+        let service = WmdService::start(
+            store,
+            ServiceConfig {
+                threads: 1,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) },
+                ..Default::default()
+            },
+            None,
+        );
+        let receivers: Vec<_> = (0..4)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        let responses: Vec<_> = receivers.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(SinkhornConfig::default());
+        for (i, resp) in responses.iter().enumerate() {
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            let direct =
+                solver.wmd_one_to_many(&corpus.embeddings, corpus.query(i), &corpus.c, &pool);
+            assert_eq!(resp.wmd, direct.wmd, "query {i}");
+            assert_eq!(resp.iterations, direct.iterations, "query {i}");
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.batched_solves, 1, "four coalesced queries → one batched solve");
+        assert_eq!(snap.batched_queries, 4);
+        service.shutdown();
+    }
+
+    #[test]
+    fn per_query_dispatch_when_batching_disabled() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(4)
+            .query_words(5, 9)
+            .seed(13)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            store,
+            ServiceConfig { threads: 2, cross_query_batch: false, ..Default::default() },
+            None,
+        );
+        let receivers: Vec<_> = (0..4)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.batched_solves, 0, "batching disabled must use the per-query loop");
+        assert_eq!(snap.batched_queries, 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn no_batched_metrics_for_kernels_without_batched_path() {
+        use crate::sinkhorn::IterateKernel;
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(3)
+            .query_words(5, 9)
+            .seed(31)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            store,
+            ServiceConfig {
+                threads: 1,
+                sinkhorn: SinkhornConfig {
+                    kernel: IterateKernel::FusedPrivate,
+                    ..Default::default()
+                },
+                batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },
+                ..Default::default()
+            },
+            None,
+        );
+        let receivers: Vec<_> = (0..3)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 3);
+        assert_eq!(
+            snap.batched_solves, 0,
+            "solve_batch fell back to per-query — metrics must not claim a fused batch"
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn invalid_query_in_batch_does_not_poison_the_batch() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(2)
+            .query_words(5, 9)
+            .seed(29)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            store,
+            ServiceConfig {
+                threads: 1,
+                batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },
+                ..Default::default()
+            },
+            None,
+        );
+        let good0 = service.submit(QueryRequest::new(corpus.query(0).clone()));
+        let bad = service.submit(QueryRequest::new(SparseVec::from_counts(7, &[(1, 1)])));
+        let good1 = service.submit(QueryRequest::new(corpus.query(1).clone()));
+        assert!(good0.recv().unwrap().is_ok());
+        assert!(!bad.recv().unwrap().is_ok());
+        assert!(good1.recv().unwrap().is_ok());
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.queries, 2);
+        assert_eq!(snap.batched_solves, 1);
+        assert_eq!(snap.batched_queries, 2);
         service.shutdown();
     }
 

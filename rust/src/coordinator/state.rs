@@ -155,7 +155,7 @@ impl PreparedKey {
 struct CacheEntry {
     fingerprint: u64,
     key: PreparedKey,
-    prep: Prepared,
+    prep: Arc<Prepared>,
     last_used: u64,
 }
 
@@ -164,7 +164,10 @@ struct CacheEntry {
 /// locking): a repeated query skips the O(v_r·V·w) `dist` precompute on
 /// the hot serving path and reuses the exact same [`Prepared`] value, so
 /// a warm solve is bitwise identical to the cold one that filled the
-/// entry.
+/// entry. Entries are handed out as `Arc<Prepared>` clones so the
+/// dispatcher can hold a whole batch of prepared queries at once (the
+/// cross-query batched solve) without borrowing the cache for the
+/// duration of the solve.
 pub struct PreparedCache {
     capacity: usize,
     /// Byte budget over the cached factors (entry count alone is a poor
@@ -212,21 +215,22 @@ impl PreparedCache {
 
     /// Look up `key`, preparing and inserting on a miss (evicting the
     /// least-recently-used entry at capacity). Returns the cached factors
-    /// and whether this was a hit.
+    /// (an `Arc` clone, independent of the cache's lifetime) and whether
+    /// this was a hit.
     pub fn get_or_insert_with(
         &mut self,
         key: PreparedKey,
         prepare: impl FnOnce() -> Prepared,
-    ) -> (&Prepared, bool) {
+    ) -> (Arc<Prepared>, bool) {
         self.tick += 1;
         let tick = self.tick;
         let fp = key.fingerprint();
         let found = self.entries.iter().position(|e| e.fingerprint == fp && e.key == key);
         if let Some(pos) = found {
             self.entries[pos].last_used = tick;
-            return (&self.entries[pos].prep, true);
+            return (Arc::clone(&self.entries[pos].prep), true);
         }
-        let prep = prepare();
+        let prep = Arc::new(prepare());
         // Evict (LRU first) until both bounds admit the new entry. Done
         // before the push so the fresh entry is never its own victim.
         let new_bytes = prep.factors.memory_bytes();
@@ -243,8 +247,9 @@ impl PreparedCache {
                 .expect("checked non-empty");
             self.entries.swap_remove(lru);
         }
-        self.entries.push(CacheEntry { fingerprint: fp, key, prep, last_used: tick });
-        (&self.entries.last().expect("just pushed").prep, false)
+        let entry = CacheEntry { fingerprint: fp, key, prep: Arc::clone(&prep), last_used: tick };
+        self.entries.push(entry);
+        (prep, false)
     }
 }
 

@@ -179,18 +179,28 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
         let t0 = Instant::now();
         let out = solver.wmd_one_to_many(&corpus.embeddings, q, &corpus.c, &pool);
         let dt = t0.elapsed();
-        let best = out.argmin().unwrap();
+        let (best_doc, best_wmd) = best_match_cells(&out);
         t.row([
             i.to_string(),
             q.nnz().to_string(),
             out.iterations.to_string(),
             format!("{:.1} ms", dt.as_secs_f64() * 1e3),
-            best.to_string(),
-            format!("{:.4}", out.wmd[best]),
+            best_doc,
+            best_wmd,
         ]);
     }
     t.print();
     Ok(())
+}
+
+/// Table cells for a solve's best match. An all-pruned or all-non-finite
+/// result (e.g. every target document empty) has no argmin — report
+/// "no match" instead of aborting the CLI.
+fn best_match_cells(out: &sinkhorn_wmd::sinkhorn::SolveOutput) -> (String, String) {
+    match out.argmin() {
+        Some(best) => (best.to_string(), format!("{:.4}", out.wmd[best])),
+        None => ("-".to_string(), "no match".to_string()),
+    }
 }
 
 fn cmd_serve_demo(args: &Args) -> Result<(), String> {
@@ -237,4 +247,47 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     println!("metrics: {}", service.metrics().snapshot().report());
     service.shutdown();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use sinkhorn_wmd::sinkhorn::SolveOutput;
+    use sinkhorn_wmd::Real;
+
+    #[test]
+    fn no_match_when_every_distance_is_non_finite() {
+        let out = SolveOutput {
+            wmd: vec![Real::INFINITY, Real::NAN, Real::INFINITY],
+            iterations: 4,
+            converged: false,
+        };
+        assert_eq!(best_match_cells(&out), ("-".to_string(), "no match".to_string()));
+        let out = SolveOutput { wmd: vec![], iterations: 0, converged: false };
+        assert_eq!(best_match_cells(&out).1, "no match");
+    }
+
+    #[test]
+    fn best_match_formats_finite_minimum() {
+        let out = SolveOutput {
+            wmd: vec![2.5, Real::INFINITY, 1.25],
+            iterations: 4,
+            converged: true,
+        };
+        assert_eq!(best_match_cells(&out), ("2".to_string(), "1.2500".to_string()));
+    }
+
+    #[test]
+    fn solve_invocation_parses_flags_and_positionals() {
+        // The CLI surface cmd_solve sees: a declared boolean flag followed
+        // by a positional must not lose the positional.
+        let args = Args::parse(
+            ["solve", "--threads", "2", "--verbose", "corpus.bin"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(args.subcommand.as_deref(), Some("solve"));
+        assert_eq!(args.get_or("threads", 0usize).unwrap(), 2);
+        assert!(args.flag("verbose"));
+        assert_eq!(args.positional(), &["corpus.bin".to_string()]);
+    }
 }

@@ -86,7 +86,9 @@ impl PrunedRetrieval {
         // per candidate would cost O(N·V) and dwarf the savings).
         let wcd = wcd_lower_bound(embeddings, query, doc_centroids, pool);
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| wcd[a].partial_cmp(&wcd[b]).unwrap());
+        // total_cmp: a NaN distance (poisoned embedding, degenerate doc)
+        // sorts last instead of panicking the whole retrieval.
+        order.sort_by(|&a, &b| wcd[a].total_cmp(&wcd[b]));
         let tp = crate::sparse::ops::TransposedPattern::build(c);
         let support_of = |j: usize| -> Vec<usize> {
             (tp.col_ptr[j]..tp.col_ptr[j + 1]).map(|e| tp.src_row[e] as usize).collect()
@@ -118,9 +120,13 @@ impl PrunedRetrieval {
                 crate::sinkhorn::Prepared { factors: prep.factors.restrict_rows(&rows) };
             let d = self.solver.solve(&sub_prep, &sub_c, &serial).wmd[0];
             stats.exact_evals += 1;
-            top.push((j, d));
-            top.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            top.truncate(k);
+            // Non-finite distances (empty doc → +inf, NaN embeddings)
+            // never enter the top-k; total_cmp keeps the sort panic-free.
+            if d.is_finite() {
+                top.push((j, d));
+                top.sort_by(|a, b| a.1.total_cmp(&b.1));
+                top.truncate(k);
+            }
         };
         for &j in order.iter().take(k) {
             eval_exact(j, &mut top, &mut stats);
@@ -130,7 +136,13 @@ impl PrunedRetrieval {
         // both lower-bound the exact EMD, so their max is a valid (and
         // tighter) bound; neither dominates pointwise.
         for &j in order.iter().skip(k) {
-            let kth = top.last().map(|&(_, d)| d).unwrap_or(Real::INFINITY);
+            // The k-th best bound is only valid once k finite candidates
+            // are in hand (non-finite evaluations don't enter `top`).
+            let kth = if top.len() < k {
+                Real::INFINITY
+            } else {
+                top.last().map(|&(_, d)| d).unwrap_or(Real::INFINITY)
+            };
             let lb = wcd[j].max(rwmd::rwmd_with_support(embeddings, query, &support_of(j)));
             if lb > kth {
                 stats.pruned_by_rwmd += 1;
@@ -188,6 +200,32 @@ mod tests {
                     "q{q} rank {i}: {ja}:{da} vs {jb}:{db}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn nan_distances_do_not_panic_retrieval() {
+        // Poison the embedding of a word that appears only on the document
+        // side: the affected documents' WCD/RWMD/WMD all go NaN. Ranking
+        // must not panic (f64::total_cmp) and NaN documents must never
+        // enter the returned top-k.
+        let mut corpus = corpus();
+        let query = corpus.query(0).clone();
+        let poisoned = (0..corpus.vocab_size())
+            .find(|&i| {
+                let has_doc_nnz = corpus.c.row_ptr()[i] < corpus.c.row_ptr()[i + 1];
+                has_doc_nnz && !query.idx.contains(&(i as u32))
+            })
+            .expect("a document word outside the query");
+        corpus.embeddings.row_mut(poisoned).fill(f64::NAN);
+        let pool = Pool::new(2);
+        let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+        let retrieval = PrunedRetrieval::new(SinkhornConfig::default(), 5);
+        let out = retrieval.retrieve(&corpus.embeddings, &query, &corpus.c, &cents, &pool);
+        assert!(!out.top.is_empty(), "finite documents must still rank");
+        assert!(out.top.iter().all(|&(_, d)| d.is_finite()));
+        for w in out.top.windows(2) {
+            assert!(w[0].1 <= w[1].1);
         }
     }
 

@@ -16,7 +16,7 @@ use crate::util::SharedSlice;
 use crate::Real;
 use std::time::{Duration, Instant};
 
-use super::solver::{Prepared, SinkhornConfig, SolveOutput};
+use super::solver::{empty_columns, Prepared, SinkhornConfig, SolveOutput};
 
 /// Wall-clock per pipeline stage (the Table-1 rows).
 #[derive(Clone, Debug, Default)]
@@ -189,6 +189,14 @@ impl DenseSolver {
                 wmd[j] += urow[j] * krow[j];
             }
         }
+        // Empty documents: x[:, j] collapses to 0 after one iteration (no
+        // pattern entries feed it), u = 1/x = inf, and inf · 0 above gives
+        // NaN — report +inf, matching the sparse solver's contract.
+        for (w, &e) in wmd.iter_mut().zip(&empty_columns(c)) {
+            if e {
+                *w = Real::INFINITY;
+            }
+        }
         times.finish = t.elapsed();
 
         (
@@ -347,6 +355,42 @@ mod tests {
         let (b, times) = dense.solve_prepared(&prep, &corpus.c, &pool);
         assert_eq!(a.wmd, b.wmd, "shared factors must give the identical pipeline result");
         assert_eq!(times.cdist_precompute, Duration::ZERO, "preparation happened elsewhere");
+    }
+
+    #[test]
+    fn empty_document_reports_infinity_like_sparse() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(300)
+            .num_docs(20)
+            .embedding_dim(8)
+            .num_queries(1)
+            .query_words(5, 5)
+            .seed(37)
+            .build();
+        // Rebuild c with column 4 emptied.
+        let k = 4;
+        let mut coo = crate::sparse::Coo::new(corpus.c.nrows(), corpus.c.ncols());
+        for (i, j, v) in corpus.c.iter() {
+            if j != k {
+                coo.push(i, j, v);
+            }
+        }
+        let c = Csr::from_coo(coo);
+        let pool = Pool::new(2);
+        let config = SinkhornConfig { tolerance: 0.0, max_iter: 8, ..Default::default() };
+        let dense = DenseSolver::new(config);
+        let (out, _) = dense.solve(&corpus.embeddings, corpus.query(0), &c, &pool);
+        assert!(out.wmd[k].is_infinite() && out.wmd[k] > 0.0, "got {}", out.wmd[k]);
+        let sparse = SparseSolver::new(config);
+        let s = sparse.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &c, &pool);
+        for (j, (x, y)) in out.wmd.iter().zip(&s.wmd).enumerate() {
+            if j == k {
+                continue;
+            }
+            assert!(x.is_finite(), "dense doc {j} poisoned: {x}");
+            assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()), "doc {j}: {x} vs {y}");
+        }
+        assert_ne!(out.argmin(), Some(k));
     }
 
     #[test]

@@ -11,7 +11,8 @@
 use crate::dist::{precompute_factors, QueryFactors};
 use crate::parallel::{balanced_nnz_partition, NnzRange, Pool};
 use crate::sparse::ops::{
-    fused_type1, fused_type1_private, fused_type1_transposed, fused_type2, sddmm, spmm_atomic,
+    fused_type1, fused_type1_batch, fused_type1_private, fused_type1_transposed,
+    fused_type1_transposed_batch, fused_type2, fused_type2_batch, sddmm, spmm_atomic,
     PrivateBuffers, TransposedPattern,
 };
 use crate::sparse::{Csr, Dense};
@@ -33,6 +34,15 @@ pub enum IterateKernel {
     /// Unfused: SDDMM into a materialized `w`, then SpMM (the paper's
     /// pre-fusion variant, kept as the ablation baseline).
     Unfused,
+}
+
+impl IterateKernel {
+    /// Whether [`SparseSolver::solve_batch`] has a cross-query batched
+    /// kernel for this variant (otherwise it falls back to a per-query
+    /// loop — callers reporting batching metrics should check this).
+    pub fn has_batched_path(self) -> bool {
+        matches!(self, IterateKernel::FusedAtomic | IterateKernel::FusedTransposed)
+    }
 }
 
 /// Solver configuration (paper defaults: `λ = −(−10)`… the Python code
@@ -107,21 +117,25 @@ pub struct SolveOutput {
 }
 
 impl SolveOutput {
-    /// Index of the most similar target document.
+    /// Index of the most similar target document. Non-finite distances
+    /// (empty documents report `+inf`; a poisoned embedding can produce
+    /// NaN) never win.
     pub fn argmin(&self) -> Option<usize> {
         self.wmd
             .iter()
             .enumerate()
             .filter(|(_, v)| v.is_finite())
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
     }
 
     /// Indices of the `k` most similar documents, ascending by distance.
+    /// Non-finite distances are excluded (so fewer than `k` entries can
+    /// come back); `total_cmp` keeps the sort panic-free regardless.
     pub fn top_k(&self, k: usize) -> Vec<(usize, Real)> {
         let mut pairs: Vec<(usize, Real)> =
             self.wmd.iter().copied().enumerate().filter(|(_, v)| v.is_finite()).collect();
-        pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        pairs.sort_by(|a, b| a.1.total_cmp(&b.1));
         pairs.truncate(k);
         pairs
     }
@@ -151,12 +165,20 @@ impl SparseSolver {
     }
 
     /// Phase 2: iterate to the WMD vector against all columns of `c`.
+    ///
+    /// **Empty documents** (target columns with no non-zeros) report
+    /// `Real::INFINITY`: there is no transport plan to a document with no
+    /// words. Without the guard a zero-support column leaves `x_row` all
+    /// zeros, `update_u`'s renormalization divides by a zero mean and
+    /// poisons `u` with NaN, while the type-2 epilogue sums nothing — the
+    /// empty document would score `WMD = 0` and win every argmin.
     pub fn solve(&self, prep: &Prepared, c: &Csr, pool: &Pool) -> SolveOutput {
         assert_eq!(c.nrows(), prep.factors.vocab_size(), "c/vocabulary mismatch");
         let v_r = prep.v_r();
         let n = c.ncols();
         let f = &prep.factors;
         let parts = balanced_nnz_partition(c.row_ptr(), pool.nthreads());
+        let empty = empty_columns(c);
 
         // x = ones(v_r, N) / v_r, stored transposed (N × v_r); u = 1/x.
         let mut x_t = Dense::filled(n, v_r, 1.0 / v_r as Real);
@@ -191,7 +213,7 @@ impl SparseSolver {
                     || iterations == self.config.max_iter);
             // One fused pass: marginal residual (needs the OLD u against
             // the RAW new x) + per-column renormalization + u update.
-            let residual = update_u(&mut x_new, &mut u_t, &f.r, check, pool);
+            let residual = update_u(&mut x_new, &mut u_t, &f.r, &empty, check, pool);
             std::mem::swap(&mut x_t, &mut x_new);
             if check && residual <= self.config.tolerance {
                 converged = true;
@@ -203,7 +225,117 @@ impl SparseSolver {
         // the pattern folds v and the (K⊙M) reduction together.
         let mut wmd = vec![0.0; n];
         fused_type2(c, &f.kt, &f.km_t, &u_t, &mut wmd, pool, &parts);
+        for (w, &e) in wmd.iter_mut().zip(&empty) {
+            if e {
+                *w = Real::INFINITY;
+            }
+        }
         SolveOutput { wmd, iterations, converged }
+    }
+
+    /// Cross-query batched solve: `B` prepared queries against the same
+    /// target matrix, iterated in **one fused pass over `c` per Sinkhorn
+    /// step** — each nnz of the CSR updates every active query's state
+    /// before the traversal moves on, amortizing the row-pointer walk and
+    /// its cache misses across the batch (the coordinator's dispatch path).
+    ///
+    /// Per-query convergence masks let early-converging queries drop out
+    /// of the iterate without stalling the rest; each query's output
+    /// (`wmd`, `iterations`, `converged`) matches what the per-query
+    /// [`SparseSolver::solve`] would have produced — bitwise on one
+    /// thread, to rounding (atomic accumulation order) otherwise.
+    ///
+    /// Kernels without a batched variant ([`IterateKernel::FusedPrivate`],
+    /// [`IterateKernel::Unfused`] — both exist as ablation baselines)
+    /// fall back to a per-query loop.
+    pub fn solve_batch(&self, preps: &[&Prepared], c: &Csr, pool: &Pool) -> Vec<SolveOutput> {
+        if !self.config.kernel.has_batched_path() {
+            return preps.iter().map(|&p| self.solve(p, c, pool)).collect();
+        }
+        let b = preps.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        for p in preps {
+            assert_eq!(c.nrows(), p.factors.vocab_size(), "c/vocabulary mismatch");
+        }
+        let n = c.ncols();
+        let parts = balanced_nnz_partition(c.row_ptr(), pool.nthreads());
+        let empty = empty_columns(c);
+        // The pattern (and its column partition) is shared by the whole
+        // batch — built once, another cross-query amortization.
+        let transposed = match self.config.kernel {
+            IterateKernel::FusedTransposed => {
+                let tp = TransposedPattern::build(c);
+                let col_parts = tp.column_parts(pool.nthreads());
+                Some((tp, col_parts))
+            }
+            _ => None,
+        };
+        let kts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kt).collect();
+        let kor_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kor_t).collect();
+        let km_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.km_t).collect();
+        let rs: Vec<&[Real]> = preps.iter().map(|p| p.factors.r.as_slice()).collect();
+
+        let mut x_t: Vec<Dense> =
+            preps.iter().map(|p| Dense::filled(n, p.v_r(), 1.0 / p.v_r() as Real)).collect();
+        let mut x_new: Vec<Dense> = preps.iter().map(|p| Dense::zeros(n, p.v_r())).collect();
+        let mut u_t: Vec<Dense> =
+            preps.iter().map(|p| Dense::filled(n, p.v_r(), p.v_r() as Real)).collect();
+        let mut iterations = vec![0usize; b];
+        let mut converged = vec![false; b];
+        let mut active = vec![true; b];
+
+        let mut iter = 0;
+        while iter < self.config.max_iter && active.iter().any(|&a| a) {
+            {
+                let u_refs: Vec<&Dense> = u_t.iter().collect();
+                match &transposed {
+                    None => fused_type1_batch(
+                        c, &kts, &kor_ts, &u_refs, &mut x_new, &active, pool, &parts,
+                    ),
+                    Some((tp, col_parts)) => fused_type1_transposed_batch(
+                        c, tp, &kts, &kor_ts, &u_refs, &mut x_new, &active, pool, col_parts,
+                    ),
+                }
+            }
+            iter += 1;
+            let check = self.config.tolerance > 0.0
+                && (iter % self.config.check_every == 0 || iter == self.config.max_iter);
+            let residuals =
+                update_u_batch(&mut x_new, &mut u_t, &rs, &empty, &active, check, pool);
+            for q in 0..b {
+                if !active[q] {
+                    continue;
+                }
+                iterations[q] = iter;
+                std::mem::swap(&mut x_t[q], &mut x_new[q]);
+                if check && residuals[q] <= self.config.tolerance {
+                    converged[q] = true;
+                    active[q] = false;
+                }
+            }
+        }
+
+        // Batched epilogue: every query's final u (frozen at its own
+        // convergence point) feeds one shared type-2 pass.
+        let mut wmds: Vec<Vec<Real>> = (0..b).map(|_| vec![0.0; n]).collect();
+        {
+            let u_refs: Vec<&Dense> = u_t.iter().collect();
+            fused_type2_batch(c, &kts, &km_ts, &u_refs, &mut wmds, pool, &parts);
+        }
+        wmds.into_iter()
+            .zip(iterations)
+            .zip(converged)
+            .map(|((mut wmd, iterations), converged)| {
+                for (w, &e) in wmd.iter_mut().zip(&empty) {
+                    if e {
+                        *w = Real::INFINITY;
+                    }
+                }
+                SolveOutput { wmd, iterations, converged }
+            })
+            .collect()
     }
 
     /// One-shot convenience: prepare + solve.
@@ -269,11 +401,26 @@ impl SparseSolver {
 ///   same traversal, only when `check` is set.
 ///
 /// `x_t` is `N × v_r` (transposed), so a *column* of `x` is a *row* here.
+///
+/// Rows flagged in `empty` (zero-support target columns) are skipped
+/// entirely: their iterate row is all zeros, so the mean-1 renormalization
+/// would divide by zero and poison `u` with NaN/inf, and their residual
+/// (undeliverable mass, constant 1) would block convergence forever. The
+/// solve reports those documents as `+inf` in the epilogue instead.
+///
 /// Returns the max residual over documents (0.0 when not checking).
-fn update_u(x_new: &mut Dense, u_t: &mut Dense, r: &[Real], check: bool, pool: &Pool) -> Real {
+fn update_u(
+    x_new: &mut Dense,
+    u_t: &mut Dense,
+    r: &[Real],
+    empty: &[bool],
+    check: bool,
+    pool: &Pool,
+) -> Real {
     let n = x_new.nrows();
     let vr = x_new.ncols();
     debug_assert_eq!(r.len(), vr);
+    debug_assert_eq!(empty.len(), n);
     let x_view = SharedSlice::new(x_new.as_mut_slice());
     let u_view = SharedSlice::new(u_t.as_mut_slice());
     pool.parallel_reduce(
@@ -281,6 +428,9 @@ fn update_u(x_new: &mut Dense, u_t: &mut Dense, r: &[Real], check: bool, pool: &
         0.0f64,
         |rows, worst| {
             for j in rows {
+                if empty[j] {
+                    continue;
+                }
                 // SAFETY: row j is owned by exactly one thread.
                 let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
                 let u_row = unsafe { u_view.slice_mut(j * vr, vr) };
@@ -304,6 +454,85 @@ fn update_u(x_new: &mut Dense, u_t: &mut Dense, r: &[Real], check: bool, pool: &
         },
         Real::max,
     )
+}
+
+/// Batched [`update_u`]: one parallel region renormalizes every active
+/// query's iterate and computes per-query residuals (the per-query
+/// convergence masks), instead of `B` fork/join barriers per Sinkhorn
+/// step. Row-wise arithmetic is identical to the single-query pass, so
+/// the batched update is bitwise equivalent per query.
+fn update_u_batch(
+    x_new: &mut [Dense],
+    u_t: &mut [Dense],
+    rs: &[&[Real]],
+    empty: &[bool],
+    active: &[bool],
+    check: bool,
+    pool: &Pool,
+) -> Vec<Real> {
+    let b = x_new.len();
+    debug_assert_eq!(u_t.len(), b);
+    debug_assert_eq!(rs.len(), b);
+    debug_assert_eq!(active.len(), b);
+    if b == 0 {
+        return Vec::new();
+    }
+    let n = x_new[0].nrows();
+    debug_assert_eq!(empty.len(), n);
+    let vrs: Vec<usize> = x_new.iter().map(|x| x.ncols()).collect();
+    let x_views: Vec<SharedSlice<Real>> =
+        x_new.iter_mut().map(|x| SharedSlice::new(x.as_mut_slice())).collect();
+    let u_views: Vec<SharedSlice<Real>> =
+        u_t.iter_mut().map(|u| SharedSlice::new(u.as_mut_slice())).collect();
+    pool.parallel_reduce(
+        n,
+        vec![0.0f64; b],
+        |rows, worst| {
+            for j in rows {
+                if empty[j] {
+                    continue;
+                }
+                for q in 0..b {
+                    if !active[q] {
+                        continue;
+                    }
+                    let vr = vrs[q];
+                    // SAFETY: row j of query q is owned by exactly one thread.
+                    let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
+                    let u_row = unsafe { u_views[q].slice_mut(j * vr, vr) };
+                    let r = rs[q];
+                    if check {
+                        let mut res = 0.0;
+                        for k in 0..vr {
+                            res += (u_row[k] * r[k] * x_row[k] - r[k]).abs();
+                        }
+                        if res > worst[q] {
+                            worst[q] = res;
+                        }
+                    }
+                    let mean: Real = x_row.iter().sum::<Real>() / vr as Real;
+                    let inv_mean = 1.0 / mean;
+                    for k in 0..vr {
+                        let xn = x_row[k] * inv_mean;
+                        x_row[k] = xn;
+                        u_row[k] = 1.0 / xn;
+                    }
+                }
+            }
+        },
+        |a, c| a.into_iter().zip(c).map(|(x, y)| x.max(y)).collect(),
+    )
+}
+
+/// `empty[j]` ⇔ target column `j` has no non-zeros (an empty document).
+/// Shared with the dense baseline so both in-process backends report the
+/// same `WMD = +inf` for empty documents.
+pub(crate) fn empty_columns(c: &Csr) -> Vec<bool> {
+    let mut empty = vec![true; c.ncols()];
+    for &j in c.col_idx() {
+        empty[j as usize] = false;
+    }
+    empty
 }
 
 #[cfg(test)]
@@ -425,6 +654,178 @@ mod tests {
             assert!(w[0].1 <= w[1].1);
         }
         assert_eq!(out.argmin(), Some(top[0].0));
+    }
+
+    /// `c` with target column `k` emptied (an empty document).
+    fn drop_column(c: &Csr, k: usize) -> Csr {
+        let mut coo = crate::sparse::Coo::new(c.nrows(), c.ncols());
+        for (i, j, v) in c.iter() {
+            if j != k {
+                coo.push(i, j, v);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn empty_document_ranks_last_with_infinite_wmd() {
+        // Regression: a zero-support column used to leave x_row all zero,
+        // update_u divided by the zero mean (u poisoned with NaN) and the
+        // type-2 epilogue summed nothing — the empty doc scored WMD = 0
+        // and won every argmin.
+        let corpus = toy();
+        let pool = Pool::new(4);
+        let k = 7;
+        let c = drop_column(&corpus.c, k);
+        for kernel in [
+            IterateKernel::FusedAtomic,
+            IterateKernel::FusedPrivate,
+            IterateKernel::FusedTransposed,
+            IterateKernel::Unfused,
+        ] {
+            let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+            let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &c, &pool);
+            assert!(
+                out.wmd[k].is_infinite() && out.wmd[k] > 0.0,
+                "{kernel:?}: empty doc must report +inf, got {}",
+                out.wmd[k]
+            );
+            for (j, v) in out.wmd.iter().enumerate() {
+                if j != k {
+                    assert!(v.is_finite(), "{kernel:?}: doc {j} poisoned: {v}");
+                }
+            }
+            assert_ne!(out.argmin(), Some(k), "{kernel:?}: empty doc won argmin");
+            assert!(
+                out.top_k(c.ncols()).iter().all(|&(j, _)| j != k),
+                "{kernel:?}: empty doc in top_k"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_document_does_not_block_convergence() {
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let c = drop_column(&corpus.c, 0);
+        let solver = SparseSolver::new(SinkhornConfig {
+            lambda: 3.0,
+            tolerance: 1e-5,
+            max_iter: 5000,
+            ..Default::default()
+        });
+        let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &c, &pool);
+        assert!(out.converged, "empty column's undeliverable mass stalled the residual");
+    }
+
+    #[test]
+    fn argmin_and_top_k_ignore_nan_and_inf() {
+        let out = SolveOutput {
+            wmd: vec![Real::NAN, 2.0, Real::INFINITY, 1.0],
+            iterations: 1,
+            converged: false,
+        };
+        assert_eq!(out.argmin(), Some(3));
+        assert_eq!(out.top_k(10), vec![(3, 1.0), (1, 2.0)]);
+        let none = SolveOutput {
+            wmd: vec![Real::NAN, Real::INFINITY],
+            iterations: 1,
+            converged: false,
+        };
+        assert_eq!(none.argmin(), None);
+        assert!(none.top_k(3).is_empty());
+    }
+
+    fn batch_corpus() -> SyntheticCorpus {
+        SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .n_topics(4)
+            .num_queries(8)
+            .query_words(5, 12)
+            .seed(23)
+            .build()
+    }
+
+    #[test]
+    fn solve_batch_agrees_with_solve_across_kernels_and_sizes() {
+        let corpus = batch_corpus();
+        let pool = Pool::new(4);
+        for kernel in [
+            IterateKernel::FusedAtomic,
+            IterateKernel::FusedPrivate,
+            IterateKernel::FusedTransposed,
+            IterateKernel::Unfused,
+        ] {
+            // Default tolerance/check cadence so queries converge at
+            // different iterations — exercises the per-query masks.
+            let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+            let preps: Vec<Prepared> = corpus
+                .queries
+                .iter()
+                .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+                .collect();
+            let singles: Vec<SolveOutput> =
+                preps.iter().map(|p| solver.solve(p, &corpus.c, &pool)).collect();
+            for bsz in [1usize, 4, 8] {
+                let prefs: Vec<&Prepared> = preps[..bsz].iter().collect();
+                let outs = solver.solve_batch(&prefs, &corpus.c, &pool);
+                assert_eq!(outs.len(), bsz);
+                for (q, (o, s)) in outs.iter().zip(&singles).enumerate() {
+                    assert_eq!(o.iterations, s.iterations, "{kernel:?} b={bsz} q={q}");
+                    assert_eq!(o.converged, s.converged, "{kernel:?} b={bsz} q={q}");
+                    for (a, b) in o.wmd.iter().zip(&s.wmd) {
+                        assert!(
+                            (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+                            "{kernel:?} b={bsz} q={q}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_batch_single_thread_is_bitwise_identical() {
+        let corpus = batch_corpus();
+        let pool = Pool::new(1);
+        for kernel in [IterateKernel::FusedAtomic, IterateKernel::FusedTransposed] {
+            let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+            let preps: Vec<Prepared> = corpus
+                .queries
+                .iter()
+                .take(4)
+                .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+                .collect();
+            let prefs: Vec<&Prepared> = preps.iter().collect();
+            let outs = solver.solve_batch(&prefs, &corpus.c, &pool);
+            for (p, o) in preps.iter().zip(&outs) {
+                let s = solver.solve(p, &corpus.c, &pool);
+                assert_eq!(o.wmd, s.wmd, "{kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_batch_handles_empty_batch_and_empty_documents() {
+        let corpus = batch_corpus();
+        let pool = Pool::new(2);
+        let solver = SparseSolver::new(SinkhornConfig::default());
+        assert!(solver.solve_batch(&[], &corpus.c, &pool).is_empty());
+        let k = 3;
+        let c = drop_column(&corpus.c, k);
+        let preps: Vec<Prepared> = corpus
+            .queries
+            .iter()
+            .take(3)
+            .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+            .collect();
+        let prefs: Vec<&Prepared> = preps.iter().collect();
+        for out in solver.solve_batch(&prefs, &c, &pool) {
+            assert!(out.wmd[k].is_infinite() && out.wmd[k] > 0.0);
+            assert_ne!(out.argmin(), Some(k));
+        }
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! * [`fused_type2`] — the epilogue:
 //!   `WMD[j] = Σ_e w_e · ⟨(K⊙M)ᵀ[row], uᵀ[col]⟩`, which is algebraically
 //!   `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` restricted to the pattern of `c`.
+//! * [`fused_type1_batch`] / [`fused_type1_transposed_batch`] /
+//!   [`fused_type2_batch`] — cross-query batched variants: one CSR
+//!   traversal serves `B` prepared queries (per-query stride, per-query
+//!   active mask), amortizing the pattern walk across concurrent solves.
 
 use super::for_each_nnz_in;
 use crate::parallel::{AtomicF64Slice, NnzRange, Pool};
@@ -91,6 +95,7 @@ impl PrivateBuffers {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn fused_type1_private(
     c: &Csr,
     kt: &Dense,
@@ -144,6 +149,7 @@ pub fn fused_type1_private(
 /// iteration-invariant) and reused across all Sinkhorn iterations; the
 /// document's `uᵀ` row also stays hot across the column's entries —
 /// the cache-reuse idea of the paper's §9 tiling discussion.
+#[allow(clippy::too_many_arguments)]
 pub fn fused_type1_transposed(
     c: &Csr,
     tp: &super::spmm::TransposedPattern,
@@ -213,6 +219,199 @@ pub fn fused_type2(
     for t in 0..nthreads {
         for j in 0..n {
             wmd[j] += partials[t * n + j];
+        }
+    }
+}
+
+/// Cross-query batched fused iterate (type 1): one traversal of the CSR
+/// serves `B` queries. Per nnz `(i, j)` the row cursor, column index and
+/// `c[i,j]` are read **once**, then every *active* query `q` runs its own
+/// SDDMM + scatter with its own stride `v_r(q)`:
+/// `w = c[i,j] / ⟨kts[q][i,:], u_ts[q][j,:]⟩`, `x_ts[q][j,:] += w · kor_ts[q][i,:]`.
+///
+/// This is the amortization the dispatcher batches for (PIUMA follow-up,
+/// arXiv:2107.06433): the pattern walk, its branch logic and the `c`
+/// cache misses are paid once per nnz instead of once per (nnz, query).
+/// Queries whose `active[q]` is false (already converged) are skipped
+/// without stalling the rest of the batch; their `x_ts[q]` is untouched.
+///
+/// All per-query shapes follow the single-query [`fused_type1`]
+/// contract; the batch slices must share length `B`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_type1_batch(
+    c: &Csr,
+    kts: &[&Dense],
+    kor_ts: &[&Dense],
+    u_ts: &[&Dense],
+    x_ts: &mut [Dense],
+    active: &[bool],
+    pool: &Pool,
+    parts: &[NnzRange],
+) {
+    let b = kts.len();
+    debug_assert_eq!(kor_ts.len(), b);
+    debug_assert_eq!(u_ts.len(), b);
+    debug_assert_eq!(x_ts.len(), b);
+    debug_assert_eq!(active.len(), b);
+    for q in 0..b {
+        let vr = kts[q].ncols();
+        debug_assert_eq!(kor_ts[q].ncols(), vr);
+        debug_assert_eq!(u_ts[q].ncols(), vr);
+        debug_assert_eq!(x_ts[q].ncols(), vr);
+        debug_assert_eq!(kts[q].nrows(), c.nrows());
+        debug_assert_eq!(u_ts[q].nrows(), c.ncols());
+    }
+    let act: Vec<usize> = (0..b).filter(|&q| active[q]).collect();
+    if act.is_empty() {
+        return;
+    }
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    // Serial fast path: direct writes, same rationale as fused_type1.
+    if pool.nthreads() == 1 {
+        for &q in &act {
+            x_ts[q].fill(0.0);
+        }
+        for row in 0..c.nrows() {
+            for e in row_ptr[row]..row_ptr[row + 1] {
+                let j = col_idx[e] as usize;
+                let cv = values[e];
+                for &q in &act {
+                    let vr = kts[q].ncols();
+                    let w = cv / dot(kts[q].row(row), u_ts[q].row(j));
+                    let x = x_ts[q].as_mut_slice();
+                    axpy(&mut x[j * vr..(j + 1) * vr], w, kor_ts[q].row(row));
+                }
+            }
+        }
+        return;
+    }
+    for &q in &act {
+        x_ts[q].fill(0.0);
+    }
+    let x_atomics: Vec<AtomicF64Slice> =
+        x_ts.iter_mut().map(|x| AtomicF64Slice::new(x.as_mut_slice())).collect();
+    pool.run(|tid, _nt| {
+        let part = parts[tid];
+        for_each_nnz_in(part, row_ptr, |e, row| {
+            let j = col_idx[e] as usize;
+            let cv = values[e];
+            for &q in &act {
+                let u_row = u_ts[q].row(j);
+                let w = cv / dot(kts[q].row(row), u_row);
+                let k_row = kor_ts[q].row(row);
+                let base = j * k_row.len();
+                let xa = &x_atomics[q];
+                for (k, &kv) in k_row.iter().enumerate() {
+                    xa.fetch_add(base + k, w * kv);
+                }
+            }
+        });
+    });
+}
+
+/// Cross-query batched fused iterate over the **transposed pattern** —
+/// atomic-free: the pattern (and its column partition) is shared by the
+/// whole batch, so a thread that owns column `j` owns row `j` of *every*
+/// query's `xᵀ`. Batch semantics match [`fused_type1_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_type1_transposed_batch(
+    c: &Csr,
+    tp: &super::spmm::TransposedPattern,
+    kts: &[&Dense],
+    kor_ts: &[&Dense],
+    u_ts: &[&Dense],
+    x_ts: &mut [Dense],
+    active: &[bool],
+    pool: &Pool,
+    col_parts: &[NnzRange],
+) {
+    let b = kts.len();
+    debug_assert_eq!(kor_ts.len(), b);
+    debug_assert_eq!(u_ts.len(), b);
+    debug_assert_eq!(x_ts.len(), b);
+    debug_assert_eq!(active.len(), b);
+    let act: Vec<usize> = (0..b).filter(|&q| active[q]).collect();
+    if act.is_empty() {
+        return;
+    }
+    for &q in &act {
+        debug_assert_eq!(x_ts[q].nrows() + 1, tp.col_ptr.len());
+        debug_assert_eq!(x_ts[q].ncols(), kts[q].ncols());
+        x_ts[q].fill(0.0);
+    }
+    let values = c.values();
+    let x_views: Vec<SharedSlice<Real>> =
+        x_ts.iter_mut().map(|x| SharedSlice::new(x.as_mut_slice())).collect();
+    pool.run(|tid, _nt| {
+        let part = col_parts[tid];
+        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+            let i = tp.src_row[e] as usize;
+            let cv = values[tp.src_pos[e] as usize];
+            for &q in &act {
+                let u_row = u_ts[q].row(j);
+                let w = cv / dot(kts[q].row(i), u_row);
+                let vr = kts[q].ncols();
+                // SAFETY: column j (row j of every query's x) is owned by
+                // this thread — the column partition never splits a column.
+                let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
+                axpy(x_row, w, kor_ts[q].row(i));
+            }
+        });
+    });
+}
+
+/// Cross-query batched fused epilogue (type 2): the final WMD vector of
+/// every query in one CSR pass. Per-thread partials are `B·N` scalars
+/// (`acc[q·N + j]`), reduced after the region in the same thread order as
+/// the single-query [`fused_type2`], so given identical `u` the batched
+/// reduction is bitwise identical to `B` single-query reductions.
+pub fn fused_type2_batch(
+    c: &Csr,
+    kts: &[&Dense],
+    km_ts: &[&Dense],
+    u_ts: &[&Dense],
+    wmds: &mut [Vec<Real>],
+    pool: &Pool,
+    parts: &[NnzRange],
+) {
+    let b = kts.len();
+    debug_assert_eq!(km_ts.len(), b);
+    debug_assert_eq!(u_ts.len(), b);
+    assert_eq!(wmds.len(), b);
+    let n = c.ncols();
+    for wmd in wmds.iter() {
+        assert_eq!(wmd.len(), n);
+    }
+    if b == 0 {
+        return;
+    }
+    let nthreads = pool.nthreads();
+    let mut partials = vec![0.0; nthreads * b * n];
+    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
+    {
+        let pview = SharedSlice::new(&mut partials);
+        pool.run(|tid, _nt| {
+            let part = parts[tid];
+            // SAFETY: each thread owns partial slice tid.
+            let acc = unsafe { pview.slice_mut(tid * b * n, b * n) };
+            for_each_nnz_in(part, row_ptr, |e, row| {
+                let j = col_idx[e] as usize;
+                let cv = values[e];
+                for q in 0..b {
+                    let u_row = u_ts[q].row(j);
+                    let w = cv / dot(kts[q].row(row), u_row);
+                    acc[q * n + j] += w * dot(km_ts[q].row(row), u_row);
+                }
+            });
+        });
+    }
+    for (q, wmd) in wmds.iter_mut().enumerate() {
+        wmd.fill(0.0);
+        for t in 0..nthreads {
+            let acc = &partials[t * b * n + q * n..t * b * n + (q + 1) * n];
+            for (o, &v) in wmd.iter_mut().zip(acc) {
+                *o += v;
+            }
         }
     }
 }
@@ -316,6 +515,130 @@ mod tests {
             fused_type2(&c, &kt, &km_t, &u_t, &mut wmd, &pool, &parts);
             for (a, b) in wmd.iter().zip(&oracle) {
                 assert!((a - b).abs() < 1e-11 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// A batch of queries over one shared pattern, with per-query v_r.
+    fn batch_case(
+        rng: &mut Pcg64,
+        v: usize,
+        n: usize,
+        nnz: usize,
+        vrs: &[usize],
+    ) -> (Csr, Vec<Dense>, Vec<Dense>, Vec<Dense>, Vec<Dense>) {
+        let mut coo = Coo::new(v, n);
+        for _ in 0..nnz {
+            coo.push(rng.below(v), rng.below(n), rng.next_f64() + 0.1);
+        }
+        let c = Csr::from_coo(coo);
+        let kts: Vec<Dense> =
+            vrs.iter().map(|&vr| Dense::from_fn(v, vr, |_, _| rng.next_f64() + 0.2)).collect();
+        let kor_ts: Vec<Dense> =
+            vrs.iter().map(|&vr| Dense::from_fn(v, vr, |_, _| rng.next_f64() + 0.2)).collect();
+        let km_ts: Vec<Dense> =
+            vrs.iter().map(|&vr| Dense::from_fn(v, vr, |_, _| rng.next_f64())).collect();
+        let u_ts: Vec<Dense> =
+            vrs.iter().map(|&vr| Dense::from_fn(n, vr, |_, _| rng.next_f64() + 0.2)).collect();
+        (c, kts, kor_ts, km_ts, u_ts)
+    }
+
+    fn refs(ms: &[Dense]) -> Vec<&Dense> {
+        ms.iter().collect()
+    }
+
+    #[test]
+    fn type1_batch_equals_per_query() {
+        let mut rng = Pcg64::new(81);
+        let vrs = [3usize, 7, 5, 9];
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 45, 18, 250, &vrs);
+        for p in [1usize, 4, 7] {
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            // Per-query reference.
+            let mut expected = Vec::new();
+            for q in 0..vrs.len() {
+                let mut x = Dense::zeros(18, vrs[q]);
+                fused_type1(&c, &kts[q], &kor_ts[q], &u_ts[q], &mut x, &pool, &parts);
+                expected.push(x);
+            }
+            // Batched, all active.
+            let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(18, vr)).collect();
+            fused_type1_batch(
+                &c, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
+                &[true; 4], &pool, &parts,
+            );
+            for q in 0..vrs.len() {
+                assert!(x_ts[q].max_abs_diff(&expected[q]) < 1e-11, "p={p} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn type1_batch_skips_inactive_queries() {
+        let mut rng = Pcg64::new(82);
+        let vrs = [4usize, 6, 5];
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 30, 12, 150, &vrs);
+        let pool = Pool::new(3);
+        let parts = balanced_nnz_partition(c.row_ptr(), 3);
+        // Sentinel-fill: an inactive (converged) query's x must be untouched.
+        let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(12, vr, 7.0)).collect();
+        fused_type1_batch(
+            &c, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
+            &[true, false, true], &pool, &parts,
+        );
+        assert!(x_ts[1].as_slice().iter().all(|&v| v == 7.0), "inactive query was written");
+        let mut expected = Dense::zeros(12, vrs[0]);
+        fused_type1(&c, &kts[0], &kor_ts[0], &u_ts[0], &mut expected, &pool, &parts);
+        assert!(x_ts[0].max_abs_diff(&expected) < 1e-11);
+    }
+
+    #[test]
+    fn type1_transposed_batch_equals_per_query() {
+        let mut rng = Pcg64::new(83);
+        let vrs = [5usize, 8, 4];
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 55, 21, 320, &vrs);
+        let tp = crate::sparse::ops::TransposedPattern::build(&c);
+        for p in [1usize, 4, 6] {
+            let pool = Pool::new(p);
+            let col_parts = tp.column_parts(p);
+            let mut expected = Vec::new();
+            for q in 0..vrs.len() {
+                let mut x = Dense::zeros(21, vrs[q]);
+                fused_type1_transposed(
+                    &c, &tp, &kts[q], &kor_ts[q], &u_ts[q], &mut x, &pool, &col_parts,
+                );
+                expected.push(x);
+            }
+            let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(21, vr)).collect();
+            fused_type1_transposed_batch(
+                &c, &tp, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
+                &[true; 3], &pool, &col_parts,
+            );
+            for q in 0..vrs.len() {
+                // Same per-column accumulation order → bitwise equal.
+                assert_eq!(x_ts[q], expected[q], "p={p} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn type2_batch_equals_per_query() {
+        let mut rng = Pcg64::new(84);
+        let vrs = [6usize, 3, 8, 5];
+        let (c, kts, _kor, km_ts, u_ts) = batch_case(&mut rng, 40, 15, 200, &vrs);
+        for p in [1usize, 4] {
+            let pool = Pool::new(p);
+            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let mut wmds: Vec<Vec<Real>> = (0..vrs.len()).map(|_| vec![0.0; 15]).collect();
+            fused_type2_batch(
+                &c, &refs(&kts), &refs(&km_ts), &refs(&u_ts), &mut wmds, &pool, &parts,
+            );
+            for q in 0..vrs.len() {
+                let mut expected = vec![0.0; 15];
+                fused_type2(&c, &kts[q], &km_ts[q], &u_ts[q], &mut expected, &pool, &parts);
+                // Same traversal and reduction order → bitwise equal.
+                assert_eq!(wmds[q], expected, "p={p} q={q}");
             }
         }
     }
