@@ -66,6 +66,9 @@ pub struct RunConfig {
     pub sinkhorn: SinkhornConfig,
     /// Worker threads (0 → all logical CPUs).
     pub threads: usize,
+    /// Target-set shards for the query service (0 or 1 → one monolithic
+    /// pool; `S ≥ 2` → S column slices, each with its own pool).
+    pub shards: usize,
     /// Directory of AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -77,6 +80,11 @@ impl RunConfig {
         } else {
             self.threads
         }
+    }
+
+    /// Shard count for the service (`0` in the file means "unsharded").
+    pub fn shards(&self) -> usize {
+        self.shards.max(1)
     }
 
     /// Parse a TOML-subset file: `[section]` headers, `key = value` lines,
@@ -118,6 +126,7 @@ impl RunConfig {
         }
         match (section, key) {
             ("", "threads") => self.threads = p(value)?,
+            ("", "shards") => self.shards = p(value)?,
             ("", "artifacts_dir") => self.artifacts_dir = value.to_string(),
             ("corpus", "vocab_size") => self.corpus.vocab_size = p(value)?,
             ("corpus", "num_docs") => self.corpus.num_docs = p(value)?,
@@ -150,6 +159,7 @@ impl RunConfig {
     pub fn render(&self) -> String {
         let mut top = BTreeMap::new();
         top.insert("threads", self.threads.to_string());
+        top.insert("shards", self.shards.to_string());
         top.insert("artifacts_dir", format!("\"{}\"", self.artifacts_dir));
         let kernel = match self.sinkhorn.kernel {
             IterateKernel::FusedAtomic => "fused_atomic",
@@ -159,13 +169,14 @@ impl RunConfig {
         };
         format!(
             "# sinkhorn-wmd run configuration\n\
-             threads = {}\nartifacts_dir = {}\n\n\
+             threads = {}\nshards = {}\nartifacts_dir = {}\n\n\
              [corpus]\nvocab_size = {}\nnum_docs = {}\nembedding_dim = {}\n\
              n_topics = {}\ntokens_per_doc = {}\nnum_queries = {}\n\
              query_words_min = {}\nquery_words_max = {}\nseed = {}\n\n\
              [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
              check_every = {}\nkernel = \"{}\"\n",
             top["threads"],
+            top["shards"],
             top["artifacts_dir"],
             self.corpus.vocab_size,
             self.corpus.num_docs,
@@ -193,6 +204,7 @@ mod tests {
     fn parse_roundtrip() {
         let cfg = RunConfig {
             threads: 8,
+            shards: 4,
             artifacts_dir: "artifacts".into(),
             corpus: CorpusConfig { vocab_size: 1234, ..Default::default() },
             sinkhorn: SinkhornConfig { lambda: 7.5, kernel: IterateKernel::Unfused, ..Default::default() },
@@ -200,6 +212,7 @@ mod tests {
         let text = cfg.render();
         let back = RunConfig::from_str(&text).unwrap();
         assert_eq!(back.threads, 8);
+        assert_eq!(back.shards, 4);
         assert_eq!(back.corpus.vocab_size, 1234);
         assert_eq!(back.sinkhorn.lambda, 7.5);
         assert_eq!(back.sinkhorn.kernel, IterateKernel::Unfused);
@@ -221,6 +234,14 @@ mod tests {
     fn threads_zero_means_all() {
         let cfg = RunConfig::default();
         assert!(cfg.threads() >= 1);
+    }
+
+    #[test]
+    fn shards_zero_means_unsharded() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 0);
+        assert_eq!(cfg.shards(), 1);
+        assert_eq!(RunConfig::from_str("shards = 3").unwrap().shards(), 3);
     }
 
     #[test]

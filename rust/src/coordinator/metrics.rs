@@ -21,6 +21,9 @@ pub struct Metrics {
     prepare_cache_misses: AtomicU64,
     batched_solves: AtomicU64,
     batched_queries: AtomicU64,
+    sharded_solves: AtomicU64,
+    shard_solves: AtomicU64,
+    shard_iterations: AtomicU64,
 }
 
 impl Metrics {
@@ -67,6 +70,15 @@ impl Metrics {
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// One sharded dispatch: `shards` per-shard solves answered a batch,
+    /// executing `iterations` Sinkhorn iterations in total across all
+    /// (shard, query) pairs — the per-shard counts folded together.
+    pub fn record_sharded_solve(&self, shards: usize, iterations: u64) {
+        self.sharded_solves.fetch_add(1, Ordering::Relaxed);
+        self.shard_solves.fetch_add(shards as u64, Ordering::Relaxed);
+        self.shard_iterations.fetch_add(iterations, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -88,6 +100,9 @@ impl Metrics {
             prepare_cache_misses: self.prepare_cache_misses.load(Ordering::Relaxed),
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            sharded_solves: self.sharded_solves.load(Ordering::Relaxed),
+            shard_solves: self.shard_solves.load(Ordering::Relaxed),
+            shard_iterations: self.shard_iterations.load(Ordering::Relaxed),
         }
     }
 }
@@ -115,6 +130,14 @@ pub struct MetricsSnapshot {
     pub batched_solves: u64,
     /// Queries answered through a batched solve.
     pub batched_queries: u64,
+    /// Batches dispatched through the sharded (multi-pool) path.
+    pub sharded_solves: u64,
+    /// Per-shard solves executed (`sharded_solves × S` with a fixed
+    /// shard count).
+    pub shard_solves: u64,
+    /// Sinkhorn iterations summed over every (shard, query) pair of the
+    /// sharded dispatches — the per-shard iteration counts folded in.
+    pub shard_iterations: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -138,7 +161,8 @@ impl MetricsSnapshot {
         format!(
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
              backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={} \
-             batched: solves={} queries={}",
+             batched: solves={} queries={} \
+             sharded: batches={} shard-solves={} shard-iters={}",
             self.queries,
             self.batches,
             self.errors,
@@ -151,7 +175,10 @@ impl MetricsSnapshot {
             self.prepare_cache_hits,
             self.prepare_cache_misses,
             self.batched_solves,
-            self.batched_queries
+            self.batched_queries,
+            self.sharded_solves,
+            self.shard_solves,
+            self.shard_iterations
         )
     }
 }
@@ -214,6 +241,18 @@ mod tests {
         assert_eq!(s.batched_solves, 2);
         assert_eq!(s.batched_queries, 6);
         assert!(s.report().contains("batched: solves=2 queries=6"));
+    }
+
+    #[test]
+    fn sharded_solve_counters() {
+        let m = Metrics::new();
+        m.record_sharded_solve(4, 128);
+        m.record_sharded_solve(4, 64);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_solves, 2);
+        assert_eq!(s.shard_solves, 8);
+        assert_eq!(s.shard_iterations, 192);
+        assert!(s.report().contains("sharded: batches=2 shard-solves=8 shard-iters=192"));
     }
 
     #[test]

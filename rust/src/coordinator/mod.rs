@@ -14,12 +14,19 @@
 //! The paper's use-case ("finding whether a given tweet is similar to any
 //! other tweets of a given day") is exactly this service: a fixed target
 //! set, a stream of source queries, each answered with the WMD vector.
+//!
+//! With `ServiceConfig::shards ≥ 2` the sparse path runs **sharded**
+//! ([`shard`]): the target set is split by column range into independent
+//! slices, each with its own pool; every popped batch fans out to all
+//! shards and the per-shard `wmd` slices are merged back into full-length
+//! responses (fig. 5's multi-socket model as real multi-pool dispatch).
 
 pub mod batcher;
 pub mod metrics;
 pub mod pjrt_backend;
 pub mod router;
 pub mod service;
+pub mod shard;
 pub mod state;
 
 pub use batcher::{BatchQueue, BatcherConfig};
@@ -27,4 +34,5 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use pjrt_backend::PjrtBackend;
 pub use router::{Backend, Router};
 pub use service::{QueryRequest, QueryResponse, ServiceConfig, WmdService};
+pub use shard::{DocShard, ShardBatchOutput, ShardSet, ShardedDocStore};
 pub use state::{DocStore, PreparedCache, PreparedKey};

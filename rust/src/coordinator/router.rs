@@ -21,6 +21,17 @@ pub enum Backend {
     DensePjrt,
 }
 
+impl Backend {
+    /// Whether the sharded (column-partitioned) dispatch path can serve
+    /// this backend. Only the in-process sparse solver consumes target
+    /// slices; the dense baseline and the PJRT artifacts are built
+    /// against the full target set, so they stay monolithic even when
+    /// the service runs sharded.
+    pub fn supports_sharding(self) -> bool {
+        matches!(self, Backend::SparseRust)
+    }
+}
+
 /// Padding strategy: the query's heaviest word is **duplicated** into
 /// `bucket − v_r + 1` co-located entries with its mass split equally.
 /// Splitting a supply point into identical copies leaves the optimal

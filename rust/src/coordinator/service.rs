@@ -6,6 +6,7 @@ use super::batcher::{BatchQueue, BatcherConfig};
 use super::metrics::Metrics;
 use super::pjrt_backend::PjrtBackend;
 use super::router::Backend;
+use super::shard::{ShardSet, ShardedDocStore};
 use super::state::{DocStore, PreparedCache, PreparedKey};
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
@@ -36,6 +37,17 @@ pub struct ServiceConfig {
     /// per-query loop. `false` restores the per-query dispatch (the
     /// ablation baseline for `benches/batch_dispatch`).
     pub cross_query_batch: bool,
+    /// Number of target-set shards. `1` (default) keeps the monolithic
+    /// single-pool path; `S ≥ 2` splits the target CSR into `S`
+    /// nnz-balanced column slices, each with its own solver pool
+    /// ([`super::ShardSet`]); every sparse-backend batch fans out to all
+    /// shards and the merged response is full-length. Dense and PJRT
+    /// backends stay monolithic (they are built against the full set).
+    pub shards: usize,
+    /// Worker threads per shard pool when `shards ≥ 2`. `0` divides
+    /// `threads` evenly across the shards (min 1 each); size it to one
+    /// socket's cores to mirror the paper's multi-socket layout.
+    pub shard_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -48,6 +60,8 @@ impl Default for ServiceConfig {
             prepare_cache: 32,
             prepare_cache_bytes: 512 << 20,
             cross_query_batch: true,
+            shards: 1,
+            shard_threads: 0,
         }
     }
 }
@@ -196,6 +210,18 @@ fn dispatcher(
     let pool = Pool::new(nthreads);
     let sparse = SparseSolver::new(config.sinkhorn);
     let dense = DenseSolver::new(config.sinkhorn);
+    // S ≥ 2: split the target set into nnz-balanced column slices, one
+    // worker pool per shard. The dispatcher's own pool keeps serving the
+    // prepare phase and the monolithic (dense/PJRT) backends.
+    let shard_set = (config.shards >= 2).then(|| {
+        let per_shard = if config.shard_threads == 0 {
+            (nthreads / config.shards).max(1)
+        } else {
+            config.shard_threads
+        };
+        let sharded = ShardedDocStore::split(Arc::clone(&store), config.shards);
+        ShardSet::start(sharded, config.sinkhorn, per_shard)
+    });
     // The cache lives on the dispatcher thread — no locking on the hot path.
     let mut cache = (config.prepare_cache > 0).then(|| {
         let cache = PreparedCache::new(config.prepare_cache);
@@ -221,7 +247,8 @@ fn dispatcher(
             }
             let prefer = job.req.prefer.unwrap_or(config.prefer);
             let backend = resolve_backend(prefer, pjrt.as_ref(), &job.req.query);
-            if backend == Backend::SparseRust && config.cross_query_batch {
+            let sharded = shard_set.is_some() && backend.supports_sharding();
+            if backend == Backend::SparseRust && (config.cross_query_batch || sharded) {
                 let query = &job.req.query;
                 let prep =
                     resolve_prepared(&store, &pool, &sparse, cache.as_mut(), &metrics, query);
@@ -257,14 +284,47 @@ fn dispatcher(
                 }
             }
         }
-        // Phase 2: the cross-query batched solve, fanned back out to the
-        // per-request reply channels.
+        // Phase 2: the deferred sparse solve — cross-query batched,
+        // sharded, or both — fanned back out to the reply channels.
         if !sparse_jobs.is_empty() {
-            let preps: Vec<&Prepared> = sparse_jobs.iter().map(|(_, p, _)| p.as_ref()).collect();
-            let outs = sparse.solve_batch(&preps, &store.c, &pool);
+            let outs: Vec<crate::sinkhorn::SolveOutput> = match &shard_set {
+                Some(shards) if config.cross_query_batch => {
+                    let preps: Vec<Arc<Prepared>> =
+                        sparse_jobs.iter().map(|(_, p, _)| Arc::clone(p)).collect();
+                    let merged = shards.solve_batch(&preps);
+                    metrics.record_sharded_solve(
+                        shards.num_shards(),
+                        merged.shard_iterations.iter().sum::<usize>() as u64,
+                    );
+                    merged.outputs
+                }
+                Some(shards) => {
+                    // Batching off but sharding on: every query still
+                    // fans out across the shard pools, one at a time.
+                    sparse_jobs
+                        .iter()
+                        .flat_map(|(_, p, _)| {
+                            let merged = shards.solve_batch(&[Arc::clone(p)]);
+                            metrics.record_sharded_solve(
+                                shards.num_shards(),
+                                merged.shard_iterations.iter().sum::<usize>() as u64,
+                            );
+                            merged.outputs
+                        })
+                        .collect()
+                }
+                None => {
+                    let preps: Vec<&Prepared> =
+                        sparse_jobs.iter().map(|(_, p, _)| p.as_ref()).collect();
+                    sparse.solve_batch(&preps, &store.c, &pool)
+                }
+            };
             // Only count real fused batches: solve_batch falls back to a
             // per-query loop for kernels without a batched variant.
-            if sparse_jobs.len() > 1 && config.sinkhorn.kernel.has_batched_path() {
+            if sparse_jobs.len() > 1
+                && config.cross_query_batch
+                && config.sinkhorn.kernel.has_batched_path()
+            {
                 metrics.record_batched_solve(sparse_jobs.len());
             }
             for ((job, _prep, started), out) in sparse_jobs.into_iter().zip(outs) {
@@ -562,6 +622,93 @@ mod tests {
         assert_eq!(snap.queries, 2);
         assert_eq!(snap.batched_solves, 1);
         assert_eq!(snap.batched_queries, 2);
+        service.shutdown();
+    }
+
+    #[test]
+    fn sharded_dispatch_is_bitwise_identical_to_unsharded() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(4)
+            .query_words(5, 10)
+            .seed(43)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        // Fixed iterations + one thread everywhere → the merged sharded
+        // answer must reproduce the monolithic answer bit for bit.
+        let mk = |shards: usize| {
+            WmdService::start(
+                Arc::clone(&store),
+                ServiceConfig {
+                    threads: 1,
+                    shards,
+                    shard_threads: 1,
+                    sinkhorn: SinkhornConfig {
+                        tolerance: 0.0,
+                        max_iter: 12,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+                None,
+            )
+        };
+        let base = mk(1);
+        let sharded = mk(3);
+        for i in 0..4 {
+            let a = base.submit_wait(QueryRequest::new(corpus.query(i).clone()));
+            let b = sharded.submit_wait(QueryRequest::new(corpus.query(i).clone()));
+            assert!(a.is_ok() && b.is_ok());
+            assert_eq!(a.wmd, b.wmd, "query {i}: sharded result differs");
+            assert_eq!(a.iterations, b.iterations, "query {i}");
+        }
+        let snap = sharded.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.sharded_solves, 4, "every dispatch went through the shard set");
+        assert_eq!(snap.shard_solves, 12, "4 dispatches × 3 shards");
+        assert!(snap.shard_iterations > 0, "per-shard iteration counts folded in");
+        assert_eq!(base.metrics().snapshot().sharded_solves, 0);
+        base.shutdown();
+        sharded.shutdown();
+    }
+
+    #[test]
+    fn sharded_batch_coalesces_into_one_dispatch() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(4)
+            .query_words(5, 9)
+            .seed(47)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            store,
+            ServiceConfig {
+                threads: 1,
+                shards: 2,
+                shard_threads: 1,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) },
+                ..Default::default()
+            },
+            None,
+        );
+        let receivers: Vec<_> = (0..4)
+            .map(|i| service.submit(QueryRequest::new(corpus.query(i).clone())))
+            .collect();
+        for rx in receivers {
+            let resp = rx.recv().unwrap();
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            assert_eq!(resp.wmd.len(), 30, "merged response is full-length");
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.sharded_solves, 1, "four coalesced queries → one sharded dispatch");
+        assert_eq!(snap.shard_solves, 2);
+        assert_eq!(snap.batched_solves, 1, "the fused batch is still counted");
         service.shutdown();
     }
 

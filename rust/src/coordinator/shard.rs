@@ -1,0 +1,369 @@
+//! Sharded target-set dispatch — fig. 5's multi-socket model made real.
+//!
+//! The paper scales one query across the cores of a single shared-memory
+//! node; its evaluation machine is 4 × 24-core sockets. This layer
+//! partitions the *document* axis instead (the composition the PIUMA
+//! follow-up, arXiv:2107.06433, and the LC-RWMD line, arXiv:1711.07227,
+//! both use): the `V × N` target CSR is split by **column range** into
+//! `S` independent slices, each owned by its own worker thread with its
+//! own [`Pool`] (size a shard's pool to a socket and pin it there to
+//! mirror the paper's topology). The coordinator fans each popped batch
+//! out to every shard — reusing [`SparseSolver::solve_batch`] per shard —
+//! and merges the per-shard `wmd` slices back into full-length responses
+//! ([`SolveOutput::merge_shards`]).
+//!
+//! Prepared query factors ([`Prepared`]) depend only on the embeddings
+//! and the query, **not** on the target slice, so they are shard-agnostic:
+//! the dispatcher's `PreparedCache` keeps one entry per query and every
+//! shard shares it through the same `Arc` — no per-shard precompute, no
+//! per-shard cache key.
+
+use super::state::DocStore;
+use crate::parallel::Pool;
+use crate::sinkhorn::{Prepared, SinkhornConfig, SolveOutput, SparseSolver};
+use crate::sparse::{Csr, Dense};
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+
+/// One column slice of the target set.
+#[derive(Clone, Debug)]
+pub struct DocShard {
+    /// Rebased `V × n_s` slice of the target CSR: local column `j`
+    /// is global document `col_range.start + j`.
+    pub c: Csr,
+    /// The global column range this shard owns.
+    pub col_range: Range<usize>,
+}
+
+/// The sharded view of a [`DocStore`]: the store itself (embeddings and
+/// metadata are shard-agnostic and stay shared) plus `S` contiguous
+/// column slices of its target matrix, in order.
+#[derive(Clone, Debug)]
+pub struct ShardedDocStore {
+    store: Arc<DocStore>,
+    shards: Vec<DocShard>,
+}
+
+impl ShardedDocStore {
+    /// Split into `s` contiguous column ranges balanced by **non-zeros**:
+    /// the per-shard iterate cost is O(nnz·v_r), so nnz — not column
+    /// count — is the load to equalize (the same yardstick as the
+    /// nnz-balanced row partitioner inside each pool). Falls back to an
+    /// even column split for an all-empty matrix.
+    pub fn split(store: Arc<DocStore>, s: usize) -> Self {
+        assert!(s >= 1, "need at least one shard");
+        let n = store.num_docs();
+        let mut prefix = vec![0usize; n + 1];
+        for &j in store.c.col_idx() {
+            prefix[j as usize + 1] += 1;
+        }
+        for j in 0..n {
+            prefix[j + 1] += prefix[j];
+        }
+        let total = prefix[n];
+        let mut ranges = Vec::with_capacity(s);
+        let mut start = 0usize;
+        for k in 1..=s {
+            let end = if k == s {
+                n
+            } else if total == 0 {
+                crate::parallel::static_chunk(n, k - 1, s).end
+            } else {
+                // First column boundary whose nnz prefix reaches shard
+                // k's fair share.
+                let target = total * k / s;
+                prefix.partition_point(|&p| p < target).clamp(start, n)
+            };
+            ranges.push(start..end);
+            start = end;
+        }
+        Self::with_ranges(store, ranges)
+    }
+
+    /// Build from explicit ranges: they must tile `0..num_docs` in order
+    /// (contiguous, no gaps or overlaps). Empty ranges are allowed — a
+    /// zero-column shard answers immediately with an empty slice and the
+    /// merge skips over it.
+    pub fn with_ranges(store: Arc<DocStore>, ranges: Vec<Range<usize>>) -> Self {
+        assert!(!ranges.is_empty(), "need at least one shard");
+        let n = store.num_docs();
+        let mut expect = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, expect, "shard ranges must be contiguous and in order");
+            assert!(r.end >= r.start && r.end <= n, "shard range {r:?} out of bounds");
+            expect = r.end;
+        }
+        assert_eq!(expect, n, "shard ranges must cover every target column");
+        let shards = ranges
+            .into_iter()
+            .map(|r| DocShard { c: store.c.slice_columns(r.clone()), col_range: r })
+            .collect();
+        Self { store, shards }
+    }
+
+    pub fn store(&self) -> &Arc<DocStore> {
+        &self.store
+    }
+
+    pub fn shards(&self) -> &[DocShard] {
+        &self.shards
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.store.num_docs()
+    }
+
+    /// Per-shard document centroids (the `prune` phase-1 precompute):
+    /// shard `s`'s matrix equals rows `col_range` of the full-corpus
+    /// [`crate::prune::centroids`], so shard-local pruned retrieval uses
+    /// the same WCD/RWMD bounds it would see unsharded.
+    pub fn shard_centroids(&self, pool: &Pool) -> Vec<Dense> {
+        self.shards
+            .iter()
+            .map(|sh| crate::prune::centroids(&self.store.embeddings, &sh.c, pool))
+            .collect()
+    }
+}
+
+struct ShardJob {
+    preps: Vec<Arc<Prepared>>,
+    reply: mpsc::Sender<(usize, Vec<SolveOutput>)>,
+    shard: usize,
+}
+
+struct ShardWorker {
+    tx: Option<mpsc::Sender<ShardJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    col_start: usize,
+}
+
+/// Merged result of one sharded batch dispatch.
+#[derive(Clone, Debug)]
+pub struct ShardBatchOutput {
+    /// One merged full-length [`SolveOutput`] per query (see
+    /// [`SolveOutput::merge_shards`] for the merge semantics).
+    pub outputs: Vec<SolveOutput>,
+    /// Sinkhorn iterations executed per shard, summed over the batch's
+    /// queries — the per-shard counts the service folds into its metrics.
+    pub shard_iterations: Vec<usize>,
+}
+
+/// A running shard fleet: one worker thread per [`DocShard`], each owning
+/// its slice, its own [`Pool`] and a [`SparseSolver`].
+/// [`ShardSet::solve_batch`] fans one prepared batch out to every shard
+/// concurrently and merges the slices; dropping the set shuts the
+/// workers down.
+pub struct ShardSet {
+    workers: Vec<ShardWorker>,
+    total_docs: usize,
+}
+
+impl ShardSet {
+    /// Spawn one worker per shard, each with a `threads_per_shard`-wide
+    /// pool. With `threads_per_shard = 1` every shard solves serially,
+    /// so a sharded run is bitwise-reproducible (the property the
+    /// equivalence tests pin down).
+    ///
+    /// Consumes the sharded store: each shard's slice **moves** into its
+    /// worker thread (the slices together are the size of the full
+    /// target CSR — cloning them would transiently double that at
+    /// startup).
+    pub fn start(
+        sharded: ShardedDocStore,
+        config: SinkhornConfig,
+        threads_per_shard: usize,
+    ) -> Self {
+        assert!(threads_per_shard >= 1, "each shard pool needs at least one thread");
+        let total_docs = sharded.num_docs();
+        let workers = sharded
+            .shards
+            .into_iter()
+            .enumerate()
+            .map(|(idx, shard)| {
+                let (tx, rx) = mpsc::channel::<ShardJob>();
+                let c = shard.c;
+                let handle = std::thread::Builder::new()
+                    .name(format!("wmd-shard-{idx}"))
+                    .spawn(move || {
+                        let pool = Pool::new(threads_per_shard);
+                        let solver = SparseSolver::new(config);
+                        while let Ok(job) = rx.recv() {
+                            let outs: Vec<SolveOutput> = if c.ncols() == 0 {
+                                // A zero-column shard has nothing to
+                                // iterate: empty slice, vacuously
+                                // converged, no iterations to fold.
+                                job.preps
+                                    .iter()
+                                    .map(|_| SolveOutput {
+                                        wmd: Vec::new(),
+                                        iterations: 0,
+                                        converged: true,
+                                    })
+                                    .collect()
+                            } else {
+                                let refs: Vec<&Prepared> =
+                                    job.preps.iter().map(|p| p.as_ref()).collect();
+                                solver.solve_batch(&refs, &c, &pool)
+                            };
+                            let _ = job.reply.send((job.shard, outs));
+                        }
+                    })
+                    .expect("spawn shard worker");
+                ShardWorker {
+                    tx: Some(tx),
+                    handle: Some(handle),
+                    col_start: shard.col_range.start,
+                }
+            })
+            .collect();
+        Self { workers, total_docs }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fan one prepared batch out to every shard, wait for all slices,
+    /// and merge back into one full-length [`SolveOutput`] per query.
+    pub fn solve_batch(&self, preps: &[Arc<Prepared>]) -> ShardBatchOutput {
+        let b = preps.len();
+        let s = self.workers.len();
+        if b == 0 {
+            return ShardBatchOutput { outputs: Vec::new(), shard_iterations: vec![0; s] };
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        for (idx, w) in self.workers.iter().enumerate() {
+            w.tx
+                .as_ref()
+                .expect("shard worker running")
+                .send(ShardJob { preps: preps.to_vec(), reply: reply_tx.clone(), shard: idx })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let mut per_shard: Vec<Option<Vec<SolveOutput>>> = (0..s).map(|_| None).collect();
+        for _ in 0..s {
+            let (idx, outs) = reply_rx.recv().expect("a shard worker died mid-batch");
+            debug_assert_eq!(outs.len(), b, "shard {idx} answered a different batch size");
+            per_shard[idx] = Some(outs);
+        }
+        let per_shard: Vec<Vec<SolveOutput>> =
+            per_shard.into_iter().map(|o| o.expect("every shard replied")).collect();
+        let shard_iterations: Vec<usize> =
+            per_shard.iter().map(|outs| outs.iter().map(|o| o.iterations).sum()).collect();
+        let mut columns: Vec<std::vec::IntoIter<SolveOutput>> =
+            per_shard.into_iter().map(|v| v.into_iter()).collect();
+        let outputs = (0..b)
+            .map(|_| {
+                let parts: Vec<(usize, SolveOutput)> = columns
+                    .iter_mut()
+                    .zip(&self.workers)
+                    .map(|(it, w)| (w.col_start, it.next().expect("one output per query")))
+                    .collect();
+                SolveOutput::merge_shards(self.total_docs, &parts)
+            })
+            .collect();
+        ShardBatchOutput { outputs, shard_iterations }
+    }
+}
+
+impl Drop for ShardSet {
+    fn drop(&mut self) {
+        // Close every channel first (workers exit their recv loop), then
+        // join — closing one-by-one would serialize the shutdowns.
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::SyntheticCorpus;
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(30)
+            .embedding_dim(12)
+            .num_queries(4)
+            .query_words(5, 9)
+            .seed(41)
+            .build()
+    }
+
+    #[test]
+    fn split_tiles_the_columns() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        for s in [1usize, 2, 3, 5] {
+            let sharded = ShardedDocStore::split(Arc::clone(&store), s);
+            assert_eq!(sharded.num_shards(), s);
+            let mut expect = 0usize;
+            let mut nnz = 0usize;
+            for sh in sharded.shards() {
+                assert_eq!(sh.col_range.start, expect);
+                assert_eq!(sh.c.ncols(), sh.col_range.len());
+                assert_eq!(sh.c.nrows(), store.vocab_size());
+                expect = sh.col_range.end;
+                nnz += sh.c.nnz();
+            }
+            assert_eq!(expect, store.num_docs());
+            assert_eq!(nnz, store.c.nnz(), "slices must partition the nnz");
+        }
+    }
+
+    #[test]
+    fn with_ranges_allows_empty_shards() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let n = store.num_docs();
+        let sharded =
+            ShardedDocStore::with_ranges(Arc::clone(&store), vec![0..0, 0..n, n..n]);
+        assert_eq!(sharded.num_shards(), 3);
+        assert_eq!(sharded.shards()[0].c.ncols(), 0);
+        assert_eq!(sharded.shards()[1].c.ncols(), n);
+        assert_eq!(sharded.shards()[2].c.ncols(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn with_ranges_rejects_gaps() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let n = store.num_docs();
+        let _ = ShardedDocStore::with_ranges(store, vec![0..5, 6..n]);
+    }
+
+    #[test]
+    fn shard_centroids_match_full_centroid_rows() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let pool = Pool::new(2);
+        let full = crate::prune::centroids(&store.embeddings, &store.c, &pool);
+        let sharded = ShardedDocStore::split(Arc::clone(&store), 3);
+        let per_shard = sharded.shard_centroids(&pool);
+        for (sh, cents) in sharded.shards().iter().zip(&per_shard) {
+            assert_eq!(cents.nrows(), sh.col_range.len());
+            for (local, global) in sh.col_range.clone().enumerate() {
+                for w in 0..full.ncols() {
+                    let a = cents.get(local, w);
+                    let b = full.get(global, w);
+                    assert!(
+                        (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                        "centroid mismatch at doc {global} dim {w}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}

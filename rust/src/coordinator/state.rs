@@ -81,15 +81,22 @@ impl DocStore {
         if query.nnz() == 0 {
             return Err("query has no words".into());
         }
-        let mut prev = 0u32;
+        let mut prev: Option<u32> = None;
         for (&i, &v) in query.idx.iter().zip(&query.val) {
             if i as usize >= query.dim {
                 return Err(format!("query word {i} out of vocabulary {}", query.dim));
             }
-            if i < prev {
-                return Err("query indices are not sorted".into());
+            // Strictly increasing: a *repeated* index would double-count
+            // the word's mass in the factors and alias two distinct
+            // histograms onto one PreparedKey content identity.
+            if let Some(p) = prev {
+                if i <= p {
+                    return Err(format!(
+                        "query indices are not strictly increasing ({p} then {i})"
+                    ));
+                }
             }
-            prev = i;
+            prev = Some(i);
             if !v.is_finite() || v <= 0.0 {
                 return Err(format!("query mass {v} for word {i} is not positive"));
             }
@@ -175,6 +182,10 @@ pub struct PreparedCache {
     max_bytes: usize,
     tick: u64,
     entries: Vec<CacheEntry>,
+    /// Running sum of `prep.factors.memory_bytes()` over `entries`,
+    /// maintained on insert/evict so the eviction loop is O(evictions),
+    /// not O(entries) per iteration.
+    bytes: usize,
 }
 
 impl PreparedCache {
@@ -183,7 +194,7 @@ impl PreparedCache {
     /// byte budget — compose with [`PreparedCache::with_max_bytes`].
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1, "use Option<PreparedCache> to disable caching");
-        Self { capacity, max_bytes: usize::MAX, tick: 0, entries: Vec::new() }
+        Self { capacity, max_bytes: usize::MAX, tick: 0, entries: Vec::new(), bytes: 0 }
     }
 
     /// Additionally bound the factor bytes held; LRU entries are evicted
@@ -208,9 +219,15 @@ impl PreparedCache {
         self.entries.is_empty()
     }
 
-    /// Approximate heap held by the cached factors.
+    /// Approximate heap held by the cached factors (O(1): a running
+    /// total maintained on insert/evict).
     pub fn memory_bytes(&self) -> usize {
-        self.entries.iter().map(|e| e.prep.factors.memory_bytes()).sum()
+        debug_assert_eq!(
+            self.bytes,
+            self.entries.iter().map(|e| e.prep.factors.memory_bytes()).sum::<usize>(),
+            "running byte total out of sync with entries"
+        );
+        self.bytes
     }
 
     /// Look up `key`, preparing and inserting on a miss (evicting the
@@ -236,7 +253,7 @@ impl PreparedCache {
         let new_bytes = prep.factors.memory_bytes();
         while !self.entries.is_empty()
             && (self.entries.len() >= self.capacity
-                || self.memory_bytes() + new_bytes > self.max_bytes)
+                || self.bytes + new_bytes > self.max_bytes)
         {
             let lru = self
                 .entries
@@ -245,9 +262,11 @@ impl PreparedCache {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
                 .expect("checked non-empty");
-            self.entries.swap_remove(lru);
+            let evicted = self.entries.swap_remove(lru);
+            self.bytes -= evicted.prep.factors.memory_bytes();
         }
         let entry = CacheEntry { fingerprint: fp, key, prep: Arc::clone(&prep), last_used: tick };
+        self.bytes += new_bytes;
         self.entries.push(entry);
         (prep, false)
     }
@@ -351,6 +370,22 @@ mod tests {
     }
 
     #[test]
+    fn running_byte_total_stays_consistent_under_churn() {
+        // memory_bytes() debug-asserts the running total against a full
+        // recompute; churn through inserts, hits and both eviction kinds
+        // (count bound and byte budget) to exercise every update site.
+        let entry_bytes = dummy_prep(0.0).factors.memory_bytes();
+        let mut cache = PreparedCache::new(3).with_max_bytes(2 * entry_bytes);
+        assert_eq!(cache.memory_bytes(), 0);
+        for round in 0..10usize {
+            cache.get_or_insert_with(key(&[(round % 5 + 1, 1)], 10.0), || dummy_prep(1.0));
+            assert!(cache.memory_bytes() <= 2 * entry_bytes);
+            assert_eq!(cache.memory_bytes(), cache.len() * entry_bytes);
+        }
+        assert_eq!(cache.len(), 2, "byte budget holds two entries");
+    }
+
+    #[test]
     fn check_query_rejects_malformed_hand_built_queries() {
         let tiny = TinyCorpus::load();
         let store = DocStore::from_tiny(&tiny);
@@ -365,6 +400,10 @@ mod tests {
         // Unsorted indices.
         let unsorted = SparseVec { dim, idx: vec![2, 1], val: vec![0.5, 0.5] };
         assert!(store.check_query(&unsorted).is_err());
+        // Duplicate index: sorted, normalized, but the repeated word
+        // double-counts mass and defeats the PreparedKey content dedup.
+        let duplicated = SparseVec { dim, idx: vec![1, 1], val: vec![0.5, 0.5] };
+        assert!(store.check_query(&duplicated).is_err());
         // idx/val length mismatch.
         let ragged = SparseVec { dim, idx: vec![1], val: vec![0.5, 0.5] };
         assert!(store.check_query(&ragged).is_err());

@@ -13,6 +13,13 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"WMDC";
 const VERSION: u32 = 1;
 
+/// Cap on *pre*-allocation from an untrusted length prefix (elements, so
+/// ≤ 8 MiB up front for f64/u64 payloads). A truncated or corrupted file
+/// can claim any `n` it likes; growth beyond the cap only happens as
+/// payload bytes actually arrive, so a lying prefix hits `read_exact`'s
+/// `UnexpectedEof` instead of a multi-GB allocation.
+const IO_PREALLOC_CAP: usize = 1 << 20;
+
 fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
@@ -33,7 +40,7 @@ fn write_f64s(w: &mut impl Write, xs: &[Real]) -> io::Result<()> {
 
 fn read_f64s(r: &mut impl Read) -> io::Result<Vec<Real>> {
     let n = read_u64(r)? as usize;
-    let mut out = Vec::with_capacity(n);
+    let mut out = Vec::with_capacity(n.min(IO_PREALLOC_CAP));
     let mut buf = [0u8; 8];
     for _ in 0..n {
         r.read_exact(&mut buf)?;
@@ -52,7 +59,7 @@ fn write_u32s(w: &mut impl Write, xs: &[u32]) -> io::Result<()> {
 
 fn read_u32s(r: &mut impl Read) -> io::Result<Vec<u32>> {
     let n = read_u64(r)? as usize;
-    let mut out = Vec::with_capacity(n);
+    let mut out = Vec::with_capacity(n.min(IO_PREALLOC_CAP));
     let mut buf = [0u8; 4];
     for _ in 0..n {
         r.read_exact(&mut buf)?;
@@ -71,7 +78,11 @@ fn write_usizes(w: &mut impl Write, xs: &[usize]) -> io::Result<()> {
 
 fn read_usizes(r: &mut impl Read) -> io::Result<Vec<usize>> {
     let n = read_u64(r)? as usize;
-    (0..n).map(|_| read_u64(r).map(|v| v as usize)).collect()
+    let mut out = Vec::with_capacity(n.min(IO_PREALLOC_CAP));
+    for _ in 0..n {
+        out.push(read_u64(r)? as usize);
+    }
+    Ok(out)
 }
 
 fn write_dense(w: &mut impl Write, d: &Dense) -> io::Result<()> {
@@ -104,15 +115,12 @@ fn read_csr(r: &mut impl Read) -> io::Result<Csr> {
     let row_ptr = read_usizes(r)?;
     let col_idx = read_u32s(r)?;
     let values = read_f64s(r)?;
-    // from_parts validates; map panics into io errors via catch is ugly —
-    // validate manually first.
-    if row_ptr.len() != nrows + 1
-        || col_idx.len() != values.len()
-        || *row_ptr.last().unwrap_or(&usize::MAX) != values.len()
-    {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "CSR structure invalid"));
-    }
-    Ok(Csr::from_parts(nrows, ncols, row_ptr, col_idx, values))
+    // Full structural validation (lengths, row_ptr monotonicity, column
+    // range/order): a corrupted-but-well-lengthed snapshot must come back
+    // as InvalidData, never panic inside the constructor.
+    Csr::try_from_parts(nrows, ncols, row_ptr, col_idx, values).map_err(|e| {
+        io::Error::new(io::ErrorKind::InvalidData, format!("CSR structure invalid: {e}"))
+    })
 }
 
 fn write_sparsevec(w: &mut impl Write, v: &SparseVec) -> io::Result<()> {
@@ -203,6 +211,86 @@ mod tests {
         assert_eq!(back.queries, corpus.queries);
         assert_eq!(back.doc_topics, corpus.doc_topics);
         assert_eq!(back.word_topic, corpus.word_topic);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lying_length_prefix_errors_without_huge_allocation() {
+        // A u64 prefix claiming ~2^61 elements followed by 8 payload
+        // bytes: must fail with UnexpectedEof after a capped (≤ 8 MiB)
+        // preallocation, not attempt a multi-EB Vec up front.
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX / 8).unwrap();
+        buf.extend_from_slice(&1.0f64.to_le_bytes());
+        let err = read_f64s(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        let err = read_u32s(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        let err = read_usizes(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn corrupted_csr_structure_is_invalid_data_not_panic() {
+        // Well-lengthed but structurally broken streams: every variant
+        // must surface as InvalidData through read_csr.
+        let encode = |nrows: u64, ncols: u64, row_ptr: &[usize], col_idx: &[u32], vals: &[Real]| {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, nrows).unwrap();
+            write_u64(&mut buf, ncols).unwrap();
+            write_usizes(&mut buf, row_ptr).unwrap();
+            write_u32s(&mut buf, col_idx).unwrap();
+            write_f64s(&mut buf, vals).unwrap();
+            buf
+        };
+        // Sanity: a well-formed stream parses.
+        assert!(read_csr(&mut &encode(2, 3, &[0, 1, 2], &[1, 0], &[1.0, 2.0])[..]).is_ok());
+        // Non-monotonic row_ptr (endpoints and lengths all consistent).
+        let nonmono = encode(3, 3, &[0, 2, 1, 2], &[0, 1], &[1.0, 2.0]);
+        let err = read_csr(&mut &nonmono[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Out-of-range column index.
+        let oob = encode(2, 3, &[0, 1, 2], &[1, 9], &[1.0, 2.0]);
+        let err = read_csr(&mut &oob[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Columns out of order within a row.
+        let unsorted = encode(1, 3, &[0, 2], &[2, 0], &[1.0, 2.0]);
+        let err = read_csr(&mut &unsorted[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // row_ptr pointing past the payload.
+        let overrun = encode(2, 3, &[0, 9, 2], &[1, 0], &[1.0, 2.0]);
+        let err = read_csr(&mut &overrun[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // nrows = u64::MAX with empty arrays: must not overflow `nrows+1`
+        // (debug) or index an empty row_ptr (release).
+        let huge = encode(u64::MAX, 1, &[], &[], &[]);
+        let err = read_csr(&mut &huge[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_snapshot_errors_cleanly() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(200)
+            .num_docs(10)
+            .embedding_dim(8)
+            .num_queries(2)
+            .query_words(3, 5)
+            .seed(4)
+            .build();
+        let dir = std::env::temp_dir().join(format!("wmdc-trunc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("full.wmdc");
+        save_corpus(&path, &corpus).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut the file at several depths (inside the header, the dense
+        // block, the CSR block, the trailing metadata): every prefix must
+        // load as Err, never panic or hang on allocation.
+        for cut in [3, 9, 40, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+            let p = dir.join(format!("cut-{cut}.wmdc"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_corpus(&p).is_err(), "prefix of {cut} bytes must not load");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -27,7 +27,7 @@ Subcommands:
   gen-corpus [--vocab N] [--docs N] [--dim N] [--seed S]
   query --text \"...\"           WMD against the tiny real corpus
   solve [--threads P] [--queries K] [--vocab N] [--docs N]
-  serve-demo [--threads P] [--requests K] [--prefer sparse|dense|pjrt]
+  serve-demo [--threads P] [--shards S] [--requests K] [--prefer sparse|dense|pjrt]
   gen-config                   print a default run configuration
 
 Common options:
@@ -206,6 +206,7 @@ fn best_match_cells(out: &sinkhorn_wmd::sinkhorn::SolveOutput) -> (String, Strin
 fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let threads = args.get_or("threads", cfg.threads())?;
+    let shards = args.get_or("shards", cfg.shards())?;
     let requests = args.get_or("requests", 20usize)?;
     let prefer = match args.get("prefer").unwrap_or("sparse") {
         "sparse" => Backend::SparseRust,
@@ -221,12 +222,16 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
         store,
         ServiceConfig {
             threads,
+            shards,
             sinkhorn: cfg.sinkhorn,
             prefer,
             ..Default::default()
         },
         pjrt_dir,
     );
+    if shards >= 2 {
+        println!("sharded dispatch: {shards} target-set shards");
+    }
     println!("submitting {requests} requests ...");
     let t0 = Instant::now();
     let receivers: Vec<_> = (0..requests)

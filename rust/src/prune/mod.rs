@@ -48,6 +48,30 @@ pub struct PrunedTopK {
     pub stats: PruneStats,
 }
 
+/// Merge per-shard pruned retrievals into the global top-k. Each part
+/// covers one column slice of the target set and is given as
+/// `(col_offset, PrunedTopK)`: local doc ids are rebased by their shard
+/// offset, the union is re-ranked (`total_cmp`, so a NaN-free sort), and
+/// stats are summed. Every shard must have retrieved at least `k`
+/// candidates (or all of its documents) for the merged top-k to be exact
+/// — the same local-top-k ⊇ global-top-k argument as any distributed
+/// retrieval.
+pub fn merge_topk(parts: &[(usize, PrunedTopK)], k: usize) -> PrunedTopK {
+    let mut top: Vec<(usize, Real)> = parts
+        .iter()
+        .flat_map(|(off, p)| p.top.iter().map(move |&(j, d)| (off + j, d)))
+        .collect();
+    top.sort_by(|a, b| a.1.total_cmp(&b.1));
+    top.truncate(k);
+    let mut stats = PruneStats::default();
+    for (_, p) in parts {
+        stats.total_docs += p.stats.total_docs;
+        stats.exact_evals += p.stats.exact_evals;
+        stats.pruned_by_rwmd += p.stats.pruned_by_rwmd;
+    }
+    PrunedTopK { top, stats }
+}
+
 /// k-NN retrieval with WCD prefetch ordering + RWMD pruning.
 pub struct PrunedRetrieval {
     solver: SparseSolver,
@@ -226,6 +250,49 @@ mod tests {
         assert!(out.top.iter().all(|&(_, d)| d.is_finite()));
         for w in out.top.windows(2) {
             assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn sharded_pruned_retrieval_matches_unsharded() {
+        // Per-shard retrieval: each shard ranks/prunes its own column
+        // slice with its own centroids (centroids of a slice equal the
+        // corresponding rows of the full centroid matrix); the merged
+        // local top-ks must reproduce the unsharded top-k.
+        let corpus = corpus();
+        let pool = Pool::new(2);
+        let config = SinkhornConfig {
+            lambda: 20.0,
+            max_iter: 4000,
+            tolerance: 1e-9,
+            ..Default::default()
+        };
+        let k = 5;
+        let retrieval = PrunedRetrieval::new(config, k);
+        let n = corpus.c.ncols();
+        let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+        let query = corpus.query(0);
+        let whole = retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool);
+        for cuts in [vec![0, n / 2, n], vec![0, n / 3, 2 * n / 3, n]] {
+            let parts: Vec<(usize, PrunedTopK)> = cuts
+                .windows(2)
+                .map(|w| {
+                    let slice = corpus.c.slice_columns(w[0]..w[1]);
+                    let slice_cents = centroids(&corpus.embeddings, &slice, &pool);
+                    let local =
+                        retrieval.retrieve(&corpus.embeddings, query, &slice, &slice_cents, &pool);
+                    (w[0], local)
+                })
+                .collect();
+            let merged = merge_topk(&parts, k);
+            assert_eq!(merged.top.len(), k);
+            assert_eq!(merged.stats.total_docs, n);
+            for (i, ((ja, da), (jb, db))) in merged.top.iter().zip(&whole.top).enumerate() {
+                assert!(
+                    (da - db).abs() < 1e-6 * (1.0 + db.abs()),
+                    "cuts {cuts:?} rank {i}: {ja}:{da} vs {jb}:{db}"
+                );
+            }
         }
     }
 

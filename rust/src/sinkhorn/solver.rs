@@ -129,6 +129,40 @@ impl SolveOutput {
             .map(|(i, _)| i)
     }
 
+    /// Merge per-shard outputs back into one full-length output. Each
+    /// part covers a contiguous column range of the full target set and
+    /// is given as `(col_offset, output)`; together the parts must tile
+    /// `0..total_docs` exactly (zero-column shards contribute an empty
+    /// `wmd` and are fine).
+    ///
+    /// Merge semantics:
+    /// * `wmd[col_offset + j] = part.wmd[j]` — `+inf` empty-document
+    ///   entries land at their global indices untouched;
+    /// * `iterations` is the **max** over shards (the wall-clock-relevant
+    ///   count: shards iterate concurrently);
+    /// * `converged` requires every shard to have converged.
+    pub fn merge_shards(total_docs: usize, parts: &[(usize, SolveOutput)]) -> SolveOutput {
+        let mut wmd = vec![Real::NAN; total_docs];
+        let mut covered = 0usize;
+        let mut iterations = 0usize;
+        let mut converged = true;
+        for (offset, part) in parts {
+            assert!(
+                offset + part.wmd.len() <= total_docs,
+                "shard slice {}..{} out of range for {} documents",
+                offset,
+                offset + part.wmd.len(),
+                total_docs
+            );
+            wmd[*offset..offset + part.wmd.len()].copy_from_slice(&part.wmd);
+            covered += part.wmd.len();
+            iterations = iterations.max(part.iterations);
+            converged &= part.converged;
+        }
+        assert_eq!(covered, total_docs, "shard slices must tile the target set exactly");
+        SolveOutput { wmd, iterations, converged }
+    }
+
     /// Indices of the `k` most similar documents, ascending by distance.
     /// Non-finite distances are excluded (so fewer than `k` entries can
     /// come back); `total_cmp` keeps the sort panic-free regardless.
@@ -826,6 +860,50 @@ mod tests {
             assert!(out.wmd[k].is_infinite() && out.wmd[k] > 0.0);
             assert_ne!(out.argmin(), Some(k));
         }
+    }
+
+    #[test]
+    fn merge_shards_reassembles_column_slices_bitwise() {
+        // Per-column Sinkhorn state is independent of the other columns,
+        // so with the early exit disabled (fixed iterations) a column
+        // slice solves bitwise-identically to its columns in the full
+        // solve — the invariant the sharded dispatch layer rests on.
+        let corpus = batch_corpus();
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(SinkhornConfig {
+            tolerance: 0.0,
+            max_iter: 12,
+            ..Default::default()
+        });
+        let prep = solver.prepare(&corpus.embeddings, corpus.query(0), &pool);
+        let full = solver.solve(&prep, &corpus.c, &pool);
+        let n = corpus.c.ncols();
+        for cuts in [vec![0, n], vec![0, n / 2, n], vec![0, 0, n / 3, n]] {
+            let parts: Vec<(usize, SolveOutput)> = cuts
+                .windows(2)
+                .map(|w| {
+                    let c = corpus.c.slice_columns(w[0]..w[1]);
+                    // Zero-column slices skip the solver, like the shard
+                    // runtime does.
+                    let out = if c.ncols() == 0 {
+                        SolveOutput { wmd: Vec::new(), iterations: 0, converged: true }
+                    } else {
+                        solver.solve(&prep, &c, &pool)
+                    };
+                    (w[0], out)
+                })
+                .collect();
+            let merged = SolveOutput::merge_shards(n, &parts);
+            assert_eq!(merged.wmd, full.wmd, "cuts {cuts:?}: shard merge must be bitwise");
+            assert_eq!(merged.iterations, full.iterations, "cuts {cuts:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tile the target set")]
+    fn merge_shards_rejects_gaps() {
+        let part = SolveOutput { wmd: vec![1.0, 2.0], iterations: 1, converged: true };
+        let _ = SolveOutput::merge_shards(3, &[(0, part)]);
     }
 
     #[test]

@@ -35,7 +35,7 @@ impl Csr {
         }
     }
 
-    /// Build directly from parts (validated).
+    /// Build directly from parts (validated; panics on invalid input).
     pub fn from_parts(
         nrows: usize,
         ncols: usize,
@@ -43,9 +43,21 @@ impl Csr {
         col_idx: Vec<u32>,
         values: Vec<Real>,
     ) -> Self {
+        Self::try_from_parts(nrows, ncols, row_ptr, col_idx, values).expect("invalid CSR parts")
+    }
+
+    /// Fallible [`Csr::from_parts`] for untrusted input (snapshot loading):
+    /// a malformed structure comes back as `Err`, never a panic.
+    pub fn try_from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        values: Vec<Real>,
+    ) -> Result<Self, String> {
         let m = Self { nrows, ncols, row_ptr, col_idx, values };
-        m.validate().expect("invalid CSR parts");
-        m
+        m.validate()?;
+        Ok(m)
     }
 
     /// Build from a dense matrix, keeping entries with |v| > 0.
@@ -64,7 +76,10 @@ impl Csr {
 
     /// Structural + ordering invariants.
     pub fn validate(&self) -> Result<(), String> {
-        if self.row_ptr.len() != self.nrows + 1 {
+        // checked_sub, not `nrows + 1`: a crafted snapshot can claim
+        // `nrows == usize::MAX` (the addition would overflow) together
+        // with an empty row_ptr (the indexing below would panic).
+        if self.row_ptr.len().checked_sub(1) != Some(self.nrows) {
             return Err("row_ptr length".into());
         }
         if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.values.len() {
@@ -74,7 +89,10 @@ impl Csr {
             return Err("col/val length mismatch".into());
         }
         for i in 0..self.nrows {
-            if self.row_ptr[i] > self.row_ptr[i + 1] {
+            // Bounds before monotonicity before slicing: a corrupted
+            // row_ptr must produce an Err here, not an out-of-bounds
+            // panic in the slice below.
+            if self.row_ptr[i] > self.row_ptr[i + 1] || self.row_ptr[i + 1] > self.values.len() {
                 return Err(format!("row_ptr not monotone at {i}"));
             }
             let cols = &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]];
@@ -231,6 +249,36 @@ impl Csr {
         Csr { nrows: self.nrows, ncols: keep.len(), row_ptr, col_idx, values }
     }
 
+    /// Contiguous column slice `[range.start, range.end)`: keeps every
+    /// row, holds exactly the entries whose column falls in the range,
+    /// columns rebased to `0..range.len()`. This is the shard
+    /// constructor — concatenating the slices of a partition of
+    /// `0..ncols` (in order) reproduces the matrix column-for-column.
+    /// Columns are ascending within each row, so each row contributes one
+    /// contiguous sub-slice found by binary search: O(nnz_kept + nrows·log).
+    pub fn slice_columns(&self, range: std::ops::Range<usize>) -> Csr {
+        assert!(
+            range.start <= range.end && range.end <= self.ncols,
+            "column range {range:?} out of bounds for {} columns",
+            self.ncols
+        );
+        let lo = range.start as u32;
+        let hi = range.end as u32;
+        let mut row_ptr = Vec::with_capacity(self.nrows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let a = cols.partition_point(|&c| c < lo);
+            let b = cols.partition_point(|&c| c < hi);
+            col_idx.extend(cols[a..b].iter().map(|&c| c - lo));
+            values.extend_from_slice(&vals[a..b]);
+            row_ptr.push(col_idx.len());
+        }
+        Csr { nrows: self.nrows, ncols: range.len(), row_ptr, col_idx, values }
+    }
+
     /// Keep only the rows in `keep` (by index, ascending); the result has
     /// `keep.len()` rows. Used to restrict `c` to a query's support.
     pub fn select_rows(&self, keep: &[usize]) -> Csr {
@@ -323,6 +371,59 @@ mod tests {
                 assert_eq!(s.get(new_i, j), m.get(old_i, j));
             }
         }
+    }
+
+    #[test]
+    fn slice_columns_partitions_reassemble() {
+        let mut rng = Pcg64::new(77);
+        for _ in 0..10 {
+            let (nr, nc, nnz) = (rng.range(1, 15), rng.range(2, 20), rng.below(60));
+            let m = random_csr(&mut rng, nr, nc, nnz);
+            let cut1 = rng.below(nc + 1);
+            let cut2 = cut1 + rng.below(nc + 1 - cut1);
+            let ranges = [0..cut1, cut1..cut2, cut2..nc];
+            let mut total_nnz = 0;
+            for r in ranges.clone() {
+                let s = m.slice_columns(r.clone());
+                s.validate().unwrap();
+                assert_eq!(s.nrows(), nr);
+                assert_eq!(s.ncols(), r.len());
+                total_nnz += s.nnz();
+                for i in 0..nr {
+                    for (jj, j) in r.clone().enumerate() {
+                        assert_eq!(s.get(i, jj), m.get(i, j));
+                    }
+                }
+            }
+            assert_eq!(total_nnz, m.nnz(), "slices must partition the nnz");
+        }
+    }
+
+    #[test]
+    fn slice_columns_empty_range() {
+        let mut rng = Pcg64::new(78);
+        let m = random_csr(&mut rng, 6, 9, 20);
+        let s = m.slice_columns(4..4);
+        s.validate().unwrap();
+        assert_eq!(s.ncols(), 0);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.nrows(), 6);
+    }
+
+    #[test]
+    fn try_from_parts_rejects_invalid() {
+        // Non-monotone row_ptr.
+        assert!(Csr::try_from_parts(2, 2, vec![0, 2, 1], vec![0], vec![1.0]).is_err());
+        // Out-of-range column.
+        assert!(Csr::try_from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // nrows == usize::MAX with an empty row_ptr: `nrows + 1` would
+        // overflow (debug) or wrap to 0 and index out of bounds (release).
+        assert!(Csr::try_from_parts(usize::MAX, 1, vec![], vec![], vec![]).is_err());
+        assert!(Csr::try_from_parts(0, 1, vec![], vec![], vec![]).is_err());
+        // Good parts round-trip.
+        let m = Csr::try_from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![2.0, 3.0]).unwrap();
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.get(1, 0), 3.0);
     }
 
     #[test]

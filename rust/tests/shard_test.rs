@@ -1,0 +1,190 @@
+//! Shard-equivalence suite: merged sharded results must match the
+//! unsharded solve — bitwise on one thread with the early exit disabled
+//! (fixed iterations), within 1e-9 otherwise — including corpora with
+//! empty documents (`+inf` entries must land at the right merged
+//! indices) and zero-column shards.
+
+use sinkhorn_wmd::coordinator::{
+    DocStore, QueryRequest, ServiceConfig, ShardSet, ShardedDocStore, WmdService,
+};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{Prepared, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sparse::{Coo, Csr};
+use std::sync::Arc;
+
+fn corpus(seed: u64) -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(500)
+        .num_docs(40)
+        .embedding_dim(16)
+        .n_topics(4)
+        .num_queries(4)
+        .query_words(5, 10)
+        .seed(seed)
+        .build()
+}
+
+/// `c` with the given target columns emptied (empty documents).
+fn drop_columns(c: &Csr, kill: &[usize]) -> Csr {
+    let mut coo = Coo::new(c.nrows(), c.ncols());
+    for (i, j, v) in c.iter() {
+        if !kill.contains(&j) {
+            coo.push(i, j, v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+#[test]
+fn sharded_solve_is_bitwise_identical_across_shard_counts_and_batch_sizes() {
+    let corpus = corpus(61);
+    // Empty documents scattered across the column range (first, middle,
+    // last): their +inf entries must land at the right merged indices in
+    // every sharding.
+    let kill = [0usize, 17, 39];
+    let c = drop_columns(&corpus.c, &kill);
+    let store = DocStore::new(corpus.embeddings.clone(), c).into_arc();
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(1);
+    let preps: Vec<Arc<Prepared>> = corpus
+        .queries
+        .iter()
+        .map(|q| Arc::new(solver.prepare(&corpus.embeddings, q, &pool)))
+        .collect();
+    for s in [1usize, 2, 3] {
+        let sharded = ShardedDocStore::split(Arc::clone(&store), s);
+        let set = ShardSet::start(sharded, config, 1);
+        for bsz in [1usize, 4] {
+            let batch: Vec<Arc<Prepared>> = preps[..bsz].to_vec();
+            let merged = set.solve_batch(&batch);
+            assert_eq!(merged.outputs.len(), bsz);
+            let refs: Vec<&Prepared> = batch.iter().map(|p| p.as_ref()).collect();
+            let base = solver.solve_batch(&refs, &store.c, &pool);
+            for (q, (m, b)) in merged.outputs.iter().zip(&base).enumerate() {
+                assert_eq!(m.wmd, b.wmd, "S={s} B={bsz} q={q}: merge must be bitwise");
+                assert_eq!(m.iterations, b.iterations, "S={s} B={bsz} q={q}");
+                for &k in &kill {
+                    assert!(
+                        m.wmd[k].is_infinite() && m.wmd[k] > 0.0,
+                        "S={s} B={bsz} q={q}: empty doc {k} must merge to +inf, got {}",
+                        m.wmd[k]
+                    );
+                }
+                assert!(
+                    m.wmd.iter().enumerate().all(|(j, v)| kill.contains(&j) || v.is_finite()),
+                    "S={s} B={bsz} q={q}: a non-empty document came back non-finite"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_solve_multithreaded_matches_within_1e9() {
+    let corpus = corpus(67);
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 15, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(4);
+    let preps: Vec<Arc<Prepared>> = corpus
+        .queries
+        .iter()
+        .map(|q| Arc::new(solver.prepare(&corpus.embeddings, q, &pool)))
+        .collect();
+    let refs: Vec<&Prepared> = preps.iter().map(|p| p.as_ref()).collect();
+    let base = solver.solve_batch(&refs, &store.c, &pool);
+    for s in [2usize, 3] {
+        let sharded = ShardedDocStore::split(Arc::clone(&store), s);
+        let set = ShardSet::start(sharded, config, 2);
+        let merged = set.solve_batch(&preps);
+        for (q, (m, b)) in merged.outputs.iter().zip(&base).enumerate() {
+            for (a, v) in m.wmd.iter().zip(&b.wmd) {
+                assert!(
+                    (a - v).abs() < 1e-9 * (1.0 + v.abs()),
+                    "S={s} q={q}: {a} vs {v}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_column_shards_contribute_nothing() {
+    let corpus = corpus(71);
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let n = store.num_docs();
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 10, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(1);
+    let prep = Arc::new(solver.prepare(&corpus.embeddings, corpus.query(0), &pool));
+    // Empty shards at the front, middle-adjacent and back of the range.
+    let sharded = ShardedDocStore::with_ranges(
+        Arc::clone(&store),
+        vec![0..0, 0..n / 2, n / 2..n / 2, n / 2..n, n..n],
+    );
+    let set = ShardSet::start(sharded, config, 1);
+    let merged = set.solve_batch(&[Arc::clone(&prep)]);
+    let base = solver.solve(&prep, &store.c, &pool);
+    assert_eq!(merged.outputs[0].wmd, base.wmd, "empty shards must not perturb the merge");
+    assert_eq!(merged.outputs[0].iterations, base.iterations);
+    assert_eq!(merged.shard_iterations[0], 0, "zero-column shard runs no iterations");
+    assert_eq!(merged.shard_iterations[2], 0);
+    assert_eq!(merged.shard_iterations[4], 0);
+    assert!(merged.shard_iterations[1] > 0 && merged.shard_iterations[3] > 0);
+}
+
+#[test]
+fn sharded_solve_with_tolerance_converges_per_shard() {
+    // With the residual early exit on, each shard stops once *its own*
+    // columns meet the criterion — every document still satisfies the
+    // same residual guarantee as an unsharded run.
+    let corpus = corpus(73);
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let config = SinkhornConfig {
+        lambda: 3.0,
+        tolerance: 1e-5,
+        max_iter: 5000,
+        ..Default::default()
+    };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(2);
+    let prep = Arc::new(solver.prepare(&corpus.embeddings, corpus.query(0), &pool));
+    let sharded = ShardedDocStore::split(Arc::clone(&store), 2);
+    let set = ShardSet::start(sharded, config, 2);
+    let merged = set.solve_batch(&[Arc::clone(&prep)]);
+    let out = &merged.outputs[0];
+    assert!(out.converged, "every shard must converge");
+    assert!(out.iterations < 5000);
+    assert!(out.wmd.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn sharded_service_merges_infinite_entries_at_global_indices() {
+    let corpus = corpus(79);
+    let kill = [2usize, 21];
+    let c = drop_columns(&corpus.c, &kill);
+    let store = DocStore::new(corpus.embeddings.clone(), c).into_arc();
+    let service = WmdService::start(
+        Arc::clone(&store),
+        ServiceConfig { threads: 1, shards: 2, shard_threads: 1, ..Default::default() },
+        None,
+    );
+    let resp = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert_eq!(resp.wmd.len(), store.num_docs());
+    for &k in &kill {
+        assert!(
+            resp.wmd[k].is_infinite() && resp.wmd[k] > 0.0,
+            "empty doc {k} must merge to +inf, got {}",
+            resp.wmd[k]
+        );
+    }
+    assert!(resp.argmin().is_some());
+    assert!(!kill.contains(&resp.argmin().unwrap()), "an empty doc won the argmin");
+    let snap = service.metrics().snapshot();
+    assert_eq!(snap.sharded_solves, 1);
+    assert_eq!(snap.shard_solves, 2);
+    service.shutdown();
+}
