@@ -24,6 +24,9 @@ pub struct Metrics {
     sharded_solves: AtomicU64,
     shard_solves: AtomicU64,
     shard_iterations: AtomicU64,
+    workspace_bytes: AtomicU64,
+    workspace_checkouts: AtomicU64,
+    workspace_grows: AtomicU64,
 }
 
 impl Metrics {
@@ -79,6 +82,16 @@ impl Metrics {
         self.shard_iterations.fetch_add(iterations, Ordering::Relaxed);
     }
 
+    /// Publish the current solve-workspace counters (gauges, not
+    /// counters: the caller passes the aggregate over the dispatcher's
+    /// own workspace and every shard worker's — see
+    /// [`crate::sinkhorn::WorkspaceStats::merged`]).
+    pub fn record_workspace(&self, stats: crate::sinkhorn::WorkspaceStats) {
+        self.workspace_bytes.store(stats.bytes_retained as u64, Ordering::Relaxed);
+        self.workspace_checkouts.store(stats.checkouts, Ordering::Relaxed);
+        self.workspace_grows.store(stats.grows, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -103,6 +116,9 @@ impl Metrics {
             sharded_solves: self.sharded_solves.load(Ordering::Relaxed),
             shard_solves: self.shard_solves.load(Ordering::Relaxed),
             shard_iterations: self.shard_iterations.load(Ordering::Relaxed),
+            workspace_bytes: self.workspace_bytes.load(Ordering::Relaxed),
+            workspace_checkouts: self.workspace_checkouts.load(Ordering::Relaxed),
+            workspace_grows: self.workspace_grows.load(Ordering::Relaxed),
         }
     }
 }
@@ -138,6 +154,15 @@ pub struct MetricsSnapshot {
     /// Sinkhorn iterations summed over every (shard, query) pair of the
     /// sharded dispatches — the per-shard iteration counts folded in.
     pub shard_iterations: u64,
+    /// Heap bytes retained by the solve workspaces (dispatcher + every
+    /// shard worker) — the arena the zero-alloc hot path reuses.
+    pub workspace_bytes: u64,
+    /// Solves that checked a workspace out.
+    pub workspace_checkouts: u64,
+    /// Checkouts that had to grow a buffer. Flat in steady state; a
+    /// climbing value means the serving shapes keep exceeding what the
+    /// workspaces have seen (reuse is not kicking in).
+    pub workspace_grows: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -162,7 +187,8 @@ impl MetricsSnapshot {
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
              backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={} \
              batched: solves={} queries={} \
-             sharded: batches={} shard-solves={} shard-iters={}",
+             sharded: batches={} shard-solves={} shard-iters={} \
+             workspace: bytes={} checkouts={} grows={}",
             self.queries,
             self.batches,
             self.errors,
@@ -178,7 +204,10 @@ impl MetricsSnapshot {
             self.batched_queries,
             self.sharded_solves,
             self.shard_solves,
-            self.shard_iterations
+            self.shard_iterations,
+            self.workspace_bytes,
+            self.workspace_checkouts,
+            self.workspace_grows
         )
     }
 }
@@ -253,6 +282,19 @@ mod tests {
         assert_eq!(s.shard_solves, 8);
         assert_eq!(s.shard_iterations, 192);
         assert!(s.report().contains("sharded: batches=2 shard-solves=8 shard-iters=192"));
+    }
+
+    #[test]
+    fn workspace_gauges_reflect_last_record() {
+        use crate::sinkhorn::WorkspaceStats;
+        let m = Metrics::new();
+        m.record_workspace(WorkspaceStats { bytes_retained: 4096, checkouts: 7, grows: 2 });
+        m.record_workspace(WorkspaceStats { bytes_retained: 8192, checkouts: 9, grows: 2 });
+        let s = m.snapshot();
+        assert_eq!(s.workspace_bytes, 8192, "gauge: last write wins");
+        assert_eq!(s.workspace_checkouts, 9);
+        assert_eq!(s.workspace_grows, 2);
+        assert!(s.report().contains("workspace: bytes=8192 checkouts=9 grows=2"));
     }
 
     #[test]

@@ -10,7 +10,9 @@ use super::shard::{ShardSet, ShardedDocStore};
 use super::state::{DocStore, PreparedCache, PreparedKey};
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
-use crate::sinkhorn::{DenseSolver, Prepared, SinkhornConfig, SparseSolver};
+use crate::sinkhorn::{
+    DenseSolver, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver, WorkspaceStats,
+};
 use crate::Real;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -231,6 +233,12 @@ fn dispatcher(
             cache
         }
     });
+    // The dispatcher's own long-lived workspace: monolithic sparse solves,
+    // the dense baseline and every prepare borrow scratch from it. Shard
+    // workers own their own (sized to their slice); their latest counters
+    // are folded into the `workspace:` metrics after each batch.
+    let mut ws = SolveWorkspace::new();
+    let mut shard_ws: Vec<WorkspaceStats> = Vec::new();
     while let Some(batch) = queue.next_batch() {
         metrics.record_batch(batch.len());
         // Phase 1: validate, route and prepare every job of the popped
@@ -250,8 +258,15 @@ fn dispatcher(
             let sharded = shard_set.is_some() && backend.supports_sharding();
             if backend == Backend::SparseRust && (config.cross_query_batch || sharded) {
                 let query = &job.req.query;
-                let prep =
-                    resolve_prepared(&store, &pool, &sparse, cache.as_mut(), &metrics, query);
+                let prep = resolve_prepared(
+                    &store,
+                    &pool,
+                    &sparse,
+                    cache.as_mut(),
+                    &metrics,
+                    &mut ws,
+                    query,
+                );
                 sparse_jobs.push((job, prep, started));
                 continue;
             }
@@ -264,6 +279,7 @@ fn dispatcher(
                 pjrt.as_ref(),
                 cache.as_mut(),
                 &metrics,
+                &mut ws,
                 &job.req,
             );
             let latency = started.elapsed();
@@ -296,6 +312,7 @@ fn dispatcher(
                         shards.num_shards(),
                         merged.shard_iterations.iter().sum::<usize>() as u64,
                     );
+                    shard_ws = merged.workspace.clone();
                     merged.outputs
                 }
                 Some(shards) => {
@@ -309,6 +326,7 @@ fn dispatcher(
                                 shards.num_shards(),
                                 merged.shard_iterations.iter().sum::<usize>() as u64,
                             );
+                            shard_ws = merged.workspace.clone();
                             merged.outputs
                         })
                         .collect()
@@ -316,7 +334,7 @@ fn dispatcher(
                 None => {
                     let preps: Vec<&Prepared> =
                         sparse_jobs.iter().map(|(_, p, _)| p.as_ref()).collect();
-                    sparse.solve_batch(&preps, &store.c, &pool)
+                    sparse.solve_batch_in(&mut ws, &preps, &store.c, &pool)
                 }
             };
             // Only count real fused batches: solve_batch falls back to a
@@ -339,6 +357,10 @@ fn dispatcher(
                 });
             }
         }
+        // Publish the workspace gauges: the dispatcher's own arena plus
+        // the latest per-shard snapshots.
+        let agg = shard_ws.iter().fold(ws.stats(), |acc, s| acc.merged(*s));
+        metrics.record_workspace(agg);
     }
 }
 
@@ -361,16 +383,22 @@ fn resolve_backend(
 
 /// Resolve the prepared factors: cache hit, cache fill, or (cache
 /// disabled) a one-shot prepare. The `Arc` lets the dispatcher hold a
-/// whole batch of prepared queries across one batched solve.
+/// whole batch of prepared queries across one batched solve. A cache
+/// *miss* borrows the dispatcher workspace's dist-layer scratch for the
+/// precompute's intermediates before committing the finished factors into
+/// an `Arc<Prepared>` (the factor planes themselves are the cached
+/// artifact — they are allocated once and retained by the cache, not by
+/// the workspace).
 fn resolve_prepared(
     store: &DocStore,
     pool: &Pool,
     sparse: &SparseSolver,
     cache: Option<&mut PreparedCache>,
     metrics: &Metrics,
+    ws: &mut SolveWorkspace,
     query: &SparseVec,
 ) -> Arc<Prepared> {
-    let prepare = || sparse.prepare(&store.embeddings, query, pool);
+    let prepare = || sparse.prepare_in(ws, &store.embeddings, query, pool);
     match cache {
         Some(cache) => {
             let key = PreparedKey::new(query, sparse.config().lambda);
@@ -392,6 +420,7 @@ fn answer(
     pjrt: Option<&PjrtBackend>,
     cache: Option<&mut PreparedCache>,
     metrics: &Metrics,
+    ws: &mut SolveWorkspace,
     req: &QueryRequest,
 ) -> Result<(Vec<Real>, usize, Backend), String> {
     // The PJRT graph bakes its own precompute in; only the in-process
@@ -405,14 +434,14 @@ fn answer(
     }
     // Both in-process solvers share the same factors — `precompute_factors`
     // with the service λ.
-    let prep = resolve_prepared(store, pool, sparse, cache, metrics, &req.query);
+    let prep = resolve_prepared(store, pool, sparse, cache, metrics, ws, &req.query);
     match backend {
         Backend::SparseRust => {
-            let out = sparse.solve(&prep, &store.c, pool);
+            let out = sparse.solve_in(ws, &prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
         Backend::DenseRust => {
-            let (out, _times) = dense.solve_prepared(&prep, &store.c, pool);
+            let (out, _times) = dense.solve_prepared_in(ws, &prep, &store.c, pool);
             Ok((out.wmd, out.iterations, backend))
         }
         Backend::DensePjrt => unreachable!("handled above"),
@@ -709,6 +738,27 @@ mod tests {
         assert_eq!(snap.sharded_solves, 1, "four coalesced queries → one sharded dispatch");
         assert_eq!(snap.shard_solves, 2);
         assert_eq!(snap.batched_solves, 1, "the fused batch is still counted");
+        assert!(
+            snap.workspace_checkouts >= 2,
+            "each shard worker's workspace checkout must be folded into the gauges"
+        );
+        assert!(snap.workspace_bytes > 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn workspace_metrics_published_after_batches() {
+        let (service, corpus) = small_service();
+        // The same query twice: the second solve reruns identical shapes,
+        // so it must check the warm arena out without growing it.
+        for _ in 0..2 {
+            let resp = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+            assert!(resp.is_ok(), "{:?}", resp.error);
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.workspace_checkouts, 2, "one checkout per dispatched solve");
+        assert!(snap.workspace_bytes > 0, "the dispatcher retains its arena");
+        assert_eq!(snap.workspace_grows, 1, "only the cold solve grows the arena");
         service.shutdown();
     }
 

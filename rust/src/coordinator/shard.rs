@@ -20,7 +20,9 @@
 
 use super::state::DocStore;
 use crate::parallel::Pool;
-use crate::sinkhorn::{Prepared, SinkhornConfig, SolveOutput, SparseSolver};
+use crate::sinkhorn::{
+    Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver, WorkspaceStats,
+};
 use crate::sparse::{Csr, Dense};
 use std::ops::Range;
 use std::sync::{mpsc, Arc};
@@ -131,7 +133,7 @@ impl ShardedDocStore {
 
 struct ShardJob {
     preps: Vec<Arc<Prepared>>,
-    reply: mpsc::Sender<(usize, Vec<SolveOutput>)>,
+    reply: mpsc::Sender<(usize, Vec<SolveOutput>, WorkspaceStats)>,
     shard: usize,
 }
 
@@ -150,6 +152,11 @@ pub struct ShardBatchOutput {
     /// Sinkhorn iterations executed per shard, summed over the batch's
     /// queries — the per-shard counts the service folds into its metrics.
     pub shard_iterations: Vec<usize>,
+    /// Per-shard workspace counters (cumulative per worker, snapshotted
+    /// after this batch) — each worker owns one long-lived
+    /// [`SolveWorkspace`] sized to its column slice, and this is where
+    /// its reuse is observable per shard.
+    pub workspace: Vec<WorkspaceStats>,
 }
 
 /// A running shard fleet: one worker thread per [`DocShard`], each owning
@@ -191,6 +198,10 @@ impl ShardSet {
                     .spawn(move || {
                         let pool = Pool::new(threads_per_shard);
                         let solver = SparseSolver::new(config);
+                        // One long-lived workspace per shard worker: its
+                        // buffers grow to this slice's shapes once, then
+                        // every subsequent batch solves allocation-free.
+                        let mut ws = SolveWorkspace::new();
                         while let Ok(job) = rx.recv() {
                             let outs: Vec<SolveOutput> = if c.ncols() == 0 {
                                 // A zero-column shard has nothing to
@@ -207,9 +218,9 @@ impl ShardSet {
                             } else {
                                 let refs: Vec<&Prepared> =
                                     job.preps.iter().map(|p| p.as_ref()).collect();
-                                solver.solve_batch(&refs, &c, &pool)
+                                solver.solve_batch_in(&mut ws, &refs, &c, &pool)
                             };
-                            let _ = job.reply.send((job.shard, outs));
+                            let _ = job.reply.send((job.shard, outs, ws.stats()));
                         }
                     })
                     .expect("spawn shard worker");
@@ -233,7 +244,11 @@ impl ShardSet {
         let b = preps.len();
         let s = self.workers.len();
         if b == 0 {
-            return ShardBatchOutput { outputs: Vec::new(), shard_iterations: vec![0; s] };
+            return ShardBatchOutput {
+                outputs: Vec::new(),
+                shard_iterations: vec![0; s],
+                workspace: vec![WorkspaceStats::default(); s],
+            };
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         for (idx, w) in self.workers.iter().enumerate() {
@@ -245,10 +260,13 @@ impl ShardSet {
         }
         drop(reply_tx);
         let mut per_shard: Vec<Option<Vec<SolveOutput>>> = (0..s).map(|_| None).collect();
+        let mut workspace = vec![WorkspaceStats::default(); s];
         for _ in 0..s {
-            let (idx, outs) = reply_rx.recv().expect("a shard worker died mid-batch");
+            let (idx, outs, ws_stats) =
+                reply_rx.recv().expect("a shard worker died mid-batch");
             debug_assert_eq!(outs.len(), b, "shard {idx} answered a different batch size");
             per_shard[idx] = Some(outs);
+            workspace[idx] = ws_stats;
         }
         let per_shard: Vec<Vec<SolveOutput>> =
             per_shard.into_iter().map(|o| o.expect("every shard replied")).collect();
@@ -266,7 +284,7 @@ impl ShardSet {
                 SolveOutput::merge_shards(self.total_docs, &parts)
             })
             .collect();
-        ShardBatchOutput { outputs, shard_iterations }
+        ShardBatchOutput { outputs, shard_iterations, workspace }
     }
 }
 
@@ -342,6 +360,35 @@ mod tests {
         let store = DocStore::from_synthetic(&corpus).into_arc();
         let n = store.num_docs();
         let _ = ShardedDocStore::with_ranges(store, vec![0..5, 6..n]);
+    }
+
+    #[test]
+    fn shard_workers_reuse_their_workspaces_across_batches() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let sharded = ShardedDocStore::split(Arc::clone(&store), 2);
+        let set = ShardSet::start(sharded, SinkhornConfig::default(), 1);
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(SinkhornConfig::default());
+        let preps: Vec<Arc<Prepared>> = corpus
+            .queries
+            .iter()
+            .map(|q| Arc::new(solver.prepare(&corpus.embeddings, q, &pool)))
+            .collect();
+        let first = set.solve_batch(&preps);
+        assert_eq!(first.workspace.len(), 2);
+        for ws in &first.workspace {
+            assert_eq!(ws.checkouts, 1, "one batched solve per shard");
+            assert_eq!(ws.grows, 1, "the cold checkout grows the buffers");
+            assert!(ws.bytes_retained > 0);
+        }
+        // Same batch again: warm workspaces, no growth, same retention.
+        let second = set.solve_batch(&preps);
+        for (a, b) in first.workspace.iter().zip(&second.workspace) {
+            assert_eq!(b.checkouts, 2);
+            assert_eq!(b.grows, a.grows, "steady-state batch must not grow the workspace");
+            assert_eq!(b.bytes_retained, a.bytes_retained);
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::Real;
 /// Invariants: `kt`, `kor_t`, `km_t` share the shape `vocab_size() × v_r()`;
 /// `kt[i][k] = exp(−λ·d(sel[k], i)) ∈ (0, 1]`,
 /// `kor_t[i][k] = kt[i][k] / r[k]`, `km_t[i][k] = kt[i][k] · d(sel[k], i)`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct QueryFactors {
     /// `Kᵀ` — `exp(−λ·M)ᵀ`.
     pub kt: Dense,
@@ -60,20 +60,55 @@ impl QueryFactors {
     /// same WMD as the full solve while the per-candidate row walk drops
     /// from O(V) to O(|rows|).
     pub fn restrict_rows(&self, rows: &[usize]) -> QueryFactors {
+        let mut out = QueryFactors::default();
+        self.restrict_rows_into(rows, &mut out);
+        out
+    }
+
+    /// [`QueryFactors::restrict_rows`] into a caller-owned factor set —
+    /// the pruned-retrieval hot loop restricts once per surviving
+    /// candidate, so reusing one output's allocations across candidates
+    /// keeps that loop off the allocator.
+    pub fn restrict_rows_into(&self, rows: &[usize], out: &mut QueryFactors) {
         let v_r = self.v_r();
-        let gather = |m: &Dense| -> Dense {
-            let mut out = Dense::zeros(rows.len(), v_r);
+        let gather = |src: &Dense, dst: &mut Dense| {
+            dst.reset(rows.len(), v_r, 0.0);
             for (t, &i) in rows.iter().enumerate() {
-                out.row_mut(t).copy_from_slice(m.row(i));
+                dst.row_mut(t).copy_from_slice(src.row(i));
             }
-            out
         };
-        QueryFactors {
-            kt: gather(&self.kt),
-            kor_t: gather(&self.kor_t),
-            km_t: gather(&self.km_t),
-            r: self.r.clone(),
-        }
+        gather(&self.kt, &mut out.kt);
+        gather(&self.kor_t, &mut out.kor_t);
+        gather(&self.km_t, &mut out.km_t);
+        out.r.clear();
+        out.r.extend_from_slice(&self.r);
+    }
+}
+
+/// Reusable scratch for the dist-layer precompute: the query panel and
+/// its derived per-word vectors, retained across prepares by a
+/// [`crate::sinkhorn::SolveWorkspace`]. The three factor matrices are
+/// *not* scratch — they are the prepared artifact itself, owned by the
+/// returned [`QueryFactors`] (and typically committed to the coordinator's
+/// prepared-factor cache), so they must outlive any single solve.
+#[derive(Debug, Default)]
+pub struct DistScratch {
+    /// Selected vocabulary ids as `usize` (the solver-facing `sel` form).
+    pub sel: Vec<usize>,
+    /// `qvecs[k] = embeddings[sel[k]]` — the gathered query panel.
+    qvecs: Dense,
+    /// Squared norms of the panel rows.
+    qn: Vec<Real>,
+    /// `1 / r[k]` per selected word.
+    inv_r: Vec<Real>,
+}
+
+impl DistScratch {
+    /// Heap bytes held by the scratch's backing allocations.
+    pub fn retained_bytes(&self) -> usize {
+        self.sel.capacity() * std::mem::size_of::<usize>()
+            + (self.qvecs.capacity() + self.qn.capacity() + self.inv_r.capacity())
+                * std::mem::size_of::<Real>()
     }
 }
 
@@ -96,6 +131,20 @@ pub fn precompute_factors(
     lambda: Real,
     pool: &Pool,
 ) -> QueryFactors {
+    precompute_factors_in(embeddings, sel, vals, lambda, pool, &mut DistScratch::default())
+}
+
+/// [`precompute_factors`] with the intermediate panel buffers borrowed
+/// from a retained [`DistScratch`] — the prepared-cache *miss* path stops
+/// allocating anything but the committed factor matrices themselves.
+pub fn precompute_factors_in(
+    embeddings: &Dense,
+    sel: &[usize],
+    vals: &[Real],
+    lambda: Real,
+    pool: &Pool,
+    scratch: &mut DistScratch,
+) -> QueryFactors {
     let v = embeddings.nrows();
     let v_r = sel.len();
     assert_eq!(vals.len(), v_r, "sel/vals length mismatch");
@@ -106,12 +155,20 @@ pub fn precompute_factors(
 
     // Gather the query panel once: `qvecs[k] = embeddings[sel[k]]`.
     let w = embeddings.ncols();
-    let mut qvecs = Dense::zeros(v_r, w);
+    let qvecs = &mut scratch.qvecs;
+    qvecs.reset(v_r, w, 0.0);
     for (k, &i) in sel.iter().enumerate() {
         qvecs.row_mut(k).copy_from_slice(embeddings.row(i));
     }
-    let qn: Vec<Real> = (0..v_r).map(|k| dot(qvecs.row(k), qvecs.row(k))).collect();
-    let inv_r: Vec<Real> = vals.iter().map(|&x| 1.0 / x).collect();
+    let qvecs = &*qvecs;
+    let qn = &mut scratch.qn;
+    qn.clear();
+    qn.extend((0..v_r).map(|k| dot(qvecs.row(k), qvecs.row(k))));
+    let qn = &*qn;
+    let inv_r = &mut scratch.inv_r;
+    inv_r.clear();
+    inv_r.extend(vals.iter().map(|&x| 1.0 / x));
+    let inv_r = &*inv_r;
 
     let mut kt = Dense::zeros(v, v_r);
     let mut kor_t = Dense::zeros(v, v_r);
@@ -234,6 +291,32 @@ mod tests {
             assert_eq!(sub.kor_t.row(t), f.kor_t.row(i));
             assert_eq!(sub.km_t.row(t), f.km_t.row(i));
         }
+    }
+
+    #[test]
+    fn reused_dirty_dist_scratch_matches_fresh() {
+        // One DistScratch across differently-shaped prepares: the panel
+        // reset must erase every stale value, so the factors are bitwise
+        // identical to a fresh-scratch precompute.
+        let corpus = toy();
+        let pool = Pool::new(2);
+        let q = corpus.query(0);
+        let mut scratch = DistScratch::default();
+        for sel_vals in [
+            (vec![5usize, 40, 100], vec![0.25, 0.25, 0.5]),
+            (q.indices(), q.val.clone()),
+            (vec![7usize], vec![1.0]),
+        ] {
+            let (sel, vals) = sel_vals;
+            let fresh = precompute_factors(&corpus.embeddings, &sel, &vals, 10.0, &pool);
+            let reused =
+                precompute_factors_in(&corpus.embeddings, &sel, &vals, 10.0, &pool, &mut scratch);
+            assert_eq!(fresh.kt, reused.kt);
+            assert_eq!(fresh.kor_t, reused.kor_t);
+            assert_eq!(fresh.km_t, reused.km_t);
+            assert_eq!(fresh.r, reused.r);
+        }
+        assert!(scratch.retained_bytes() > 0);
     }
 
     #[test]

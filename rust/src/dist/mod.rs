@@ -33,4 +33,4 @@ pub mod cdist;
 pub mod factors;
 
 pub use cdist::{cdist_gemm, cdist_naive};
-pub use factors::{precompute_factors, QueryFactors};
+pub use factors::{precompute_factors, precompute_factors_in, DistScratch, QueryFactors};

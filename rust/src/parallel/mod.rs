@@ -19,7 +19,9 @@ pub mod pool;
 pub mod simulator;
 
 pub use atomic::AtomicF64Slice;
-pub use partition::{balanced_nnz_partition, even_rows_partition, NnzRange};
+pub use partition::{
+    balanced_nnz_partition, balanced_nnz_partition_into, even_rows_partition, NnzRange,
+};
 pub use pool::Pool;
 
 /// Static contiguous chunk of `0..n` for thread `tid` of `nthreads`.

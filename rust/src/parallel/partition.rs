@@ -39,16 +39,24 @@ impl NnzRange {
 /// `row_ptr` is the CSR row pointer of length `nrows + 1` with
 /// `row_ptr[nrows] == nnz`.
 pub fn balanced_nnz_partition(row_ptr: &[usize], nthreads: usize) -> Vec<NnzRange> {
+    let mut parts = Vec::new();
+    balanced_nnz_partition_into(row_ptr, nthreads, &mut parts);
+    parts
+}
+
+/// [`balanced_nnz_partition`] writing into a caller-owned buffer — the
+/// allocation-free form the solver workspace uses on the hot path (the
+/// buffer's capacity is retained across solves).
+pub fn balanced_nnz_partition_into(row_ptr: &[usize], nthreads: usize, out: &mut Vec<NnzRange>) {
     assert!(!row_ptr.is_empty());
     assert!(nthreads >= 1);
     let nnz = *row_ptr.last().unwrap();
-    (0..nthreads)
-        .map(|t| {
-            let nnz_start = t * nnz / nthreads;
-            let nnz_end = (t + 1) * nnz / nthreads;
-            NnzRange { nnz_start, nnz_end, start_row: row_of(row_ptr, nnz_start) }
-        })
-        .collect()
+    out.clear();
+    out.extend((0..nthreads).map(|t| {
+        let nnz_start = t * nnz / nthreads;
+        let nnz_end = (t + 1) * nnz / nthreads;
+        NnzRange { nnz_start, nnz_end, start_row: row_of(row_ptr, nnz_start) }
+    }));
 }
 
 /// Row containing nnz index `k`: the last row `r` with `row_ptr[r] <= k`.

@@ -148,6 +148,16 @@ impl Pool {
         F: Fn(Range<usize>, &mut T) + Sync,
         R: Fn(T, T) -> T,
     {
+        // Serial fast path: no partial cells to allocate. `reduce(identity,
+        // acc)` (not `acc` alone) keeps the result bitwise identical to the
+        // general path's fold, whatever `reduce` does with the identity.
+        if self.nthreads == 1 {
+            let mut acc = identity.clone();
+            if n > 0 {
+                f(0..n, &mut acc);
+            }
+            return reduce(identity, acc);
+        }
         let partials: Vec<Mutex<T>> =
             (0..self.nthreads).map(|_| Mutex::new(identity.clone())).collect();
         self.run(|tid, nt| {
@@ -227,6 +237,24 @@ mod tests {
             let mut seen = tids.into_inner().unwrap();
             seen.sort_unstable();
             assert_eq!(seen, (0..p).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_threads_are_named_for_profilers() {
+        // `wmd-worker-{tid}` in every profiler/debugger, alongside the
+        // coordinator's `wmd-dispatch` and `wmd-shard-{i}` threads. tid 0
+        // is the caller and keeps its own name.
+        let pool = Pool::new(3);
+        let names = Mutex::new(Vec::new());
+        pool.run(|tid, _| {
+            let name = std::thread::current().name().map(|s| s.to_string());
+            names.lock().unwrap().push((tid, name));
+        });
+        for (tid, name) in names.into_inner().unwrap() {
+            if tid > 0 {
+                assert_eq!(name.as_deref(), Some(format!("wmd-worker-{tid}").as_str()));
+            }
         }
     }
 

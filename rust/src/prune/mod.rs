@@ -22,13 +22,59 @@ pub mod rwmd;
 pub mod wcd;
 
 pub use rwmd::rwmd_lower_bound;
-pub use wcd::{centroids, wcd_lower_bound};
+pub use wcd::{centroids, wcd_lower_bound, wcd_lower_bound_into};
 
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
-use crate::sinkhorn::{SinkhornConfig, SparseSolver};
+use crate::sinkhorn::{Prepared, SinkhornConfig, SolveWorkspace, SparseSolver};
+use crate::sparse::ops::TransposedPattern;
 use crate::sparse::{Csr, Dense};
 use crate::Real;
+
+/// Reusable pruned-retrieval scratch — the WCD vector, candidate order,
+/// CSC view of the target set, per-candidate word supports and the
+/// restricted factor set. Held inside a [`SolveWorkspace`] (its `prune`
+/// section), so one workspace serves both the retrieval bookkeeping and
+/// the per-candidate exact sub-solves.
+#[derive(Debug, Default)]
+pub struct PruneScratch {
+    /// Per-document WCD lower bounds.
+    wcd: Vec<Real>,
+    /// Candidate visit order (ascending WCD).
+    order: Vec<usize>,
+    /// CSC view of `c` (per-document word supports in O(nnz) total).
+    pattern: TransposedPattern,
+    /// Current candidate's word support.
+    support: Vec<usize>,
+    /// Reusable restricted-factor target for the candidate sub-problems.
+    sub_prep: Option<Prepared>,
+    /// Recycled backing vectors for the per-candidate sub-problem CSR
+    /// (reclaimed after each solve via [`Csr::into_parts`]).
+    sub_row_ptr: Vec<usize>,
+    sub_col_idx: Vec<u32>,
+    sub_vals: Vec<Real>,
+}
+
+impl PruneScratch {
+    /// Heap bytes held by the scratch's backing allocations.
+    pub(crate) fn retained_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let sub = self.sub_prep.as_ref().map_or(0, |p| {
+            (p.factors.kt.capacity()
+                + p.factors.kor_t.capacity()
+                + p.factors.km_t.capacity()
+                + p.factors.r.capacity())
+                * size_of::<Real>()
+        });
+        self.wcd.capacity() * size_of::<Real>()
+            + (self.order.capacity() + self.support.capacity() + self.sub_row_ptr.capacity())
+                * size_of::<usize>()
+            + self.pattern.retained_bytes()
+            + self.sub_col_idx.capacity() * size_of::<u32>()
+            + self.sub_vals.capacity() * size_of::<Real>()
+            + sub
+    }
+}
 
 /// Statistics from one pruned retrieval.
 #[derive(Clone, Debug, Default)]
@@ -101,48 +147,98 @@ impl PrunedRetrieval {
         doc_centroids: &Dense,
         pool: &Pool,
     ) -> PrunedTopK {
+        self.retrieve_in(&mut SolveWorkspace::new(), embeddings, query, c, doc_centroids, pool)
+    }
+
+    /// [`PrunedRetrieval::retrieve`] with all retrieval scratch — the WCD
+    /// vector, candidate order, CSC view, supports, restricted factors,
+    /// the per-candidate sub-problem CSR (recycled through
+    /// [`Csr::into_parts`]) — and the exact sub-solves borrowing from one
+    /// retained workspace. Once warm, the only per-candidate allocation
+    /// left is each sub-solve's one-element `wmd` output vector.
+    pub fn retrieve_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        c: &Csr,
+        doc_centroids: &Dense,
+        pool: &Pool,
+    ) -> PrunedTopK {
         let n = c.ncols();
         let k = self.k.min(n);
         let mut stats = PruneStats { total_docs: n, ..Default::default() };
 
+        // The prune section moves out of the workspace for the duration
+        // of the retrieval, so the candidate sub-solves can check the same
+        // workspace out for their own lanes.
+        let mut ps = std::mem::take(&mut ws.prune);
+
         // Phase 1: WCD ordering (cheap) + one transposed pass over `c`
         // for per-document word supports (O(nnz) total — scanning rows
         // per candidate would cost O(N·V) and dwarf the savings).
-        let wcd = wcd_lower_bound(embeddings, query, doc_centroids, pool);
-        let mut order: Vec<usize> = (0..n).collect();
-        // total_cmp: a NaN distance (poisoned embedding, degenerate doc)
-        // sorts last instead of panicking the whole retrieval.
-        order.sort_by(|&a, &b| wcd[a].total_cmp(&wcd[b]));
-        let tp = crate::sparse::ops::TransposedPattern::build(c);
-        let support_of = |j: usize| -> Vec<usize> {
-            (tp.col_ptr[j]..tp.col_ptr[j + 1]).map(|e| tp.src_row[e] as usize).collect()
-        };
+        wcd_lower_bound_into(embeddings, query, doc_centroids, pool, &mut ps.wcd);
+        ps.order.clear();
+        ps.order.extend(0..n);
+        {
+            // total_cmp: a NaN distance (poisoned embedding, degenerate
+            // doc) sorts last instead of panicking the whole retrieval.
+            let wcd = &ps.wcd;
+            ps.order.sort_by(|&a, &b| wcd[a].total_cmp(&wcd[b]));
+        }
+        ps.pattern.rebuild_from(c);
 
         // Phase 2: exact WMD for the k WCD-nearest docs. Each candidate
         // is solved on a sub-problem restricted to its word support —
         // zero rows of `c` touch no kernel, and the restriction turns a
         // per-eval O(V·iters) row walk into O(|supp|·v_r·iters).
-        let prep = self.solver.prepare(embeddings, query, pool);
+        let prep = self.solver.prepare_in(ws, embeddings, query, pool);
         let values = c.values();
         // Sub-problems are a few dozen non-zeros: fork/join barriers would
         // dominate, so they run on an inline (1-thread) pool regardless of
         // the caller's parallelism.
         let serial = Pool::new(1);
+        let solver = &self.solver;
         let mut top: Vec<(usize, Real)> = Vec::with_capacity(k + 1);
-        let eval_exact = |j: usize, top: &mut Vec<(usize, Real)>, stats: &mut PruneStats| {
-            let span = tp.col_ptr[j]..tp.col_ptr[j + 1];
-            let rows: Vec<usize> = span.clone().map(|e| tp.src_row[e] as usize).collect();
-            let vals: Vec<Real> = span.clone().map(|e| values[tp.src_pos[e] as usize]).collect();
+        let mut eval_exact = |j: usize,
+                              top: &mut Vec<(usize, Real)>,
+                              stats: &mut PruneStats,
+                              ws: &mut SolveWorkspace,
+                              ps: &mut PruneScratch| {
+            let span = ps.pattern.col_ptr[j]..ps.pattern.col_ptr[j + 1];
+            {
+                let (support, pattern) = (&mut ps.support, &ps.pattern);
+                support.clear();
+                support.extend(span.clone().map(|e| pattern.src_row[e] as usize));
+            }
+            // Sub-problem CSR from recycled backing vectors (reclaimed
+            // below via `into_parts`): |supp| rows × 1 column.
+            let m = ps.support.len();
+            {
+                let (vals, pattern) = (&mut ps.sub_vals, &ps.pattern);
+                vals.clear();
+                vals.extend(span.clone().map(|e| values[pattern.src_pos[e] as usize]));
+            }
+            let mut row_ptr = std::mem::take(&mut ps.sub_row_ptr);
+            row_ptr.clear();
+            row_ptr.extend(0..=m);
+            let mut col_idx = std::mem::take(&mut ps.sub_col_idx);
+            col_idx.clear();
+            col_idx.resize(m, 0u32);
             let sub_c = crate::sparse::Csr::from_parts(
-                rows.len(),
+                m,
                 1,
-                (0..=rows.len()).collect(),
-                vec![0u32; rows.len()],
-                vals,
+                row_ptr,
+                col_idx,
+                std::mem::take(&mut ps.sub_vals),
             );
-            let sub_prep =
-                crate::sinkhorn::Prepared { factors: prep.factors.restrict_rows(&rows) };
-            let d = self.solver.solve(&sub_prep, &sub_c, &serial).wmd[0];
+            let sub_prep = ps.sub_prep.get_or_insert_with(Prepared::default);
+            prep.factors.restrict_rows_into(&ps.support, &mut sub_prep.factors);
+            let d = solver.solve_in(ws, sub_prep, &sub_c, &serial).wmd[0];
+            let (_, _, row_ptr, col_idx, vals) = sub_c.into_parts();
+            ps.sub_row_ptr = row_ptr;
+            ps.sub_col_idx = col_idx;
+            ps.sub_vals = vals;
             stats.exact_evals += 1;
             // Non-finite distances (empty doc → +inf, NaN embeddings)
             // never enter the top-k; total_cmp keeps the sort panic-free.
@@ -152,14 +248,20 @@ impl PrunedRetrieval {
                 top.truncate(k);
             }
         };
-        for &j in order.iter().take(k) {
-            eval_exact(j, &mut top, &mut stats);
+        // Indexed loops (not iterators) because `ps` must be reborrowed
+        // mutably inside the body for the candidate evaluations.
+        #[allow(clippy::needless_range_loop)]
+        for idx in 0..k {
+            let j = ps.order[idx];
+            eval_exact(j, &mut top, &mut stats, ws, &mut ps);
         }
 
         // Phase 3: the rest in WCD order, pruned by max(WCD, RWMD) —
         // both lower-bound the exact EMD, so their max is a valid (and
         // tighter) bound; neither dominates pointwise.
-        for &j in order.iter().skip(k) {
+        #[allow(clippy::needless_range_loop)]
+        for idx in k..n {
+            let j = ps.order[idx];
             // The k-th best bound is only valid once k finite candidates
             // are in hand (non-finite evaluations don't enter `top`).
             let kth = if top.len() < k {
@@ -167,13 +269,22 @@ impl PrunedRetrieval {
             } else {
                 top.last().map(|&(_, d)| d).unwrap_or(Real::INFINITY)
             };
-            let lb = wcd[j].max(rwmd::rwmd_with_support(embeddings, query, &support_of(j)));
+            let lb = {
+                let (support, pattern) = (&mut ps.support, &ps.pattern);
+                support.clear();
+                support.extend(
+                    (pattern.col_ptr[j]..pattern.col_ptr[j + 1])
+                        .map(|e| pattern.src_row[e] as usize),
+                );
+                ps.wcd[j].max(rwmd::rwmd_with_support(embeddings, query, &ps.support))
+            };
             if lb > kth {
                 stats.pruned_by_rwmd += 1;
                 continue;
             }
-            eval_exact(j, &mut top, &mut stats);
+            eval_exact(j, &mut top, &mut stats, ws, &mut ps);
         }
+        ws.prune = ps;
         PrunedTopK { top, stats }
     }
 }
@@ -294,6 +405,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn retrieve_in_with_reused_workspace_matches_fresh() {
+        // A, then B, then A again through ONE workspace (dirty buffers)
+        // must reproduce fresh-workspace retrievals exactly — order,
+        // distances and pruning decisions alike.
+        let corpus = corpus();
+        let pool = Pool::new(2);
+        let config = SinkhornConfig {
+            lambda: 20.0,
+            max_iter: 2000,
+            tolerance: 1e-8,
+            ..Default::default()
+        };
+        let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+        let retrieval = PrunedRetrieval::new(config, 4);
+        let mut ws = SolveWorkspace::new();
+        for q in [0usize, 1, 0] {
+            let fresh =
+                retrieval.retrieve(&corpus.embeddings, corpus.query(q), &corpus.c, &cents, &pool);
+            let reused = retrieval.retrieve_in(
+                &mut ws,
+                &corpus.embeddings,
+                corpus.query(q),
+                &corpus.c,
+                &cents,
+                &pool,
+            );
+            assert_eq!(fresh.top, reused.top, "q={q}: reused workspace changed the top-k");
+            assert_eq!(fresh.stats.exact_evals, reused.stats.exact_evals, "q={q}");
+            assert_eq!(fresh.stats.pruned_by_rwmd, reused.stats.pruned_by_rwmd, "q={q}");
+        }
+        let stats = ws.stats();
+        assert!(stats.checkouts > 0, "sub-solves must check the workspace out");
+        assert!(stats.bytes_retained > 0);
     }
 
     #[test]

@@ -51,10 +51,25 @@ pub fn wcd_lower_bound(
     doc_centroids: &Dense,
     pool: &Pool,
 ) -> Vec<Real> {
+    let mut out = Vec::new();
+    wcd_lower_bound_into(embeddings, query, doc_centroids, pool, &mut out);
+    out
+}
+
+/// [`wcd_lower_bound`] into a caller-owned buffer — the retrieval
+/// workspace retains it across queries.
+pub fn wcd_lower_bound_into(
+    embeddings: &Dense,
+    query: &SparseVec,
+    doc_centroids: &Dense,
+    pool: &Pool,
+    out: &mut Vec<Real>,
+) {
     let qc = query_centroid(embeddings, query);
     let n = doc_centroids.nrows();
-    let mut out = vec![0.0; n];
-    let view = SharedSlice::new(&mut out);
+    out.clear();
+    out.resize(n, 0.0);
+    let view = SharedSlice::new(out.as_mut_slice());
     pool.parallel_for(n, |range| {
         for j in range {
             let row = doc_centroids.row(j);
@@ -67,7 +82,6 @@ pub fn wcd_lower_bound(
             unsafe { view.write(j, acc.sqrt()) };
         }
     });
-    out
 }
 
 #[cfg(test)]

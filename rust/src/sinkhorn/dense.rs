@@ -16,7 +16,8 @@ use crate::util::SharedSlice;
 use crate::Real;
 use std::time::{Duration, Instant};
 
-use super::solver::{empty_columns, Prepared, SinkhornConfig, SolveOutput};
+use super::solver::{empty_columns_into, Prepared, SinkhornConfig, SolveOutput};
+use super::workspace::SolveWorkspace;
 
 /// Wall-clock per pipeline stage (the Table-1 rows).
 #[derive(Clone, Debug, Default)]
@@ -114,8 +115,34 @@ impl DenseSolver {
     /// factors (borrowed — the caller, e.g. the coordinator's
     /// prepared-factor cache, keeps ownership). The returned profile has
     /// `cdist_precompute` at zero: preparation happened elsewhere.
+    ///
+    /// Thin allocating wrapper over [`DenseSolver::solve_prepared_in`].
     pub fn solve_prepared(
         &self,
+        prep: &Prepared,
+        c: &Csr,
+        pool: &Pool,
+    ) -> (SolveOutput, DenseStageTimes) {
+        self.solve_prepared_in(&mut SolveWorkspace::new(), prep, c, pool)
+    }
+
+    /// [`DenseSolver::solve_prepared`] with the pipeline state (`x`, `u`,
+    /// `(K⊙M)v`, the SDDMM values and the per-iteration CSC pattern)
+    /// borrowed from workspace lanes. The per-iteration `tocsc` still
+    /// *rebuilds* the pattern — that conversion cost is exactly what the
+    /// Table-1 profile measures — but into retained storage, so the
+    /// baseline no longer thrashes the allocator while being profiled.
+    ///
+    /// Deliberate exception: the `V × N` `Kᵀu` intermediate (the 91.9 %
+    /// Table-1 plane, gigabytes at paper scale and bounded only by
+    /// `max_dense_bytes`) is allocated per call and freed on return. The
+    /// workspace is grow-only and long-lived — routing that plane through
+    /// it would let a single dense-backend request permanently pin the
+    /// dispatcher's arena at `V·N` floats while it serves sparse traffic
+    /// whose lanes are `N·v_r`.
+    pub fn solve_prepared_in(
+        &self,
+        ws: &mut SolveWorkspace,
         prep: &Prepared,
         c: &Csr,
         pool: &Pool,
@@ -129,80 +156,95 @@ impl DenseSolver {
             "dense baseline would allocate {dense_bytes} B for the V x N intermediate; \
              run it at a scaled size (see DESIGN.md §3)"
         );
+        let bytes_before = ws.begin_checkout();
+        ws.ensure_lanes(1);
         let mut times = DenseStageTimes::default();
         let factors = &prep.factors;
         let v_r = factors.v_r();
 
-        // Python state layout: x, u are v_r × N row-major.
-        let mut x = Dense::filled(v_r, n, 1.0 / v_r as Real);
-        let mut u = Dense::zeros(v_r, n);
-        let mut ktu = Dense::zeros(v, n);
-        let mut w = vec![0.0; c.nnz()];
+        let out = {
+            let SolveWorkspace { x_t, x_new, u_t, empty, w_buf, pattern, .. } = &mut *ws;
+            // Python state layout: x, u are v_r × N row-major. The lanes:
+            // x_t[0] = x, u_t[0] = u, x_new[0] = (K⊙M)v for the epilogue —
+            // all `v_r × N`, the same footprint as the sparse lanes. The
+            // V×N `Kᵀu` plane stays per-call (see the doc above).
+            let x = &mut x_t[0];
+            let u = &mut u_t[0];
+            let kmv = &mut x_new[0];
+            let mut ktu = Dense::zeros(v, n);
+            let ktu = &mut ktu;
+            x.reset(v_r, n, 1.0 / v_r as Real);
+            u.reset(v_r, n, 0.0);
+            w_buf.clear();
+            w_buf.resize(c.nnz(), 0.0);
+            let w = w_buf;
 
-        for _ in 0..self.config.max_iter {
-            // u = 1 / x
+            for _ in 0..self.config.max_iter {
+                // u = 1 / x
+                let t = Instant::now();
+                elementwise_recip(x, u, pool);
+                times.update_u += t.elapsed();
+
+                // KT @ u  — the dense V×N product.
+                let t = Instant::now();
+                dense_matmul_kt_u(factors, u, ktu, pool);
+                times.kt_matmul += t.elapsed();
+
+                // v = c.multiply(1 / (KT@u)) at the pattern of c.
+                let t = Instant::now();
+                sparse_multiply(c, ktu, w, pool);
+                times.sparse_multiply += t.elapsed();
+
+                // v.tocsc() — full conversion every iteration, like scipy
+                // (into retained pattern storage).
+                let t = Instant::now();
+                pattern.rebuild_from(c);
+                times.tocsc += t.elapsed();
+
+                // x = K_over_r @ v_csc (dense × sparse, strided column reads).
+                let t = Instant::now();
+                dense_spmm_columns(factors, pattern, w, x, pool);
+                times.spmm += t.elapsed();
+            }
+
+            // Final: u = 1/x; v = c.multiply(1/(KT@u)); WMD = (u*((K⊙M)@v)).sum(0).
             let t = Instant::now();
-            elementwise_recip(&x, &mut u, pool);
+            elementwise_recip(x, u, pool);
             times.update_u += t.elapsed();
-
-            // KT @ u  — the dense V×N product.
             let t = Instant::now();
-            dense_matmul_kt_u(factors, &u, &mut ktu, pool);
+            dense_matmul_kt_u(factors, u, ktu, pool);
             times.kt_matmul += t.elapsed();
-
-            // v = c.multiply(1 / (KT@u)) at the pattern of c.
             let t = Instant::now();
-            sparse_multiply(c, &ktu, &mut w, pool);
+            sparse_multiply(c, ktu, w, pool);
             times.sparse_multiply += t.elapsed();
 
-            // v.tocsc() — full conversion every iteration, like scipy.
             let t = Instant::now();
-            let pattern = TransposedPattern::build(c);
-            times.tocsc += t.elapsed();
-
-            // x = K_over_r @ v_csc (dense × sparse, strided column reads).
-            let t = Instant::now();
-            dense_spmm_columns(factors, &pattern, &w, &mut x, pool);
-            times.spmm += t.elapsed();
-        }
-
-        // Final: u = 1/x; v = c.multiply(1/(KT@u)); WMD = (u*((K⊙M)@v)).sum(0).
-        let t = Instant::now();
-        elementwise_recip(&x, &mut u, pool);
-        times.update_u += t.elapsed();
-        let t = Instant::now();
-        dense_matmul_kt_u(factors, &u, &mut ktu, pool);
-        times.kt_matmul += t.elapsed();
-        let t = Instant::now();
-        sparse_multiply(c, &ktu, &mut w, pool);
-        times.sparse_multiply += t.elapsed();
-
-        let t = Instant::now();
-        let pattern = TransposedPattern::build(c);
-        let mut kmv = Dense::zeros(v_r, n);
-        dense_spmm_columns_km(factors, &pattern, &w, &mut kmv, pool);
-        let mut wmd = vec![0.0; n];
-        for i in 0..v_r {
-            let urow = u.row(i);
-            let krow = kmv.row(i);
-            for j in 0..n {
-                wmd[j] += urow[j] * krow[j];
+            pattern.rebuild_from(c);
+            kmv.reset(v_r, n, 0.0);
+            dense_spmm_columns_km(factors, pattern, w, kmv, pool);
+            let mut wmd = vec![0.0; n];
+            for i in 0..v_r {
+                let urow = u.row(i);
+                let krow = kmv.row(i);
+                for j in 0..n {
+                    wmd[j] += urow[j] * krow[j];
+                }
             }
-        }
-        // Empty documents: x[:, j] collapses to 0 after one iteration (no
-        // pattern entries feed it), u = 1/x = inf, and inf · 0 above gives
-        // NaN — report +inf, matching the sparse solver's contract.
-        for (w, &e) in wmd.iter_mut().zip(&empty_columns(c)) {
-            if e {
-                *w = Real::INFINITY;
+            // Empty documents: x[:, j] collapses to 0 after one iteration (no
+            // pattern entries feed it), u = 1/x = inf, and inf · 0 above gives
+            // NaN — report +inf, matching the sparse solver's contract.
+            empty_columns_into(c, empty);
+            for (w, &e) in wmd.iter_mut().zip(empty.iter()) {
+                if e {
+                    *w = Real::INFINITY;
+                }
             }
-        }
-        times.finish = t.elapsed();
+            times.finish = t.elapsed();
 
-        (
-            SolveOutput { wmd, iterations: self.config.max_iter, converged: false },
-            times,
-        )
+            SolveOutput { wmd, iterations: self.config.max_iter, converged: false }
+        };
+        ws.end_checkout(bytes_before);
+        (out, times)
     }
 }
 

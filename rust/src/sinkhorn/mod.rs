@@ -12,6 +12,8 @@
 
 pub mod dense;
 pub mod solver;
+pub mod workspace;
 
 pub use dense::{DenseSolver, DenseStageTimes};
 pub use solver::{IterateKernel, Prepared, SinkhornConfig, SolveOutput, SparseSolver};
+pub use workspace::{SolveWorkspace, WorkspaceStats};

@@ -8,8 +8,9 @@
 //!    `SDDMM_SpMM` kernel until `x` stops changing (or `max_iter`), then
 //!    reduce the WMD vector with the type-2 kernel.
 
-use crate::dist::{precompute_factors, QueryFactors};
-use crate::parallel::{balanced_nnz_partition, NnzRange, Pool};
+use super::workspace::SolveWorkspace;
+use crate::dist::{precompute_factors_in, QueryFactors};
+use crate::parallel::{balanced_nnz_partition_into, NnzRange, Pool};
 use crate::sparse::ops::{
     fused_type1, fused_type1_batch, fused_type1_private, fused_type1_transposed,
     fused_type1_transposed_batch, fused_type2, fused_type2_batch, sddmm, spmm_atomic,
@@ -85,15 +86,38 @@ impl SinkhornConfig {
     /// factors (sparse and dense alike): select the query's non-zero
     /// words and run the fused precompute with this config's λ.
     pub fn prepare(&self, embeddings: &Dense, query: &SparseVec, pool: &Pool) -> Prepared {
+        self.prepare_in(&mut SolveWorkspace::new(), embeddings, query, pool)
+    }
+
+    /// [`SinkhornConfig::prepare`] with the selection buffer and the
+    /// dist-layer panel scratch borrowed from a retained workspace. The
+    /// factor matrices themselves are still freshly allocated — they are
+    /// the returned artifact (typically committed to the coordinator's
+    /// prepared cache), not scratch.
+    pub fn prepare_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        pool: &Pool,
+    ) -> Prepared {
         assert_eq!(embeddings.nrows(), query.dim, "embedding/vocab mismatch");
-        let sel = query.indices();
-        let factors = precompute_factors(embeddings, &sel, &query.val, self.lambda, pool);
+        // Take the selection buffer out so the rest of the dist scratch
+        // can be borrowed mutably alongside it.
+        let mut sel = std::mem::take(&mut ws.dist.sel);
+        sel.clear();
+        sel.extend(query.idx.iter().map(|&i| i as usize));
+        let factors =
+            precompute_factors_in(embeddings, &sel, &query.val, self.lambda, pool, &mut ws.dist);
+        ws.dist.sel = sel;
         Prepared { factors }
     }
 }
 
 /// Precomputed per-query state: factors + the query's histogram.
-#[derive(Clone, Debug)]
+/// (`Default` is an *empty* prepared slot — a reusable target for
+/// [`QueryFactors::restrict_rows_into`], not a solvable query.)
+#[derive(Clone, Debug, Default)]
 pub struct Prepared {
     pub factors: QueryFactors,
 }
@@ -165,12 +189,28 @@ impl SolveOutput {
 
     /// Indices of the `k` most similar documents, ascending by distance.
     /// Non-finite distances are excluded (so fewer than `k` entries can
-    /// come back); `total_cmp` keeps the sort panic-free regardless.
+    /// come back); `total_cmp` keeps the comparison panic-free regardless.
+    ///
+    /// Uses a bounded selection — `select_nth_unstable` to isolate the `k`
+    /// smallest, then a sort of just those — so the cost is `O(N + k·log
+    /// k)` instead of the full `O(N·log N)` re-sort per call. Ties are
+    /// broken by ascending document index, so the returned order is
+    /// deterministic (and matches what the old stable full sort produced).
     pub fn top_k(&self, k: usize) -> Vec<(usize, Real)> {
         let mut pairs: Vec<(usize, Real)> =
             self.wmd.iter().copied().enumerate().filter(|(_, v)| v.is_finite()).collect();
-        pairs.sort_by(|a, b| a.1.total_cmp(&b.1));
-        pairs.truncate(k);
+        let cmp = |a: &(usize, Real), b: &(usize, Real)| {
+            a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0))
+        };
+        if k == 0 {
+            pairs.clear();
+            return pairs;
+        }
+        if k < pairs.len() {
+            let _ = pairs.select_nth_unstable_by(k - 1, cmp);
+            pairs.truncate(k);
+        }
+        pairs.sort_unstable_by(cmp);
         pairs
     }
 }
@@ -198,6 +238,18 @@ impl SparseSolver {
         self.config.prepare(embeddings, query, pool)
     }
 
+    /// [`SparseSolver::prepare`] with scratch borrowed from a retained
+    /// workspace (see [`SinkhornConfig::prepare_in`]).
+    pub fn prepare_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        pool: &Pool,
+    ) -> Prepared {
+        self.config.prepare_in(ws, embeddings, query, pool)
+    }
+
     /// Phase 2: iterate to the WMD vector against all columns of `c`.
     ///
     /// **Empty documents** (target columns with no non-zeros) report
@@ -206,65 +258,127 @@ impl SparseSolver {
     /// zeros, `update_u`'s renormalization divides by a zero mean and
     /// poisons `u` with NaN, while the type-2 epilogue sums nothing — the
     /// empty document would score `WMD = 0` and win every argmin.
+    ///
+    /// Thin allocating wrapper over [`SparseSolver::solve_in`] (a fresh
+    /// workspace per call — fine for tests and one-shot use; serving
+    /// threads retain one and call `solve_in`).
     pub fn solve(&self, prep: &Prepared, c: &Csr, pool: &Pool) -> SolveOutput {
+        self.solve_in(&mut SolveWorkspace::new(), prep, c, pool)
+    }
+
+    /// [`SparseSolver::solve`] with every piece of per-solve scratch —
+    /// iterate planes, masks, partitions, kernel scratch — borrowed from
+    /// `ws` instead of heap-allocated. Once the workspace is warm, the
+    /// only remaining allocations are the returned `wmd` vector (its
+    /// ownership moves to the caller) and, on multi-threaded pools, the
+    /// convergence reduction's per-thread cells. Numerically identical to
+    /// `solve`: every borrowed buffer is re-shaped and re-filled at
+    /// checkout, so dirty contents cannot leak (pinned bitwise by
+    /// `tests/workspace_test.rs`).
+    pub fn solve_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        prep: &Prepared,
+        c: &Csr,
+        pool: &Pool,
+    ) -> SolveOutput {
         assert_eq!(c.nrows(), prep.factors.vocab_size(), "c/vocabulary mismatch");
+        let bytes_before = ws.begin_checkout();
+        ws.ensure_lanes(1);
         let v_r = prep.v_r();
         let n = c.ncols();
         let f = &prep.factors;
-        let parts = balanced_nnz_partition(c.row_ptr(), pool.nthreads());
-        let empty = empty_columns(c);
+        let out = {
+            // Split the workspace into its disjoint scratch sections.
+            let SolveWorkspace {
+                x_t,
+                x_new,
+                u_t,
+                empty,
+                parts,
+                col_parts,
+                pattern,
+                private,
+                w_buf,
+                fused,
+                ..
+            } = &mut *ws;
+            balanced_nnz_partition_into(c.row_ptr(), pool.nthreads(), parts);
+            empty_columns_into(c, empty);
 
-        // x = ones(v_r, N) / v_r, stored transposed (N × v_r); u = 1/x.
-        let mut x_t = Dense::filled(n, v_r, 1.0 / v_r as Real);
-        let mut x_new = Dense::zeros(n, v_r);
-        let mut u_t = Dense::filled(n, v_r, v_r as Real);
-        let mut scratch = match self.config.kernel {
-            IterateKernel::FusedPrivate => Some(PrivateBuffers::new(pool.nthreads(), n, v_r)),
-            _ => None,
-        };
-        let mut w_buf = match self.config.kernel {
-            IterateKernel::Unfused => Some(vec![0.0; c.nnz()]),
-            _ => None,
-        };
-        let transposed = match self.config.kernel {
-            IterateKernel::FusedTransposed => {
-                let tp = TransposedPattern::build(c);
-                let col_parts = tp.column_parts(pool.nthreads());
-                Some((tp, col_parts))
-            }
-            _ => None,
-        };
+            // x = ones(v_r, N) / v_r, stored transposed (N × v_r); u = 1/x.
+            let x_t = &mut x_t[0];
+            let x_new = &mut x_new[0];
+            let u_t = &mut u_t[0];
+            x_t.reset(n, v_r, 1.0 / v_r as Real);
+            x_new.reset(n, v_r, 0.0);
+            u_t.reset(n, v_r, v_r as Real);
+            let mut scratch: Option<&mut PrivateBuffers> = match self.config.kernel {
+                IterateKernel::FusedPrivate => {
+                    private.ensure(pool.nthreads(), n * v_r);
+                    Some(private)
+                }
+                _ => None,
+            };
+            let mut w_slot: Option<&mut Vec<Real>> = match self.config.kernel {
+                IterateKernel::Unfused => {
+                    w_buf.clear();
+                    w_buf.resize(c.nnz(), 0.0);
+                    Some(w_buf)
+                }
+                _ => None,
+            };
+            let transposed: Option<(&TransposedPattern, &[NnzRange])> =
+                match self.config.kernel {
+                    IterateKernel::FusedTransposed => {
+                        pattern.rebuild_from(c);
+                        pattern.column_parts_into(pool.nthreads(), col_parts);
+                        Some((&*pattern, &col_parts[..]))
+                    }
+                    _ => None,
+                };
 
-        let mut iterations = 0;
-        let mut converged = false;
-        while iterations < self.config.max_iter {
-            self.iterate_once(
-                c, f, &u_t, &mut x_new, pool, &parts, &mut scratch, &mut w_buf, &transposed,
-            );
-            iterations += 1;
-            let check = self.config.tolerance > 0.0
-                && (iterations % self.config.check_every == 0
-                    || iterations == self.config.max_iter);
-            // One fused pass: marginal residual (needs the OLD u against
-            // the RAW new x) + per-column renormalization + u update.
-            let residual = update_u(&mut x_new, &mut u_t, &f.r, &empty, check, pool);
-            std::mem::swap(&mut x_t, &mut x_new);
-            if check && residual <= self.config.tolerance {
-                converged = true;
-                break;
+            let mut iterations = 0;
+            let mut converged = false;
+            while iterations < self.config.max_iter {
+                self.iterate_once(
+                    c,
+                    f,
+                    u_t,
+                    x_new,
+                    pool,
+                    parts,
+                    scratch.as_deref_mut(),
+                    w_slot.as_deref_mut(),
+                    transposed,
+                );
+                iterations += 1;
+                let check = self.config.tolerance > 0.0
+                    && (iterations % self.config.check_every == 0
+                        || iterations == self.config.max_iter);
+                // One fused pass: marginal residual (needs the OLD u against
+                // the RAW new x) + per-column renormalization + u update.
+                let residual = update_u(x_new, u_t, &f.r, empty, check, pool);
+                std::mem::swap(x_t, x_new);
+                if check && residual <= self.config.tolerance {
+                    converged = true;
+                    break;
+                }
             }
-        }
 
-        // Epilogue: u is already 1/x for the final x; one more SDDMM over
-        // the pattern folds v and the (K⊙M) reduction together.
-        let mut wmd = vec![0.0; n];
-        fused_type2(c, &f.kt, &f.km_t, &u_t, &mut wmd, pool, &parts);
-        for (w, &e) in wmd.iter_mut().zip(&empty) {
-            if e {
-                *w = Real::INFINITY;
+            // Epilogue: u is already 1/x for the final x; one more SDDMM over
+            // the pattern folds v and the (K⊙M) reduction together.
+            let mut wmd = vec![0.0; n];
+            fused_type2(c, &f.kt, &f.km_t, u_t, &mut wmd, pool, parts, fused);
+            for (w, &e) in wmd.iter_mut().zip(empty.iter()) {
+                if e {
+                    *w = Real::INFINITY;
+                }
             }
-        }
-        SolveOutput { wmd, iterations, converged }
+            SolveOutput { wmd, iterations, converged }
+        };
+        ws.end_checkout(bytes_before);
+        out
     }
 
     /// Cross-query batched solve: `B` prepared queries against the same
@@ -282,9 +396,26 @@ impl SparseSolver {
     /// Kernels without a batched variant ([`IterateKernel::FusedPrivate`],
     /// [`IterateKernel::Unfused`] — both exist as ablation baselines)
     /// fall back to a per-query loop.
+    /// Thin allocating wrapper over [`SparseSolver::solve_batch_in`].
     pub fn solve_batch(&self, preps: &[&Prepared], c: &Csr, pool: &Pool) -> Vec<SolveOutput> {
+        self.solve_batch_in(&mut SolveWorkspace::new(), preps, c, pool)
+    }
+
+    /// [`SparseSolver::solve_batch`] with all per-batch scratch — one
+    /// iterate-plane lane per query, shared masks/partitions/pattern,
+    /// kernel scratch — borrowed from `ws`. Once warm, nothing
+    /// problem-sized is allocated: what remains is the returned per-query
+    /// `wmd` vectors, `O(B)` factor-pointer vectors per call, and the
+    /// per-check residual reduction's `O(B)` bookkeeping.
+    pub fn solve_batch_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        preps: &[&Prepared],
+        c: &Csr,
+        pool: &Pool,
+    ) -> Vec<SolveOutput> {
         if !self.config.kernel.has_batched_path() {
-            return preps.iter().map(|&p| self.solve(p, c, pool)).collect();
+            return preps.iter().map(|&p| self.solve_in(ws, p, c, pool)).collect();
         }
         let b = preps.len();
         if b == 0 {
@@ -293,83 +424,104 @@ impl SparseSolver {
         for p in preps {
             assert_eq!(c.nrows(), p.factors.vocab_size(), "c/vocabulary mismatch");
         }
+        let bytes_before = ws.begin_checkout();
+        ws.ensure_lanes(b);
         let n = c.ncols();
-        let parts = balanced_nnz_partition(c.row_ptr(), pool.nthreads());
-        let empty = empty_columns(c);
-        // The pattern (and its column partition) is shared by the whole
-        // batch — built once, another cross-query amortization.
-        let transposed = match self.config.kernel {
-            IterateKernel::FusedTransposed => {
-                let tp = TransposedPattern::build(c);
-                let col_parts = tp.column_parts(pool.nthreads());
-                Some((tp, col_parts))
+        let out = {
+            let SolveWorkspace {
+                x_t,
+                x_new,
+                u_t,
+                empty,
+                parts,
+                col_parts,
+                pattern,
+                fused,
+                iterations,
+                converged,
+                active,
+                ..
+            } = &mut *ws;
+            balanced_nnz_partition_into(c.row_ptr(), pool.nthreads(), parts);
+            empty_columns_into(c, empty);
+            // The pattern (and its column partition) is shared by the whole
+            // batch — built once, another cross-query amortization.
+            let transposed: Option<(&TransposedPattern, &[NnzRange])> =
+                match self.config.kernel {
+                    IterateKernel::FusedTransposed => {
+                        pattern.rebuild_from(c);
+                        pattern.column_parts_into(pool.nthreads(), col_parts);
+                        Some((&*pattern, &col_parts[..]))
+                    }
+                    _ => None,
+                };
+            let kts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kt).collect();
+            let kor_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kor_t).collect();
+            let km_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.km_t).collect();
+            let rs: Vec<&[Real]> = preps.iter().map(|p| p.factors.r.as_slice()).collect();
+
+            let x_t = &mut x_t[..b];
+            let x_new = &mut x_new[..b];
+            let u_t = &mut u_t[..b];
+            for (q, p) in preps.iter().enumerate() {
+                x_t[q].reset(n, p.v_r(), 1.0 / p.v_r() as Real);
+                x_new[q].reset(n, p.v_r(), 0.0);
+                u_t[q].reset(n, p.v_r(), p.v_r() as Real);
             }
-            _ => None,
-        };
-        let kts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kt).collect();
-        let kor_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kor_t).collect();
-        let km_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.km_t).collect();
-        let rs: Vec<&[Real]> = preps.iter().map(|p| p.factors.r.as_slice()).collect();
+            iterations.clear();
+            iterations.resize(b, 0usize);
+            converged.clear();
+            converged.resize(b, false);
+            active.clear();
+            active.resize(b, true);
 
-        let mut x_t: Vec<Dense> =
-            preps.iter().map(|p| Dense::filled(n, p.v_r(), 1.0 / p.v_r() as Real)).collect();
-        let mut x_new: Vec<Dense> = preps.iter().map(|p| Dense::zeros(n, p.v_r())).collect();
-        let mut u_t: Vec<Dense> =
-            preps.iter().map(|p| Dense::filled(n, p.v_r(), p.v_r() as Real)).collect();
-        let mut iterations = vec![0usize; b];
-        let mut converged = vec![false; b];
-        let mut active = vec![true; b];
-
-        let mut iter = 0;
-        while iter < self.config.max_iter && active.iter().any(|&a| a) {
-            {
-                let u_refs: Vec<&Dense> = u_t.iter().collect();
-                match &transposed {
+            let mut iter = 0;
+            while iter < self.config.max_iter && active.iter().any(|&a| a) {
+                // The u lanes pass straight through as `&[Dense]` — no
+                // per-iteration reference-vector rebuild.
+                match transposed {
                     None => fused_type1_batch(
-                        c, &kts, &kor_ts, &u_refs, &mut x_new, &active, pool, &parts,
+                        c, &kts, &kor_ts, u_t, x_new, active, pool, parts, fused,
                     ),
-                    Some((tp, col_parts)) => fused_type1_transposed_batch(
-                        c, tp, &kts, &kor_ts, &u_refs, &mut x_new, &active, pool, col_parts,
+                    Some((tp, tp_parts)) => fused_type1_transposed_batch(
+                        c, tp, &kts, &kor_ts, u_t, x_new, active, pool, tp_parts, fused,
                     ),
                 }
-            }
-            iter += 1;
-            let check = self.config.tolerance > 0.0
-                && (iter % self.config.check_every == 0 || iter == self.config.max_iter);
-            let residuals =
-                update_u_batch(&mut x_new, &mut u_t, &rs, &empty, &active, check, pool);
-            for q in 0..b {
-                if !active[q] {
-                    continue;
-                }
-                iterations[q] = iter;
-                std::mem::swap(&mut x_t[q], &mut x_new[q]);
-                if check && residuals[q] <= self.config.tolerance {
-                    converged[q] = true;
-                    active[q] = false;
-                }
-            }
-        }
-
-        // Batched epilogue: every query's final u (frozen at its own
-        // convergence point) feeds one shared type-2 pass.
-        let mut wmds: Vec<Vec<Real>> = (0..b).map(|_| vec![0.0; n]).collect();
-        {
-            let u_refs: Vec<&Dense> = u_t.iter().collect();
-            fused_type2_batch(c, &kts, &km_ts, &u_refs, &mut wmds, pool, &parts);
-        }
-        wmds.into_iter()
-            .zip(iterations)
-            .zip(converged)
-            .map(|((mut wmd, iterations), converged)| {
-                for (w, &e) in wmd.iter_mut().zip(&empty) {
-                    if e {
-                        *w = Real::INFINITY;
+                iter += 1;
+                let check = self.config.tolerance > 0.0
+                    && (iter % self.config.check_every == 0 || iter == self.config.max_iter);
+                let residuals = update_u_batch(x_new, u_t, &rs, empty, active, check, pool);
+                for q in 0..b {
+                    if !active[q] {
+                        continue;
+                    }
+                    iterations[q] = iter;
+                    std::mem::swap(&mut x_t[q], &mut x_new[q]);
+                    if check && residuals[q] <= self.config.tolerance {
+                        converged[q] = true;
+                        active[q] = false;
                     }
                 }
-                SolveOutput { wmd, iterations, converged }
-            })
-            .collect()
+            }
+
+            // Batched epilogue: every query's final u (frozen at its own
+            // convergence point) feeds one shared type-2 pass.
+            let mut wmds: Vec<Vec<Real>> = (0..b).map(|_| vec![0.0; n]).collect();
+            fused_type2_batch(c, &kts, &km_ts, u_t, &mut wmds, pool, parts, fused);
+            wmds.into_iter()
+                .enumerate()
+                .map(|(q, mut wmd)| {
+                    for (w, &e) in wmd.iter_mut().zip(empty.iter()) {
+                        if e {
+                            *w = Real::INFINITY;
+                        }
+                    }
+                    SolveOutput { wmd, iterations: iterations[q], converged: converged[q] }
+                })
+                .collect::<Vec<SolveOutput>>()
+        };
+        ws.end_checkout(bytes_before);
+        out
     }
 
     /// One-shot convenience: prepare + solve.
@@ -393,9 +545,9 @@ impl SparseSolver {
         x_new: &mut Dense,
         pool: &Pool,
         parts: &[NnzRange],
-        scratch: &mut Option<PrivateBuffers>,
-        w_buf: &mut Option<Vec<Real>>,
-        transposed: &Option<(TransposedPattern, Vec<NnzRange>)>,
+        scratch: Option<&mut PrivateBuffers>,
+        w_buf: Option<&mut Vec<Real>>,
+        transposed: Option<(&TransposedPattern, &[NnzRange])>,
     ) {
         match self.config.kernel {
             IterateKernel::FusedAtomic => {
@@ -404,17 +556,17 @@ impl SparseSolver {
             IterateKernel::FusedPrivate => {
                 fused_type1_private(
                     c, &f.kt, &f.kor_t, u_t, x_new, pool, parts,
-                    scratch.as_mut().expect("scratch"),
+                    scratch.expect("scratch"),
                 );
             }
             IterateKernel::FusedTransposed => {
-                let (tp, col_parts) = transposed.as_ref().expect("pattern");
+                let (tp, col_parts) = transposed.expect("pattern");
                 fused_type1_transposed(c, tp, &f.kt, &f.kor_t, u_t, x_new, pool, col_parts);
             }
             IterateKernel::Unfused => {
-                let w = w_buf.as_mut().expect("w buffer");
+                let w = w_buf.expect("w buffer");
                 sddmm(c, &f.kt, u_t, w, pool, parts);
-                spmm_atomic(c, w, &f.kor_t, x_new, pool, parts);
+                spmm_atomic(c, &w[..], &f.kor_t, x_new, pool, parts);
             }
         }
     }
@@ -558,15 +710,16 @@ fn update_u_batch(
     )
 }
 
-/// `empty[j]` ⇔ target column `j` has no non-zeros (an empty document).
-/// Shared with the dense baseline so both in-process backends report the
-/// same `WMD = +inf` for empty documents.
-pub(crate) fn empty_columns(c: &Csr) -> Vec<bool> {
-    let mut empty = vec![true; c.ncols()];
+/// `empty[j]` ⇔ target column `j` has no non-zeros (an empty document),
+/// written into a caller-owned (workspace) buffer. Shared with the dense
+/// baseline so both in-process backends report the same `WMD = +inf` for
+/// empty documents.
+pub(crate) fn empty_columns_into(c: &Csr, empty: &mut Vec<bool>) {
+    empty.clear();
+    empty.resize(c.ncols(), true);
     for &j in c.col_idx() {
         empty[j as usize] = false;
     }
-    empty
 }
 
 #[cfg(test)]
@@ -750,6 +903,29 @@ mod tests {
         });
         let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &c, &pool);
         assert!(out.converged, "empty column's undeliverable mass stalled the residual");
+    }
+
+    #[test]
+    fn top_k_bounded_selection_matches_full_sort_and_breaks_ties_by_index() {
+        // Regression: top_k used to fully sort the wmd vector per call;
+        // the bounded selection must return the same ranking at every k,
+        // with exact ties in ascending-index order (deterministic, and
+        // identical to what the old stable full sort produced).
+        let out = SolveOutput {
+            wmd: vec![3.0, 1.0, 2.0, 1.0, Real::NAN, 0.5, Real::INFINITY, 1.0, 2.0],
+            iterations: 1,
+            converged: true,
+        };
+        let mut reference: Vec<(usize, Real)> =
+            out.wmd.iter().copied().enumerate().filter(|(_, v)| v.is_finite()).collect();
+        reference.sort_by(|a, b| a.1.total_cmp(&b.1)); // stable: ties keep index order
+        assert_eq!(reference.len(), 7);
+        for k in 0..=out.wmd.len() + 1 {
+            let top = out.top_k(k);
+            assert_eq!(top.len(), k.min(7), "k={k}");
+            assert_eq!(&top[..], &reference[..top.len()], "k={k}");
+        }
+        assert_eq!(out.top_k(4), vec![(5, 0.5), (1, 1.0), (3, 1.0), (7, 1.0)]);
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! The reusable per-solve scratch arena — the zero-alloc hot path.
+//!
+//! Every `solve`/`solve_batch`/`prepare` used to heap-allocate its scratch
+//! (the `N × v_r` iterate planes, convergence masks, kernel partials,
+//! transposed patterns, …) on every call. At serving rates that is
+//! allocator churn and cache-cold memory on the hottest loop in the
+//! system. A [`SolveWorkspace`] bundles all of it as **grow-only**
+//! buffers: checked out by each solve, retained across solves, so a
+//! steady-state serving thread stops touching the allocator once the
+//! workspace has seen its largest problem shape.
+//!
+//! Ownership model (who holds one):
+//!
+//! * the coordinator's dispatcher thread — one long-lived workspace for
+//!   the monolithic sparse path and the in-process dense baseline;
+//! * each [`crate::coordinator::ShardSet`] worker — its own workspace,
+//!   naturally sized to its column slice;
+//! * the pruned retrieval — borrows the caller's workspace for both its
+//!   WCD/RWMD scratch and the per-candidate sub-solves;
+//! * tests/benches — the thin allocating wrappers (`solve`, `solve_batch`,
+//!   `solve_prepared`, `retrieve`) construct a fresh one per call, so the
+//!   pre-workspace API keeps working unchanged.
+//!
+//! Checked-out buffers are **dirty**: every entry point re-shapes and
+//! re-fills what it reads (`Dense::reset`, `clear` + `resize`/`extend`),
+//! which the dirty-buffer equivalence suite (`tests/workspace_test.rs`)
+//! pins down bitwise against fresh-allocation solves.
+
+use crate::dist::DistScratch;
+use crate::parallel::NnzRange;
+use crate::prune::PruneScratch;
+use crate::sparse::ops::{FusedScratch, PrivateBuffers, TransposedPattern};
+use crate::sparse::Dense;
+use crate::Real;
+
+/// Point-in-time workspace counters, exposed through the coordinator's
+/// `workspace:` metrics so buffer reuse is observable in production
+/// (per shard: each [`crate::coordinator::ShardBatchOutput`] carries its
+/// workers' snapshots).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Heap bytes currently retained by the workspace's buffers.
+    pub bytes_retained: usize,
+    /// Solves that checked this workspace out.
+    pub checkouts: u64,
+    /// Checkouts that had to grow at least one buffer — in steady state
+    /// this stops increasing, which is exactly the zero-alloc property.
+    pub grows: u64,
+}
+
+impl WorkspaceStats {
+    /// Fold another workspace's counters in (bytes and counts both sum) —
+    /// how the service aggregates dispatcher + per-shard workspaces.
+    pub fn merged(self, other: WorkspaceStats) -> WorkspaceStats {
+        WorkspaceStats {
+            bytes_retained: self.bytes_retained + other.bytes_retained,
+            checkouts: self.checkouts + other.checkouts,
+            grows: self.grows + other.grows,
+        }
+    }
+}
+
+/// The arena. Construct once per long-lived solving thread with
+/// [`SolveWorkspace::new`] and pass to the `*_in` solver entry points
+/// (`SparseSolver::{solve_in, solve_batch_in, prepare_in}`,
+/// `DenseSolver::solve_prepared_in`, `PrunedRetrieval::retrieve_in`).
+#[derive(Debug, Default)]
+pub struct SolveWorkspace {
+    /// Per-query iterate planes, one lane per batch slot: `x` (transposed),
+    /// the next iterate, and `u`. The dense baseline borrows lanes of the
+    /// same arrays for its `x`/`u`/`Kᵀu`/`(K⊙M)v` state.
+    pub(crate) x_t: Vec<Dense>,
+    pub(crate) x_new: Vec<Dense>,
+    pub(crate) u_t: Vec<Dense>,
+    /// `empty[j]` ⇔ target column `j` has no support.
+    pub(crate) empty: Vec<bool>,
+    /// nnz-balanced row partition of the target CSR.
+    pub(crate) parts: Vec<NnzRange>,
+    /// Column partition of the transposed pattern.
+    pub(crate) col_parts: Vec<NnzRange>,
+    /// Transposed pattern of `c` (the `FusedTransposed` kernel and the
+    /// dense baseline's per-iteration `tocsc`).
+    pub(crate) pattern: TransposedPattern,
+    /// Per-thread private planes for the `FusedPrivate` kernel.
+    pub(crate) private: PrivateBuffers,
+    /// Materialized SDDMM values for the `Unfused` ablation kernel (and
+    /// the dense baseline's sparse-multiply output).
+    pub(crate) w_buf: Vec<Real>,
+    /// Scratch passed into the fused kernels (type-2 partials, batch
+    /// active lists).
+    pub(crate) fused: FusedScratch,
+    /// Batch bookkeeping: per-query iteration counts, convergence flags
+    /// and active masks.
+    pub(crate) iterations: Vec<usize>,
+    pub(crate) converged: Vec<bool>,
+    pub(crate) active: Vec<bool>,
+    /// dist-layer prepare scratch (query panel, norms, reciprocal masses).
+    pub(crate) dist: DistScratch,
+    /// Pruned-retrieval scratch (WCD vector, candidate order, supports,
+    /// restricted factors).
+    pub(crate) prune: PruneScratch,
+    checkouts: u64,
+    grows: u64,
+}
+
+impl SolveWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cumulative counters — see [`WorkspaceStats`].
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            bytes_retained: self.bytes_retained(),
+            checkouts: self.checkouts,
+            grows: self.grows,
+        }
+    }
+
+    /// Heap bytes currently retained across all buffers (capacities, not
+    /// lengths — what a future solve can use without allocating).
+    pub fn bytes_retained(&self) -> usize {
+        use std::mem::size_of;
+        let planes: usize = self
+            .x_t
+            .iter()
+            .chain(&self.x_new)
+            .chain(&self.u_t)
+            .map(|d| d.capacity() * size_of::<Real>())
+            .sum();
+        planes
+            + self.empty.capacity() * size_of::<bool>()
+            + (self.parts.capacity() + self.col_parts.capacity()) * size_of::<NnzRange>()
+            + self.pattern.retained_bytes()
+            + self.private.retained_bytes()
+            + self.w_buf.capacity() * size_of::<Real>()
+            + self.fused.retained_bytes()
+            + self.iterations.capacity() * size_of::<usize>()
+            + (self.converged.capacity() + self.active.capacity()) * size_of::<bool>()
+            + self.dist.retained_bytes()
+            + self.prune.retained_bytes()
+    }
+
+    /// Start of a solve's checkout: bump the counter, snapshot the
+    /// retained bytes so [`SolveWorkspace::end_checkout`] can detect
+    /// whether this solve had to grow anything.
+    pub(crate) fn begin_checkout(&mut self) -> usize {
+        self.checkouts += 1;
+        self.bytes_retained()
+    }
+
+    /// End of a solve's checkout (pass the value `begin_checkout`
+    /// returned): a net capacity increase counts as one grow.
+    pub(crate) fn end_checkout(&mut self, bytes_before: usize) {
+        if self.bytes_retained() > bytes_before {
+            self.grows += 1;
+        }
+    }
+
+    /// Make sure at least `b` lanes exist in each plane array (new lanes
+    /// start empty; the solver shapes them with `Dense::reset`).
+    pub(crate) fn ensure_lanes(&mut self, b: usize) {
+        for lanes in [&mut self.x_t, &mut self.x_new, &mut self.u_t] {
+            while lanes.len() < b {
+                lanes.push(Dense::default());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_workspace_is_empty() {
+        let ws = SolveWorkspace::new();
+        let s = ws.stats();
+        assert_eq!(s.checkouts, 0);
+        assert_eq!(s.grows, 0);
+        assert_eq!(s.bytes_retained, 0);
+    }
+
+    #[test]
+    fn checkout_accounting_counts_grows_once_per_growing_solve() {
+        let mut ws = SolveWorkspace::new();
+        let before = ws.begin_checkout();
+        ws.ensure_lanes(2);
+        ws.x_t[0].reset(8, 4, 0.0);
+        ws.end_checkout(before);
+        let s1 = ws.stats();
+        assert_eq!(s1.checkouts, 1);
+        assert_eq!(s1.grows, 1);
+        assert!(s1.bytes_retained >= 8 * 4 * std::mem::size_of::<Real>());
+        // Same shape again: no growth.
+        let before = ws.begin_checkout();
+        ws.ensure_lanes(2);
+        ws.x_t[0].reset(8, 4, 1.0);
+        ws.end_checkout(before);
+        let s2 = ws.stats();
+        assert_eq!(s2.checkouts, 2);
+        assert_eq!(s2.grows, 1, "steady-state checkout must not count as a grow");
+        assert_eq!(s2.bytes_retained, s1.bytes_retained);
+    }
+
+    #[test]
+    fn stats_merge_sums_fields() {
+        let a = WorkspaceStats { bytes_retained: 100, checkouts: 3, grows: 1 };
+        let b = WorkspaceStats { bytes_retained: 50, checkouts: 2, grows: 2 };
+        let m = a.merged(b);
+        assert_eq!(m, WorkspaceStats { bytes_retained: 150, checkouts: 5, grows: 3 });
+    }
+}

@@ -60,6 +60,14 @@ impl Csr {
         Ok(m)
     }
 
+    /// Decompose back into `(nrows, ncols, row_ptr, col_idx, values)` —
+    /// the inverse of [`Csr::from_parts`]. Lets callers that build many
+    /// short-lived sub-matrices (the pruned retrieval's per-candidate
+    /// sub-problems) reclaim the backing allocations for reuse.
+    pub fn into_parts(self) -> (usize, usize, Vec<usize>, Vec<u32>, Vec<Real>) {
+        (self.nrows, self.ncols, self.row_ptr, self.col_idx, self.values)
+    }
+
     /// Build from a dense matrix, keeping entries with |v| > 0.
     pub fn from_dense(d: &Dense) -> Self {
         let mut coo = Coo::new(d.nrows(), d.ncols());

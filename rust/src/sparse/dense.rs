@@ -4,8 +4,10 @@
 
 use crate::Real;
 
-/// Row-major dense matrix of `Real` (f64).
-#[derive(Clone, Debug, PartialEq)]
+/// Row-major dense matrix of `Real` (f64). (`Default` is the empty
+/// `0 × 0` matrix — the state of a workspace plane before its first
+/// [`Dense::reset`].)
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Dense {
     nrows: usize,
     ncols: usize,
@@ -15,6 +17,24 @@ pub struct Dense {
 impl Dense {
     pub fn zeros(nrows: usize, ncols: usize) -> Self {
         Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Reshape in place to `nrows × ncols` with every element set to
+    /// `value`. Grow-only: the backing allocation is kept when the new
+    /// shape fits its capacity, so a reused workspace plane stops touching
+    /// the allocator once it has seen its largest shape.
+    pub fn reset(&mut self, nrows: usize, ncols: usize, value: Real) {
+        self.nrows = nrows;
+        self.ncols = ncols;
+        self.data.clear();
+        self.data.resize(nrows * ncols, value);
+    }
+
+    /// Elements the backing allocation can hold without reallocating —
+    /// what a workspace retains across solves.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
     }
 
     pub fn filled(nrows: usize, ncols: usize, value: Real) -> Self {
@@ -219,6 +239,20 @@ mod tests {
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-9 * (1.0 + naive.abs()), "n={n}");
         }
+    }
+
+    #[test]
+    fn reset_reshapes_without_reallocating_within_capacity() {
+        let mut m = Dense::zeros(10, 8);
+        m.set(3, 3, 7.0);
+        let cap = m.capacity();
+        m.reset(4, 5, 1.5);
+        assert_eq!((m.nrows(), m.ncols()), (4, 5));
+        assert!(m.as_slice().iter().all(|&v| v == 1.5), "dirty data must not leak");
+        assert_eq!(m.capacity(), cap, "shrinking reset keeps the allocation");
+        m.reset(10, 8, 0.0);
+        assert_eq!(m.capacity(), cap, "regrowing within capacity keeps the allocation");
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -21,6 +21,32 @@ use crate::sparse::{axpy, dot, Csr, Dense};
 use crate::util::SharedSlice;
 use crate::Real;
 
+/// Reusable scratch for the fused kernels, passed in by the caller instead
+/// of allocated per call (the zero-alloc hot-path contract: a retained
+/// [`crate::sinkhorn::SolveWorkspace`] owns one and its buffers are
+/// grow-only, so steady-state kernel invocations never touch the
+/// allocator).
+#[derive(Debug, Default)]
+pub struct FusedScratch {
+    /// Per-thread partial accumulators for the type-2 reduction
+    /// (`nthreads · N` scalars single-query, `nthreads · B · N` batched).
+    partials: Vec<Real>,
+    /// Indices of the active (not yet converged) queries of a batch.
+    act: Vec<usize>,
+}
+
+impl FusedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Heap bytes held by the scratch's backing allocations.
+    pub fn retained_bytes(&self) -> usize {
+        self.partials.capacity() * std::mem::size_of::<Real>()
+            + self.act.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
 /// Fused iterate (type 1): for each nnz `(i, j)` of `c`,
 /// `w = c[i,j] / ⟨ktᵀ[i,:], uᵀ[j,:]⟩` then `xᵀ[j,:] += w · kor_tᵀ[i,:]`
 /// (atomic adds — threads share output rows).
@@ -81,17 +107,39 @@ pub fn fused_type1(
 /// scatters into its own `N×v_r` copy; buffers are then reduced in
 /// parallel over disjoint slices. Trades `p·N·v_r` scratch memory for
 /// atomic-free inner loops.
+#[derive(Debug, Default)]
 pub struct PrivateBuffers {
     bufs: Vec<Vec<Real>>,
 }
 
 impl PrivateBuffers {
     pub fn new(nthreads: usize, n: usize, vr: usize) -> Self {
-        Self { bufs: (0..nthreads).map(|_| vec![0.0; n * vr]).collect() }
+        let mut bufs = Self::default();
+        bufs.ensure(nthreads, n * vr);
+        bufs
+    }
+
+    /// Shape the buffers to `nthreads × len`, reusing the backing
+    /// allocations (grow-only) — the workspace checkout path.
+    pub fn ensure(&mut self, nthreads: usize, len: usize) {
+        self.bufs.truncate(nthreads);
+        while self.bufs.len() < nthreads {
+            self.bufs.push(Vec::new());
+        }
+        for b in &mut self.bufs {
+            b.clear();
+            b.resize(len, 0.0);
+        }
     }
 
     pub fn matches(&self, nthreads: usize, len: usize) -> bool {
         self.bufs.len() == nthreads && self.bufs.first().map_or(false, |b| b.len() == len)
+    }
+
+    /// Heap bytes held by the buffers' backing allocations.
+    pub fn retained_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<Real>()).sum::<usize>()
+            + self.bufs.capacity() * std::mem::size_of::<Vec<Real>>()
     }
 }
 
@@ -187,6 +235,7 @@ pub fn fused_type1_transposed(
 /// equals `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` from Algorithm 1. Accumulated in
 /// per-thread partial vectors (length `N`), reduced after the region — the
 /// scatter target is a scalar per doc, so privatization is cheap.
+#[allow(clippy::too_many_arguments)]
 pub fn fused_type2(
     c: &Csr,
     kt: &Dense,
@@ -195,14 +244,17 @@ pub fn fused_type2(
     wmd: &mut [Real],
     pool: &Pool,
     parts: &[NnzRange],
+    scratch: &mut FusedScratch,
 ) {
     let n = c.ncols();
     assert_eq!(wmd.len(), n);
     let nthreads = pool.nthreads();
-    let mut partials = vec![0.0; nthreads * n];
+    let partials = &mut scratch.partials;
+    partials.clear();
+    partials.resize(nthreads * n, 0.0);
     let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
     {
-        let pview = SharedSlice::new(&mut partials);
+        let pview = SharedSlice::new(partials.as_mut_slice());
         pool.run(|tid, _nt| {
             let part = parts[tid];
             // SAFETY: each thread owns partial slice tid.
@@ -236,17 +288,22 @@ pub fn fused_type2(
 /// without stalling the rest of the batch; their `x_ts[q]` is untouched.
 ///
 /// All per-query shapes follow the single-query [`fused_type1`]
-/// contract; the batch slices must share length `B`.
+/// contract; the batch slices must share length `B`. `u_ts` is a plain
+/// `&[Dense]` (not `&[&Dense]`): the per-query `u` states live
+/// contiguously in the solver workspace's lanes, so the per-iteration
+/// call needs no reference-vector rebuild — the factor slices, by
+/// contrast, point into `B` separately-owned `Prepared` values.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_type1_batch(
     c: &Csr,
     kts: &[&Dense],
     kor_ts: &[&Dense],
-    u_ts: &[&Dense],
+    u_ts: &[Dense],
     x_ts: &mut [Dense],
     active: &[bool],
     pool: &Pool,
     parts: &[NnzRange],
+    scratch: &mut FusedScratch,
 ) {
     let b = kts.len();
     debug_assert_eq!(kor_ts.len(), b);
@@ -261,21 +318,23 @@ pub fn fused_type1_batch(
         debug_assert_eq!(kts[q].nrows(), c.nrows());
         debug_assert_eq!(u_ts[q].nrows(), c.ncols());
     }
-    let act: Vec<usize> = (0..b).filter(|&q| active[q]).collect();
+    scratch.act.clear();
+    scratch.act.extend((0..b).filter(|&q| active[q]));
+    let act: &[usize] = &scratch.act;
     if act.is_empty() {
         return;
     }
     let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
     // Serial fast path: direct writes, same rationale as fused_type1.
     if pool.nthreads() == 1 {
-        for &q in &act {
+        for &q in act {
             x_ts[q].fill(0.0);
         }
         for row in 0..c.nrows() {
             for e in row_ptr[row]..row_ptr[row + 1] {
                 let j = col_idx[e] as usize;
                 let cv = values[e];
-                for &q in &act {
+                for &q in act {
                     let vr = kts[q].ncols();
                     let w = cv / dot(kts[q].row(row), u_ts[q].row(j));
                     let x = x_ts[q].as_mut_slice();
@@ -285,7 +344,7 @@ pub fn fused_type1_batch(
         }
         return;
     }
-    for &q in &act {
+    for &q in act {
         x_ts[q].fill(0.0);
     }
     let x_atomics: Vec<AtomicF64Slice> =
@@ -295,7 +354,7 @@ pub fn fused_type1_batch(
         for_each_nnz_in(part, row_ptr, |e, row| {
             let j = col_idx[e] as usize;
             let cv = values[e];
-            for &q in &act {
+            for &q in act {
                 let u_row = u_ts[q].row(j);
                 let w = cv / dot(kts[q].row(row), u_row);
                 let k_row = kor_ts[q].row(row);
@@ -319,22 +378,25 @@ pub fn fused_type1_transposed_batch(
     tp: &super::spmm::TransposedPattern,
     kts: &[&Dense],
     kor_ts: &[&Dense],
-    u_ts: &[&Dense],
+    u_ts: &[Dense],
     x_ts: &mut [Dense],
     active: &[bool],
     pool: &Pool,
     col_parts: &[NnzRange],
+    scratch: &mut FusedScratch,
 ) {
     let b = kts.len();
     debug_assert_eq!(kor_ts.len(), b);
     debug_assert_eq!(u_ts.len(), b);
     debug_assert_eq!(x_ts.len(), b);
     debug_assert_eq!(active.len(), b);
-    let act: Vec<usize> = (0..b).filter(|&q| active[q]).collect();
+    scratch.act.clear();
+    scratch.act.extend((0..b).filter(|&q| active[q]));
+    let act: &[usize] = &scratch.act;
     if act.is_empty() {
         return;
     }
-    for &q in &act {
+    for &q in act {
         debug_assert_eq!(x_ts[q].nrows() + 1, tp.col_ptr.len());
         debug_assert_eq!(x_ts[q].ncols(), kts[q].ncols());
         x_ts[q].fill(0.0);
@@ -347,7 +409,7 @@ pub fn fused_type1_transposed_batch(
         for_each_nnz_in(part, &tp.col_ptr, |e, j| {
             let i = tp.src_row[e] as usize;
             let cv = values[tp.src_pos[e] as usize];
-            for &q in &act {
+            for &q in act {
                 let u_row = u_ts[q].row(j);
                 let w = cv / dot(kts[q].row(i), u_row);
                 let vr = kts[q].ncols();
@@ -365,14 +427,16 @@ pub fn fused_type1_transposed_batch(
 /// (`acc[q·N + j]`), reduced after the region in the same thread order as
 /// the single-query [`fused_type2`], so given identical `u` the batched
 /// reduction is bitwise identical to `B` single-query reductions.
+#[allow(clippy::too_many_arguments)]
 pub fn fused_type2_batch(
     c: &Csr,
     kts: &[&Dense],
     km_ts: &[&Dense],
-    u_ts: &[&Dense],
+    u_ts: &[Dense],
     wmds: &mut [Vec<Real>],
     pool: &Pool,
     parts: &[NnzRange],
+    scratch: &mut FusedScratch,
 ) {
     let b = kts.len();
     debug_assert_eq!(km_ts.len(), b);
@@ -386,10 +450,12 @@ pub fn fused_type2_batch(
         return;
     }
     let nthreads = pool.nthreads();
-    let mut partials = vec![0.0; nthreads * b * n];
+    let partials = &mut scratch.partials;
+    partials.clear();
+    partials.resize(nthreads * b * n, 0.0);
     let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
     {
-        let pview = SharedSlice::new(&mut partials);
+        let pview = SharedSlice::new(partials.as_mut_slice());
         pool.run(|tid, _nt| {
             let part = parts[tid];
             // SAFETY: each thread owns partial slice tid.
@@ -512,11 +578,30 @@ mod tests {
             let pool = Pool::new(p);
             let parts = balanced_nnz_partition(c.row_ptr(), p);
             let mut wmd = vec![0.0; c.ncols()];
-            fused_type2(&c, &kt, &km_t, &u_t, &mut wmd, &pool, &parts);
+            fused_type2(&c, &kt, &km_t, &u_t, &mut wmd, &pool, &parts, &mut FusedScratch::new());
             for (a, b) in wmd.iter().zip(&oracle) {
                 assert!((a - b).abs() < 1e-11 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn reused_dirty_scratch_matches_fresh_scratch() {
+        // One FusedScratch across differently-shaped type-2 calls: the
+        // clear+resize at checkout must erase every stale partial.
+        let mut rng = Pcg64::new(75);
+        let mut scratch = FusedScratch::new();
+        for (v, n, vr, nnz) in [(30usize, 12usize, 5usize, 150usize), (18, 7, 3, 40), (40, 20, 8, 280)] {
+            let (c, kt, _kor, km_t, u_t) = case(&mut rng, v, n, vr, nnz);
+            let pool = Pool::new(3);
+            let parts = balanced_nnz_partition(c.row_ptr(), 3);
+            let mut fresh = vec![0.0; n];
+            fused_type2(&c, &kt, &km_t, &u_t, &mut fresh, &pool, &parts, &mut FusedScratch::new());
+            let mut reused = vec![0.0; n];
+            fused_type2(&c, &kt, &km_t, &u_t, &mut reused, &pool, &parts, &mut scratch);
+            assert_eq!(fresh, reused, "dirty scratch perturbed the type-2 reduction");
+        }
+        assert!(scratch.retained_bytes() > 0);
     }
 
     /// A batch of queries over one shared pattern, with per-query v_r.
@@ -565,8 +650,8 @@ mod tests {
             // Batched, all active.
             let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(18, vr)).collect();
             fused_type1_batch(
-                &c, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
-                &[true; 4], &pool, &parts,
+                &c, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
+                &[true; 4], &pool, &parts, &mut FusedScratch::new(),
             );
             for q in 0..vrs.len() {
                 assert!(x_ts[q].max_abs_diff(&expected[q]) < 1e-11, "p={p} q={q}");
@@ -584,8 +669,8 @@ mod tests {
         // Sentinel-fill: an inactive (converged) query's x must be untouched.
         let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(12, vr, 7.0)).collect();
         fused_type1_batch(
-            &c, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
-            &[true, false, true], &pool, &parts,
+            &c, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
+            &[true, false, true], &pool, &parts, &mut FusedScratch::new(),
         );
         assert!(x_ts[1].as_slice().iter().all(|&v| v == 7.0), "inactive query was written");
         let mut expected = Dense::zeros(12, vrs[0]);
@@ -612,8 +697,8 @@ mod tests {
             }
             let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(21, vr)).collect();
             fused_type1_transposed_batch(
-                &c, &tp, &refs(&kts), &refs(&kor_ts), &refs(&u_ts), &mut x_ts,
-                &[true; 3], &pool, &col_parts,
+                &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
+                &[true; 3], &pool, &col_parts, &mut FusedScratch::new(),
             );
             for q in 0..vrs.len() {
                 // Same per-column accumulation order → bitwise equal.
@@ -632,11 +717,15 @@ mod tests {
             let parts = balanced_nnz_partition(c.row_ptr(), p);
             let mut wmds: Vec<Vec<Real>> = (0..vrs.len()).map(|_| vec![0.0; 15]).collect();
             fused_type2_batch(
-                &c, &refs(&kts), &refs(&km_ts), &refs(&u_ts), &mut wmds, &pool, &parts,
+                &c, &refs(&kts), &refs(&km_ts), &u_ts, &mut wmds, &pool, &parts,
+                &mut FusedScratch::new(),
             );
             for q in 0..vrs.len() {
                 let mut expected = vec![0.0; 15];
-                fused_type2(&c, &kts[q], &km_ts[q], &u_ts[q], &mut expected, &pool, &parts);
+                fused_type2(
+                    &c, &kts[q], &km_ts[q], &u_ts[q], &mut expected, &pool, &parts,
+                    &mut FusedScratch::new(),
+                );
                 // Same traversal and reduction order → bitwise equal.
                 assert_eq!(wmds[q], expected, "p={p} q={q}");
             }

@@ -19,7 +19,7 @@ pub mod spmm;
 
 pub use fused::{
     fused_type1, fused_type1_batch, fused_type1_private, fused_type1_transposed,
-    fused_type1_transposed_batch, fused_type2, fused_type2_batch, PrivateBuffers,
+    fused_type1_transposed_batch, fused_type2, fused_type2_batch, FusedScratch, PrivateBuffers,
 };
 pub use sddmm::{sddmm, sddmm_serial};
 pub use spmm::{spmm_atomic, spmm_serial, spmm_transposed, TransposedPattern};

@@ -69,7 +69,7 @@ pub fn spmm_serial(c: &Csr, w: &[Real], kor_t: &Dense, x_t: &mut Dense) {
 /// Precomputed transpose of a CSR *pattern*: for each column `j`, the list
 /// of (source row, CSR value position) pairs. Built once per query (the
 /// pattern of `c` is iteration-invariant), reused every Sinkhorn step.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TransposedPattern {
     /// `col_ptr[j]..col_ptr[j+1]` spans column `j`'s entries.
     pub col_ptr: Vec<usize>,
@@ -81,30 +81,63 @@ pub struct TransposedPattern {
 
 impl TransposedPattern {
     pub fn build(c: &Csr) -> Self {
+        let mut tp = Self::default();
+        tp.rebuild_from(c);
+        tp
+    }
+
+    /// Rebuild the pattern of `c` in place, reusing the three backing
+    /// allocations (grow-only) — the form a retained [`crate::sinkhorn::
+    /// SolveWorkspace`] uses so repeated solves stop touching the
+    /// allocator. Unlike [`TransposedPattern::build`] this also avoids the
+    /// transient cursor clone: `col_ptr[j]` doubles as column `j`'s write
+    /// cursor during the scatter (it then holds column `j`'s *end*, i.e.
+    /// the old `col_ptr[j + 1]`), and one right-shift restores the pointer
+    /// array.
+    pub fn rebuild_from(&mut self, c: &Csr) {
         let ncols = c.ncols();
-        let mut col_ptr = vec![0usize; ncols + 1];
+        let nnz = c.nnz();
+        self.col_ptr.clear();
+        self.col_ptr.resize(ncols + 1, 0);
         for &j in c.col_idx() {
-            col_ptr[j as usize + 1] += 1;
+            self.col_ptr[j as usize + 1] += 1;
         }
         for j in 0..ncols {
-            col_ptr[j + 1] += col_ptr[j];
+            self.col_ptr[j + 1] += self.col_ptr[j];
         }
-        let mut cursor = col_ptr.clone();
-        let mut src_row = vec![0u32; c.nnz()];
-        let mut src_pos = vec![0u32; c.nnz()];
+        self.src_row.clear();
+        self.src_row.resize(nnz, 0);
+        self.src_pos.clear();
+        self.src_pos.resize(nnz, 0);
         for (e, (i, j, _)) in c.iter().enumerate() {
-            let dst = cursor[j];
-            cursor[j] += 1;
-            src_row[dst] = i as u32;
-            src_pos[dst] = e as u32;
+            let dst = self.col_ptr[j];
+            self.col_ptr[j] += 1;
+            self.src_row[dst] = i as u32;
+            self.src_pos[dst] = e as u32;
         }
-        Self { col_ptr, src_row, src_pos }
+        for j in (1..=ncols).rev() {
+            self.col_ptr[j] = self.col_ptr[j - 1];
+        }
+        if !self.col_ptr.is_empty() {
+            self.col_ptr[0] = 0;
+        }
     }
 
     /// nnz-balanced partition over *columns* (each thread owns whole
     /// columns, hence whole `xᵀ` rows — no atomics).
     pub fn column_parts(&self, nthreads: usize) -> Vec<NnzRange> {
         balanced_nnz_partition(&self.col_ptr, nthreads)
+    }
+
+    /// [`TransposedPattern::column_parts`] into a caller-owned buffer.
+    pub fn column_parts_into(&self, nthreads: usize, out: &mut Vec<NnzRange>) {
+        crate::parallel::balanced_nnz_partition_into(&self.col_ptr, nthreads, out);
+    }
+
+    /// Heap bytes held by the pattern's backing allocations.
+    pub fn retained_bytes(&self) -> usize {
+        self.col_ptr.capacity() * std::mem::size_of::<usize>()
+            + (self.src_row.capacity() + self.src_pos.capacity()) * std::mem::size_of::<u32>()
     }
 }
 
@@ -193,6 +226,28 @@ mod tests {
             spmm_transposed(&tp, &w, &kor_t, &mut x_t, &pool, &col_parts);
             assert!(x_t.max_abs_diff(&x_serial) < 1e-12, "p={p}");
         }
+    }
+
+    #[test]
+    fn rebuild_from_reuses_dirty_pattern_bitwise() {
+        let mut rng = Pcg64::new(64);
+        let (big, _, _) = random_case(&mut rng, 50, 23, 6, 300);
+        let (small, _, _) = random_case(&mut rng, 20, 9, 4, 60);
+        let mut tp = TransposedPattern::build(&big);
+        // Shrink onto a smaller matrix, then regrow onto the big one: both
+        // must match a fresh build exactly, with no allocation on regrow.
+        tp.rebuild_from(&small);
+        let fresh_small = TransposedPattern::build(&small);
+        assert_eq!(tp.col_ptr, fresh_small.col_ptr);
+        assert_eq!(tp.src_row, fresh_small.src_row);
+        assert_eq!(tp.src_pos, fresh_small.src_pos);
+        let bytes = tp.retained_bytes();
+        tp.rebuild_from(&big);
+        let fresh_big = TransposedPattern::build(&big);
+        assert_eq!(tp.col_ptr, fresh_big.col_ptr);
+        assert_eq!(tp.src_row, fresh_big.src_row);
+        assert_eq!(tp.src_pos, fresh_big.src_pos);
+        assert_eq!(tp.retained_bytes(), bytes, "regrow within capacity must not allocate");
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Dirty-buffer equivalence suite for the zero-alloc hot path: solving
+//! query A, then B, then A again through ONE reused [`SolveWorkspace`]
+//! must produce bitwise-identical outputs to fresh-allocation solves —
+//! across all four iterate kernels, batch sizes {1, 4} and S ∈ {1, 2}
+//! target-set shards. Everything runs on one thread so "identical" means
+//! `assert_eq!` on the raw `f64` vectors, not a tolerance.
+
+use sinkhorn_wmd::coordinator::{DocStore, ShardSet, ShardedDocStore};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{
+    IterateKernel, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver,
+};
+use std::sync::Arc;
+
+const KERNELS: [IterateKernel; 4] = [
+    IterateKernel::FusedAtomic,
+    IterateKernel::FusedPrivate,
+    IterateKernel::FusedTransposed,
+    IterateKernel::Unfused,
+];
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(500)
+        .num_docs(40)
+        .embedding_dim(16)
+        .n_topics(4)
+        .num_queries(4)
+        .query_words(5, 12)
+        .seed(91)
+        .build()
+}
+
+#[test]
+fn reused_workspace_single_solves_bitwise_identical_across_kernels() {
+    let corpus = corpus();
+    let pool = Pool::new(1); // serial → bitwise-deterministic solves
+    for kernel in KERNELS {
+        let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+        let preps: Vec<Prepared> = corpus
+            .queries
+            .iter()
+            .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+            .collect();
+        let mut ws = SolveWorkspace::new();
+        // A, then B, then A again: the third solve reads buffers dirtied
+        // by a different query shape.
+        for &q in &[0usize, 1, 0] {
+            let fresh = solver.solve(&preps[q], &corpus.c, &pool);
+            let reused = solver.solve_in(&mut ws, &preps[q], &corpus.c, &pool);
+            assert_eq!(fresh.wmd, reused.wmd, "{kernel:?} q={q}: dirty buffers leaked");
+            assert_eq!(fresh.iterations, reused.iterations, "{kernel:?} q={q}");
+            assert_eq!(fresh.converged, reused.converged, "{kernel:?} q={q}");
+        }
+        let stats = ws.stats();
+        assert_eq!(stats.checkouts, 3, "{kernel:?}");
+        assert!(stats.bytes_retained > 0, "{kernel:?}");
+        assert!(
+            stats.grows < stats.checkouts,
+            "{kernel:?}: repeating a shape must not regrow the workspace"
+        );
+    }
+}
+
+#[test]
+fn reused_workspace_batched_solves_bitwise_identical() {
+    let corpus = corpus();
+    let pool = Pool::new(1);
+    for kernel in KERNELS {
+        let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+        let preps: Vec<Prepared> = corpus
+            .queries
+            .iter()
+            .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+            .collect();
+        for b in [1usize, 4] {
+            let refs: Vec<&Prepared> = preps[..b].iter().collect();
+            let dirty: Vec<&Prepared> = vec![&preps[2]];
+            let mut ws = SolveWorkspace::new();
+            let fresh = solver.solve_batch(&refs, &corpus.c, &pool);
+            let first = solver.solve_batch_in(&mut ws, &refs, &corpus.c, &pool);
+            // Interleave a different batch shape to dirty the lanes, then
+            // solve the original batch again.
+            let _ = solver.solve_batch_in(&mut ws, &dirty, &corpus.c, &pool);
+            let again = solver.solve_batch_in(&mut ws, &refs, &corpus.c, &pool);
+            assert_eq!(first.len(), b);
+            assert_eq!(again.len(), b);
+            for q in 0..b {
+                assert_eq!(fresh[q].wmd, first[q].wmd, "{kernel:?} b={b} q={q} (cold ws)");
+                assert_eq!(fresh[q].wmd, again[q].wmd, "{kernel:?} b={b} q={q} (dirty ws)");
+                assert_eq!(fresh[q].iterations, again[q].iterations, "{kernel:?} b={b} q={q}");
+                assert_eq!(fresh[q].converged, again[q].converged, "{kernel:?} b={b} q={q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn reused_shard_worker_workspaces_bitwise_identical_to_monolithic() {
+    // S ∈ {1, 2}: every ShardSet worker retains its own workspace across
+    // batches. With fixed iterations and one thread per shard, a warm
+    // (dirty) set must keep reproducing the monolithic fresh-allocation
+    // solve bit for bit.
+    let corpus = corpus();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let config = SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() };
+    let solver = SparseSolver::new(config);
+    let pool = Pool::new(1);
+    let preps: Vec<Arc<Prepared>> = corpus
+        .queries
+        .iter()
+        .map(|q| Arc::new(solver.prepare(&corpus.embeddings, q, &pool)))
+        .collect();
+    let prep_refs: Vec<&Prepared> = preps.iter().map(|p| p.as_ref()).collect();
+    let monolithic = solver.solve_batch(&prep_refs, &corpus.c, &pool);
+    for s in [1usize, 2] {
+        let set = ShardSet::start(ShardedDocStore::split(Arc::clone(&store), s), config, 1);
+        for b in [1usize, 4] {
+            let batch: Vec<Arc<Prepared>> = preps[..b].to_vec();
+            // Dirty the workers with the full batch, then solve `batch`
+            // on the warm set.
+            let _ = set.solve_batch(&preps);
+            let out = set.solve_batch(&batch);
+            assert_eq!(out.outputs.len(), b);
+            for q in 0..b {
+                assert_eq!(
+                    out.outputs[q].wmd, monolithic[q].wmd,
+                    "S={s} b={b} q={q}: warm sharded solve diverged from monolithic"
+                );
+                assert_eq!(out.outputs[q].iterations, monolithic[q].iterations);
+            }
+            for ws in &out.workspace {
+                assert!(ws.checkouts >= 2, "S={s} b={b}: workers must reuse, not rebuild");
+            }
+        }
+    }
+}
