@@ -1,0 +1,113 @@
+//! Ingestion throughput: parsing a synthetic `.vec` embedding file (full
+//! vs vocabulary-filtered) and the end-to-end two-pass document ingest.
+//! The filter is the headline: a corpus that uses a fraction of the
+//! embedding file's words skips the float parsing (the dominant cost) for
+//! every skipped line, which is what makes a `crawl-300d-2M`-shaped file
+//! loadable in corpus time.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::corpus::{ingest_corpus, load_vec_file, DocFormat};
+use sinkhorn_wmd::util::{Pcg64, Zipf};
+use std::collections::HashSet;
+use std::io::Write;
+
+fn main() {
+    common::header(
+        "ingest_throughput",
+        "real-corpus ingestion: .vec parsing + streaming document build (§2 preprocessing)",
+    );
+    let settings = common::settings();
+    // (words in the .vec file, words the docs actually use, docs, dim)
+    let (file_words, used_words, ndocs, dim) = match common::scale() {
+        common::Scale::Quick => (2_000, 400, 500, 50),
+        common::Scale::Default => (50_000, 10_000, 5_000, 100),
+        common::Scale::Paper => (200_000, 40_000, 20_000, 300),
+    };
+    let tokens_per_doc = 30;
+
+    let dir = std::env::temp_dir().join(format!("wmd-ingest-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let vec_path = dir.join("emb.vec");
+    let docs_path = dir.join("docs.txt");
+
+    let mut rng = Pcg64::new(7);
+    {
+        let f = std::fs::File::create(&vec_path).unwrap();
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{file_words} {dim}").unwrap();
+        for i in 0..file_words {
+            write!(w, "w{i:07}").unwrap();
+            for _ in 0..dim {
+                write!(w, " {:.4}", rng.next_gaussian()).unwrap();
+            }
+            writeln!(w).unwrap();
+        }
+    }
+    {
+        let zipf = Zipf::new(used_words, 1.05);
+        let f = std::fs::File::create(&docs_path).unwrap();
+        let mut w = std::io::BufWriter::new(f);
+        for _ in 0..ndocs {
+            for t in 0..tokens_per_doc {
+                let id = zipf.sample(&mut rng);
+                if t > 0 {
+                    write!(w, " ").unwrap();
+                }
+                write!(w, "w{id:07}").unwrap();
+            }
+            writeln!(w).unwrap();
+        }
+    }
+    let vec_mb = std::fs::metadata(&vec_path).unwrap().len() as f64 / (1 << 20) as f64;
+    println!(
+        "workload: {file_words}-word .vec ({vec_mb:.1} MiB, dim {dim}), \
+         {ndocs} docs × {tokens_per_doc} tokens over {used_words} words\n"
+    );
+
+    let used: HashSet<String> = (0..used_words).map(|i| format!("w{i:07}")).collect();
+    let r_full = bench_fn("vec full", &settings, || load_vec_file(&vec_path, None).unwrap());
+    let r_filtered = bench_fn("vec filtered", &settings, || {
+        load_vec_file(&vec_path, Some(&used)).unwrap()
+    });
+    let r_ingest = bench_fn("ingest e2e", &settings, || {
+        ingest_corpus(&vec_path, &docs_path, DocFormat::Text).unwrap()
+    });
+
+    let mut t = Table::new(["stage", "time", "throughput"]);
+    t.row([
+        "load .vec (full)".into(),
+        format!("{:.1} ms", r_full.mean_secs() * 1e3),
+        format!("{:.1} MiB/s", vec_mb / r_full.mean_secs()),
+    ]);
+    t.row([
+        "load .vec (filtered)".into(),
+        format!("{:.1} ms", r_filtered.mean_secs() * 1e3),
+        format!("{:.1} MiB/s scanned", vec_mb / r_filtered.mean_secs()),
+    ]);
+    t.row([
+        "ingest end-to-end".into(),
+        format!("{:.1} ms", r_ingest.mean_secs() * 1e3),
+        format!("{:.0} docs/s", ndocs as f64 / r_ingest.mean_secs()),
+    ]);
+    t.print();
+    println!(
+        "\nfilter speedup on the .vec load: {:.2}x ({} of {} words kept)",
+        r_full.mean_secs() / r_filtered.mean_secs(),
+        used_words,
+        file_words
+    );
+
+    // Correctness gate: the filtered load and the ingest agree on shapes.
+    let full = load_vec_file(&vec_path, None).unwrap();
+    let filtered = load_vec_file(&vec_path, Some(&used)).unwrap();
+    assert_eq!(full.vocab.len(), file_words);
+    assert_eq!(filtered.vocab.len(), used_words);
+    let (corpus, stats) = ingest_corpus(&vec_path, &docs_path, DocFormat::Text).unwrap();
+    assert_eq!(corpus.num_docs(), ndocs);
+    assert_eq!(stats.tokens_oov, 0, "every sampled token has an embedding");
+    assert!(corpus.vocab_size() <= used_words);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -12,7 +12,9 @@ use std::collections::BTreeMap;
 
 /// Bare switches the parser recognizes as boolean flags. Everything else
 /// written `--key` must carry a value (`--key value` or `--key=value`).
-pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "help"];
+/// `jsonl` forces the `ingest` document reader into JSONL mode regardless
+/// of the file extension.
+pub const BOOL_FLAGS: &[&str] = &["verbose", "quiet", "help", "jsonl"];
 
 /// Parsed arguments: one optional subcommand + `--key value` options +
 //  bare `--flag` switches.
@@ -174,6 +176,17 @@ mod tests {
         .unwrap();
         assert!(a.flag("fast") && a.flag("slow"));
         assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn ingest_invocation_parses() {
+        let a = parse("ingest --vec emb.vec --docs docs.jsonl --jsonl --out corpus.wmdc");
+        assert_eq!(a.subcommand.as_deref(), Some("ingest"));
+        assert_eq!(a.get("vec"), Some("emb.vec"));
+        assert_eq!(a.get("docs"), Some("docs.jsonl"));
+        assert_eq!(a.get("out"), Some("corpus.wmdc"));
+        assert!(a.flag("jsonl"));
+        assert!(a.positional().is_empty());
     }
 
     #[test]

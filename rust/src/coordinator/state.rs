@@ -2,7 +2,7 @@
 //! worker — embeddings + the `V × N` target matrix + optional metadata —
 //! and the per-dispatcher [`PreparedCache`] of `dist`-layer query factors.
 
-use crate::corpus::{SparseVec, SyntheticCorpus, TinyCorpus};
+use crate::corpus::{Corpus, SparseVec, SyntheticCorpus, TinyCorpus, Vocabulary};
 use crate::sinkhorn::Prepared;
 use crate::sparse::{Csr, Dense};
 use crate::Real;
@@ -14,6 +14,9 @@ use std::sync::Arc;
 pub struct DocStore {
     pub embeddings: Dense,
     pub c: Csr,
+    /// Word strings aligned with the embedding rows, when known (ingested
+    /// corpora): enables raw-text queries via [`DocStore::text_query`].
+    pub vocab: Option<Vocabulary>,
     /// Optional human-readable text per target document.
     pub texts: Vec<String>,
     /// Optional label per target document (classification examples).
@@ -23,7 +26,7 @@ pub struct DocStore {
 impl DocStore {
     pub fn new(embeddings: Dense, c: Csr) -> Self {
         assert_eq!(embeddings.nrows(), c.nrows(), "embeddings/c vocab mismatch");
-        Self { embeddings, c, texts: Vec::new(), labels: Vec::new() }
+        Self { embeddings, c, vocab: None, texts: Vec::new(), labels: Vec::new() }
     }
 
     pub fn with_texts(mut self, texts: Vec<String>) -> Self {
@@ -38,16 +41,52 @@ impl DocStore {
         self
     }
 
+    pub fn with_vocab(mut self, vocab: Vocabulary) -> Self {
+        assert_eq!(vocab.len(), self.c.nrows(), "vocabulary/c vocab mismatch");
+        self.vocab = Some(vocab);
+        self
+    }
+
     pub fn from_synthetic(corpus: &SyntheticCorpus) -> Self {
         Self::new(corpus.embeddings.clone(), corpus.c.clone())
             .with_labels(corpus.doc_topics.iter().map(|t| format!("topic-{t}")).collect())
     }
 
+    /// Build from a generic corpus (ingested or any loaded snapshot):
+    /// keeps the vocabulary when the word strings are known, and lowers
+    /// topic metadata into labels when present.
+    pub fn from_corpus(corpus: &Corpus) -> Self {
+        let mut store = Self::new(corpus.embeddings.clone(), corpus.c.clone());
+        if corpus.has_words() {
+            store = store.with_vocab(corpus.vocab.clone());
+        }
+        if corpus.doc_topics.len() == corpus.num_docs() {
+            store = store
+                .with_labels(corpus.doc_topics.iter().map(|t| format!("topic-{t}")).collect());
+        }
+        store
+    }
+
     pub fn from_tiny(tiny: &TinyCorpus) -> Self {
         let c = crate::corpus::docs_to_csr(tiny.vocab.len(), &tiny.docs);
         Self::new(tiny.embeddings.clone(), c)
+            .with_vocab(tiny.vocab.clone())
             .with_texts(tiny.sentences.iter().map(|s| s.to_string()).collect())
             .with_labels(tiny.labels.iter().map(|l| l.to_string()).collect())
+    }
+
+    /// Histogram a raw text query over this store's vocabulary — the
+    /// shared [`Vocabulary::text_histogram`] pipeline, so the service
+    /// and the CLI can never preprocess the same text differently.
+    /// `Err` when the store has no word strings or nothing survives
+    /// filtering; the result always passes [`DocStore::check_query`].
+    pub fn text_query(&self, text: &str) -> Result<SparseVec, String> {
+        let vocab = self
+            .vocab
+            .as_ref()
+            .ok_or("this document store has no vocabulary words — raw-text queries need an \
+                    ingested (v2) corpus")?;
+        vocab.text_histogram(text)
     }
 
     pub fn vocab_size(&self) -> usize {
@@ -283,6 +322,19 @@ mod tests {
         assert_eq!(store.num_docs(), tiny.docs.len());
         assert_eq!(store.texts.len(), store.num_docs());
         assert_eq!(store.labels.len(), store.num_docs());
+    }
+
+    #[test]
+    fn text_query_builds_a_checkable_histogram() {
+        let tiny = TinyCorpus::load();
+        let store = DocStore::from_tiny(&tiny);
+        let q = store.text_query("Obama speaks to the media in Illinois").unwrap();
+        assert_eq!(q.nnz(), 4);
+        assert!(store.check_query(&q).is_ok());
+        assert!(store.text_query("zzz totally unknown words").is_err());
+        // A store without word strings cannot histogram text.
+        let wordless = DocStore::new(store.embeddings.clone(), store.c.clone());
+        assert!(wordless.text_query("obama").is_err());
     }
 
     #[test]

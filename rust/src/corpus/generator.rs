@@ -201,6 +201,23 @@ impl SyntheticCorpus {
         CorpusBuilder::default()
     }
 
+    /// Lower into the generic serving [`Corpus`](super::Corpus): same
+    /// embeddings, target matrix, queries and topic metadata; the
+    /// per-document histograms are dropped (they are the columns of `c`)
+    /// and the vocabulary has no word strings (synthetic words are
+    /// unnamed).
+    pub fn into_corpus(self) -> super::Corpus {
+        super::Corpus {
+            embeddings: self.embeddings,
+            vocab: super::Vocabulary::default(),
+            word_topic: self.word_topic,
+            c: self.c,
+            doc_topics: self.doc_topics,
+            queries: self.queries,
+            query_topics: self.query_topics,
+        }
+    }
+
     pub fn query(&self, i: usize) -> &SparseVec {
         &self.queries[i]
     }

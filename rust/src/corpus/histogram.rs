@@ -15,12 +15,34 @@ pub struct SparseVec {
 }
 
 impl SparseVec {
+    /// The empty histogram: no words, no mass. As a target column this is
+    /// the empty document (`WMD = +inf`); as a query it is rejected by
+    /// `DocStore::check_query`.
+    pub fn empty(dim: usize) -> Self {
+        Self { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
     /// Build from raw `(word, count)` pairs (duplicates summed), then
-    /// normalize to unit mass.
+    /// normalize to unit mass. Panics on empty input and out-of-vocabulary
+    /// words — for synthetic/test construction where both are bugs; the
+    /// ingest path uses [`SparseVec::try_from_counts`], where both are
+    /// routine data conditions.
     pub fn from_counts(dim: usize, counts: &[(usize, usize)]) -> Self {
+        let h = Self::try_from_counts(dim, counts).unwrap_or_else(|e| panic!("{e}"));
+        assert!(h.nnz() > 0, "empty histogram");
+        h
+    }
+
+    /// Fallible [`SparseVec::from_counts`]: an out-of-vocabulary word is
+    /// an `Err`, and an input with no positive counts is `Ok` with the
+    /// **empty** histogram (ingested all-stopword/all-OOV documents become
+    /// empty target columns and flow into the `WMD = +inf` semantics).
+    pub fn try_from_counts(dim: usize, counts: &[(usize, usize)]) -> Result<Self, String> {
         let mut pairs: Vec<(usize, Real)> = Vec::with_capacity(counts.len());
         for &(w, k) in counts {
-            assert!(w < dim, "word {w} out of vocabulary {dim}");
+            if w >= dim {
+                return Err(format!("word {w} out of vocabulary {dim}"));
+            }
             if k > 0 {
                 pairs.push((w, k as Real));
             }
@@ -37,21 +59,31 @@ impl SparseVec {
             }
         }
         let total: Real = val.iter().sum();
-        assert!(total > 0.0, "empty histogram");
+        if total <= 0.0 {
+            return Ok(Self::empty(dim));
+        }
         for v in &mut val {
             *v /= total;
         }
-        Self { dim, idx, val }
+        Ok(Self { dim, idx, val })
     }
 
-    /// Build from a token-id stream.
+    /// Build from a token-id stream. Panics on empty input / OOV ids.
     pub fn from_token_ids(dim: usize, ids: &[usize]) -> Self {
+        let h = Self::try_from_token_ids(dim, ids).unwrap_or_else(|e| panic!("{e}"));
+        assert!(h.nnz() > 0, "empty histogram");
+        h
+    }
+
+    /// Fallible [`SparseVec::from_token_ids`] (see
+    /// [`SparseVec::try_from_counts`] for the empty/OOV contract).
+    pub fn try_from_token_ids(dim: usize, ids: &[usize]) -> Result<Self, String> {
         let mut counts = std::collections::HashMap::new();
         for &id in ids {
             *counts.entry(id).or_insert(0usize) += 1;
         }
         let counts: Vec<(usize, usize)> = counts.into_iter().collect();
-        Self::from_counts(dim, &counts)
+        Self::try_from_counts(dim, &counts)
     }
 
     /// Number of distinct words (the paper's `v_r`).
@@ -141,5 +173,39 @@ mod tests {
     #[should_panic(expected = "empty histogram")]
     fn empty_histogram_panics() {
         let _ = SparseVec::from_counts(4, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocabulary")]
+    fn oov_word_panics() {
+        let _ = SparseVec::from_counts(4, &[(9, 1)]);
+    }
+
+    #[test]
+    fn try_from_counts_empty_is_ok_empty() {
+        // Ingestion: all-stopword documents yield no counts — an empty
+        // column, not a panic.
+        let h = SparseVec::try_from_counts(4, &[]).unwrap();
+        assert_eq!(h, SparseVec::empty(4));
+        assert_eq!(h.nnz(), 0);
+        let zeros = SparseVec::try_from_counts(4, &[(1, 0), (2, 0)]).unwrap();
+        assert_eq!(zeros.nnz(), 0);
+        let ids = SparseVec::try_from_token_ids(4, &[]).unwrap();
+        assert_eq!(ids.nnz(), 0);
+    }
+
+    #[test]
+    fn try_from_counts_oov_is_err() {
+        assert!(SparseVec::try_from_counts(4, &[(4, 1)]).is_err());
+        assert!(SparseVec::try_from_token_ids(4, &[0, 7]).is_err());
+    }
+
+    #[test]
+    fn try_from_counts_matches_panicking_constructor() {
+        let counts = [(3usize, 2usize), (7, 6), (3, 1)];
+        assert_eq!(
+            SparseVec::try_from_counts(10, &counts).unwrap(),
+            SparseVec::from_counts(10, &counts)
+        );
     }
 }

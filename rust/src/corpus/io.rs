@@ -2,9 +2,22 @@
 //! little-endian container (`WMDC` magic) holding the embeddings, the CSR
 //! target matrix, queries and topic metadata. No external serialization
 //! crates exist offline; the format is versioned and length-prefixed.
+//!
+//! Two versions coexist:
+//!
+//! * **v1** — the synthetic-corpus snapshot (no word strings, redundant
+//!   per-document histograms). Still written by `gen-corpus` and still
+//!   loadable, byte-identically, by both [`load_corpus`] and the generic
+//!   [`load_corpus_any`].
+//! * **v2** — the generic [`Corpus`] snapshot produced by ingestion: adds
+//!   the vocabulary's **word strings** (so raw-text queries can be
+//!   histogrammed against a loaded snapshot) and drops the per-document
+//!   histogram list (the documents are exactly the columns of `c`).
 
 use super::generator::SyntheticCorpus;
 use super::histogram::SparseVec;
+use super::vocab::Vocabulary;
+use super::Corpus;
 use crate::sparse::{Csr, Dense};
 use crate::Real;
 use std::io::{self, Read, Write};
@@ -12,6 +25,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"WMDC";
 const VERSION: u32 = 1;
+const VERSION_V2: u32 = 2;
 
 /// Cap on *pre*-allocation from an untrusted length prefix (elements, so
 /// ≤ 8 MiB up front for f64/u64 payloads). A truncated or corrupted file
@@ -95,7 +109,10 @@ fn read_dense(r: &mut impl Read) -> io::Result<Dense> {
     let nrows = read_u64(r)? as usize;
     let ncols = read_u64(r)? as usize;
     let data = read_f64s(r)?;
-    if data.len() != nrows * ncols {
+    // checked_mul, not `nrows * ncols`: adversarial header dims (e.g.
+    // 2^32 × 2^32 with an empty payload) wrap the unchecked product in
+    // release builds and would pass the length check with wrong dims.
+    if nrows.checked_mul(ncols) != Some(data.len()) {
         return Err(io::Error::new(io::ErrorKind::InvalidData, "dense shape mismatch"));
     }
     Ok(Dense::from_vec(nrows, ncols, data))
@@ -133,13 +150,96 @@ fn read_sparsevec(r: &mut impl Read) -> io::Result<SparseVec> {
     let dim = read_u64(r)? as usize;
     let idx = read_u32s(r)?;
     let val = read_f64s(r)?;
-    if idx.len() != val.len() {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "sparse vec mismatch"));
-    }
-    Ok(SparseVec { dim, idx, val })
+    let v = SparseVec { dim, idx, val };
+    // Full structural validation at read time, mirroring
+    // `DocStore::check_query`: a corrupted snapshot with out-of-range,
+    // duplicate or unsorted indices — or non-finite / non-positive /
+    // denormalized masses — must come back as InvalidData here, not panic
+    // (or silently mis-solve) deep inside a later solve. The *empty*
+    // histogram is legal (the `WMD = +inf` empty-document encoding).
+    validate_sparsevec(&v)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("sparse vec: {e}")))?;
+    Ok(v)
 }
 
-/// Serialize a full corpus to `path`.
+fn validate_sparsevec(v: &SparseVec) -> Result<(), String> {
+    if v.idx.len() != v.val.len() {
+        return Err(format!("idx/val length mismatch: {} vs {}", v.idx.len(), v.val.len()));
+    }
+    let mut prev: Option<u32> = None;
+    for (&i, &x) in v.idx.iter().zip(&v.val) {
+        if i as usize >= v.dim {
+            return Err(format!("index {i} out of dimension {}", v.dim));
+        }
+        if let Some(p) = prev {
+            if i <= p {
+                return Err(format!("indices not strictly increasing ({p} then {i})"));
+            }
+        }
+        prev = Some(i);
+        if !x.is_finite() || x <= 0.0 {
+            return Err(format!("mass {x} for index {i} is not finite-positive"));
+        }
+    }
+    if !v.idx.is_empty() {
+        let sum: Real = v.val.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("mass {sum} is not normalized"));
+        }
+    }
+    Ok(())
+}
+
+fn write_strings(w: &mut impl Write, xs: &[String]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for x in xs {
+        write_u64(w, x.len() as u64)?;
+        w.write_all(x.as_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_strings(r: &mut impl Read) -> io::Result<Vec<String>> {
+    let n = read_u64(r)? as usize;
+    let mut out = Vec::with_capacity(n.min(IO_PREALLOC_CAP));
+    for _ in 0..n {
+        let len = read_u64(r)? as usize;
+        let mut buf = vec![0u8; len.min(IO_PREALLOC_CAP)];
+        if len <= IO_PREALLOC_CAP {
+            r.read_exact(&mut buf)?;
+        } else {
+            // A lying length prefix: read incrementally so EOF surfaces
+            // before a multi-GB allocation.
+            buf.clear();
+            let mut chunk = [0u8; 4096];
+            let mut remaining = len;
+            while remaining > 0 {
+                let take = remaining.min(chunk.len());
+                r.read_exact(&mut chunk[..take])?;
+                buf.extend_from_slice(&chunk[..take]);
+                remaining -= take;
+            }
+        }
+        let s = String::from_utf8(buf)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "word is not valid UTF-8"))?;
+        out.push(s);
+    }
+    Ok(out)
+}
+
+fn read_header(r: &mut impl Read) -> io::Result<u32> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a WMDC file"));
+    }
+    let mut ver = [0u8; 4];
+    r.read_exact(&mut ver)?;
+    Ok(u32::from_le_bytes(ver))
+}
+
+/// Serialize a synthetic corpus to `path` (the v1 format, unchanged since
+/// before ingestion existed — v1 files keep loading byte-identically).
 pub fn save_corpus(path: &Path, corpus: &SyntheticCorpus) -> io::Result<()> {
     let file = std::fs::File::create(path)?;
     let mut w = io::BufWriter::new(file);
@@ -161,30 +261,120 @@ pub fn save_corpus(path: &Path, corpus: &SyntheticCorpus) -> io::Result<()> {
     w.flush()
 }
 
-/// Load a corpus previously written by [`save_corpus`].
+fn read_v1_body(r: &mut impl Read) -> io::Result<SyntheticCorpus> {
+    let embeddings = read_dense(r)?;
+    let word_topic = read_u32s(r)?;
+    let c = read_csr(r)?;
+    let ndocs = read_u64(r)? as usize;
+    let docs = (0..ndocs).map(|_| read_sparsevec(r)).collect::<io::Result<Vec<_>>>()?;
+    let doc_topics = read_u32s(r)?;
+    let nq = read_u64(r)? as usize;
+    let queries = (0..nq).map(|_| read_sparsevec(r)).collect::<io::Result<Vec<_>>>()?;
+    let query_topics = read_u32s(r)?;
+    Ok(SyntheticCorpus { embeddings, word_topic, c, docs, doc_topics, queries, query_topics })
+}
+
+/// Load a v1 corpus previously written by [`save_corpus`].
 pub fn load_corpus(path: &Path) -> io::Result<SyntheticCorpus> {
     let file = std::fs::File::open(path)?;
     let mut r = io::BufReader::new(file);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a WMDC file"));
-    }
-    let mut ver = [0u8; 4];
-    r.read_exact(&mut ver)?;
-    if u32::from_le_bytes(ver) != VERSION {
+    if read_header(&mut r)? != VERSION {
         return Err(io::Error::new(io::ErrorKind::InvalidData, "unsupported WMDC version"));
     }
-    let embeddings = read_dense(&mut r)?;
-    let word_topic = read_u32s(&mut r)?;
-    let c = read_csr(&mut r)?;
-    let ndocs = read_u64(&mut r)? as usize;
-    let docs = (0..ndocs).map(|_| read_sparsevec(&mut r)).collect::<io::Result<Vec<_>>>()?;
-    let doc_topics = read_u32s(&mut r)?;
-    let nq = read_u64(&mut r)? as usize;
-    let queries = (0..nq).map(|_| read_sparsevec(&mut r)).collect::<io::Result<Vec<_>>>()?;
-    let query_topics = read_u32s(&mut r)?;
-    Ok(SyntheticCorpus { embeddings, word_topic, c, docs, doc_topics, queries, query_topics })
+    read_v1_body(&mut r)
+}
+
+/// Serialize a generic [`Corpus`] to `path` in the v2 format (adds the
+/// vocabulary word strings; no per-document histogram list — documents
+/// are the columns of `c`).
+pub fn save_corpus_v2(path: &Path, corpus: &Corpus) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION_V2.to_le_bytes())?;
+    write_strings(&mut w, corpus.vocab.words())?;
+    write_dense(&mut w, &corpus.embeddings)?;
+    write_u32s(&mut w, &corpus.word_topic)?;
+    write_csr(&mut w, &corpus.c)?;
+    write_u32s(&mut w, &corpus.doc_topics)?;
+    write_u64(&mut w, corpus.queries.len() as u64)?;
+    for q in &corpus.queries {
+        write_sparsevec(&mut w, q)?;
+    }
+    write_u32s(&mut w, &corpus.query_topics)?;
+    w.flush()
+}
+
+fn invalid(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn read_v2_body(r: &mut impl Read) -> io::Result<Corpus> {
+    let words = read_strings(r)?;
+    let embeddings = read_dense(r)?;
+    let word_topic = read_u32s(r)?;
+    let c = read_csr(r)?;
+    let doc_topics = read_u32s(r)?;
+    let nq = read_u64(r)? as usize;
+    let queries = (0..nq).map(|_| read_sparsevec(r)).collect::<io::Result<Vec<_>>>()?;
+    let query_topics = read_u32s(r)?;
+    // Cross-section consistency (each section already validated itself).
+    if !words.is_empty() && words.len() != embeddings.nrows() {
+        return Err(invalid("word count does not match embedding rows"));
+    }
+    // Word strings must be unique: Vocabulary's reverse index would
+    // silently remap a duplicated token to its last row, mis-routing
+    // raw-text query mass — a silent mis-solve, not a crash.
+    {
+        let mut seen = std::collections::HashSet::with_capacity(words.len());
+        for w in &words {
+            if !seen.insert(w.as_str()) {
+                return Err(invalid(&format!("duplicate vocabulary word {w:?}")));
+            }
+        }
+    }
+    if embeddings.nrows() != c.nrows() {
+        return Err(invalid("embedding rows do not match target matrix vocabulary"));
+    }
+    if !word_topic.is_empty() && word_topic.len() != embeddings.nrows() {
+        return Err(invalid("word_topic length does not match vocabulary"));
+    }
+    if !doc_topics.is_empty() && doc_topics.len() != c.ncols() {
+        return Err(invalid("doc_topics length does not match document count"));
+    }
+    if !query_topics.is_empty() && query_topics.len() != queries.len() {
+        return Err(invalid("query_topics length does not match query count"));
+    }
+    for q in &queries {
+        if q.dim != c.nrows() {
+            return Err(invalid("query dimension does not match vocabulary"));
+        }
+    }
+    Ok(Corpus {
+        embeddings,
+        vocab: Vocabulary::from_words(words),
+        word_topic,
+        c,
+        doc_topics,
+        queries,
+        query_topics,
+    })
+}
+
+/// Load **any** WMDC snapshot as a generic [`Corpus`]: v2 natively, v1 by
+/// lowering the synthetic payload (word strings stay empty, per-document
+/// histograms fold into `c`, which they duplicated).
+pub fn load_corpus_any(path: &Path) -> io::Result<Corpus> {
+    let file = std::fs::File::open(path)?;
+    let mut r = io::BufReader::new(file);
+    match read_header(&mut r)? {
+        VERSION => Ok(read_v1_body(&mut r)?.into_corpus()),
+        VERSION_V2 => read_v2_body(&mut r),
+        v => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported WMDC version {v}"),
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +481,174 @@ mod tests {
             std::fs::write(&p, &bytes[..cut]).unwrap();
             assert!(load_corpus(&p).is_err(), "prefix of {cut} bytes must not load");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dense_dim_overflow_is_invalid_data() {
+        // Regression: 2^32 × 2^32 wraps the unchecked nrows*ncols product
+        // to 0 on 64-bit, matching an empty payload — the old check passed
+        // and handed Dense::from_vec absurd dims. Must be InvalidData.
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 1u64 << 32).unwrap();
+        write_u64(&mut buf, 1u64 << 32).unwrap();
+        write_f64s(&mut buf, &[]).unwrap();
+        let err = read_dense(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Sanity: honest dims still load.
+        let mut ok = Vec::new();
+        write_u64(&mut ok, 2).unwrap();
+        write_u64(&mut ok, 1).unwrap();
+        write_f64s(&mut ok, &[1.0, 2.0]).unwrap();
+        assert_eq!(read_dense(&mut &ok[..]).unwrap().as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn corrupted_sparsevec_is_invalid_data_not_panic() {
+        // Regression: read_sparsevec only checked idx/val length equality,
+        // so these corruptions loaded fine and blew up (or mis-solved)
+        // later in the solver.
+        let encode = |dim: u64, idx: &[u32], val: &[Real]| {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, dim).unwrap();
+            write_u32s(&mut buf, idx).unwrap();
+            write_f64s(&mut buf, val).unwrap();
+            buf
+        };
+        // Sanity: a well-formed vec parses, and so does the empty one
+        // (the legal empty-document encoding).
+        assert!(read_sparsevec(&mut &encode(5, &[1, 3], &[0.5, 0.5])[..]).is_ok());
+        assert!(read_sparsevec(&mut &encode(5, &[], &[])[..]).is_ok());
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("length mismatch", encode(5, &[1], &[0.5, 0.5])),
+            ("out-of-range index", encode(5, &[1, 5], &[0.5, 0.5])),
+            ("duplicate index", encode(5, &[2, 2], &[0.5, 0.5])),
+            ("unsorted indices", encode(5, &[3, 1], &[0.5, 0.5])),
+            ("NaN mass", encode(5, &[1, 3], &[0.5, Real::NAN])),
+            ("infinite mass", encode(5, &[1, 3], &[0.5, Real::INFINITY])),
+            ("zero mass", encode(5, &[1, 3], &[1.0, 0.0])),
+            ("negative mass", encode(5, &[1, 3], &[1.5, -0.5])),
+            ("denormalized mass", encode(5, &[1, 3], &[0.5, 0.4])),
+        ];
+        for (what, buf) in cases {
+            let err = read_sparsevec(&mut &buf[..])
+                .expect_err(&format!("{what} must not load"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{what}");
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_with_words_and_queries() {
+        let tiny = crate::corpus::TinyCorpus::load();
+        let c = crate::corpus::docs_to_csr(tiny.vocab.len(), &tiny.docs);
+        let corpus = Corpus {
+            embeddings: tiny.embeddings.clone(),
+            vocab: tiny.vocab.clone(),
+            word_topic: vec![],
+            c: c.clone(),
+            doc_topics: (0..tiny.docs.len() as u32).collect(),
+            queries: vec![tiny.histogram("obama speaks media").unwrap()],
+            query_topics: vec![0],
+        };
+        let dir = std::env::temp_dir().join(format!("wmdc-v2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.wmdc");
+        save_corpus_v2(&path, &corpus).unwrap();
+        let back = load_corpus_any(&path).unwrap();
+        assert_eq!(back.embeddings, corpus.embeddings);
+        assert_eq!(back.c, corpus.c);
+        assert_eq!(back.queries, corpus.queries);
+        assert_eq!(back.doc_topics, corpus.doc_topics);
+        assert_eq!(back.vocab.len(), tiny.vocab.len());
+        for i in 0..tiny.vocab.len() {
+            assert_eq!(back.vocab.word(i), tiny.vocab.word(i));
+        }
+        // Raw-text queries work against the reloaded snapshot.
+        assert!(back.text_query("the president greets the press").is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_snapshot_loads_through_both_loaders() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(250)
+            .num_docs(15)
+            .embedding_dim(8)
+            .num_queries(2)
+            .query_words(3, 5)
+            .seed(17)
+            .build();
+        let dir = std::env::temp_dir().join(format!("wmdc-v1any-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.wmdc");
+        save_corpus(&path, &corpus).unwrap();
+        // The typed v1 loader: byte-identical payload.
+        let v1 = load_corpus(&path).unwrap();
+        assert_eq!(v1.embeddings, corpus.embeddings);
+        assert_eq!(v1.c, corpus.c);
+        assert_eq!(v1.docs, corpus.docs);
+        // The generic loader lowers the same payload (no word strings).
+        let any = load_corpus_any(&path).unwrap();
+        assert_eq!(any.embeddings, corpus.embeddings);
+        assert_eq!(any.c, corpus.c);
+        assert_eq!(any.queries, corpus.queries);
+        assert_eq!(any.word_topic, corpus.word_topic);
+        assert!(!any.has_words());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_truncation_and_future_versions_error_cleanly() {
+        let corpus = Corpus {
+            embeddings: Dense::filled(3, 2, 0.5),
+            vocab: Vocabulary::from_words(["a", "b", "c"].map(String::from)),
+            word_topic: vec![],
+            c: Csr::from_dense(&Dense::filled(3, 2, 0.5)),
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        };
+        let dir = std::env::temp_dir().join(format!("wmdc-v2trunc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.wmdc");
+        save_corpus_v2(&path, &corpus).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [3, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+            let p = dir.join(format!("cut-{cut}.wmdc"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_corpus_any(&p).is_err(), "prefix of {cut} bytes must not load");
+        }
+        // Unknown future version.
+        let mut future = bytes.clone();
+        future[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let p = dir.join("v9.wmdc");
+        std::fs::write(&p, &future).unwrap();
+        assert!(load_corpus_any(&p).is_err());
+        // v2 files are not loadable through the v1-typed loader.
+        assert!(load_corpus(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_duplicate_vocabulary_words_are_invalid_data() {
+        // A duplicated word string passes every length check but would
+        // make the reverse index remap query mass to the wrong row —
+        // must be rejected at load, not mis-solve later.
+        let corpus = Corpus {
+            embeddings: Dense::filled(2, 1, 0.5),
+            vocab: Vocabulary::from_words(["dup", "dup"].map(String::from)),
+            word_topic: vec![],
+            c: Csr::from_dense(&Dense::filled(2, 1, 0.5)),
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        };
+        let dir = std::env::temp_dir().join(format!("wmdc-v2dup-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dup.wmdc");
+        save_corpus_v2(&path, &corpus).unwrap();
+        let err = load_corpus_any(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         std::fs::remove_dir_all(&dir).ok();
     }
 

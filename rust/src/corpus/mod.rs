@@ -1,24 +1,139 @@
 //! Corpus substrate: vocabulary, tokenization, histograms, synthetic
-//! embeddings and document generation.
+//! embeddings and document generation — plus the **real-corpus ingestion
+//! pipeline** (`.vec` embeddings + streaming documents).
 //!
 //! The paper's evaluation uses the `crawl-300d-2M` embeddings (100 k words
 //! × 300 dims, fp64) and the first 5 000 dbpedia documents (c density
-//! ≈ 0.0035 %, source docs of 19–43 words). Neither asset is available
-//! offline, so this module provides statistically matched synthetic
-//! substitutes (see DESIGN.md §3) plus a tiny *real* hand-embedded corpus
-//! for semantic sanity tests (the paper's Obama/President example).
+//! ≈ 0.0035 %, source docs of 19–43 words). This module provides both
+//! statistically matched synthetic substitutes (see DESIGN.md §3) and the
+//! real pipeline: [`vec`] parses word2vec/fastText text-format embeddings,
+//! [`stream`] reads document streams (plaintext / JSONL) and assembles
+//! them into a [`Corpus`] without materializing every document.
 
 pub mod embedding;
 pub mod generator;
 pub mod histogram;
 pub mod io;
+pub mod stream;
 pub mod tiny;
 pub mod tokenizer;
+pub mod vec;
 pub mod vocab;
 
 pub use embedding::synthetic_embeddings;
 pub use generator::{CorpusBuilder, SyntheticCorpus};
 pub use histogram::{docs_to_csr, SparseVec};
+pub use stream::{ingest_corpus, DocFormat, DocReader, IngestBuilder, IngestStats};
 pub use tiny::TinyCorpus;
 pub use tokenizer::{tokenize, tokenize_filtered};
+pub use vec::{load_vec_file, read_vec, VecEmbeddings};
 pub use vocab::Vocabulary;
+
+use crate::sparse::{Csr, Dense};
+
+/// A serving-ready corpus: the common denominator that both
+/// [`SyntheticCorpus`] and ingested real corpora lower into, and the
+/// payload of the `WMDC` snapshot format ([`io`]).
+///
+/// Topic metadata and the vocabulary's word strings are optional (empty
+/// when unknown): synthetic corpora carry topics but no words, ingested
+/// corpora carry words but no topics, v1 snapshots carry whatever the
+/// synthetic generator produced.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// `V × w` word embeddings.
+    pub embeddings: Dense,
+    /// Word strings aligned with the embedding rows; **empty when
+    /// unknown** (synthetic / v1 snapshots) — raw-text queries then
+    /// cannot be histogrammed.
+    pub vocab: Vocabulary,
+    /// Topic id per vocabulary word (empty when unknown).
+    pub word_topic: Vec<u32>,
+    /// `V × N` normalized target histograms (CSR); empty documents are
+    /// empty columns (`WMD = +inf`).
+    pub c: Csr,
+    /// Topic id per target document (empty when unknown).
+    pub doc_topics: Vec<u32>,
+    /// Pre-built query documents (may be empty for ingested corpora —
+    /// queries then arrive as raw text via [`Corpus::text_query`]).
+    pub queries: Vec<SparseVec>,
+    /// Topic id per query (empty when unknown).
+    pub query_topics: Vec<u32>,
+}
+
+impl Corpus {
+    pub fn vocab_size(&self) -> usize {
+        self.c.nrows()
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.c.ncols()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.c.density()
+    }
+
+    /// Whether the vocabulary's word strings are known (required for
+    /// raw-text queries).
+    pub fn has_words(&self) -> bool {
+        !self.vocab.is_empty()
+    }
+
+    /// Tokenize + stop-word-filter a raw text query and histogram it over
+    /// this corpus's vocabulary ([`Vocabulary::text_histogram`] — the
+    /// same pipeline the service uses). `Err` when the corpus has no
+    /// word strings or nothing survives filtering.
+    pub fn text_query(&self, text: &str) -> Result<SparseVec, String> {
+        if !self.has_words() {
+            return Err("corpus has no vocabulary words (synthetic or v1 snapshot) — \
+                        raw-text queries need an ingested/v2 corpus"
+                .into());
+        }
+        self.vocab.text_histogram(text)
+    }
+}
+
+#[cfg(test)]
+mod corpus_tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_lowers_into_corpus() {
+        let syn = SyntheticCorpus::builder()
+            .vocab_size(300)
+            .num_docs(20)
+            .embedding_dim(8)
+            .num_queries(2)
+            .query_words(4, 6)
+            .seed(1)
+            .build();
+        let (c_ref, emb_ref, queries_ref) = (syn.c.clone(), syn.embeddings.clone(), syn.queries.clone());
+        let corpus = syn.into_corpus();
+        assert_eq!(corpus.c, c_ref);
+        assert_eq!(corpus.embeddings, emb_ref);
+        assert_eq!(corpus.queries, queries_ref);
+        assert!(!corpus.has_words());
+        assert_eq!(corpus.vocab_size(), 300);
+        assert_eq!(corpus.num_docs(), 20);
+        assert!(corpus.text_query("anything").is_err(), "no words → no text queries");
+    }
+
+    #[test]
+    fn text_query_on_worded_corpus() {
+        let tiny = TinyCorpus::load();
+        let corpus = Corpus {
+            embeddings: tiny.embeddings.clone(),
+            vocab: tiny.vocab.clone(),
+            word_topic: vec![],
+            c: docs_to_csr(tiny.vocab.len(), &tiny.docs),
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        };
+        let q = corpus.text_query("Obama speaks to the media in Illinois").unwrap();
+        assert_eq!(q.nnz(), 4);
+        assert!((q.sum() - 1.0).abs() < 1e-12);
+        assert!(corpus.text_query("zzz qqq").is_err());
+    }
+}

@@ -1,0 +1,351 @@
+//! Streaming document ingestion: read a document stream (plaintext
+//! one-doc-per-line, or minimal JSONL `{"text": ...}`), tokenize +
+//! stop-word-filter each document (the paper's §2 preprocessing), and
+//! assemble the `V × N` target CSR **incrementally** — triplets are
+//! appended per document, never a `Vec<SparseVec>` of all documents.
+//!
+//! The full pipeline ([`ingest_corpus`]) is two passes over the document
+//! stream: pass 1 collects the token set so the `.vec` file loads only
+//! the words the corpus uses (a 2 M-word embedding file shrinks to the
+//! corpus vocabulary), pass 2 histograms the documents against the loaded
+//! vocabulary. All-stopword / all-out-of-vocabulary documents become
+//! empty columns and flow into the `WMD = +inf` empty-document semantics.
+
+use super::histogram::SparseVec;
+use super::tokenizer::tokenize_filtered;
+use super::vec::load_vec_file;
+use super::vocab::Vocabulary;
+use super::Corpus;
+use crate::sparse::{Coo, Csr, Dense};
+use std::collections::HashSet;
+use std::io::{self, BufRead};
+use std::path::Path;
+
+/// Document stream encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DocFormat {
+    /// One document per line, raw text. Blank lines are empty documents.
+    Text,
+    /// One JSON object per line with a `"text"` string field
+    /// (`{"text": "..."}`); blank lines are skipped per the JSONL
+    /// convention. Anything else is `InvalidData`.
+    Jsonl,
+}
+
+impl DocFormat {
+    /// Infer from a path extension: `.jsonl`/`.ndjson` → JSONL, anything
+    /// else plaintext.
+    pub fn infer(path: &Path) -> Self {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") | Some("ndjson") => DocFormat::Jsonl,
+            _ => DocFormat::Text,
+        }
+    }
+}
+
+/// Iterator over the documents of a byte stream: yields one `String` per
+/// document, decoding per [`DocFormat`]. I/O and format errors surface as
+/// `Err` items.
+pub struct DocReader<R: BufRead> {
+    inner: std::io::Lines<R>,
+    format: DocFormat,
+    lineno: usize,
+}
+
+impl<R: BufRead> DocReader<R> {
+    pub fn new(r: R, format: DocFormat) -> Self {
+        Self { inner: r.lines(), format, lineno: 0 }
+    }
+}
+
+impl DocReader<io::BufReader<std::fs::File>> {
+    /// Open a document file, inferring the format from the extension.
+    pub fn open(path: &Path) -> io::Result<Self> {
+        Self::open_as(path, DocFormat::infer(path))
+    }
+
+    /// Open a document file with an explicit format.
+    pub fn open_as(path: &Path, format: DocFormat) -> io::Result<Self> {
+        let file = std::fs::File::open(path)?;
+        Ok(Self::new(io::BufReader::new(file), format))
+    }
+}
+
+impl<R: BufRead> Iterator for DocReader<R> {
+    type Item = io::Result<String>;
+
+    fn next(&mut self) -> Option<io::Result<String>> {
+        loop {
+            let line = match self.inner.next()? {
+                Ok(l) => l,
+                Err(e) => return Some(Err(e)),
+            };
+            self.lineno += 1;
+            match self.format {
+                DocFormat::Text => return Some(Ok(line)),
+                DocFormat::Jsonl => {
+                    if line.trim().is_empty() {
+                        continue; // JSONL convention: blank lines are not records
+                    }
+                    let lineno = self.lineno;
+                    let parsed = crate::util::json::Json::parse(&line).map_err(|e| {
+                        io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("jsonl line {lineno}: {e}"),
+                        )
+                    });
+                    return Some(parsed.and_then(|j| {
+                        j.get_str("text").map(str::to_string).ok_or_else(|| {
+                            io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                format!("jsonl line {lineno}: object has no string \"text\" field"),
+                            )
+                        })
+                    }));
+                }
+            }
+        }
+    }
+}
+
+/// Ingestion counters (reported by the `ingest` CLI).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IngestStats {
+    /// Documents pushed (columns of `c`, including empty ones).
+    pub docs: usize,
+    /// Documents that became empty columns (all stopword/OOV tokens).
+    pub empty_docs: usize,
+    /// Tokens kept after stop-word filtering and vocabulary lookup.
+    pub tokens_kept: u64,
+    /// Tokens dropped because the vocabulary has no embedding for them.
+    pub tokens_oov: u64,
+}
+
+/// Incremental corpus builder: push documents one at a time; the target
+/// CSR is assembled from appended triplets at [`IngestBuilder::finish`],
+/// so peak memory is `O(nnz + V·w)`, never `O(all documents)`.
+pub struct IngestBuilder {
+    vocab: Vocabulary,
+    embeddings: Dense,
+    rows: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<crate::Real>,
+    stats: IngestStats,
+}
+
+impl IngestBuilder {
+    pub fn new(vocab: Vocabulary, embeddings: Dense) -> Self {
+        assert_eq!(
+            vocab.len(),
+            embeddings.nrows(),
+            "vocabulary/embedding row mismatch"
+        );
+        Self {
+            vocab,
+            embeddings,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+            stats: IngestStats::default(),
+        }
+    }
+
+    /// Tokenize, filter and histogram one document, appending it as the
+    /// next target column. Out-of-vocabulary tokens are dropped (counted);
+    /// a document with nothing left becomes an **empty column** — the
+    /// established `WMD = +inf` case — not an error.
+    pub fn push_text(&mut self, text: &str) {
+        let dim = self.vocab.len();
+        let mut ids = Vec::new();
+        for tok in tokenize_filtered(text) {
+            match self.vocab.id(&tok) {
+                Some(i) => {
+                    ids.push(i as usize);
+                    self.stats.tokens_kept += 1;
+                }
+                None => self.stats.tokens_oov += 1,
+            }
+        }
+        let h = SparseVec::try_from_token_ids(dim, &ids)
+            .expect("ids come from the vocabulary and cannot be out of range");
+        let j = self.stats.docs;
+        self.stats.docs += 1;
+        if h.nnz() == 0 {
+            self.stats.empty_docs += 1;
+            return;
+        }
+        for (&i, &v) in h.idx.iter().zip(&h.val) {
+            self.rows.push(i);
+            self.cols.push(j as u32);
+            self.vals.push(v);
+        }
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.stats.docs
+    }
+
+    pub fn stats(&self) -> IngestStats {
+        self.stats
+    }
+
+    /// Assemble the final [`Corpus`] (no queries — they arrive later as
+    /// raw text against the persisted vocabulary).
+    pub fn finish(self) -> Corpus {
+        let dim = self.vocab.len();
+        let ndocs = self.stats.docs;
+        assert!(ndocs <= u32::MAX as usize, "too many documents for u32 column ids");
+        // Triplets arrive sorted by (doc, word); COO's compact() reorders
+        // them into CSR row-major (word-major) order.
+        let mut coo = Coo::new(dim, ndocs);
+        coo.rows = self.rows;
+        coo.cols = self.cols;
+        coo.values = self.vals;
+        Corpus {
+            embeddings: self.embeddings,
+            vocab: self.vocab,
+            word_topic: vec![],
+            c: Csr::from_coo(coo),
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        }
+    }
+}
+
+/// The end-to-end ingestion pipeline: two streaming passes over the
+/// document file plus one filtered pass over the `.vec` file.
+///
+/// 1. Stream the documents, collecting the post-filter token set.
+/// 2. Load the `.vec` embeddings keeping only that set.
+/// 3. Stream the documents again, histogramming each against the loaded
+///    vocabulary into an [`IngestBuilder`].
+pub fn ingest_corpus(
+    vec_path: &Path,
+    docs_path: &Path,
+    format: DocFormat,
+) -> io::Result<(Corpus, IngestStats)> {
+    let mut used: HashSet<String> = HashSet::new();
+    for doc in DocReader::open_as(docs_path, format)? {
+        for tok in tokenize_filtered(&doc?) {
+            used.insert(tok);
+        }
+    }
+    let emb = load_vec_file(vec_path, Some(&used))?;
+    let mut builder = IngestBuilder::new(emb.vocab, emb.embeddings);
+    for doc in DocReader::open_as(docs_path, format)? {
+        builder.push_text(&doc?);
+    }
+    let stats = builder.stats();
+    Ok((builder.finish(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reader(text: &str, format: DocFormat) -> DocReader<&[u8]> {
+        DocReader::new(text.as_bytes(), format)
+    }
+
+    #[test]
+    fn plaintext_one_doc_per_line_including_empty() {
+        let docs: Vec<String> =
+            reader("first doc\n\nthird doc\n", DocFormat::Text).map(|d| d.unwrap()).collect();
+        assert_eq!(docs, vec!["first doc", "", "third doc"]);
+    }
+
+    #[test]
+    fn jsonl_extracts_text_and_skips_blank_lines() {
+        let text = "{\"text\": \"first doc\"}\n\n{\"text\": \"second\", \"id\": 7}\n";
+        let docs: Vec<String> =
+            reader(text, DocFormat::Jsonl).map(|d| d.unwrap()).collect();
+        assert_eq!(docs, vec!["first doc", "second"]);
+    }
+
+    #[test]
+    fn jsonl_malformed_lines_are_errors() {
+        for text in ["not json\n", "{\"text\": 5}\n", "{\"other\": \"x\"}\n", "[1,2]\n"] {
+            let mut r = reader(text, DocFormat::Jsonl);
+            let err = r.next().unwrap().unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{text:?}");
+        }
+    }
+
+    #[test]
+    fn format_inference_by_extension() {
+        assert_eq!(DocFormat::infer(Path::new("docs.jsonl")), DocFormat::Jsonl);
+        assert_eq!(DocFormat::infer(Path::new("docs.ndjson")), DocFormat::Jsonl);
+        assert_eq!(DocFormat::infer(Path::new("docs.txt")), DocFormat::Text);
+        assert_eq!(DocFormat::infer(Path::new("docs")), DocFormat::Text);
+    }
+
+    fn tiny_vocab() -> (Vocabulary, Dense) {
+        let vocab = Vocabulary::from_words(
+            ["obama", "president", "press", "media"].map(String::from),
+        );
+        let embeddings = Dense::from_fn(4, 2, |i, j| (i * 2 + j) as crate::Real);
+        (vocab, embeddings)
+    }
+
+    #[test]
+    fn builder_assembles_normalized_columns() {
+        let (vocab, emb) = tiny_vocab();
+        let mut b = IngestBuilder::new(vocab, emb);
+        b.push_text("Obama obama press");
+        b.push_text("the president and the media"); // stopwords drop out
+        let stats = b.stats();
+        let corpus = b.finish();
+        assert_eq!(corpus.num_docs(), 2);
+        assert_eq!(corpus.vocab_size(), 4);
+        for s in corpus.c.column_sums() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // Doc 0: obama ×2 (w0), press ×1 (w2).
+        assert!((corpus.c.get(0, 0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((corpus.c.get(2, 0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(stats.docs, 2);
+        assert_eq!(stats.empty_docs, 0);
+        assert_eq!(stats.tokens_kept, 5);
+        assert_eq!(stats.tokens_oov, 0);
+    }
+
+    #[test]
+    fn all_stopword_or_oov_docs_become_empty_columns() {
+        let (vocab, emb) = tiny_vocab();
+        let mut b = IngestBuilder::new(vocab, emb);
+        b.push_text("obama speaks");   // "speaks" is OOV here
+        b.push_text("to the and of");  // all stopwords
+        b.push_text("zzz qqq");        // all OOV
+        b.push_text("");               // empty line
+        let stats = b.stats();
+        let corpus = b.finish();
+        assert_eq!(stats.docs, 4);
+        assert_eq!(stats.empty_docs, 3);
+        assert_eq!(stats.tokens_oov, 3);
+        assert_eq!(corpus.num_docs(), 4, "empty docs still occupy columns");
+        let sums = corpus.c.column_sums();
+        assert!((sums[0] - 1.0).abs() < 1e-12);
+        assert_eq!(&sums[1..], &[0.0, 0.0, 0.0], "empty columns carry no mass");
+    }
+
+    #[test]
+    fn builder_matches_docs_to_csr() {
+        // The incremental triplet path must produce the exact CSR the
+        // materialize-everything path does.
+        let (vocab, emb) = tiny_vocab();
+        let texts = ["obama press press", "president media", "", "media obama"];
+        let mut b = IngestBuilder::new(vocab.clone(), emb);
+        let mut docs = Vec::new();
+        for t in texts {
+            b.push_text(t);
+            let ids: Vec<usize> = tokenize_filtered(t)
+                .into_iter()
+                .filter_map(|w| vocab.id(&w).map(|i| i as usize))
+                .collect();
+            docs.push(SparseVec::try_from_token_ids(vocab.len(), &ids).unwrap());
+        }
+        let corpus = b.finish();
+        assert_eq!(corpus.c, super::super::docs_to_csr(vocab.len(), &docs));
+    }
+}

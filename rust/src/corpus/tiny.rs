@@ -10,7 +10,6 @@
 //! semantic relatedness the same way word2vec neighborhoods do.
 
 use super::histogram::SparseVec;
-use super::tokenizer::tokenize_filtered;
 use super::vocab::Vocabulary;
 use crate::sparse::Dense;
 use crate::Real;
@@ -137,17 +136,10 @@ impl TinyCorpus {
     }
 
     /// Tokenize a sentence and build its normalized histogram over the
-    /// tiny vocabulary. Returns `None` when no token is in-vocabulary.
+    /// tiny vocabulary (the shared [`Vocabulary::text_histogram`]
+    /// pipeline). Returns `None` when no token is in-vocabulary.
     pub fn histogram(&self, text: &str) -> Option<SparseVec> {
-        let ids: Vec<usize> = tokenize_filtered(text)
-            .into_iter()
-            .filter_map(|t| self.vocab.id(&t).map(|i| i as usize))
-            .collect();
-        if ids.is_empty() {
-            None
-        } else {
-            Some(SparseVec::from_token_ids(self.vocab.len(), &ids))
-        }
+        self.vocab.text_histogram(text).ok()
     }
 }
 

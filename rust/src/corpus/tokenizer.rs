@@ -11,21 +11,34 @@ pub const STOPWORDS: &[&str] = &[
     "they", "this", "to", "was", "we", "were", "will", "with", "you",
 ];
 
-/// Lowercase and split on non-alphanumeric boundaries.
+/// Lowercase and split on non-alphanumeric boundaries. Apostrophes are
+/// word characters only in the *interior* of a word (`don't`); quoting
+/// apostrophes are stripped (`'hello'` → `hello`) and a run of bare
+/// apostrophes (`''`) is no token at all.
 pub fn tokenize(text: &str) -> Vec<String> {
     let mut tokens = Vec::new();
     let mut cur = String::new();
     for ch in text.chars() {
         if ch.is_alphanumeric() || ch == '\'' {
             cur.extend(ch.to_lowercase());
-        } else if !cur.is_empty() {
-            tokens.push(std::mem::take(&mut cur));
+        } else {
+            flush_token(&mut tokens, &mut cur);
         }
     }
-    if !cur.is_empty() {
-        tokens.push(cur);
-    }
+    flush_token(&mut tokens, &mut cur);
     tokens
+}
+
+/// Emit the accumulated word, minus any leading/trailing apostrophes.
+fn flush_token(tokens: &mut Vec<String>, cur: &mut String) {
+    if cur.is_empty() {
+        return;
+    }
+    let trimmed = cur.trim_matches('\'');
+    if !trimmed.is_empty() {
+        tokens.push(trimmed.to_string());
+    }
+    cur.clear();
 }
 
 /// Tokenize and drop stop-words.
@@ -61,5 +74,26 @@ mod tests {
     fn empty_input() {
         assert!(tokenize("").is_empty());
         assert!(tokenize("  ,.;  ").is_empty());
+    }
+
+    #[test]
+    fn interior_apostrophes_kept() {
+        assert_eq!(tokenize("don't can't o'clock"), vec!["don't", "can't", "o'clock"]);
+    }
+
+    #[test]
+    fn quoting_apostrophes_stripped() {
+        // Regression: `'hello'` used to come back as the token `'hello'`.
+        assert_eq!(tokenize("'hello'"), vec!["hello"]);
+        assert_eq!(tokenize("he said 'hello world'"), vec!["he", "said", "hello", "world"]);
+        assert_eq!(tokenize("'tis rock'n'roll'"), vec!["tis", "rock'n'roll"]);
+    }
+
+    #[test]
+    fn all_apostrophe_runs_are_not_tokens() {
+        // Regression: a bare `''` used to become an (empty-quote) token.
+        assert!(tokenize("''").is_empty());
+        assert!(tokenize("' '' '''").is_empty());
+        assert_eq!(tokenize("a '' b"), vec!["a", "b"]);
     }
 }

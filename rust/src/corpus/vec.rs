@@ -1,0 +1,294 @@
+//! Streaming parser for the word2vec / fastText **text** `.vec` format —
+//! the paper's `crawl-300d-2M.vec` embeddings (§2): a header line
+//! `V dim`, then one line per word: the token followed by `dim`
+//! whitespace-separated floats.
+//!
+//! Design constraints for real files:
+//!
+//! * **Streaming** — lines are consumed one at a time through `BufRead`;
+//!   only the *kept* rows are materialized, so a 2 M-word file read with a
+//!   vocabulary filter costs memory proportional to the corpus vocabulary,
+//!   not the file.
+//! * **Malformed input is `io::Error`**, never a panic: a bad header, a
+//!   short/long line, an unparsable or non-finite float, and a line-count
+//!   /header mismatch all surface as `InvalidData` with the line number.
+//! * **Duplicates**: real `.vec` files occasionally repeat a token; the
+//!   first occurrence wins (matching gensim's loader) and later ones are
+//!   skipped and counted.
+//! * **Case**: with a vocabulary filter, tokens are **lowercased** before
+//!   matching and storing — the filter is the corpus's post-tokenization
+//!   word set, and the tokenizer lowercases (§2 throws capitalization
+//!   away), so a cased-only embedding (`iPhone`) must still serve the
+//!   lowercased corpus token (`iphone`). Case-collisions dedup first-wins
+//!   like any duplicate. An unfiltered load keeps tokens verbatim.
+
+use super::vocab::Vocabulary;
+use crate::sparse::Dense;
+use crate::Real;
+use std::collections::HashSet;
+use std::io::{self, BufRead};
+use std::path::Path;
+
+/// Cap on pre-allocation derived from the untrusted header count: growth
+/// beyond this only happens as lines actually arrive.
+const VEC_PREALLOC_CAP: usize = 1 << 20;
+
+/// A loaded (and possibly vocabulary-filtered) embedding set.
+#[derive(Clone, Debug)]
+pub struct VecEmbeddings {
+    /// Kept words, in file order.
+    pub vocab: Vocabulary,
+    /// `vocab.len() × dim` embedding rows, aligned with `vocab`.
+    pub embeddings: Dense,
+    /// Words declared by the file header (before filtering).
+    pub file_words: usize,
+    /// Duplicate tokens skipped (first occurrence wins).
+    pub duplicates: usize,
+}
+
+impl VecEmbeddings {
+    pub fn dim(&self) -> usize {
+        self.embeddings.ncols()
+    }
+}
+
+fn bad(line: usize, msg: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!(".vec line {line}: {msg}"))
+}
+
+/// Read a `.vec` stream. With `filter = Some(words)` only tokens in the
+/// set are kept (the float payload of skipped lines is not even parsed —
+/// the point of the filter is loading a 2 M-word file in corpus time);
+/// every line is still checked for the right field count.
+pub fn read_vec(r: impl BufRead, filter: Option<&HashSet<String>>) -> io::Result<VecEmbeddings> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| bad(1, "empty file (expected `V dim` header)"))??;
+    let mut it = header.split_whitespace();
+    let (nwords, dim) = match (it.next(), it.next(), it.next()) {
+        (Some(v), Some(d), None) => {
+            let v: usize = v.parse().map_err(|_| bad(1, format!("bad word count '{v}'")))?;
+            let d: usize = d.parse().map_err(|_| bad(1, format!("bad dimension '{d}'")))?;
+            (v, d)
+        }
+        _ => return Err(bad(1, format!("malformed header '{header}' (expected `V dim`)"))),
+    };
+    if dim == 0 {
+        return Err(bad(1, "embedding dimension must be >= 1"));
+    }
+
+    let keep_estimate = filter.map_or(nwords, |f| f.len().min(nwords));
+    let mut words: Vec<String> = Vec::with_capacity(keep_estimate.min(VEC_PREALLOC_CAP));
+    let mut data: Vec<Real> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::with_capacity(keep_estimate.min(VEC_PREALLOC_CAP));
+    let mut duplicates = 0usize;
+    let mut nlines = 0usize;
+    for (i, line) in lines.enumerate() {
+        let lineno = i + 2; // 1-based, after the header
+        let line = line?;
+        nlines += 1;
+        let mut fields = line.split_whitespace();
+        let raw_token = fields
+            .next()
+            .ok_or_else(|| bad(lineno, "blank line (expected `token v1 .. vdim`)"))?;
+        // Filtered loads match (and store) the lowercased token — the
+        // filter is the tokenizer's lowercased word set.
+        let token = match filter {
+            Some(f) => {
+                let lowered = if raw_token.chars().any(char::is_uppercase) {
+                    raw_token.to_lowercase()
+                } else {
+                    raw_token.to_string()
+                };
+                if !f.contains(&lowered) {
+                    // Skipped line: structural field count only, no
+                    // float parsing (the filter's whole point).
+                    let nvals = fields.count();
+                    if nvals != dim {
+                        return Err(bad(
+                            lineno,
+                            format!("expected {dim} values for '{raw_token}', found {nvals}"),
+                        ));
+                    }
+                    continue;
+                }
+                lowered
+            }
+            None => raw_token.to_string(),
+        };
+        if !seen.insert(token.clone()) {
+            duplicates += 1;
+            let nvals = fields.count();
+            if nvals != dim {
+                return Err(bad(
+                    lineno,
+                    format!("expected {dim} values for '{raw_token}', found {nvals}"),
+                ));
+            }
+            continue;
+        }
+        // Kept line: parse and count in one pass over the fields.
+        let mut nvals = 0usize;
+        for field in fields {
+            nvals += 1;
+            if nvals > dim {
+                break; // long line — diagnosed below, don't parse the tail
+            }
+            let x: Real = field
+                .parse()
+                .map_err(|_| bad(lineno, format!("bad float '{field}' for '{raw_token}'")))?;
+            if !x.is_finite() {
+                return Err(bad(lineno, format!("non-finite value {x} for '{raw_token}'")));
+            }
+            data.push(x);
+        }
+        if nvals != dim {
+            let found =
+                if nvals > dim { format!("more than {dim}") } else { nvals.to_string() };
+            return Err(bad(
+                lineno,
+                format!("expected {dim} values for '{raw_token}', found {found}"),
+            ));
+        }
+        words.push(token);
+    }
+    if nlines != nwords {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(".vec header declares {nwords} words, file has {nlines} data lines"),
+        ));
+    }
+    let nkept = words.len();
+    Ok(VecEmbeddings {
+        vocab: Vocabulary::from_words(words),
+        embeddings: Dense::from_vec(nkept, dim, data),
+        file_words: nwords,
+        duplicates,
+    })
+}
+
+/// [`read_vec`] over a file path.
+pub fn load_vec_file(path: &Path, filter: Option<&HashSet<String>>) -> io::Result<VecEmbeddings> {
+    let file = std::fs::File::open(path)?;
+    read_vec(io::BufReader::new(file), filter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str, filter: Option<&[&str]>) -> io::Result<VecEmbeddings> {
+        let set: Option<HashSet<String>> =
+            filter.map(|ws| ws.iter().map(|w| w.to_string()).collect());
+        read_vec(text.as_bytes(), set.as_ref())
+    }
+
+    const SMALL: &str = "3 2\nalpha 0.5 -1.0\nbeta 2.5 0.0\ngamma 1e-2 3\n";
+
+    #[test]
+    fn parses_small_file() {
+        let v = parse(SMALL, None).unwrap();
+        assert_eq!(v.vocab.len(), 3);
+        assert_eq!(v.dim(), 2);
+        assert_eq!(v.file_words, 3);
+        assert_eq!(v.vocab.id("beta"), Some(1));
+        assert_eq!(v.embeddings.row(0), &[0.5, -1.0]);
+        assert_eq!(v.embeddings.row(2), &[0.01, 3.0]);
+        assert_eq!(v.duplicates, 0);
+    }
+
+    #[test]
+    fn vocab_filter_keeps_only_requested_words() {
+        let v = parse(SMALL, Some(&["gamma", "alpha", "missing"])).unwrap();
+        assert_eq!(v.vocab.len(), 2);
+        // File order is preserved, not filter order.
+        assert_eq!(v.vocab.word(0), "alpha");
+        assert_eq!(v.vocab.word(1), "gamma");
+        assert_eq!(v.embeddings.row(1), &[0.01, 3.0]);
+        assert_eq!(v.file_words, 3, "header count reported even when filtered");
+    }
+
+    #[test]
+    fn duplicate_tokens_first_wins() {
+        let v = parse("3 1\na 1.0\na 2.0\nb 3.0\n", None).unwrap();
+        assert_eq!(v.vocab.len(), 2);
+        assert_eq!(v.embeddings.row(v.vocab.id("a").unwrap() as usize), &[1.0]);
+        assert_eq!(v.duplicates, 1);
+    }
+
+    #[test]
+    fn malformed_inputs_are_invalid_data_not_panic() {
+        let cases: &[&str] = &[
+            "",                           // no header
+            "x 2\na 1 2\n",               // non-numeric word count
+            "1 zz\na 1\n",                // non-numeric dim
+            "1\na 1\n",                   // one-field header
+            "1 2 3\na 1 2\n",             // three-field header
+            "1 0\na\n",                   // zero dim
+            "1 2\na 1.0\n",               // short line
+            "1 2\na 1.0 2.0 3.0\n",       // long line
+            "1 2\na 1.0 oops\n",          // bad float
+            "1 2\na 1.0 nan\n",           // non-finite
+            "1 2\na inf 1.0\n",           // non-finite
+            "2 1\na 1.0\n",               // fewer lines than header
+            "1 1\na 1.0\nb 2.0\n",        // more lines than header
+            "2 1\na 1.0\n\nb 2.0\n",      // blank line mid-file (also a count mismatch)
+        ];
+        for text in cases {
+            let err = parse(text, None).expect_err(&format!("{text:?} must not parse"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{text:?}");
+        }
+    }
+
+    #[test]
+    fn filtered_lines_still_checked_structurally_but_not_numerically() {
+        // A short line fails even when filtered out ...
+        let err = parse("2 2\na 1.0\nb 1.0 2.0\n", Some(&["b"])).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // ... but an unparsable float on a skipped line is not diagnosed
+        // (the filter's whole point is not paying for skipped payloads).
+        let v = parse("2 2\na oops whee\nb 1.0 2.0\n", Some(&["b"])).unwrap();
+        assert_eq!(v.vocab.len(), 1);
+    }
+
+    #[test]
+    fn filtered_load_lowercases_cased_embeddings() {
+        // crawl-300d-2M has cased-only entries; the filter is the
+        // tokenizer's lowercased word set, so `iPhone` must serve the
+        // corpus token `iphone`. Case-collisions dedup first-wins.
+        let text = "3 1\niPhone 1.0\nApple 2.0\napple 3.0\n";
+        let v = parse(text, Some(&["iphone", "apple"])).unwrap();
+        assert_eq!(v.vocab.len(), 2);
+        assert_eq!(v.embeddings.row(v.vocab.id("iphone").unwrap() as usize), &[1.0]);
+        assert_eq!(
+            v.embeddings.row(v.vocab.id("apple").unwrap() as usize),
+            &[2.0],
+            "first occurrence wins the case-collision"
+        );
+        assert_eq!(v.duplicates, 1);
+        assert!(v.vocab.id("iPhone").is_none(), "stored form is the lowercase token");
+        // An unfiltered load keeps tokens verbatim.
+        let v = parse(text, None).unwrap();
+        assert_eq!(v.vocab.len(), 3);
+        assert!(v.vocab.id("iPhone").is_some());
+        assert_eq!(v.duplicates, 0);
+    }
+
+    #[test]
+    fn lying_header_count_does_not_preallocate_unbounded() {
+        // Claims 2^60 words; must fail on the count mismatch after reading
+        // the single real line, not die allocating first.
+        let text = format!("{} 1\na 1.0\n", 1u64 << 60);
+        let err = parse(&text, None).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn empty_vocabulary_after_filter_is_ok() {
+        let v = parse(SMALL, Some(&["zzz"])).unwrap();
+        assert_eq!(v.vocab.len(), 0);
+        assert_eq!(v.embeddings.nrows(), 0);
+        assert_eq!(v.dim(), 2);
+    }
+}

@@ -1,5 +1,7 @@
 //! Vocabulary: word ↔ index mapping.
 
+use super::histogram::SparseVec;
+use super::tokenizer::tokenize_filtered;
 use std::collections::HashMap;
 
 /// An immutable word list with a reverse index.
@@ -41,6 +43,12 @@ impl Vocabulary {
         &self.words[i]
     }
 
+    /// All words in index order (the serialized form of the vocabulary).
+    #[inline]
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+
     #[inline]
     pub fn id(&self, word: &str) -> Option<u32> {
         self.index.get(word).copied()
@@ -48,6 +56,23 @@ impl Vocabulary {
 
     pub fn contains(&self, word: &str) -> bool {
         self.index.contains_key(word)
+    }
+
+    /// The one raw-text → histogram pipeline (shared by `Corpus`,
+    /// `DocStore` and the tiny corpus so query preprocessing can never
+    /// diverge between the CLI and the service): tokenize,
+    /// stop-word-filter, drop out-of-vocabulary tokens, histogram over
+    /// `self.len()` and normalize. `Err` when nothing survives.
+    pub fn text_histogram(&self, text: &str) -> Result<SparseVec, String> {
+        let ids: Vec<usize> = tokenize_filtered(text)
+            .into_iter()
+            .filter_map(|t| self.id(&t).map(|i| i as usize))
+            .collect();
+        let h = SparseVec::try_from_token_ids(self.len(), &ids)?;
+        if h.nnz() == 0 {
+            return Err(format!("no in-vocabulary words in query {text:?}"));
+        }
+        Ok(h)
     }
 }
 
@@ -62,6 +87,18 @@ mod tests {
         assert_eq!(v.id("beta"), Some(1));
         assert_eq!(v.word(2), "gamma");
         assert_eq!(v.id("delta"), None);
+    }
+
+    #[test]
+    fn text_histogram_filters_and_normalizes() {
+        let v = Vocabulary::from_words(["obama", "press", "media"].map(String::from));
+        let h = v.text_histogram("Obama, obama -- and the press! (unknownword)").unwrap();
+        assert_eq!(h.dim, 3);
+        assert_eq!(h.idx, vec![0, 1]);
+        assert!((h.val[0] - 2.0 / 3.0).abs() < 1e-15);
+        assert!((h.sum() - 1.0).abs() < 1e-15);
+        assert!(v.text_histogram("the and of").is_err(), "all stopwords");
+        assert!(v.text_histogram("zzz").is_err(), "all OOV");
     }
 
     #[test]

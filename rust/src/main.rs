@@ -3,9 +3,10 @@
 //! Subcommands:
 //!   info          host specs (Table 3) + artifact manifest
 //!   gen-corpus    build a synthetic corpus, print its statistics
+//!   ingest        build a v2 snapshot from .vec embeddings + documents
 //!   query         WMD of a sentence against the tiny real corpus
-//!   solve         run queries on a synthetic corpus, print top-k + timing
-//!   serve-demo    drive the batched query service on a synthetic stream
+//!   solve         run queries on a corpus (synthetic or snapshot)
+//!   serve-demo    drive the batched query service
 //!   gen-config    print a default config file
 
 use sinkhorn_wmd::cli::Args;
@@ -13,10 +14,11 @@ use sinkhorn_wmd::config::RunConfig;
 use sinkhorn_wmd::coordinator::{
     Backend, DocStore, QueryRequest, ServiceConfig, WmdService,
 };
-use sinkhorn_wmd::corpus::TinyCorpus;
+use sinkhorn_wmd::corpus::{Corpus, DocFormat, SparseVec, TinyCorpus};
 use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
 use sinkhorn_wmd::bench::{SysInfo, Table};
+use std::path::Path;
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -24,14 +26,24 @@ sinkhorn-wmd <subcommand> [options]
 
 Subcommands:
   info                         host specs + loaded artifact manifest
-  gen-corpus [--vocab N] [--docs N] [--dim N] [--seed S]
+  gen-corpus [--vocab N] [--docs N] [--dim N] [--seed S] [--out FILE]
+  ingest --vec emb.vec --docs docs.txt --out corpus.wmdc [--jsonl]
+                               build a v2 snapshot from real embeddings +
+                               a document stream (one doc per line, or
+                               JSONL {\"text\": ...})
   query --text \"...\"           WMD against the tiny real corpus
   solve [--threads P] [--queries K] [--vocab N] [--docs N]
+        [--corpus FILE] [--text \"...\"]
   serve-demo [--threads P] [--shards S] [--requests K] [--prefer sparse|dense|pjrt]
+             [--corpus FILE] [--text \"...\"]
   gen-config                   print a default run configuration
 
 Common options:
   --config FILE                load a RunConfig file (TOML subset)
+  --corpus FILE                load a WMDC snapshot (v1 or v2) instead of
+                               generating a synthetic corpus
+  --text \"...\"                 raw-text query, histogrammed against the
+                               snapshot's vocabulary (v2 snapshots only)
 ";
 
 fn main() {
@@ -45,6 +57,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("gen-corpus") => cmd_gen_corpus(&args),
+        Some("ingest") => cmd_ingest(&args),
         Some("query") => cmd_query(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
@@ -151,6 +164,53 @@ fn cmd_query(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_ingest(args: &Args) -> Result<(), String> {
+    let vec_path = args.get("vec").ok_or("ingest requires --vec emb.vec")?;
+    let docs_path = args.get("docs").ok_or("ingest requires --docs docs.txt")?;
+    let out = args.get("out").ok_or("ingest requires --out corpus.wmdc")?;
+    let format = if args.flag("jsonl") {
+        DocFormat::Jsonl
+    } else {
+        DocFormat::infer(Path::new(docs_path))
+    };
+    let t0 = Instant::now();
+    let (corpus, stats) =
+        sinkhorn_wmd::corpus::ingest_corpus(Path::new(vec_path), Path::new(docs_path), format)
+            .map_err(|e| format!("ingest: {e}"))?;
+    let built = t0.elapsed();
+    sinkhorn_wmd::corpus::io::save_corpus_v2(Path::new(out), &corpus)
+        .map_err(|e| format!("saving snapshot: {e}"))?;
+    println!(
+        "ingested {} docs in {:.2}s ({:?} mode): V={} w={} nnz(c)={} density={:.6}%",
+        stats.docs,
+        built.as_secs_f64(),
+        format,
+        corpus.vocab_size(),
+        corpus.embeddings.ncols(),
+        corpus.c.nnz(),
+        corpus.density() * 100.0,
+    );
+    println!(
+        "tokens: {} kept, {} out-of-vocabulary; {} empty document(s) (WMD = +inf columns)",
+        stats.tokens_kept, stats.tokens_oov, stats.empty_docs
+    );
+    println!("saved v2 snapshot to {out}");
+    Ok(())
+}
+
+/// Resolve the query set for `solve`/`serve-demo`: `--text` histogrammed
+/// against the corpus vocabulary when given, else the corpus's own
+/// pre-built queries.
+fn resolve_queries(corpus: &Corpus, args: &Args) -> Result<Vec<SparseVec>, String> {
+    if let Some(text) = args.get("text") {
+        return Ok(vec![corpus.text_query(text)?]);
+    }
+    if corpus.queries.is_empty() {
+        return Err("corpus has no pre-built queries — pass --text \"...\"".into());
+    }
+    Ok(corpus.queries.clone())
+}
+
 fn cmd_solve(args: &Args) -> Result<(), String> {
     let mut cfg = load_config(args)?;
     cfg.corpus.vocab_size = args.get_or("vocab", cfg.corpus.vocab_size)?;
@@ -159,23 +219,24 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
     let threads = args.get_or("threads", cfg.threads())?;
     let corpus = if let Some(path) = args.get("corpus") {
         println!("loading corpus from {path} ...");
-        sinkhorn_wmd::corpus::io::load_corpus(std::path::Path::new(path))
+        sinkhorn_wmd::corpus::io::load_corpus_any(Path::new(path))
             .map_err(|e| format!("loading corpus: {e}"))?
     } else {
         println!("building corpus V={} N={} ...", cfg.corpus.vocab_size, cfg.corpus.num_docs);
-        cfg.corpus.build()
+        cfg.corpus.build().into_corpus()
     };
+    let queries = resolve_queries(&corpus, args)?;
     let pool = Pool::new(threads);
     let solver = SparseSolver::new(cfg.sinkhorn);
     println!(
         "solving {} queries on {} threads (λ={}, max_iter={})",
-        corpus.queries.len(),
+        queries.len(),
         threads,
         cfg.sinkhorn.lambda,
         cfg.sinkhorn.max_iter
     );
     let mut t = Table::new(["query", "v_r", "iters", "time", "best doc", "best wmd"]);
-    for (i, q) in corpus.queries.iter().enumerate() {
+    for (i, q) in queries.iter().enumerate() {
         let t0 = Instant::now();
         let out = solver.wmd_one_to_many(&corpus.embeddings, q, &corpus.c, &pool);
         let dt = t0.elapsed();
@@ -207,15 +268,26 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let threads = args.get_or("threads", cfg.threads())?;
     let shards = args.get_or("shards", cfg.shards())?;
-    let requests = args.get_or("requests", 20usize)?;
     let prefer = match args.get("prefer").unwrap_or("sparse") {
         "sparse" => Backend::SparseRust,
         "dense" => Backend::DenseRust,
         "pjrt" => Backend::DensePjrt,
         other => return Err(format!("unknown backend '{other}'")),
     };
-    let corpus = cfg.corpus.build();
-    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let corpus = if let Some(path) = args.get("corpus") {
+        println!("loading corpus from {path} ...");
+        sinkhorn_wmd::corpus::io::load_corpus_any(Path::new(path))
+            .map_err(|e| format!("loading corpus: {e}"))?
+    } else {
+        cfg.corpus.build().into_corpus()
+    };
+    let queries = resolve_queries(&corpus, args)?;
+    // A raw-text query defaults to one request (the interactive case);
+    // synthetic streams keep the old 20-request default.
+    let default_requests = if args.get("text").is_some() { 1 } else { 20 };
+    let requests = args.get_or("requests", default_requests)?;
+    let store = DocStore::from_corpus(&corpus).into_arc();
+    let labels = store.labels.clone();
     let pjrt_dir = (prefer == Backend::DensePjrt)
         .then(|| std::path::PathBuf::from(&cfg.artifacts_dir));
     let service = WmdService::start(
@@ -235,12 +307,18 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     println!("submitting {requests} requests ...");
     let t0 = Instant::now();
     let receivers: Vec<_> = (0..requests)
-        .map(|i| service.submit(QueryRequest::new(corpus.query(i % corpus.queries.len()).clone())))
+        .map(|i| service.submit(QueryRequest::new(queries[i % queries.len()].clone())))
         .collect();
     let mut ok = 0;
+    let mut first_response = None;
     for rx in receivers {
-        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
-            ok += 1;
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => {
+                ok += 1;
+                first_response.get_or_insert(resp);
+            }
+            Ok(resp) => eprintln!("request failed: {}", resp.error.unwrap_or_default()),
+            Err(_) => eprintln!("request dropped"),
         }
     }
     let wall = t0.elapsed();
@@ -250,6 +328,25 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
         requests as f64 / wall.as_secs_f64()
     );
     println!("metrics: {}", service.metrics().snapshot().report());
+    // For a raw-text query, show the answer, not just throughput.
+    if let (Some(text), Some(resp)) = (args.get("text"), first_response) {
+        let out = sinkhorn_wmd::sinkhorn::SolveOutput {
+            wmd: resp.wmd,
+            iterations: resp.iterations,
+            converged: true,
+        };
+        println!("\nquery: {text:?}");
+        let mut t = Table::new(["rank", "doc", "wmd", "label"]);
+        for (rank, (j, d)) in out.top_k(5).into_iter().enumerate() {
+            t.row([
+                (rank + 1).to_string(),
+                j.to_string(),
+                format!("{d:.4}"),
+                labels.get(j).cloned().unwrap_or_default(),
+            ]);
+        }
+        t.print();
+    }
     service.shutdown();
     Ok(())
 }
@@ -280,6 +377,33 @@ mod tests {
             converged: true,
         };
         assert_eq!(best_match_cells(&out), ("2".to_string(), "1.2500".to_string()));
+    }
+
+    #[test]
+    fn resolve_queries_prefers_text_and_errors_when_neither() {
+        let tiny = TinyCorpus::load();
+        let mut corpus = Corpus {
+            embeddings: tiny.embeddings.clone(),
+            vocab: tiny.vocab.clone(),
+            word_topic: vec![],
+            c: sinkhorn_wmd::corpus::docs_to_csr(tiny.vocab.len(), &tiny.docs),
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        };
+        let args = Args::parse(
+            ["serve-demo", "--text", "obama speaks to the media"].map(String::from),
+        )
+        .unwrap();
+        let qs = resolve_queries(&corpus, &args).unwrap();
+        assert_eq!(qs.len(), 1);
+        assert!(qs[0].nnz() >= 2);
+        // No --text and no pre-built queries: a helpful error.
+        let bare = Args::parse(["serve-demo"].map(String::from)).unwrap();
+        assert!(resolve_queries(&corpus, &bare).is_err());
+        // Pre-built queries flow through untouched.
+        corpus.queries = vec![qs[0].clone()];
+        assert_eq!(resolve_queries(&corpus, &bare).unwrap(), corpus.queries);
     }
 
     #[test]

@@ -65,6 +65,12 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
+    /// Object field as a string (`None` when missing or not a string) —
+    /// the JSONL document reader's `{"text": ...}` accessor.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut out = String::new();

@@ -1,0 +1,171 @@
+//! End-to-end ingestion: the checked-in example mini-corpus
+//! (`examples/ingest/`) through `.vec` parsing → document streaming →
+//! incremental build → v2 snapshot save/load → solve, pinned bitwise
+//! against the in-memory corpus; plus the v1/v2 snapshot format matrix.
+//!
+//! No network, no generated fixtures: everything reads the repository's
+//! `examples/ingest/` files (the same ones the README walkthrough uses).
+
+use sinkhorn_wmd::corpus::io::{load_corpus_any, save_corpus, save_corpus_v2};
+use sinkhorn_wmd::corpus::{ingest_corpus, DocFormat, SyntheticCorpus};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::Real;
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/ingest").join(name)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wmd-ingest-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn example_corpus_ingests_with_expected_shape() {
+    let (corpus, stats) =
+        ingest_corpus(&fixture("mini.vec"), &fixture("mini_docs.txt"), DocFormat::Text).unwrap();
+    // Every word of the 20-word .vec file is used by some document, so
+    // the vocabulary filter keeps all of them.
+    assert_eq!(corpus.vocab_size(), 20);
+    assert_eq!(corpus.embeddings.ncols(), 6);
+    assert_eq!(corpus.num_docs(), 7);
+    assert!(corpus.has_words());
+    assert_eq!(stats.docs, 7);
+    assert_eq!(stats.empty_docs, 1, "the all-stopword line is an empty column");
+    // "about" and "serves" have no embeddings; the quoted 'dinner' must
+    // NOT be OOV (the tokenizer strips quoting apostrophes).
+    assert_eq!(stats.tokens_oov, 2);
+    // Non-empty columns are unit mass; the empty one carries none.
+    let sums = corpus.c.column_sums();
+    for s in &sums[..6] {
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+    assert_eq!(sums[6], 0.0);
+}
+
+#[test]
+fn jsonl_ingest_matches_plaintext_ingest_bitwise() {
+    let (text, _) =
+        ingest_corpus(&fixture("mini.vec"), &fixture("mini_docs.txt"), DocFormat::Text).unwrap();
+    let (jsonl, _) =
+        ingest_corpus(&fixture("mini.vec"), &fixture("mini_docs.jsonl"), DocFormat::Jsonl)
+            .unwrap();
+    assert_eq!(text.c, jsonl.c);
+    assert_eq!(text.embeddings, jsonl.embeddings);
+    assert_eq!(text.vocab.len(), jsonl.vocab.len());
+    for i in 0..text.vocab.len() {
+        assert_eq!(text.vocab.word(i), jsonl.vocab.word(i));
+    }
+}
+
+#[test]
+fn v2_snapshot_roundtrips_and_solves_bitwise() {
+    let (corpus, _) =
+        ingest_corpus(&fixture("mini.vec"), &fixture("mini_docs.txt"), DocFormat::Text).unwrap();
+    let dir = tmp_dir("v2");
+    let path = dir.join("mini.wmdc");
+    save_corpus_v2(&path, &corpus).unwrap();
+    let back = load_corpus_any(&path).unwrap();
+    assert_eq!(back.embeddings, corpus.embeddings);
+    assert_eq!(back.c, corpus.c);
+    for i in 0..corpus.vocab.len() {
+        assert_eq!(back.vocab.word(i), corpus.vocab.word(i));
+    }
+
+    // The same raw-text query against the in-memory corpus and the
+    // reloaded snapshot must produce the same histogram and, on one
+    // thread, bitwise-identical WMD vectors.
+    let text = "Obama speaks to the media in Illinois";
+    let q_mem = corpus.text_query(text).unwrap();
+    let q_snap = back.text_query(text).unwrap();
+    assert_eq!(q_mem, q_snap);
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(SinkhornConfig::default());
+    let out_mem = solver.wmd_one_to_many(&corpus.embeddings, &q_mem, &corpus.c, &pool);
+    let out_snap = solver.wmd_one_to_many(&back.embeddings, &q_snap, &back.c, &pool);
+    assert_eq!(out_mem.wmd, out_snap.wmd);
+    assert_eq!(out_mem.iterations, out_snap.iterations);
+
+    // Paper §2 semantics: the identical document wins outright, the
+    // President/press/Chicago paraphrase beats every unrelated document,
+    // and the empty column reports +inf (never ranks).
+    let ranked = out_snap.top_k(corpus.num_docs());
+    assert_eq!(ranked[0].0, 0, "identical sentence is the nearest document");
+    assert!(
+        ranked[0].1 < ranked[1].1,
+        "identical sentence strictly beats the paraphrase: {ranked:?}"
+    );
+    assert_eq!(ranked[1].0, 1, "the paraphrase outranks unrelated documents");
+    assert_eq!(out_snap.wmd[6], Real::INFINITY, "empty document reports +inf");
+    assert_eq!(ranked.len(), 6, "the empty document never ranks");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v1_snapshots_from_before_ingestion_still_load() {
+    // A v1 writer unchanged by this PR: what `gen-corpus --out` produced
+    // before must load through both the typed and the generic loader.
+    let synthetic = SyntheticCorpus::builder()
+        .vocab_size(400)
+        .num_docs(30)
+        .embedding_dim(12)
+        .num_queries(3)
+        .query_words(5, 9)
+        .seed(23)
+        .build();
+    let dir = tmp_dir("v1");
+    let path = dir.join("v1.wmdc");
+    save_corpus(&path, &synthetic).unwrap();
+    let generic = load_corpus_any(&path).unwrap();
+    assert_eq!(generic.embeddings, synthetic.embeddings);
+    assert_eq!(generic.c, synthetic.c);
+    assert_eq!(generic.queries, synthetic.queries);
+    assert_eq!(generic.doc_topics, synthetic.doc_topics);
+    assert!(!generic.has_words(), "v1 snapshots carry no word strings");
+    assert!(generic.text_query("anything").is_err());
+
+    // The v1 payload solves identically whether loaded typed or generic.
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(SinkhornConfig::default());
+    let typed = sinkhorn_wmd::corpus::io::load_corpus(&path).unwrap();
+    let a = solver.wmd_one_to_many(&typed.embeddings, &typed.queries[0], &typed.c, &pool);
+    let b = solver.wmd_one_to_many(&generic.embeddings, &generic.queries[0], &generic.c, &pool);
+    assert_eq!(a.wmd, b.wmd);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ingested_snapshot_serves_raw_text_queries() {
+    // The acceptance path: ingest → save → load → service → raw-text
+    // query answered with a ranked result.
+    use sinkhorn_wmd::coordinator::{DocStore, QueryRequest, ServiceConfig, WmdService};
+
+    let (corpus, _) =
+        ingest_corpus(&fixture("mini.vec"), &fixture("mini_docs.txt"), DocFormat::Text).unwrap();
+    let dir = tmp_dir("serve");
+    let path = dir.join("mini.wmdc");
+    save_corpus_v2(&path, &corpus).unwrap();
+    let back = load_corpus_any(&path).unwrap();
+    let store = DocStore::from_corpus(&back).into_arc();
+    let query = store.text_query("the president speaks to journalists in chicago").unwrap();
+    let service = WmdService::start(
+        std::sync::Arc::clone(&store),
+        ServiceConfig { threads: 1, ..Default::default() },
+        None,
+    );
+    let resp = service.submit_wait(QueryRequest::new(query));
+    assert!(resp.is_ok(), "{:?}", resp.error);
+    assert_eq!(resp.wmd.len(), 7);
+    let best = resp.argmin().unwrap();
+    assert!(
+        best == 0 || best == 1,
+        "a politics/press query must retrieve a politics/press document, got {best}"
+    );
+    assert_eq!(resp.wmd[6], Real::INFINITY);
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
