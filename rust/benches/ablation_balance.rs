@@ -1,22 +1,25 @@
 //! Ablation (paper §4 load-balancing): nnz-balanced binary-search
-//! partition vs the naive even-rows split. Zipfian corpora make the CSR
-//! rows of `c` heavily skewed (frequent words appear in most documents),
-//! so an even-rows split concentrates the non-zeros on a few threads.
+//! partition vs the naive even-split. Zipfian corpora make the column
+//! weights of `c` skewed, so an even split over columns concentrates the
+//! non-zeros on a few threads. The kernel under test is the fused
+//! `SDDTMM→DSTMMT` iterate at B = 1, whose column-owned traversal is
+//! partitioned over the transposed pattern's `col_ptr`.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
-use sinkhorn_wmd::parallel::{balanced_nnz_partition, even_rows_partition, partition::imbalance, Pool};
+use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
+use sinkhorn_wmd::parallel::{even_rows_partition, partition::imbalance, NnzRange, Pool};
 use sinkhorn_wmd::sinkhorn::SinkhornConfig;
-use sinkhorn_wmd::sparse::ops::fused_type1;
+use sinkhorn_wmd::sparse::ops::{sddtmm_dstmmt_batch, FusedScratch, TransposedPattern};
 use sinkhorn_wmd::sparse::Dense;
+use sinkhorn_wmd::util::json::{obj, Json};
 
 fn main() {
     let corpus = common::eval_corpus();
     common::header(
         "ablation_balance",
-        "§4 — nnz-balanced binary-search partition vs even-rows split",
+        "§4 — nnz-balanced binary-search partition vs even column split",
     );
     let query = corpus.queries.iter().max_by_key(|q| q.nnz()).unwrap();
     let v_r = query.nnz();
@@ -27,36 +30,55 @@ fn main() {
     let prep = solver.prepare(&corpus.embeddings, query, &pool_all);
     let f = &prep.factors;
     let settings = common::settings();
+    let tp = TransposedPattern::build(&corpus.c);
+    let mut scratch = FusedScratch::new();
+
+    let mut iterate = |u_t: &Dense, x_t: &mut Dense, pool: &Pool, parts: &[NnzRange]| {
+        sddtmm_dstmmt_batch(
+            &corpus.c,
+            &tp,
+            &[&f.kt],
+            &[&f.kor_t],
+            std::slice::from_ref(u_t),
+            std::slice::from_mut(x_t),
+            &[true],
+            pool,
+            parts,
+            &mut scratch,
+        )
+    };
 
     let mut table = Table::new([
         "threads",
         "nnz-balanced",
-        "even-rows",
+        "even-columns",
         "slowdown",
-        "imbalance (nnz / rows)",
+        "imbalance (nnz / cols)",
     ]);
+    let mut json_rows: Vec<Json> = Vec::new();
     for &p in &common::thread_sweep() {
         if p == 1 {
             continue; // identical by construction
         }
         let pool = Pool::new(p);
-        let nnz_parts = balanced_nnz_partition(corpus.c.row_ptr(), p);
-        let row_parts = even_rows_partition(corpus.c.row_ptr(), p);
+        let nnz_parts = tp.column_parts(p);
+        let col_parts = even_rows_partition(&tp.col_ptr, p);
         let mut x_t = Dense::zeros(n, v_r);
         let u_t = Dense::filled(n, v_r, v_r as f64);
-        let r_nnz = bench_fn("nnz", &settings, || {
-            fused_type1(&corpus.c, &f.kt, &f.kor_t, &u_t, &mut x_t, &pool, &nnz_parts)
-        });
-        let r_rows = bench_fn("rows", &settings, || {
-            fused_type1(&corpus.c, &f.kt, &f.kor_t, &u_t, &mut x_t, &pool, &row_parts)
-        });
+        let r_nnz = bench_fn("nnz", &settings, || iterate(&u_t, &mut x_t, &pool, &nnz_parts));
+        let r_cols = bench_fn("cols", &settings, || iterate(&u_t, &mut x_t, &pool, &col_parts));
         table.row([
             p.to_string(),
             format!("{:.2} ms", r_nnz.mean_secs() * 1e3),
-            format!("{:.2} ms", r_rows.mean_secs() * 1e3),
-            format!("{:.2}x", r_rows.mean_secs() / r_nnz.mean_secs()),
-            format!("{:.2} / {:.2}", imbalance(&nnz_parts), imbalance(&row_parts)),
+            format!("{:.2} ms", r_cols.mean_secs() * 1e3),
+            format!("{:.2}x", r_cols.mean_secs() / r_nnz.mean_secs()),
+            format!("{:.2} / {:.2}", imbalance(&nnz_parts), imbalance(&col_parts)),
         ]);
+        json_rows.push(obj([
+            ("threads", p.into()),
+            ("nnz_balanced_secs", r_nnz.mean_secs().into()),
+            ("even_columns_secs", r_cols.mean_secs().into()),
+        ]));
     }
     table.print();
     println!("\nimbalance = max thread share / mean share (1.00 is perfect).");
@@ -68,10 +90,8 @@ fn main() {
     let pool1 = Pool::new(1);
     let mut x1 = Dense::zeros(n, v_r);
     let u1 = Dense::filled(n, v_r, v_r as f64);
-    let p1 = balanced_nnz_partition(corpus.c.row_ptr(), 1);
-    let r1 = bench_fn("t1", &settings, || {
-        fused_type1(&corpus.c, &f.kt, &f.kor_t, &u1, &mut x1, &pool1, &p1)
-    });
+    let p1 = tp.column_parts(1);
+    let r1 = bench_fn("t1", &settings, || iterate(&u1, &mut x1, &pool1, &p1));
     let profile = KernelProfile {
         t1: r1.mean_secs(),
         mem_fraction: 0.55,
@@ -79,17 +99,18 @@ fn main() {
         invocations: 1,
     };
     let topo = Topology::clx0();
-    let mut mt = Table::new(["threads (CLX0 model)", "nnz-balanced speedup", "even-rows speedup"]);
+    let mut mt = Table::new(["threads (CLX0 model)", "nnz-balanced speedup", "even-cols speedup"]);
     for &p in &[7usize, 14, 28, 56] {
         let s_nnz = simulate(&profile, &topo, &[p], |p| {
-            balanced_nnz_partition(corpus.c.row_ptr(), p).iter().map(|r| r.len() as f64).collect()
+            tp.column_parts(p).iter().map(|r| r.len() as f64).collect()
         })[0]
         .speedup;
-        let s_rows = simulate(&profile, &topo, &[p], |p| {
-            even_rows_partition(corpus.c.row_ptr(), p).iter().map(|r| r.len() as f64).collect()
+        let s_cols = simulate(&profile, &topo, &[p], |p| {
+            even_rows_partition(&tp.col_ptr, p).iter().map(|r| r.len() as f64).collect()
         })[0]
         .speedup;
-        mt.row([p.to_string(), format!("{s_nnz:.1}x"), format!("{s_rows:.1}x")]);
+        mt.row([p.to_string(), format!("{s_nnz:.1}x"), format!("{s_cols:.1}x")]);
     }
     mt.print();
+    write_bench_json("ablation_balance", obj([("rows", Json::Arr(json_rows))]));
 }

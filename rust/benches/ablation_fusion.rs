@@ -1,20 +1,23 @@
-//! Ablation (paper §4, "benefits of SDDMM_SpMM"): fused vs unfused
-//! kernels, and the atomic vs privatized scatter. The paper claims fusion
-//! (1) avoids a second CSR traversal and (2) keeps SDDMM outputs out of
-//! memory; this bench quantifies both on the iterate hot loop.
+//! Ablation (paper §4, "benefits of SDDMM_SpMM"): the fused
+//! `SDDTMM→DSTMMT` iterate against the unfused SDDMM→SpMM baseline, and
+//! f64 against the opt-in f32/f64 mixed precision. The paper claims
+//! fusion (1) avoids a second CSR traversal and (2) keeps SDDMM outputs
+//! out of memory; this bench quantifies both on the iterate hot loop,
+//! plus what narrowing the compute panels to f32 buys on top.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
 use sinkhorn_wmd::parallel::Pool;
-use sinkhorn_wmd::sinkhorn::{IterateKernel, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sinkhorn::{IterateKernel, Precision, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::util::json::{obj, Json};
 
 fn main() {
     let corpus = common::eval_corpus();
     common::header(
         "ablation_fusion",
-        "§4 — SDDMM_SpMM fusion vs unfused; atomic vs privatized scatter",
+        "§4 — SDDMM_SpMM fusion vs unfused; f64 vs mixed-precision panels",
     );
     let query = corpus.queries.iter().max_by_key(|q| q.nnz()).unwrap();
     println!(
@@ -25,20 +28,23 @@ fn main() {
         corpus.c.nnz()
     );
     let settings = common::settings();
-    let kernels = [
-        ("fused + atomic scatter (paper Fig. 4)", IterateKernel::FusedAtomic),
-        ("fused + private buffers", IterateKernel::FusedPrivate),
-        ("fused + transposed pattern", IterateKernel::FusedTransposed),
+    let mut kernels = vec![
+        ("fused f64", IterateKernel::Fused { precision: Precision::F64 }),
         ("unfused SDDMM→SpMM (pre-fusion)", IterateKernel::Unfused),
     ];
+    #[cfg(feature = "mixed-precision")]
+    kernels.insert(1, ("fused mixed", IterateKernel::Fused { precision: Precision::Mixed }));
 
-    let mut table = Table::new([
-        "threads", "fused atomic", "fused private", "fused transposed", "unfused", "fusion win",
-    ]);
+    let mut columns = vec!["threads".to_string()];
+    columns.extend(kernels.iter().map(|(label, _)| label.to_string()));
+    columns.push("fusion win".to_string());
+    columns.push("mixed win".to_string());
+    let mut table = Table::new(columns);
+    let mut json_rows: Vec<Json> = Vec::new();
     for &p in &common::thread_sweep() {
         let pool = Pool::new(p);
         let mut means = Vec::new();
-        for (_, kernel) in &kernels {
+        for (label, kernel) in &kernels {
             let solver = SparseSolver::new(SinkhornConfig {
                 lambda: 10.0,
                 max_iter: 16,
@@ -49,18 +55,35 @@ fn main() {
             let prep = solver.prepare(&corpus.embeddings, query, &pool);
             let r = bench_fn("solve", &settings, || solver.solve(&prep, &corpus.c, &pool));
             means.push(r.mean_secs());
+            json_rows.push(obj([
+                ("kernel", (*label).into()),
+                ("threads", p.into()),
+                ("mean_secs", r.mean_secs().into()),
+            ]));
         }
-        let best_fused = means[0].min(means[1]).min(means[2]);
-        table.row([
-            p.to_string(),
-            format!("{:.1} ms", means[0] * 1e3),
-            format!("{:.1} ms", means[1] * 1e3),
-            format!("{:.1} ms", means[2] * 1e3),
-            format!("{:.1} ms", means[3] * 1e3),
-            format!("{:.2}x", means[3] / best_fused),
-        ]);
+        let unfused = *means.last().unwrap();
+        let fused_f64 = means[0];
+        let best_fused = means[..means.len() - 1].iter().copied().fold(f64::MAX, f64::min);
+        let mut row = vec![p.to_string()];
+        row.extend(means.iter().map(|m| format!("{:.1} ms", m * 1e3)));
+        row.push(format!("{:.2}x", unfused / best_fused));
+        // mixed win: fused f64 / fused mixed (1.00x when mixed is out).
+        row.push(format!("{:.2}x", fused_f64 / best_fused));
+        table.row(row);
     }
     table.print();
-    println!("\nfusion win = unfused / best fused (paper's claim: fusion avoids the second CSR pass");
-    println!("and the materialized SDDMM output)");
+    println!("\nfusion win = unfused / best fused (paper's claim: fusion avoids the second CSR");
+    println!("pass and the materialized SDDMM output); mixed win = fused f64 / best fused.");
+    write_bench_json(
+        "ablation_fusion",
+        obj([
+            ("workload", obj([
+                ("v_r", query.nnz().into()),
+                ("vocab", corpus.vocab_size().into()),
+                ("docs", corpus.num_docs().into()),
+                ("nnz", corpus.c.nnz().into()),
+            ])),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    );
 }

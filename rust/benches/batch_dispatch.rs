@@ -19,13 +19,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
 use sinkhorn_wmd::coordinator::{
     BatcherConfig, DocStore, QueryRequest, ServiceConfig, WmdService,
 };
 use sinkhorn_wmd::corpus::SyntheticCorpus;
 use sinkhorn_wmd::parallel::Pool;
-use sinkhorn_wmd::sinkhorn::{IterateKernel, Prepared, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sinkhorn::{IterateKernel, Precision, Prepared, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::util::json::{obj, Json};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -60,7 +61,11 @@ fn main() {
     );
 
     // --- Solver level: per-query loop vs one batched solve.
-    for kernel in [IterateKernel::FusedAtomic, IterateKernel::FusedTransposed] {
+    let mut kernels = vec![IterateKernel::Fused { precision: Precision::F64 }];
+    #[cfg(feature = "mixed-precision")]
+    kernels.push(IterateKernel::Fused { precision: Precision::Mixed });
+    let mut json_rows: Vec<Json> = Vec::new();
+    for kernel in kernels {
         let solver = SparseSolver::new(SinkhornConfig { kernel, ..config });
         println!("-- kernel: {kernel:?}");
         let mut table =
@@ -89,6 +94,13 @@ fn main() {
                         .sum::<f64>()
                 });
                 let speedup = r_loop.mean_secs() / r_batch.mean_secs();
+                json_rows.push(obj([
+                    ("kernel", kernel.label().into()),
+                    ("threads", p.into()),
+                    ("batch", bsz.into()),
+                    ("loop_secs", r_loop.mean_secs().into()),
+                    ("batched_secs", r_batch.mean_secs().into()),
+                ]));
                 table.row([
                     p.to_string(),
                     bsz.to_string(),
@@ -157,5 +169,13 @@ fn main() {
     println!(
         "\ndispatcher speedup at B={BATCH}: {:.2}x (batched vs per-query loop)",
         throughput[1] / throughput[0]
+    );
+    write_bench_json(
+        "batch_dispatch",
+        obj([
+            ("rows", Json::Arr(json_rows)),
+            ("dispatcher_per_query_qps", throughput[0].into()),
+            ("dispatcher_batched_qps", throughput[1].into()),
+        ]),
     );
 }

@@ -13,10 +13,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
 use sinkhorn_wmd::parallel::simulator::{simulate, sweep, KernelProfile, Topology};
-use sinkhorn_wmd::parallel::{balanced_nnz_partition, Pool};
+use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::sparse::ops::TransposedPattern;
+use sinkhorn_wmd::util::json::{obj, Json};
 
 /// Memory-bound fraction of the fused SDDMM_SpMM: it streams two
 /// `V × v_r` factor matrices with one fma per element (8 B loaded per
@@ -45,6 +47,7 @@ fn main() {
     println!("-- measured on this host --");
     let mut table = Table::new(["threads", "prepare", "solve", "total"]);
     let mut t1_solve = 0.0;
+    let mut json_rows: Vec<Json> = Vec::new();
     for &p in &common::thread_sweep() {
         let pool = Pool::new(p);
         let prep = solver.prepare(&corpus.embeddings, query, &pool);
@@ -55,6 +58,12 @@ fn main() {
         if p == 1 {
             t1_solve = r_solve.mean_secs();
         }
+        json_rows.push(obj([
+            ("kernel", solver.config().kernel.label().into()),
+            ("threads", p.into()),
+            ("prepare_secs", r_prep.mean_secs().into()),
+            ("solve_secs", r_solve.mean_secs().into()),
+        ]));
         table.row([
             p.to_string(),
             format!("{:.1} ms", r_prep.mean_secs() * 1e3),
@@ -70,7 +79,10 @@ fn main() {
     let barrier = r_barrier.mean_secs();
     println!("\ncalibration: t1(solve) = {:.1} ms, pool barrier ≈ {:.2} µs", t1_solve * 1e3, barrier * 1e6);
 
-    // ---- simulated CLX curves from the real partition.
+    // ---- simulated CLX curves from the real partition (the fused
+    // iterate owns whole columns of the transposed pattern, so the
+    // modeled shares come from the column partition it actually runs).
+    let tp = TransposedPattern::build(&corpus.c);
     let profile = KernelProfile {
         t1: t1_solve,
         mem_fraction: MEM_FRACTION,
@@ -84,10 +96,7 @@ fn main() {
         println!("\n-- modeled on {name} ({paper_note}) --");
         let ts = sweep(&topo);
         let preds = simulate(&profile, &topo, &ts, |p| {
-            balanced_nnz_partition(corpus.c.row_ptr(), p)
-                .iter()
-                .map(|r| r.len() as f64)
-                .collect()
+            tp.column_parts(p).iter().map(|r| r.len() as f64).collect()
         });
         let mut t = Table::new(["threads", "modeled time", "speedup", "efficiency"]);
         for pr in &preds {
@@ -100,4 +109,5 @@ fn main() {
         }
         t.print();
     }
+    write_bench_json("fig5_strong_scaling", obj([("rows", Json::Arr(json_rows))]));
 }

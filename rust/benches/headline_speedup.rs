@@ -13,11 +13,12 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
 use sinkhorn_wmd::coordinator::{DocStore, PjrtBackend};
 use sinkhorn_wmd::corpus::{SparseVec, SyntheticCorpus};
 use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{DenseSolver, SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::util::json::{obj, Json};
 
 fn main() {
     common::header(
@@ -97,6 +98,19 @@ fn main() {
             rp.mean_secs() / s
         );
     }
+    write_bench_json(
+        "headline_speedup",
+        obj([
+            ("kernel", sparse.config().kernel.label().into()),
+            ("sparse_secs", s.into()),
+            ("dense_secs", r_dense.mean_secs().into()),
+            (
+                "pjrt_secs",
+                r_pjrt.as_ref().map_or(Json::Null, |rp| rp.mean_secs().into()),
+            ),
+            ("projected_paper_ratio", (dense_paper / sparse_paper).into()),
+        ]),
+    );
 }
 
 fn fmt(secs: f64) -> String {

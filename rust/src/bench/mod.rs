@@ -2,10 +2,12 @@
 //! adaptive iteration counts, summary statistics, markdown table output,
 //! and the host-spec capture that regenerates the paper's Table 3.
 
+pub mod report;
 pub mod runner;
 pub mod sysinfo;
 pub mod table;
 
+pub use report::{bench_json_path, merge_bench_json, write_bench_json};
 pub use runner::{bench_fn, BenchResult, BenchSettings};
 pub use sysinfo::SysInfo;
 pub use table::Table;

@@ -1,0 +1,83 @@
+//! Machine-readable bench output: every headline bench merges its
+//! summary rows into one `BENCH_kernels.json` next to the human tables,
+//! so successive runs (e.g. fused vs mixed, before vs after a kernel
+//! change) can be diffed without scraping stdout.
+//!
+//! The file is a single JSON object keyed by bench name; each bench
+//! overwrites only its own entry (read-modify-write), so running the
+//! suite bench-by-bench accumulates one merged report.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Report destination: the `WMD_BENCH_JSON` env var when set, else
+/// `BENCH_kernels.json` in the working directory.
+pub fn bench_json_path() -> PathBuf {
+    match std::env::var("WMD_BENCH_JSON") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from("BENCH_kernels.json"),
+    }
+}
+
+/// Merge `entry` under the `bench` key into the report at
+/// [`bench_json_path`] and say so on stdout. IO errors are reported, not
+/// fatal — a read-only checkout must not kill a bench run.
+pub fn write_bench_json(bench: &str, entry: Json) {
+    let path = bench_json_path();
+    match merge_bench_json(&path, bench, entry) {
+        Ok(()) => println!("\n[{bench}] results merged into {}", path.display()),
+        Err(e) => eprintln!("[{bench}] could not write {}: {e}", path.display()),
+    }
+}
+
+/// The testable core: read the existing report (missing or unparseable
+/// files start a fresh object), replace this bench's entry, write back.
+pub fn merge_bench_json(path: &Path, bench: &str, entry: Json) -> std::io::Result<()> {
+    let mut root: BTreeMap<String, Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|json| match json {
+            Json::Obj(map) => Some(map),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(bench.to_string(), entry);
+    std::fs::write(path, Json::Obj(root).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("wmd-bench-report-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn merge_preserves_other_benches_entries() {
+        let path = tmp("merge");
+        let _ = std::fs::remove_file(&path);
+        merge_bench_json(&path, "ablation_fusion", obj([("rows", vec![1usize, 2].into())]))
+            .unwrap();
+        merge_bench_json(&path, "headline_speedup", obj([("speedup", 5.0.into())])).unwrap();
+        // Overwrite the first entry: the second must survive.
+        merge_bench_json(&path, "ablation_fusion", obj([("rows", vec![3usize].into())])).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let fusion = root.get("ablation_fusion").unwrap();
+        assert_eq!(fusion.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        assert!(root.get("headline_speedup").unwrap().get("speedup").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unparseable_existing_file_starts_fresh() {
+        let path = tmp("garbage");
+        std::fs::write(&path, "not json {").unwrap();
+        merge_bench_json(&path, "b", obj([("ok", true.into())])).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("b").unwrap().get("ok"), Some(&Json::Bool(true)));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -2,7 +2,7 @@
 //! `[section]` headers — no external TOML crate offline) plus programmatic
 //! defaults. Used by the CLI binary and the examples.
 
-use crate::sinkhorn::{IterateKernel, SinkhornConfig};
+use crate::sinkhorn::{IterateKernel, Precision, SinkhornConfig};
 use crate::Real;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -143,12 +143,57 @@ impl RunConfig {
             ("sinkhorn", "check_every") => self.sinkhorn.check_every = p(value)?,
             ("sinkhorn", "kernel") => {
                 self.sinkhorn.kernel = match value {
-                    "fused_atomic" => IterateKernel::FusedAtomic,
-                    "fused_private" => IterateKernel::FusedPrivate,
-                    "fused_transposed" => IterateKernel::FusedTransposed,
-                    "unfused" => IterateKernel::Unfused,
+                    // Preserve an already-set precision when re-selecting
+                    // the fused family (key order in the file must not
+                    // matter).
+                    "fused" => match self.sinkhorn.kernel {
+                        IterateKernel::Fused { precision } => IterateKernel::Fused { precision },
+                        IterateKernel::Unfused => {
+                            IterateKernel::Fused { precision: Precision::default() }
+                        }
+                    },
+                    "unfused" => match self.sinkhorn.kernel {
+                        IterateKernel::Fused { precision } if precision != Precision::F64 => {
+                            return Err(
+                                "kernel 'unfused' has no mixed-precision mode".to_string()
+                            )
+                        }
+                        _ => IterateKernel::Unfused,
+                    },
+                    "fused_atomic" | "fused_private" | "fused_transposed" => {
+                        return Err(format!(
+                            "kernel '{value}' was retired by the kernel-family \
+                             consolidation; use \"fused\" (with precision = \"f64\" \
+                             or \"mixed\") or \"unfused\""
+                        ))
+                    }
                     other => return Err(format!("unknown kernel '{other}'")),
                 }
+            }
+            ("sinkhorn", "precision") => {
+                let precision = match value {
+                    "f64" => Precision::F64,
+                    #[cfg(feature = "mixed-precision")]
+                    "mixed" => Precision::Mixed,
+                    #[cfg(not(feature = "mixed-precision"))]
+                    "mixed" => {
+                        return Err(
+                            "precision 'mixed' requires building with the \
+                             `mixed-precision` feature"
+                                .to_string(),
+                        )
+                    }
+                    other => return Err(format!("unknown precision '{other}'")),
+                };
+                self.sinkhorn.kernel = match self.sinkhorn.kernel {
+                    IterateKernel::Fused { .. } => IterateKernel::Fused { precision },
+                    IterateKernel::Unfused if precision == Precision::F64 => {
+                        IterateKernel::Unfused
+                    }
+                    IterateKernel::Unfused => {
+                        return Err("kernel 'unfused' has no mixed-precision mode".to_string())
+                    }
+                };
             }
             (s, k) => return Err(format!("unknown key [{s}] {k}")),
         }
@@ -161,11 +206,11 @@ impl RunConfig {
         top.insert("threads", self.threads.to_string());
         top.insert("shards", self.shards.to_string());
         top.insert("artifacts_dir", format!("\"{}\"", self.artifacts_dir));
-        let kernel = match self.sinkhorn.kernel {
-            IterateKernel::FusedAtomic => "fused_atomic",
-            IterateKernel::FusedPrivate => "fused_private",
-            IterateKernel::FusedTransposed => "fused_transposed",
-            IterateKernel::Unfused => "unfused",
+        let (kernel, precision) = match self.sinkhorn.kernel {
+            #[cfg(feature = "mixed-precision")]
+            IterateKernel::Fused { precision: Precision::Mixed } => ("fused", "mixed"),
+            IterateKernel::Fused { .. } => ("fused", "f64"),
+            IterateKernel::Unfused => ("unfused", "f64"),
         };
         format!(
             "# sinkhorn-wmd run configuration\n\
@@ -174,7 +219,7 @@ impl RunConfig {
              n_topics = {}\ntokens_per_doc = {}\nnum_queries = {}\n\
              query_words_min = {}\nquery_words_max = {}\nseed = {}\n\n\
              [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
-             check_every = {}\nkernel = \"{}\"\n",
+             check_every = {}\nkernel = \"{}\"\nprecision = \"{}\"\n",
             top["threads"],
             top["shards"],
             top["artifacts_dir"],
@@ -192,6 +237,7 @@ impl RunConfig {
             self.sinkhorn.tolerance,
             self.sinkhorn.check_every,
             kernel,
+            precision,
         )
     }
 }
@@ -222,6 +268,68 @@ mod tests {
     fn rejects_unknown_keys() {
         assert!(RunConfig::from_str("nonsense = 3").is_err());
         assert!(RunConfig::from_str("[corpus]\nbogus = 3").is_err());
+    }
+
+    #[test]
+    fn parses_kernel_and_precision() {
+        let cfg = RunConfig::from_str("[sinkhorn]\nkernel = \"fused\"\nprecision = \"f64\"\n")
+            .unwrap();
+        assert_eq!(cfg.sinkhorn.kernel, IterateKernel::Fused { precision: Precision::F64 });
+        let cfg = RunConfig::from_str("[sinkhorn]\nkernel = \"unfused\"\n").unwrap();
+        assert_eq!(cfg.sinkhorn.kernel, IterateKernel::Unfused);
+    }
+
+    #[cfg(feature = "mixed-precision")]
+    #[test]
+    fn mixed_precision_roundtrips_and_is_key_order_independent() {
+        let cfg = RunConfig {
+            sinkhorn: SinkhornConfig {
+                kernel: IterateKernel::Fused { precision: Precision::Mixed },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = RunConfig::from_str(&cfg.render()).unwrap();
+        assert_eq!(back.sinkhorn.kernel, IterateKernel::Fused { precision: Precision::Mixed });
+        // precision before kernel must mean the same thing.
+        let cfg = RunConfig::from_str("[sinkhorn]\nprecision = \"mixed\"\nkernel = \"fused\"\n")
+            .unwrap();
+        assert_eq!(cfg.sinkhorn.kernel, IterateKernel::Fused { precision: Precision::Mixed });
+    }
+
+    #[test]
+    fn rejects_retired_and_unknown_kernel_names() {
+        for name in ["fused_atomic", "fused_private", "fused_transposed"] {
+            let err = RunConfig::from_str(&format!("[sinkhorn]\nkernel = \"{name}\"\n"))
+                .unwrap_err();
+            assert!(err.contains("retired"), "{err}");
+        }
+        let err = RunConfig::from_str("[sinkhorn]\nkernel = \"simd9000\"\n").unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_precision_and_mixed_unfused() {
+        let err = RunConfig::from_str("[sinkhorn]\nprecision = \"f16\"\n").unwrap_err();
+        assert!(err.contains("unknown precision"), "{err}");
+        #[cfg(feature = "mixed-precision")]
+        {
+            let err = RunConfig::from_str(
+                "[sinkhorn]\nkernel = \"unfused\"\nprecision = \"mixed\"\n",
+            )
+            .unwrap_err();
+            assert!(err.contains("no mixed-precision mode"), "{err}");
+            let err = RunConfig::from_str(
+                "[sinkhorn]\nprecision = \"mixed\"\nkernel = \"unfused\"\n",
+            )
+            .unwrap_err();
+            assert!(err.contains("no mixed-precision mode"), "{err}");
+        }
+        #[cfg(not(feature = "mixed-precision"))]
+        {
+            let err = RunConfig::from_str("[sinkhorn]\nprecision = \"mixed\"\n").unwrap_err();
+            assert!(err.contains("mixed-precision` feature"), "{err}");
+        }
     }
 
     #[test]

@@ -21,6 +21,9 @@ pub struct Metrics {
     prepare_cache_misses: AtomicU64,
     batched_solves: AtomicU64,
     batched_queries: AtomicU64,
+    kernel_fused_f64: AtomicU64,
+    kernel_fused_mixed: AtomicU64,
+    kernel_unfused: AtomicU64,
     sharded_solves: AtomicU64,
     shard_solves: AtomicU64,
     shard_iterations: AtomicU64,
@@ -73,6 +76,20 @@ impl Metrics {
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// `queries` sparse-backend queries solved under `kernel` — recorded
+    /// once per sparse batch so the serving kernel/precision mix is
+    /// visible in production.
+    pub fn record_kernel_queries(&self, kernel: crate::sinkhorn::IterateKernel, queries: u64) {
+        use crate::sinkhorn::{IterateKernel, Precision};
+        match kernel {
+            #[cfg(feature = "mixed-precision")]
+            IterateKernel::Fused { precision: Precision::Mixed } => &self.kernel_fused_mixed,
+            IterateKernel::Fused { precision: Precision::F64 } => &self.kernel_fused_f64,
+            IterateKernel::Unfused => &self.kernel_unfused,
+        }
+        .fetch_add(queries, Ordering::Relaxed);
+    }
+
     /// One sharded dispatch: `shards` per-shard solves answered a batch,
     /// executing `iterations` Sinkhorn iterations in total across all
     /// (shard, query) pairs — the per-shard counts folded together.
@@ -113,6 +130,9 @@ impl Metrics {
             prepare_cache_misses: self.prepare_cache_misses.load(Ordering::Relaxed),
             batched_solves: self.batched_solves.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            kernel_fused_f64: self.kernel_fused_f64.load(Ordering::Relaxed),
+            kernel_fused_mixed: self.kernel_fused_mixed.load(Ordering::Relaxed),
+            kernel_unfused: self.kernel_unfused.load(Ordering::Relaxed),
             sharded_solves: self.sharded_solves.load(Ordering::Relaxed),
             shard_solves: self.shard_solves.load(Ordering::Relaxed),
             shard_iterations: self.shard_iterations.load(Ordering::Relaxed),
@@ -146,6 +166,12 @@ pub struct MetricsSnapshot {
     pub batched_solves: u64,
     /// Queries answered through a batched solve.
     pub batched_queries: u64,
+    /// Sparse-backend queries solved per iterate kernel/precision
+    /// (`kernel = "fused"` with `precision = "f64"` / `"mixed"`, or the
+    /// `"unfused"` ablation baseline).
+    pub kernel_fused_f64: u64,
+    pub kernel_fused_mixed: u64,
+    pub kernel_unfused: u64,
     /// Batches dispatched through the sharded (multi-pool) path.
     pub sharded_solves: u64,
     /// Per-shard solves executed (`sharded_solves × S` with a fixed
@@ -187,6 +213,7 @@ impl MetricsSnapshot {
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
              backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={} \
              batched: solves={} queries={} \
+             kernels: fused-f64={} fused-mixed={} unfused={} \
              sharded: batches={} shard-solves={} shard-iters={} \
              workspace: bytes={} checkouts={} grows={}",
             self.queries,
@@ -202,6 +229,9 @@ impl MetricsSnapshot {
             self.prepare_cache_misses,
             self.batched_solves,
             self.batched_queries,
+            self.kernel_fused_f64,
+            self.kernel_fused_mixed,
+            self.kernel_unfused,
             self.sharded_solves,
             self.shard_solves,
             self.shard_iterations,
@@ -270,6 +300,25 @@ mod tests {
         assert_eq!(s.batched_solves, 2);
         assert_eq!(s.batched_queries, 6);
         assert!(s.report().contains("batched: solves=2 queries=6"));
+    }
+
+    #[test]
+    fn kernel_query_counters() {
+        use crate::sinkhorn::{IterateKernel, Precision};
+        let m = Metrics::new();
+        m.record_kernel_queries(IterateKernel::Fused { precision: Precision::F64 }, 3);
+        m.record_kernel_queries(IterateKernel::Unfused, 1);
+        m.record_kernel_queries(IterateKernel::Fused { precision: Precision::F64 }, 2);
+        let s = m.snapshot();
+        assert_eq!(s.kernel_fused_f64, 5);
+        assert_eq!(s.kernel_unfused, 1);
+        assert_eq!(s.kernel_fused_mixed, 0);
+        assert!(s.report().contains("kernels: fused-f64=5 fused-mixed=0 unfused=1"));
+        #[cfg(feature = "mixed-precision")]
+        {
+            m.record_kernel_queries(IterateKernel::Fused { precision: Precision::Mixed }, 4);
+            assert_eq!(m.snapshot().kernel_fused_mixed, 4);
+        }
     }
 
     #[test]

@@ -345,6 +345,7 @@ fn dispatcher(
             {
                 metrics.record_batched_solve(sparse_jobs.len());
             }
+            metrics.record_kernel_queries(config.sinkhorn.kernel, sparse_jobs.len() as u64);
             for ((job, _prep, started), out) in sparse_jobs.into_iter().zip(outs) {
                 let latency = started.elapsed();
                 metrics.record_query(latency, Backend::SparseRust);
@@ -597,7 +598,7 @@ mod tests {
             ServiceConfig {
                 threads: 1,
                 sinkhorn: SinkhornConfig {
-                    kernel: IterateKernel::FusedPrivate,
+                    kernel: IterateKernel::Unfused,
                     ..Default::default()
                 },
                 batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },

@@ -5,36 +5,65 @@
 //!    transposed factors `Kᵀ`, `K_over_rᵀ`, `(K⊙M)ᵀ` in one fused
 //!    GEMM-style pass ([`crate::dist::precompute_factors`]).
 //! 2. `solve` — iterate `x ← K_over_r @ (c ⊘ (Kᵀ@(1/x)))` with the fused
-//!    `SDDMM_SpMM` kernel until `x` stops changing (or `max_iter`), then
-//!    reduce the WMD vector with the type-2 kernel.
+//!    `SDDTMM→DSTMMT` kernel over the stationary transposed pattern until
+//!    `x` stops changing (or `max_iter`), then reduce the WMD vector with
+//!    the fused epilogue.
+//!
+//! Kernel selection is [`IterateKernel`]: the fused family (optionally in
+//! [`Precision::Mixed`] — f32 compute panels, f64 accumulation and
+//! convergence/WMD reduction) or the `Unfused` SDDMM + atomic-SpMM
+//! ablation baseline.
 
 use super::workspace::SolveWorkspace;
-use crate::dist::{precompute_factors_in, QueryFactors};
-use crate::parallel::{balanced_nnz_partition_into, NnzRange, Pool};
-use crate::sparse::ops::{
-    fused_type1, fused_type1_batch, fused_type1_private, fused_type1_transposed,
-    fused_type1_transposed_batch, fused_type2, fused_type2_batch, sddmm, spmm_atomic,
-    PrivateBuffers, TransposedPattern,
-};
-use crate::sparse::{Csr, Dense};
 use crate::corpus::SparseVec;
+use crate::dist::{precompute_factors_in, QueryFactors};
+use crate::parallel::{balanced_nnz_partition_into, Pool};
+use crate::sparse::ops::{sddmm, sddtmm_dstmmt_batch, sddtmm_wmd_batch, spmm_atomic};
+use crate::sparse::{Csr, Dense, Panel32};
 use crate::util::SharedSlice;
 use crate::Real;
 
-/// Which iterate kernel the solver uses (ablation: `benches/ablation_fusion`).
+/// Scalar precision of the fused iterate's compute panels.
+///
+/// `Mixed` narrows the *stationary* panels (`Kᵀ`, `K_over_rᵀ`) and the
+/// `uᵀ` mirror to f32 — halving the iterate's memory traffic and doubling
+/// its SIMD width — while every division, accumulation, renormalization,
+/// convergence residual and the final WMD reduction stay f64. Measured
+/// end-to-end WMD error vs the f64 path is ~2e-9 at paper-scale shapes;
+/// the equivalence suite enforces ≤ 1e-5.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum IterateKernel {
-    /// The paper's fused SDDMM_SpMM with atomic scatter (Fig. 4).
+pub enum Precision {
+    /// Full f64 throughout (the default; bitwise-reproducible).
     #[default]
-    FusedAtomic,
-    /// Fused with per-thread private buffers + reduction (atomic-free).
-    FusedPrivate,
-    /// Fused over the transposed (column-owned) pattern: atomic-free and
-    /// scratch-free; the pattern is built once per query (§9-style reuse).
-    FusedTransposed,
-    /// Unfused: SDDMM into a materialized `w`, then SpMM (the paper's
-    /// pre-fusion variant, kept as the ablation baseline).
+    F64,
+    /// f32 compute panels with f64 accumulation (requires the
+    /// `mixed-precision` build feature).
+    #[cfg(feature = "mixed-precision")]
+    Mixed,
+}
+
+/// Which iterate kernel the solver uses (ablation: `benches/ablation_fusion`).
+///
+/// The former `FusedAtomic` / `FusedPrivate` / `FusedTransposed` variants
+/// collapsed into the single [`IterateKernel::Fused`] family — the
+/// column-owned transposed traversal beat both scatter strategies on
+/// every measured shape, so only the best survives, parameterized by
+/// [`Precision`]. `Unfused` remains as the one ablation baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterateKernel {
+    /// The fused `SDDTMM→DSTMMT` family: one pass over the stationary
+    /// transposed pattern per Sinkhorn step, write-owned columns, no
+    /// atomics, no private buffers.
+    Fused { precision: Precision },
+    /// Unfused: SDDMM into a materialized `w`, then atomic SpMM (the
+    /// paper's pre-fusion variant, kept as the ablation baseline).
     Unfused,
+}
+
+impl Default for IterateKernel {
+    fn default() -> Self {
+        IterateKernel::Fused { precision: Precision::F64 }
+    }
 }
 
 impl IterateKernel {
@@ -42,7 +71,32 @@ impl IterateKernel {
     /// kernel for this variant (otherwise it falls back to a per-query
     /// loop — callers reporting batching metrics should check this).
     pub fn has_batched_path(self) -> bool {
-        matches!(self, IterateKernel::FusedAtomic | IterateKernel::FusedTransposed)
+        matches!(self, IterateKernel::Fused { .. })
+    }
+
+    /// Whether this kernel runs the f32 compute panels. Always false when
+    /// the `mixed-precision` feature is off (the `Mixed` variant does not
+    /// exist then), so callers can branch on it unconditionally.
+    pub fn is_mixed(self) -> bool {
+        #[cfg(feature = "mixed-precision")]
+        {
+            matches!(self, IterateKernel::Fused { precision: Precision::Mixed })
+        }
+        #[cfg(not(feature = "mixed-precision"))]
+        {
+            false
+        }
+    }
+
+    /// Stable label for metrics/bench reporting (matches the `kernel=` /
+    /// `precision=` config-key vocabulary).
+    pub fn label(self) -> &'static str {
+        match self {
+            #[cfg(feature = "mixed-precision")]
+            IterateKernel::Fused { precision: Precision::Mixed } => "fused-mixed",
+            IterateKernel::Fused { .. } => "fused-f64",
+            IterateKernel::Unfused => "unfused",
+        }
     }
 }
 
@@ -256,7 +310,7 @@ impl SparseSolver {
     /// `Real::INFINITY`: there is no transport plan to a document with no
     /// words. Without the guard a zero-support column leaves `x_row` all
     /// zeros, `update_u`'s renormalization divides by a zero mean and
-    /// poisons `u` with NaN, while the type-2 epilogue sums nothing — the
+    /// poisons `u` with NaN, while the epilogue sums nothing — the
     /// empty document would score `WMD = 0` and win every argmin.
     ///
     /// Thin allocating wrapper over [`SparseSolver::solve_in`] (a fresh
@@ -267,14 +321,14 @@ impl SparseSolver {
     }
 
     /// [`SparseSolver::solve`] with every piece of per-solve scratch —
-    /// iterate planes, masks, partitions, kernel scratch — borrowed from
-    /// `ws` instead of heap-allocated. Once the workspace is warm, the
-    /// only remaining allocations are the returned `wmd` vector (its
-    /// ownership moves to the caller) and, on multi-threaded pools, the
-    /// convergence reduction's per-thread cells. Numerically identical to
-    /// `solve`: every borrowed buffer is re-shaped and re-filled at
-    /// checkout, so dirty contents cannot leak (pinned bitwise by
-    /// `tests/workspace_test.rs`).
+    /// iterate planes, masks, partitions, kernel scratch, f32 panel lanes
+    /// in mixed mode — borrowed from `ws` instead of heap-allocated. Once
+    /// the workspace is warm, the only remaining allocations are the
+    /// returned `wmd` vector (its ownership moves to the caller) and, on
+    /// multi-threaded pools, the convergence reduction's per-thread
+    /// cells. Numerically identical to `solve`: every borrowed buffer is
+    /// re-shaped and re-filled at checkout, so dirty contents cannot leak
+    /// (pinned bitwise by `tests/workspace_test.rs`).
     pub fn solve_in(
         &self,
         ws: &mut SolveWorkspace,
@@ -283,8 +337,12 @@ impl SparseSolver {
         pool: &Pool,
     ) -> SolveOutput {
         assert_eq!(c.nrows(), prep.factors.vocab_size(), "c/vocabulary mismatch");
+        let mixed = self.config.kernel.is_mixed();
         let bytes_before = ws.begin_checkout();
         ws.ensure_lanes(1);
+        if mixed {
+            ws.ensure_lo_lanes(1);
+        }
         let v_r = prep.v_r();
         let n = c.ncols();
         let f = &prep.factors;
@@ -298,13 +356,18 @@ impl SparseSolver {
                 parts,
                 col_parts,
                 pattern,
-                private,
                 w_buf,
                 fused,
+                kt_lo,
+                kor_lo,
+                u_lo,
                 ..
             } = &mut *ws;
-            balanced_nnz_partition_into(c.row_ptr(), pool.nthreads(), parts);
             empty_columns_into(c, empty);
+            // The transposed pattern drives both the fused iterate and the
+            // (always-fused) WMD epilogue, so every kernel builds it.
+            pattern.rebuild_from(c);
+            pattern.column_parts_into(pool.nthreads(), col_parts);
 
             // x = ones(v_r, N) / v_r, stored transposed (N × v_r); u = 1/x.
             let x_t = &mut x_t[0];
@@ -313,52 +376,78 @@ impl SparseSolver {
             x_t.reset(n, v_r, 1.0 / v_r as Real);
             x_new.reset(n, v_r, 0.0);
             u_t.reset(n, v_r, v_r as Real);
-            let mut scratch: Option<&mut PrivateBuffers> = match self.config.kernel {
-                IterateKernel::FusedPrivate => {
-                    private.ensure(pool.nthreads(), n * v_r);
-                    Some(private)
-                }
-                _ => None,
-            };
             let mut w_slot: Option<&mut Vec<Real>> = match self.config.kernel {
                 IterateKernel::Unfused => {
+                    balanced_nnz_partition_into(c.row_ptr(), pool.nthreads(), parts);
                     w_buf.clear();
                     w_buf.resize(c.nnz(), 0.0);
                     Some(w_buf)
                 }
-                _ => None,
+                IterateKernel::Fused { .. } => None,
             };
-            let transposed: Option<(&TransposedPattern, &[NnzRange])> =
-                match self.config.kernel {
-                    IterateKernel::FusedTransposed => {
-                        pattern.rebuild_from(c);
-                        pattern.column_parts_into(pool.nthreads(), col_parts);
-                        Some((&*pattern, &col_parts[..]))
-                    }
-                    _ => None,
-                };
+            if mixed {
+                // Narrow the stationary factor panels once per solve; the
+                // f32 u mirror starts at the same 1/x as the f64 master
+                // and is refreshed inside update_u.
+                kt_lo[0].reset_from(&f.kt, pool);
+                kor_lo[0].reset_from(&f.kor_t, pool);
+                u_lo[0].reset(n, v_r, v_r as f32);
+            }
 
             let mut iterations = 0;
             let mut converged = false;
             while iterations < self.config.max_iter {
-                self.iterate_once(
-                    c,
-                    f,
-                    u_t,
-                    x_new,
-                    pool,
-                    parts,
-                    scratch.as_deref_mut(),
-                    w_slot.as_deref_mut(),
-                    transposed,
-                );
+                match self.config.kernel {
+                    IterateKernel::Fused { .. } => {
+                        if mixed {
+                            sddtmm_dstmmt_batch(
+                                c,
+                                &*pattern,
+                                &[&kt_lo[0]],
+                                &[&kor_lo[0]],
+                                &u_lo[..1],
+                                std::slice::from_mut(x_new),
+                                &[true],
+                                pool,
+                                col_parts,
+                                fused,
+                            );
+                        } else {
+                            sddtmm_dstmmt_batch(
+                                c,
+                                &*pattern,
+                                &[&f.kt],
+                                &[&f.kor_t],
+                                std::slice::from_ref(&*u_t),
+                                std::slice::from_mut(x_new),
+                                &[true],
+                                pool,
+                                col_parts,
+                                fused,
+                            );
+                        }
+                    }
+                    IterateKernel::Unfused => {
+                        let w = w_slot.as_deref_mut().expect("w buffer");
+                        sddmm(c, &f.kt, u_t, w, pool, parts);
+                        spmm_atomic(c, &w[..], &f.kor_t, x_new, pool, parts);
+                    }
+                }
                 iterations += 1;
                 let check = self.config.tolerance > 0.0
                     && (iterations % self.config.check_every == 0
                         || iterations == self.config.max_iter);
                 // One fused pass: marginal residual (needs the OLD u against
                 // the RAW new x) + per-column renormalization + u update.
-                let residual = update_u(x_new, u_t, &f.r, empty, check, pool);
+                let residual = update_u(
+                    x_new,
+                    u_t,
+                    &f.r,
+                    empty,
+                    check,
+                    pool,
+                    if mixed { Some(&mut u_lo[0]) } else { None },
+                );
                 std::mem::swap(x_t, x_new);
                 if check && residual <= self.config.tolerance {
                     converged = true;
@@ -366,10 +455,21 @@ impl SparseSolver {
                 }
             }
 
-            // Epilogue: u is already 1/x for the final x; one more SDDMM over
-            // the pattern folds v and the (K⊙M) reduction together.
+            // Epilogue: u is already 1/x for the final x; one more fused
+            // pass over the pattern folds v and the (K⊙M) reduction
+            // together. Always f64 — in mixed mode the final reduction
+            // runs against the f64 u master, not the f32 mirror.
             let mut wmd = vec![0.0; n];
-            fused_type2(c, &f.kt, &f.km_t, u_t, &mut wmd, pool, parts, fused);
+            sddtmm_wmd_batch(
+                c,
+                &*pattern,
+                &[&f.kt],
+                &[&f.km_t],
+                std::slice::from_ref(&*u_t),
+                std::slice::from_mut(&mut wmd),
+                pool,
+                col_parts,
+            );
             for (w, &e) in wmd.iter_mut().zip(empty.iter()) {
                 if e {
                     *w = Real::INFINITY;
@@ -382,20 +482,21 @@ impl SparseSolver {
     }
 
     /// Cross-query batched solve: `B` prepared queries against the same
-    /// target matrix, iterated in **one fused pass over `c` per Sinkhorn
-    /// step** — each nnz of the CSR updates every active query's state
-    /// before the traversal moves on, amortizing the row-pointer walk and
-    /// its cache misses across the batch (the coordinator's dispatch path).
+    /// target matrix, iterated in **one fused pass over the transposed
+    /// pattern per Sinkhorn step** — each pattern entry updates every
+    /// active query's state before the traversal moves on, amortizing the
+    /// column walk and its cache misses across the batch (the
+    /// coordinator's dispatch path).
     ///
     /// Per-query convergence masks let early-converging queries drop out
     /// of the iterate without stalling the rest; each query's output
     /// (`wmd`, `iterations`, `converged`) matches what the per-query
-    /// [`SparseSolver::solve`] would have produced — bitwise on one
-    /// thread, to rounding (atomic accumulation order) otherwise.
+    /// [`SparseSolver::solve`] would have produced — bitwise, at any
+    /// thread count, for the fused f64 kernel (column-owned accumulation
+    /// is order-deterministic).
     ///
-    /// Kernels without a batched variant ([`IterateKernel::FusedPrivate`],
-    /// [`IterateKernel::Unfused`] — both exist as ablation baselines)
-    /// fall back to a per-query loop.
+    /// Kernels without a batched variant ([`IterateKernel::Unfused`], the
+    /// ablation baseline) fall back to a per-query loop.
     /// Thin allocating wrapper over [`SparseSolver::solve_batch_in`].
     pub fn solve_batch(&self, preps: &[&Prepared], c: &Csr, pool: &Pool) -> Vec<SolveOutput> {
         self.solve_batch_in(&mut SolveWorkspace::new(), preps, c, pool)
@@ -424,8 +525,12 @@ impl SparseSolver {
         for p in preps {
             assert_eq!(c.nrows(), p.factors.vocab_size(), "c/vocabulary mismatch");
         }
+        let mixed = self.config.kernel.is_mixed();
         let bytes_before = ws.begin_checkout();
         ws.ensure_lanes(b);
+        if mixed {
+            ws.ensure_lo_lanes(b);
+        }
         let n = c.ncols();
         let out = {
             let SolveWorkspace {
@@ -433,28 +538,22 @@ impl SparseSolver {
                 x_new,
                 u_t,
                 empty,
-                parts,
                 col_parts,
                 pattern,
                 fused,
                 iterations,
                 converged,
                 active,
+                kt_lo,
+                kor_lo,
+                u_lo,
                 ..
             } = &mut *ws;
-            balanced_nnz_partition_into(c.row_ptr(), pool.nthreads(), parts);
             empty_columns_into(c, empty);
             // The pattern (and its column partition) is shared by the whole
             // batch — built once, another cross-query amortization.
-            let transposed: Option<(&TransposedPattern, &[NnzRange])> =
-                match self.config.kernel {
-                    IterateKernel::FusedTransposed => {
-                        pattern.rebuild_from(c);
-                        pattern.column_parts_into(pool.nthreads(), col_parts);
-                        Some((&*pattern, &col_parts[..]))
-                    }
-                    _ => None,
-                };
+            pattern.rebuild_from(c);
+            pattern.column_parts_into(pool.nthreads(), col_parts);
             let kts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kt).collect();
             let kor_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.kor_t).collect();
             let km_ts: Vec<&Dense> = preps.iter().map(|p| &p.factors.km_t).collect();
@@ -468,6 +567,17 @@ impl SparseSolver {
                 x_new[q].reset(n, p.v_r(), 0.0);
                 u_t[q].reset(n, p.v_r(), p.v_r() as Real);
             }
+            if mixed {
+                for (q, p) in preps.iter().enumerate() {
+                    kt_lo[q].reset_from(&p.factors.kt, pool);
+                    kor_lo[q].reset_from(&p.factors.kor_t, pool);
+                    u_lo[q].reset(n, p.v_r(), p.v_r() as f32);
+                }
+            }
+            let kt_lo_refs: Vec<&Panel32> =
+                if mixed { kt_lo[..b].iter().collect() } else { Vec::new() };
+            let kor_lo_refs: Vec<&Panel32> =
+                if mixed { kor_lo[..b].iter().collect() } else { Vec::new() };
             iterations.clear();
             iterations.resize(b, 0usize);
             converged.clear();
@@ -477,20 +587,32 @@ impl SparseSolver {
 
             let mut iter = 0;
             while iter < self.config.max_iter && active.iter().any(|&a| a) {
-                // The u lanes pass straight through as `&[Dense]` — no
+                // The u lanes pass straight through as slices — no
                 // per-iteration reference-vector rebuild.
-                match transposed {
-                    None => fused_type1_batch(
-                        c, &kts, &kor_ts, u_t, x_new, active, pool, parts, fused,
-                    ),
-                    Some((tp, tp_parts)) => fused_type1_transposed_batch(
-                        c, tp, &kts, &kor_ts, u_t, x_new, active, pool, tp_parts, fused,
-                    ),
+                if mixed {
+                    sddtmm_dstmmt_batch(
+                        c, &*pattern, &kt_lo_refs, &kor_lo_refs, &u_lo[..b], x_new, active,
+                        pool, col_parts, fused,
+                    );
+                } else {
+                    sddtmm_dstmmt_batch(
+                        c, &*pattern, &kts, &kor_ts, &*u_t, x_new, active, pool, col_parts,
+                        fused,
+                    );
                 }
                 iter += 1;
                 let check = self.config.tolerance > 0.0
                     && (iter % self.config.check_every == 0 || iter == self.config.max_iter);
-                let residuals = update_u_batch(x_new, u_t, &rs, empty, active, check, pool);
+                let residuals = update_u_batch(
+                    x_new,
+                    u_t,
+                    &rs,
+                    empty,
+                    active,
+                    check,
+                    pool,
+                    if mixed { Some(&mut u_lo[..b]) } else { None },
+                );
                 for q in 0..b {
                     if !active[q] {
                         continue;
@@ -505,9 +627,10 @@ impl SparseSolver {
             }
 
             // Batched epilogue: every query's final u (frozen at its own
-            // convergence point) feeds one shared type-2 pass.
+            // convergence point) feeds one shared fused WMD pass — always
+            // f64, against the f64 u masters.
             let mut wmds: Vec<Vec<Real>> = (0..b).map(|_| vec![0.0; n]).collect();
-            fused_type2_batch(c, &kts, &km_ts, u_t, &mut wmds, pool, parts, fused);
+            sddtmm_wmd_batch(c, &*pattern, &kts, &km_ts, &*u_t, &mut wmds, pool, col_parts);
             wmds.into_iter()
                 .enumerate()
                 .map(|(q, mut wmd)| {
@@ -535,41 +658,6 @@ impl SparseSolver {
         let prep = self.prepare(embeddings, query, pool);
         self.solve(&prep, c, pool)
     }
-
-    #[allow(clippy::too_many_arguments)]
-    fn iterate_once(
-        &self,
-        c: &Csr,
-        f: &QueryFactors,
-        u_t: &Dense,
-        x_new: &mut Dense,
-        pool: &Pool,
-        parts: &[NnzRange],
-        scratch: Option<&mut PrivateBuffers>,
-        w_buf: Option<&mut Vec<Real>>,
-        transposed: Option<(&TransposedPattern, &[NnzRange])>,
-    ) {
-        match self.config.kernel {
-            IterateKernel::FusedAtomic => {
-                fused_type1(c, &f.kt, &f.kor_t, u_t, x_new, pool, parts);
-            }
-            IterateKernel::FusedPrivate => {
-                fused_type1_private(
-                    c, &f.kt, &f.kor_t, u_t, x_new, pool, parts,
-                    scratch.expect("scratch"),
-                );
-            }
-            IterateKernel::FusedTransposed => {
-                let (tp, col_parts) = transposed.expect("pattern");
-                fused_type1_transposed(c, tp, &f.kt, &f.kor_t, u_t, x_new, pool, col_parts);
-            }
-            IterateKernel::Unfused => {
-                let w = w_buf.expect("w buffer");
-                sddmm(c, &f.kt, u_t, w, pool, parts);
-                spmm_atomic(c, &w[..], &f.kor_t, x_new, pool, parts);
-            }
-        }
-    }
 }
 
 /// Parallel pass over the new iterate, fused like the paper's
@@ -594,6 +682,12 @@ impl SparseSolver {
 /// (undeliverable mass, constant 1) would block convergence forever. The
 /// solve reports those documents as `+inf` in the epilogue instead.
 ///
+/// When `u_lo` is given (mixed precision), the freshly written f64 `u`
+/// row is also narrowed into the f32 mirror in the same pass — the next
+/// iterate reads the mirror, every other consumer reads the f64 master.
+/// Mirror rows of empty documents stay stale, matching the skipped f64
+/// rows; the kernels never read them (empty columns have no entries).
+///
 /// Returns the max residual over documents (0.0 when not checking).
 fn update_u(
     x_new: &mut Dense,
@@ -602,6 +696,7 @@ fn update_u(
     empty: &[bool],
     check: bool,
     pool: &Pool,
+    u_lo: Option<&mut Panel32>,
 ) -> Real {
     let n = x_new.nrows();
     let vr = x_new.ncols();
@@ -609,6 +704,11 @@ fn update_u(
     debug_assert_eq!(empty.len(), n);
     let x_view = SharedSlice::new(x_new.as_mut_slice());
     let u_view = SharedSlice::new(u_t.as_mut_slice());
+    let u_lo_view: Option<SharedSlice<f32>> = u_lo.map(|p| {
+        debug_assert_eq!(p.nrows(), n);
+        debug_assert_eq!(p.ncols(), vr);
+        SharedSlice::new(p.as_mut_slice())
+    });
     pool.parallel_reduce(
         n,
         0.0f64,
@@ -636,6 +736,13 @@ fn update_u(
                     x_row[k] = xn;
                     u_row[k] = 1.0 / xn;
                 }
+                if let Some(v) = &u_lo_view {
+                    // SAFETY: row j of the mirror is owned by this thread.
+                    let lo = unsafe { v.slice_mut(j * vr, vr) };
+                    for k in 0..vr {
+                        lo[k] = u_row[k] as f32;
+                    }
+                }
             }
         },
         Real::max,
@@ -646,7 +753,9 @@ fn update_u(
 /// query's iterate and computes per-query residuals (the per-query
 /// convergence masks), instead of `B` fork/join barriers per Sinkhorn
 /// step. Row-wise arithmetic is identical to the single-query pass, so
-/// the batched update is bitwise equivalent per query.
+/// the batched update is bitwise equivalent per query. `u_los` mirrors
+/// [`update_u`]'s `u_lo` per lane (mixed precision only).
+#[allow(clippy::too_many_arguments)]
 fn update_u_batch(
     x_new: &mut [Dense],
     u_t: &mut [Dense],
@@ -655,6 +764,7 @@ fn update_u_batch(
     active: &[bool],
     check: bool,
     pool: &Pool,
+    u_los: Option<&mut [Panel32]>,
 ) -> Vec<Real> {
     let b = x_new.len();
     debug_assert_eq!(u_t.len(), b);
@@ -670,6 +780,10 @@ fn update_u_batch(
         x_new.iter_mut().map(|x| SharedSlice::new(x.as_mut_slice())).collect();
     let u_views: Vec<SharedSlice<Real>> =
         u_t.iter_mut().map(|u| SharedSlice::new(u.as_mut_slice())).collect();
+    let u_lo_views: Option<Vec<SharedSlice<f32>>> = u_los.map(|ps| {
+        debug_assert_eq!(ps.len(), b);
+        ps.iter_mut().map(|p| SharedSlice::new(p.as_mut_slice())).collect()
+    });
     pool.parallel_reduce(
         n,
         vec![0.0f64; b],
@@ -702,6 +816,13 @@ fn update_u_batch(
                         let xn = x_row[k] * inv_mean;
                         x_row[k] = xn;
                         u_row[k] = 1.0 / xn;
+                    }
+                    if let Some(vs) = &u_lo_views {
+                        // SAFETY: row j of mirror q is owned by this thread.
+                        let lo = unsafe { vs[q].slice_mut(j * vr, vr) };
+                        for k in 0..vr {
+                            lo[k] = u_row[k] as f32;
+                        }
                     }
                 }
             }
@@ -739,17 +860,24 @@ mod tests {
             .build()
     }
 
+    /// Every kernel the build can run (mixed only with its feature on).
+    fn all_kernels() -> Vec<IterateKernel> {
+        let mut ks = vec![
+            IterateKernel::Fused { precision: Precision::F64 },
+            IterateKernel::Unfused,
+        ];
+        #[cfg(feature = "mixed-precision")]
+        ks.push(IterateKernel::Fused { precision: Precision::Mixed });
+        ks
+    }
+
     #[test]
     fn all_kernels_agree() {
         let corpus = toy();
         let pool = Pool::new(4);
         let mut outs = Vec::new();
-        for kernel in [
-            IterateKernel::FusedAtomic,
-            IterateKernel::FusedPrivate,
-            IterateKernel::FusedTransposed,
-            IterateKernel::Unfused,
-        ] {
+        let kernels = all_kernels();
+        for &kernel in &kernels {
             let solver = SparseSolver::new(SinkhornConfig {
                 kernel,
                 tolerance: 0.0,
@@ -758,9 +886,12 @@ mod tests {
             });
             outs.push(solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool));
         }
-        for o in &outs[1..] {
+        for (kernel, o) in kernels.iter().zip(&outs).skip(1) {
+            // Mixed precision is error-gated, not exact; f64 kernels agree
+            // to rounding.
+            let tol = if kernel.is_mixed() { 1e-6 } else { 1e-9 };
             for (a, b) in o.wmd.iter().zip(&outs[0].wmd) {
-                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+                assert!((a - b).abs() < tol * (1.0 + b.abs()), "{kernel:?}: {a} vs {b}");
             }
         }
     }
@@ -776,9 +907,9 @@ mod tests {
         for p in [2usize, 5, 8] {
             let pool = Pool::new(p);
             let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(1), &corpus.c, &pool);
-            for (a, b) in out.wmd.iter().zip(&base.wmd) {
-                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "p={p}");
-            }
+            // The default (fused f64) kernel accumulates each column in
+            // ascending source-row order at any thread count → bitwise.
+            assert_eq!(out.wmd, base.wmd, "p={p}");
         }
     }
 
@@ -858,18 +989,13 @@ mod tests {
     fn empty_document_ranks_last_with_infinite_wmd() {
         // Regression: a zero-support column used to leave x_row all zero,
         // update_u divided by the zero mean (u poisoned with NaN) and the
-        // type-2 epilogue summed nothing — the empty doc scored WMD = 0
+        // epilogue summed nothing — the empty doc scored WMD = 0
         // and won every argmin.
         let corpus = toy();
         let pool = Pool::new(4);
         let k = 7;
         let c = drop_column(&corpus.c, k);
-        for kernel in [
-            IterateKernel::FusedAtomic,
-            IterateKernel::FusedPrivate,
-            IterateKernel::FusedTransposed,
-            IterateKernel::Unfused,
-        ] {
+        for kernel in all_kernels() {
             let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
             let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &c, &pool);
             assert!(
@@ -962,12 +1088,7 @@ mod tests {
     fn solve_batch_agrees_with_solve_across_kernels_and_sizes() {
         let corpus = batch_corpus();
         let pool = Pool::new(4);
-        for kernel in [
-            IterateKernel::FusedAtomic,
-            IterateKernel::FusedPrivate,
-            IterateKernel::FusedTransposed,
-            IterateKernel::Unfused,
-        ] {
+        for kernel in all_kernels() {
             // Default tolerance/check cadence so queries converge at
             // different iterations — exercises the per-query masks.
             let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
@@ -997,22 +1118,31 @@ mod tests {
     }
 
     #[test]
-    fn solve_batch_single_thread_is_bitwise_identical() {
+    fn solve_batch_is_bitwise_identical_to_solve() {
+        // Batched and single-query solves share the per-element
+        // accumulation order (column-owned iterate, row-owned update), so
+        // the match is bitwise — including in mixed mode, whose f32
+        // narrowing is deterministic too.
         let corpus = batch_corpus();
-        let pool = Pool::new(1);
-        for kernel in [IterateKernel::FusedAtomic, IterateKernel::FusedTransposed] {
-            let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
-            let preps: Vec<Prepared> = corpus
-                .queries
-                .iter()
-                .take(4)
-                .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
-                .collect();
-            let prefs: Vec<&Prepared> = preps.iter().collect();
-            let outs = solver.solve_batch(&prefs, &corpus.c, &pool);
-            for (p, o) in preps.iter().zip(&outs) {
-                let s = solver.solve(p, &corpus.c, &pool);
-                assert_eq!(o.wmd, s.wmd, "{kernel:?}");
+        for p in [1usize, 4] {
+            let pool = Pool::new(p);
+            for kernel in all_kernels() {
+                if kernel == IterateKernel::Unfused {
+                    continue; // no batched path (falls back to solve_in)
+                }
+                let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
+                let preps: Vec<Prepared> = corpus
+                    .queries
+                    .iter()
+                    .take(4)
+                    .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+                    .collect();
+                let prefs: Vec<&Prepared> = preps.iter().collect();
+                let outs = solver.solve_batch(&prefs, &corpus.c, &pool);
+                for (prep, o) in preps.iter().zip(&outs) {
+                    let s = solver.solve(prep, &corpus.c, &pool);
+                    assert_eq!(o.wmd, s.wmd, "{kernel:?} p={p}");
+                }
             }
         }
     }
@@ -1102,5 +1232,30 @@ mod tests {
         let diff_ab: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
         let diff_bc: f64 = b.iter().zip(&c).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
         assert!(diff_bc < diff_ab, "no stabilization: {diff_ab} -> {diff_bc}");
+    }
+
+    #[cfg(feature = "mixed-precision")]
+    #[test]
+    fn mixed_precision_tracks_f64_within_gate() {
+        // The solver-level error gate: mixed WMD within 1e-5 relative of
+        // the f64 fused path, identical argmin on this corpus.
+        let corpus = toy();
+        let pool = Pool::new(4);
+        let f64_solver = SparseSolver::new(SinkhornConfig {
+            kernel: IterateKernel::Fused { precision: Precision::F64 },
+            ..Default::default()
+        });
+        let mixed_solver = SparseSolver::new(SinkhornConfig {
+            kernel: IterateKernel::Fused { precision: Precision::Mixed },
+            ..Default::default()
+        });
+        for qi in 0..3 {
+            let hi = f64_solver.wmd_one_to_many(&corpus.embeddings, corpus.query(qi), &corpus.c, &pool);
+            let lo = mixed_solver.wmd_one_to_many(&corpus.embeddings, corpus.query(qi), &corpus.c, &pool);
+            for (a, b) in lo.wmd.iter().zip(&hi.wmd) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "q={qi}: {a} vs {b}");
+            }
+            assert_eq!(lo.argmin(), hi.argmin(), "q={qi}");
+        }
     }
 }

@@ -29,8 +29,8 @@
 use crate::dist::DistScratch;
 use crate::parallel::NnzRange;
 use crate::prune::PruneScratch;
-use crate::sparse::ops::{FusedScratch, PrivateBuffers, TransposedPattern};
-use crate::sparse::Dense;
+use crate::sparse::ops::{FusedScratch, TransposedPattern};
+use crate::sparse::{Dense, Panel32};
 use crate::Real;
 
 /// Point-in-time workspace counters, exposed through the coordinator's
@@ -78,17 +78,21 @@ pub struct SolveWorkspace {
     pub(crate) parts: Vec<NnzRange>,
     /// Column partition of the transposed pattern.
     pub(crate) col_parts: Vec<NnzRange>,
-    /// Transposed pattern of `c` (the `FusedTransposed` kernel and the
-    /// dense baseline's per-iteration `tocsc`).
+    /// Transposed pattern of `c` (the fused `SDDTMM→DSTMMT` kernels and
+    /// the dense baseline's per-iteration `tocsc`).
     pub(crate) pattern: TransposedPattern,
-    /// Per-thread private planes for the `FusedPrivate` kernel.
-    pub(crate) private: PrivateBuffers,
     /// Materialized SDDMM values for the `Unfused` ablation kernel (and
     /// the dense baseline's sparse-multiply output).
     pub(crate) w_buf: Vec<Real>,
-    /// Scratch passed into the fused kernels (type-2 partials, batch
-    /// active lists).
+    /// Scratch passed into the fused kernels (batch active lists).
     pub(crate) fused: FusedScratch,
+    /// f32 shadow panels for `Precision::Mixed`, one lane per batch slot:
+    /// narrowed copies of the stationary `Kᵀ` / `K_over_rᵀ` factors and
+    /// the `uᵀ` mirror refreshed each iteration. Grow-only like the f64
+    /// planes; empty (zero bytes) unless a mixed solve runs.
+    pub(crate) kt_lo: Vec<Panel32>,
+    pub(crate) kor_lo: Vec<Panel32>,
+    pub(crate) u_lo: Vec<Panel32>,
     /// Batch bookkeeping: per-query iteration counts, convergence flags
     /// and active masks.
     pub(crate) iterations: Vec<usize>,
@@ -128,11 +132,18 @@ impl SolveWorkspace {
             .chain(&self.u_t)
             .map(|d| d.capacity() * size_of::<Real>())
             .sum();
+        let lo_planes: usize = self
+            .kt_lo
+            .iter()
+            .chain(&self.kor_lo)
+            .chain(&self.u_lo)
+            .map(|p| p.capacity() * size_of::<f32>())
+            .sum();
         planes
+            + lo_planes
             + self.empty.capacity() * size_of::<bool>()
             + (self.parts.capacity() + self.col_parts.capacity()) * size_of::<NnzRange>()
             + self.pattern.retained_bytes()
-            + self.private.retained_bytes()
             + self.w_buf.capacity() * size_of::<Real>()
             + self.fused.retained_bytes()
             + self.iterations.capacity() * size_of::<usize>()
@@ -163,6 +174,17 @@ impl SolveWorkspace {
         for lanes in [&mut self.x_t, &mut self.x_new, &mut self.u_t] {
             while lanes.len() < b {
                 lanes.push(Dense::default());
+            }
+        }
+    }
+
+    /// Like [`SolveWorkspace::ensure_lanes`] for the f32 mixed-precision
+    /// shadow panels — only mixed solves call this, so f64-only serving
+    /// threads never pay for the lanes.
+    pub(crate) fn ensure_lo_lanes(&mut self, b: usize) {
+        for lanes in [&mut self.kt_lo, &mut self.kor_lo, &mut self.u_lo] {
+            while lanes.len() < b {
+                lanes.push(Panel32::default());
             }
         }
     }

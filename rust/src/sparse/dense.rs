@@ -1,6 +1,7 @@
 //! Row-major dense matrix used for the solver state (`x`, `u` transposed),
 //! precomputed factors (`Kᵀ`, `K_over_rᵀ`, `(K⊙M)ᵀ`) and the dense
-//! baseline pipeline.
+//! baseline pipeline — plus [`Panel32`], the f32 shadow panel the
+//! mixed-precision kernel path reads.
 
 use crate::Real;
 
@@ -157,6 +158,95 @@ impl Dense {
     }
 }
 
+/// Row-major `f32` panel: the reduced-precision shadow of a [`Dense`]
+/// factor (or iterate) plane that the mixed-precision fused kernel reads.
+/// Same grow-only reuse contract as [`Dense::reset`], so workspace-resident
+/// panels stop touching the allocator once warm. Conversion from the f64
+/// master copy is one parallel pass ([`Panel32::reset_from`]); the f64
+/// plane stays the source of truth.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Panel32 {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f32>,
+}
+
+impl Panel32 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reshape in place to `nrows × ncols` with every element set to
+    /// `value` (grow-only, like [`Dense::reset`]).
+    pub fn reset(&mut self, nrows: usize, ncols: usize, value: f32) {
+        self.nrows = nrows;
+        self.ncols = ncols;
+        self.data.clear();
+        self.data.resize(nrows * ncols, value);
+    }
+
+    /// Reshape to `src`'s shape and fill with the f32-rounded copy of its
+    /// elements — the per-solve panel conversion of the mixed-precision
+    /// path. Parallelized over element chunks; the pass is a tiny fraction
+    /// of a solve (one read + narrow-store per element, once per checkout,
+    /// vs. `max_iter` kernel passes over the same bytes).
+    pub fn reset_from(&mut self, src: &Dense, pool: &crate::parallel::Pool) {
+        self.nrows = src.nrows();
+        self.ncols = src.ncols();
+        let len = self.nrows * self.ncols;
+        self.data.clear();
+        self.data.resize(len, 0.0);
+        let s = src.as_slice();
+        if pool.nthreads() == 1 || len < (1 << 14) {
+            for (d, &v) in self.data.iter_mut().zip(s) {
+                *d = v as f32;
+            }
+            return;
+        }
+        let view = crate::util::SharedSlice::new(self.data.as_mut_slice());
+        pool.run(|tid, nt| {
+            let r = crate::parallel::static_chunk(len, tid, nt);
+            // SAFETY: element chunks are disjoint per thread.
+            let out = unsafe { view.slice_mut(r.start, r.len()) };
+            for (d, &v) in out.iter_mut().zip(&s[r.clone()]) {
+                *d = v as f32;
+            }
+        });
+    }
+
+    /// Elements the backing allocation can hold without reallocating.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    #[inline(always)]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline(always)]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.nrows);
+        &self.data[i * self.ncols..(i + 1) * self.ncols]
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
 /// Unit-stride dot product with 4-way unrolling — the innermost loop of
 /// every SDDMM in the solver (the paper's "basic unrolling ...
 /// vectorizations" bullet). Written so LLVM autovectorizes to AVX.
@@ -260,5 +350,41 @@ mod tests {
         let mut out = vec![1.0, 2.0, 3.0];
         axpy(&mut out, 2.0, &[10.0, 20.0, 30.0]);
         assert_eq!(out, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn panel32_reset_from_converts_and_reuses_allocation() {
+        use crate::parallel::Pool;
+        let src = Dense::from_fn(20, 7, |i, j| (i as f64 + 1.0) / (j as f64 + 3.0));
+        let mut p = Panel32::new();
+        for threads in [1usize, 4] {
+            let pool = Pool::new(threads);
+            p.reset_from(&src, &pool);
+            assert_eq!((p.nrows(), p.ncols()), (20, 7));
+            for i in 0..20 {
+                for (j, &v) in p.row(i).iter().enumerate() {
+                    assert_eq!(v, src.get(i, j) as f32, "({i},{j})");
+                }
+            }
+        }
+        // Shrink then regrow within capacity: no reallocation.
+        let cap = p.capacity();
+        let small = Dense::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        p.reset_from(&small, &Pool::new(1));
+        assert_eq!(p.capacity(), cap);
+        p.reset_from(&src, &Pool::new(2));
+        assert_eq!(p.capacity(), cap, "regrow within capacity must not allocate");
+    }
+
+    #[test]
+    fn panel32_parallel_conversion_matches_serial_above_chunk_threshold() {
+        use crate::parallel::Pool;
+        // Large enough to take the parallel path (len ≥ 2^14).
+        let src = Dense::from_fn(300, 64, |i, j| (i as f64) * 0.37 - (j as f64) * 1.21);
+        let mut serial = Panel32::new();
+        serial.reset_from(&src, &Pool::new(1));
+        let mut parallel = Panel32::new();
+        parallel.reset_from(&src, &Pool::new(5));
+        assert_eq!(serial, parallel);
     }
 }

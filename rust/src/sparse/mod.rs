@@ -1,5 +1,6 @@
 //! Sparse-matrix substrate: COO/CSR/CSC storage, conversions, and the
-//! paper's sparse kernels (SDDMM, SpMM, and the fused `SDDMM_SpMM`).
+//! paper's sparse kernels (the fused `SDDTMM→DSTMMT` family plus the
+//! unfused SDDMM/SpMM baseline pair).
 //!
 //! The Sinkhorn target-histogram matrix `c` is `V × N` with density
 //! ~0.0035 % at paper scale; every iterate touches it once, so the CSR
@@ -15,4 +16,4 @@ pub mod ops;
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
-pub use dense::{axpy, dot, Dense};
+pub use dense::{axpy, dot, Dense, Panel32};

@@ -1,23 +1,47 @@
-//! The paper's new kernel: **SDDMM_SpMM** — one pass over the CSR that
-//! computes each SDDMM value and immediately feeds it to the SpMM
-//! accumulation ("the output values from SDDMM can be fed directly to the
-//! SpMM and would not need to be stored in memory", §4).
+//! The fused **SDDTMM→DSTMMT** kernel family — one pass over the
+//! *stationary transposed* pattern per Sinkhorn step.
 //!
-//! * [`fused_type1`] — the solver-loop iterate:
-//!   `x = K_over_r @ (c ⊘ (Kᵀ@u))`, scatter under atomics (paper Fig. 4).
-//! * [`fused_type1_private`] — atomic-free variant with per-thread output
-//!   buffers + tree reduction (perf-pass alternative; see §Perf).
-//! * [`fused_type2`] — the epilogue:
-//!   `WMD[j] = Σ_e w_e · ⟨(K⊙M)ᵀ[row], uᵀ[col]⟩`, which is algebraically
-//!   `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` restricted to the pattern of `c`.
-//! * [`fused_type1_batch`] / [`fused_type1_transposed_batch`] /
-//!   [`fused_type2_batch`] — cross-query batched variants: one CSR
-//!   traversal serves `B` prepared queries (per-query stride, per-query
-//!   active mask), amortizing the pattern walk across concurrent solves.
+//! The paper's `SDDMM_SpMM` fusion ("the output values from SDDMM can be
+//! fed directly to the SpMM and would not need to be stored in memory",
+//! §4) is taken one step further here, following the authors' PIUMA
+//! follow-up (arXiv:2107.06433): the iterate is reformulated over the
+//! transposed corpus pattern (`cT`-resident `sddtmm`/`dstmmt`), so each
+//! thread owns whole documents — columns of `c`, i.e. rows of `xᵀ` — and
+//! the SDDMM value feeds the SpMM axpy with **no atomics and no
+//! per-thread private buffers**. One traversal per step, write-owned
+//! output, and the document's `uᵀ` row stays hot across the column's
+//! entries (the cache-reuse idea of the paper's §9 tiling discussion).
+//!
+//! Exactly two kernels remain, both batched (`B = 1` is the single-query
+//! case — pass one-element slices):
+//!
+//! * [`sddtmm_dstmmt_batch`] — the solver-loop iterate
+//!   `xᵀ[j,:] += (c[i,j] / ⟨ktᵀ[i,:], uᵀ[j,:]⟩) · kor_tᵀ[i,:]`, generic
+//!   over the panel scalar ([`Panel`]): `Dense` panels run the classic
+//!   f64 path, [`crate::sparse::Panel32`] panels run the mixed-precision
+//!   f32 compute path (f64 division and accumulation throughout — see
+//!   [`PanelElem`]).
+//! * [`sddtmm_wmd_batch`] — the epilogue
+//!   `WMD[j] += w · ⟨km_tᵀ[i,:], uᵀ[j,:]⟩`, always f64 (it is the final
+//!   reduction the mixed mode is gated against). Column ownership makes
+//!   it atomic-free *and* partial-buffer-free: slot `j` is owned by the
+//!   thread that owns column `j`.
+//!
+//! Because every column is accumulated in ascending source-row order
+//! regardless of the thread count, both kernels are **bitwise
+//! thread-count-invariant** — the equivalence suite asserts this, and it
+//! is what lets `tests/kernel_family_test.rs` demand bitwise equality
+//! between sharded and monolithic solves.
+//!
+//! The unfused SDDMM + `spmm_atomic` pair survives as the `Unfused`
+//! ablation baseline in the solver; the former `type1` / `type1_private`
+//! / `type1_transposed` / `type2` variants (and their `_batch` twins)
+//! collapsed into this family.
 
 use super::for_each_nnz_in;
-use crate::parallel::{AtomicF64Slice, NnzRange, Pool};
-use crate::sparse::{axpy, dot, Csr, Dense};
+use super::sddmm::{Panel, PanelElem};
+use crate::parallel::{NnzRange, Pool};
+use crate::sparse::{dot, Csr, Dense};
 use crate::util::SharedSlice;
 use crate::Real;
 
@@ -25,12 +49,11 @@ use crate::Real;
 /// of allocated per call (the zero-alloc hot-path contract: a retained
 /// [`crate::sinkhorn::SolveWorkspace`] owns one and its buffers are
 /// grow-only, so steady-state kernel invocations never touch the
-/// allocator).
+/// allocator). After the column-owned rewrite the only scratch left is
+/// the active-query index list — the per-thread partial buffers of the
+/// retired `type2` reduction are gone.
 #[derive(Debug, Default)]
 pub struct FusedScratch {
-    /// Per-thread partial accumulators for the type-2 reduction
-    /// (`nthreads · N` scalars single-query, `nthreads · B · N` batched).
-    partials: Vec<Real>,
     /// Indices of the active (not yet converged) queries of a batch.
     act: Vec<usize>,
 }
@@ -42,267 +65,43 @@ impl FusedScratch {
 
     /// Heap bytes held by the scratch's backing allocations.
     pub fn retained_bytes(&self) -> usize {
-        self.partials.capacity() * std::mem::size_of::<Real>()
-            + self.act.capacity() * std::mem::size_of::<usize>()
+        self.act.capacity() * std::mem::size_of::<usize>()
     }
 }
 
-/// Fused iterate (type 1): for each nnz `(i, j)` of `c`,
-/// `w = c[i,j] / ⟨ktᵀ[i,:], uᵀ[j,:]⟩` then `xᵀ[j,:] += w · kor_tᵀ[i,:]`
-/// (atomic adds — threads share output rows).
-pub fn fused_type1(
-    c: &Csr,
-    kt: &Dense,
-    kor_t: &Dense,
-    u_t: &Dense,
-    x_t: &mut Dense,
-    pool: &Pool,
-    parts: &[NnzRange],
-) {
-    let vr = kt.ncols();
-    debug_assert_eq!(kor_t.ncols(), vr);
-    debug_assert_eq!(u_t.ncols(), vr);
-    debug_assert_eq!(x_t.ncols(), vr);
-    debug_assert_eq!(kt.nrows(), c.nrows());
-    debug_assert_eq!(u_t.nrows(), c.ncols());
-    x_t.fill(0.0);
-    // Serial fast path: a CAS-loop per element costs ~7× even without
-    // contention (it defeats vectorization of the axpy), so a single
-    // thread writes directly (§Perf in EXPERIMENTS.md).
-    if pool.nthreads() == 1 {
-        let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-        let x = x_t.as_mut_slice();
-        for row in 0..c.nrows() {
-            let kt_row = kt.row(row);
-            let kor_row = kor_t.row(row);
-            for e in row_ptr[row]..row_ptr[row + 1] {
-                let j = col_idx[e] as usize;
-                let w = values[e] / dot(kt_row, u_t.row(j));
-                axpy(&mut x[j * vr..(j + 1) * vr], w, kor_row);
-            }
-        }
-        return;
-    }
-    let x_atomic = AtomicF64Slice::new(x_t.as_mut_slice());
-    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-    pool.run(|tid, _nt| {
-        let part = parts[tid];
-        for_each_nnz_in(part, row_ptr, |e, row| {
-            let j = col_idx[e] as usize;
-            let u_row = u_t.row(j);
-            // SDDMM step.
-            let s = dot(kt.row(row), u_row);
-            let w = values[e] / s;
-            // SpMM step, fused: no w store, straight into x.
-            let k_row = kor_t.row(row);
-            let base = j * vr;
-            for (k, &kv) in k_row.iter().enumerate() {
-                x_atomic.fetch_add(base + k, w * kv);
-            }
-        });
-    });
-}
-
-/// Fused iterate with per-thread private accumulation buffers: each thread
-/// scatters into its own `N×v_r` copy; buffers are then reduced in
-/// parallel over disjoint slices. Trades `p·N·v_r` scratch memory for
-/// atomic-free inner loops.
-#[derive(Debug, Default)]
-pub struct PrivateBuffers {
-    bufs: Vec<Vec<Real>>,
-}
-
-impl PrivateBuffers {
-    pub fn new(nthreads: usize, n: usize, vr: usize) -> Self {
-        let mut bufs = Self::default();
-        bufs.ensure(nthreads, n * vr);
-        bufs
-    }
-
-    /// Shape the buffers to `nthreads × len`, reusing the backing
-    /// allocations (grow-only) — the workspace checkout path.
-    pub fn ensure(&mut self, nthreads: usize, len: usize) {
-        self.bufs.truncate(nthreads);
-        while self.bufs.len() < nthreads {
-            self.bufs.push(Vec::new());
-        }
-        for b in &mut self.bufs {
-            b.clear();
-            b.resize(len, 0.0);
-        }
-    }
-
-    pub fn matches(&self, nthreads: usize, len: usize) -> bool {
-        self.bufs.len() == nthreads && self.bufs.first().map_or(false, |b| b.len() == len)
-    }
-
-    /// Heap bytes held by the buffers' backing allocations.
-    pub fn retained_bytes(&self) -> usize {
-        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<Real>()).sum::<usize>()
-            + self.bufs.capacity() * std::mem::size_of::<Vec<Real>>()
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-pub fn fused_type1_private(
-    c: &Csr,
-    kt: &Dense,
-    kor_t: &Dense,
-    u_t: &Dense,
-    x_t: &mut Dense,
-    pool: &Pool,
-    parts: &[NnzRange],
-    scratch: &mut PrivateBuffers,
-) {
-    let vr = kt.ncols();
-    let len = x_t.nrows() * vr;
-    assert!(scratch.matches(pool.nthreads(), len), "scratch shape mismatch");
-    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-    // Phase 1: private scatter. Each thread owns scratch.bufs[tid].
-    {
-        let buf_ptrs: Vec<SharedSlice<Real>> =
-            scratch.bufs.iter_mut().map(|b| SharedSlice::new(b.as_mut_slice())).collect();
-        pool.run(|tid, _nt| {
-            let part = parts[tid];
-            // SAFETY: buffer `tid` is written only by thread `tid`.
-            let buf = unsafe { buf_ptrs[tid].slice_mut(0, len) };
-            buf.fill(0.0);
-            for_each_nnz_in(part, row_ptr, |e, row| {
-                let j = col_idx[e] as usize;
-                let w = values[e] / dot(kt.row(row), u_t.row(j));
-                axpy(&mut buf[j * vr..(j + 1) * vr], w, kor_t.row(row));
-            });
-        });
-    }
-    // Phase 2: parallel reduction over disjoint element ranges.
-    let bufs = &scratch.bufs;
-    let x_view = SharedSlice::new(x_t.as_mut_slice());
-    pool.run(|tid, nt| {
-        let r = crate::parallel::static_chunk(len, tid, nt);
-        // SAFETY: element ranges are disjoint per thread.
-        let out = unsafe { x_view.slice_mut(r.start, r.len()) };
-        out.fill(0.0);
-        for buf in bufs {
-            for (o, &v) in out.iter_mut().zip(&buf[r.clone()]) {
-                *o += v;
-            }
-        }
-    });
-}
-
-/// Fused iterate over the **transposed pattern** — atomic-free: each
-/// thread owns whole documents (columns of `c`, i.e. rows of `xᵀ`), so
-/// the SDDMM value feeds the SpMM axpy with no synchronization at all.
-/// The pattern is built once per query (`c`'s sparsity is
-/// iteration-invariant) and reused across all Sinkhorn iterations; the
-/// document's `uᵀ` row also stays hot across the column's entries —
-/// the cache-reuse idea of the paper's §9 tiling discussion.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_type1_transposed(
-    c: &Csr,
-    tp: &super::spmm::TransposedPattern,
-    kt: &Dense,
-    kor_t: &Dense,
-    u_t: &Dense,
-    x_t: &mut Dense,
-    pool: &Pool,
-    col_parts: &[NnzRange],
-) {
-    let vr = kt.ncols();
-    debug_assert_eq!(x_t.nrows() + 1, tp.col_ptr.len());
-    debug_assert_eq!(x_t.ncols(), vr);
-    x_t.fill(0.0);
-    let values = c.values();
-    let x_view = SharedSlice::new(x_t.as_mut_slice());
-    pool.run(|tid, _nt| {
-        let part = col_parts[tid];
-        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
-            let i = tp.src_row[e] as usize;
-            let u_row = u_t.row(j);
-            let w = values[tp.src_pos[e] as usize] / dot(kt.row(i), u_row);
-            // SAFETY: column j (x_t row j) is owned by this thread — the
-            // column partition never splits a column.
-            let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
-            axpy(x_row, w, kor_t.row(i));
-        });
-    });
-}
-
-/// Fused epilogue (type 2): the final WMD vector.
+/// Fused batched iterate over the stationary transposed pattern
+/// (SDDTMM→DSTMMT): for each pattern entry `(i, j)` and each *active*
+/// query `q`,
 ///
-/// `WMD[j] = Σ_{(i,j) ∈ nnz(c)} (c[i,j] / ⟨ktᵀ[i], uᵀ[j]⟩) · ⟨km_tᵀ[i], uᵀ[j]⟩`
+/// `w = c[i,j] / ⟨kts[q][i,:], u_ts[q][j,:]⟩` then
+/// `x_ts[q][j,:] += w · kor_ts[q][i,:]`
 ///
-/// equals `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` from Algorithm 1. Accumulated in
-/// per-thread partial vectors (length `N`), reduced after the region — the
-/// scatter target is a scalar per doc, so privatization is cheap.
-#[allow(clippy::too_many_arguments)]
-pub fn fused_type2(
-    c: &Csr,
-    kt: &Dense,
-    km_t: &Dense,
-    u_t: &Dense,
-    wmd: &mut [Real],
-    pool: &Pool,
-    parts: &[NnzRange],
-    scratch: &mut FusedScratch,
-) {
-    let n = c.ncols();
-    assert_eq!(wmd.len(), n);
-    let nthreads = pool.nthreads();
-    let partials = &mut scratch.partials;
-    partials.clear();
-    partials.resize(nthreads * n, 0.0);
-    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-    {
-        let pview = SharedSlice::new(partials.as_mut_slice());
-        pool.run(|tid, _nt| {
-            let part = parts[tid];
-            // SAFETY: each thread owns partial slice tid.
-            let acc = unsafe { pview.slice_mut(tid * n, n) };
-            for_each_nnz_in(part, row_ptr, |e, row| {
-                let j = col_idx[e] as usize;
-                let u_row = u_t.row(j);
-                let w = values[e] / dot(kt.row(row), u_row);
-                acc[j] += w * dot(km_t.row(row), u_row);
-            });
-        });
-    }
-    wmd.fill(0.0);
-    for t in 0..nthreads {
-        for j in 0..n {
-            wmd[j] += partials[t * n + j];
-        }
-    }
-}
-
-/// Cross-query batched fused iterate (type 1): one traversal of the CSR
-/// serves `B` queries. Per nnz `(i, j)` the row cursor, column index and
-/// `c[i,j]` are read **once**, then every *active* query `q` runs its own
-/// SDDMM + scatter with its own stride `v_r(q)`:
-/// `w = c[i,j] / ⟨kts[q][i,:], u_ts[q][j,:]⟩`, `x_ts[q][j,:] += w · kor_ts[q][i,:]`.
+/// with the dot and axpy running in the panel scalar (`P::Elem`) and the
+/// division/accumulation in f64 ([`PanelElem`] contract). One pattern
+/// traversal serves the whole batch: the column cursor, `c[i,j]` and the
+/// `src_row`/`src_pos` loads are paid once per nnz instead of once per
+/// (nnz, query).
 ///
-/// This is the amortization the dispatcher batches for (PIUMA follow-up,
-/// arXiv:2107.06433): the pattern walk, its branch logic and the `c`
-/// cache misses are paid once per nnz instead of once per (nnz, query).
-/// Queries whose `active[q]` is false (already converged) are skipped
-/// without stalling the rest of the batch; their `x_ts[q]` is untouched.
+/// Atomic-free: a thread owns whole columns `j` (the column partition
+/// never splits a column), hence row `j` of every query's `xᵀ`. Queries
+/// whose `active[q]` is false (already converged) are skipped without
+/// stalling the rest of the batch; their `x_ts[q]` is untouched.
 ///
-/// All per-query shapes follow the single-query [`fused_type1`]
-/// contract; the batch slices must share length `B`. `u_ts` is a plain
-/// `&[Dense]` (not `&[&Dense]`): the per-query `u` states live
+/// `u_ts` is a plain `&[P]` (not `&[&P]`): the per-query `u` states live
 /// contiguously in the solver workspace's lanes, so the per-iteration
-/// call needs no reference-vector rebuild — the factor slices, by
+/// call needs no reference-vector rebuild — the factor panels, by
 /// contrast, point into `B` separately-owned `Prepared` values.
 #[allow(clippy::too_many_arguments)]
-pub fn fused_type1_batch(
+pub fn sddtmm_dstmmt_batch<P: Panel>(
     c: &Csr,
-    kts: &[&Dense],
-    kor_ts: &[&Dense],
-    u_ts: &[Dense],
+    tp: &super::spmm::TransposedPattern,
+    kts: &[&P],
+    kor_ts: &[&P],
+    u_ts: &[P],
     x_ts: &mut [Dense],
     active: &[bool],
     pool: &Pool,
-    parts: &[NnzRange],
+    col_parts: &[NnzRange],
     scratch: &mut FusedScratch,
 ) {
     let b = kts.len();
@@ -310,95 +109,20 @@ pub fn fused_type1_batch(
     debug_assert_eq!(u_ts.len(), b);
     debug_assert_eq!(x_ts.len(), b);
     debug_assert_eq!(active.len(), b);
-    for q in 0..b {
+    scratch.act.clear();
+    scratch.act.extend((0..b).filter(|&q| active[q]));
+    let act: &[usize] = &scratch.act;
+    if act.is_empty() {
+        return;
+    }
+    for &q in act {
         let vr = kts[q].ncols();
         debug_assert_eq!(kor_ts[q].ncols(), vr);
         debug_assert_eq!(u_ts[q].ncols(), vr);
         debug_assert_eq!(x_ts[q].ncols(), vr);
         debug_assert_eq!(kts[q].nrows(), c.nrows());
         debug_assert_eq!(u_ts[q].nrows(), c.ncols());
-    }
-    scratch.act.clear();
-    scratch.act.extend((0..b).filter(|&q| active[q]));
-    let act: &[usize] = &scratch.act;
-    if act.is_empty() {
-        return;
-    }
-    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-    // Serial fast path: direct writes, same rationale as fused_type1.
-    if pool.nthreads() == 1 {
-        for &q in act {
-            x_ts[q].fill(0.0);
-        }
-        for row in 0..c.nrows() {
-            for e in row_ptr[row]..row_ptr[row + 1] {
-                let j = col_idx[e] as usize;
-                let cv = values[e];
-                for &q in act {
-                    let vr = kts[q].ncols();
-                    let w = cv / dot(kts[q].row(row), u_ts[q].row(j));
-                    let x = x_ts[q].as_mut_slice();
-                    axpy(&mut x[j * vr..(j + 1) * vr], w, kor_ts[q].row(row));
-                }
-            }
-        }
-        return;
-    }
-    for &q in act {
-        x_ts[q].fill(0.0);
-    }
-    let x_atomics: Vec<AtomicF64Slice> =
-        x_ts.iter_mut().map(|x| AtomicF64Slice::new(x.as_mut_slice())).collect();
-    pool.run(|tid, _nt| {
-        let part = parts[tid];
-        for_each_nnz_in(part, row_ptr, |e, row| {
-            let j = col_idx[e] as usize;
-            let cv = values[e];
-            for &q in act {
-                let u_row = u_ts[q].row(j);
-                let w = cv / dot(kts[q].row(row), u_row);
-                let k_row = kor_ts[q].row(row);
-                let base = j * k_row.len();
-                let xa = &x_atomics[q];
-                for (k, &kv) in k_row.iter().enumerate() {
-                    xa.fetch_add(base + k, w * kv);
-                }
-            }
-        });
-    });
-}
-
-/// Cross-query batched fused iterate over the **transposed pattern** —
-/// atomic-free: the pattern (and its column partition) is shared by the
-/// whole batch, so a thread that owns column `j` owns row `j` of *every*
-/// query's `xᵀ`. Batch semantics match [`fused_type1_batch`].
-#[allow(clippy::too_many_arguments)]
-pub fn fused_type1_transposed_batch(
-    c: &Csr,
-    tp: &super::spmm::TransposedPattern,
-    kts: &[&Dense],
-    kor_ts: &[&Dense],
-    u_ts: &[Dense],
-    x_ts: &mut [Dense],
-    active: &[bool],
-    pool: &Pool,
-    col_parts: &[NnzRange],
-    scratch: &mut FusedScratch,
-) {
-    let b = kts.len();
-    debug_assert_eq!(kor_ts.len(), b);
-    debug_assert_eq!(u_ts.len(), b);
-    debug_assert_eq!(x_ts.len(), b);
-    debug_assert_eq!(active.len(), b);
-    scratch.act.clear();
-    scratch.act.extend((0..b).filter(|&q| active[q]));
-    let act: &[usize] = &scratch.act;
-    if act.is_empty() {
-        return;
-    }
-    for &q in act {
         debug_assert_eq!(x_ts[q].nrows() + 1, tp.col_ptr.len());
-        debug_assert_eq!(x_ts[q].ncols(), kts[q].ncols());
         x_ts[q].fill(0.0);
     }
     let values = c.values();
@@ -411,83 +135,77 @@ pub fn fused_type1_transposed_batch(
             let cv = values[tp.src_pos[e] as usize];
             for &q in act {
                 let u_row = u_ts[q].row(j);
-                let w = cv / dot(kts[q].row(i), u_row);
+                let w = cv / <P::Elem as PanelElem>::dot(kts[q].row(i), u_row);
                 let vr = kts[q].ncols();
                 // SAFETY: column j (row j of every query's x) is owned by
                 // this thread — the column partition never splits a column.
                 let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
-                axpy(x_row, w, kor_ts[q].row(i));
+                <P::Elem as PanelElem>::axpy(x_row, w, kor_ts[q].row(i));
             }
         });
     });
 }
 
-/// Cross-query batched fused epilogue (type 2): the final WMD vector of
-/// every query in one CSR pass. Per-thread partials are `B·N` scalars
-/// (`acc[q·N + j]`), reduced after the region in the same thread order as
-/// the single-query [`fused_type2`], so given identical `u` the batched
-/// reduction is bitwise identical to `B` single-query reductions.
+/// Fused batched epilogue over the stationary transposed pattern: the
+/// final WMD vector of every query in one traversal.
+///
+/// `WMD[j] = Σ_{(i,j) ∈ nnz(c)} (c[i,j] / ⟨ktᵀ[i], uᵀ[j]⟩) · ⟨km_tᵀ[i], uᵀ[j]⟩`
+///
+/// equals `(u ⊙ ((K⊙M) @ v)).sum(axis=0)` from Algorithm 1. The scatter
+/// target is one scalar per document, and the thread that owns column `j`
+/// owns slot `j` — so unlike the retired partial-buffer `type2`, no
+/// per-thread `nthreads·B·N` scratch and no post-region reduction exist
+/// at all. Always f64: this is the reduction the mixed-precision mode is
+/// error-gated against, so it never drops precision.
 #[allow(clippy::too_many_arguments)]
-pub fn fused_type2_batch(
+pub fn sddtmm_wmd_batch(
     c: &Csr,
+    tp: &super::spmm::TransposedPattern,
     kts: &[&Dense],
     km_ts: &[&Dense],
     u_ts: &[Dense],
     wmds: &mut [Vec<Real>],
     pool: &Pool,
-    parts: &[NnzRange],
-    scratch: &mut FusedScratch,
+    col_parts: &[NnzRange],
 ) {
     let b = kts.len();
     debug_assert_eq!(km_ts.len(), b);
     debug_assert_eq!(u_ts.len(), b);
     assert_eq!(wmds.len(), b);
-    let n = c.ncols();
-    for wmd in wmds.iter() {
-        assert_eq!(wmd.len(), n);
-    }
     if b == 0 {
         return;
     }
-    let nthreads = pool.nthreads();
-    let partials = &mut scratch.partials;
-    partials.clear();
-    partials.resize(nthreads * b * n, 0.0);
-    let (row_ptr, col_idx, values) = (c.row_ptr(), c.col_idx(), c.values());
-    {
-        let pview = SharedSlice::new(partials.as_mut_slice());
-        pool.run(|tid, _nt| {
-            let part = parts[tid];
-            // SAFETY: each thread owns partial slice tid.
-            let acc = unsafe { pview.slice_mut(tid * b * n, b * n) };
-            for_each_nnz_in(part, row_ptr, |e, row| {
-                let j = col_idx[e] as usize;
-                let cv = values[e];
-                for q in 0..b {
-                    let u_row = u_ts[q].row(j);
-                    let w = cv / dot(kts[q].row(row), u_row);
-                    acc[q * n + j] += w * dot(km_ts[q].row(row), u_row);
-                }
-            });
-        });
-    }
-    for (q, wmd) in wmds.iter_mut().enumerate() {
+    let n = tp.col_ptr.len() - 1;
+    debug_assert_eq!(c.ncols(), n);
+    for wmd in wmds.iter_mut() {
+        assert_eq!(wmd.len(), n);
         wmd.fill(0.0);
-        for t in 0..nthreads {
-            let acc = &partials[t * b * n + q * n..t * b * n + (q + 1) * n];
-            for (o, &v) in wmd.iter_mut().zip(acc) {
-                *o += v;
-            }
-        }
     }
+    let values = c.values();
+    let wmd_views: Vec<SharedSlice<Real>> =
+        wmds.iter_mut().map(|w| SharedSlice::new(w.as_mut_slice())).collect();
+    pool.run(|tid, _nt| {
+        let part = col_parts[tid];
+        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+            let i = tp.src_row[e] as usize;
+            let cv = values[tp.src_pos[e] as usize];
+            for (q, view) in wmd_views.iter().enumerate() {
+                let u_row = u_ts[q].row(j);
+                let w = cv / dot(kts[q].row(i), u_row);
+                // SAFETY: slot j of every query's wmd is owned by this
+                // thread — the column partition never splits a column.
+                let slot = unsafe { view.slice_mut(j, 1) };
+                slot[0] += w * dot(km_ts[q].row(i), u_row);
+            }
+        });
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::parallel::balanced_nnz_partition;
-    use crate::sparse::ops::{sddmm_serial, spmm_serial};
-    use crate::sparse::Coo;
+    use crate::sparse::ops::{sddmm_serial, spmm_serial, TransposedPattern};
+    use crate::sparse::{Coo, Panel32};
     use crate::util::Pcg64;
 
     fn case(rng: &mut Pcg64, v: usize, n: usize, vr: usize, nnz: usize) -> (Csr, Dense, Dense, Dense, Dense) {
@@ -503,8 +221,34 @@ mod tests {
         (c, kt, kor_t, km_t, u_t)
     }
 
+    /// Single-query convenience over the batched iterate.
+    #[allow(clippy::too_many_arguments)]
+    fn iterate_single(
+        c: &Csr,
+        tp: &TransposedPattern,
+        kt: &Dense,
+        kor_t: &Dense,
+        u_t: &Dense,
+        x_t: &mut Dense,
+        pool: &Pool,
+        col_parts: &[NnzRange],
+    ) {
+        sddtmm_dstmmt_batch(
+            c,
+            tp,
+            &[kt],
+            &[kor_t],
+            std::slice::from_ref(u_t),
+            std::slice::from_mut(x_t),
+            &[true],
+            pool,
+            col_parts,
+            &mut FusedScratch::new(),
+        );
+    }
+
     #[test]
-    fn type1_equals_unfused() {
+    fn iterate_matches_unfused_serial_reference() {
         let mut rng = Pcg64::new(71);
         for p in [1usize, 4, 8] {
             let (c, kt, kor_t, _km, u_t) = case(&mut rng, 35, 14, 6, 120);
@@ -513,95 +257,33 @@ mod tests {
             sddmm_serial(&c, &kt, &u_t, &mut w);
             let mut x_ref = Dense::zeros(14, 6);
             spmm_serial(&c, &w, &kor_t, &mut x_ref);
-            // Fused parallel.
             let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let tp = TransposedPattern::build(&c);
+            let col_parts = tp.column_parts(p);
             let mut x_t = Dense::zeros(14, 6);
-            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_t, &pool, &parts);
+            iterate_single(&c, &tp, &kt, &kor_t, &u_t, &mut x_t, &pool, &col_parts);
             assert!(x_t.max_abs_diff(&x_ref) < 1e-11, "p={p}");
         }
     }
 
     #[test]
-    fn type1_private_equals_atomic() {
-        let mut rng = Pcg64::new(72);
-        for p in [1usize, 3, 6] {
-            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 50, 21, 9, 300);
-            let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
-            let mut x_a = Dense::zeros(21, 9);
-            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_a, &pool, &parts);
-            let mut x_p = Dense::zeros(21, 9);
-            let mut scratch = PrivateBuffers::new(p, 21, 9);
-            fused_type1_private(&c, &kt, &kor_t, &u_t, &mut x_p, &pool, &parts, &mut scratch);
-            assert!(x_a.max_abs_diff(&x_p) < 1e-11, "p={p}");
-        }
-    }
-
-    #[test]
-    fn type1_transposed_equals_atomic() {
+    fn iterate_is_bitwise_thread_count_invariant() {
         let mut rng = Pcg64::new(74);
-        for p in [1usize, 4, 7] {
-            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 60, 25, 7, 400);
+        let (c, kt, kor_t, _km, u_t) = case(&mut rng, 60, 25, 7, 400);
+        let tp = TransposedPattern::build(&c);
+        let pool1 = Pool::new(1);
+        let cp1 = tp.column_parts(1);
+        let mut x_ref = Dense::zeros(25, 7);
+        iterate_single(&c, &tp, &kt, &kor_t, &u_t, &mut x_ref, &pool1, &cp1);
+        for p in [2usize, 4, 7] {
             let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
-            let mut x_a = Dense::zeros(25, 7);
-            fused_type1(&c, &kt, &kor_t, &u_t, &mut x_a, &pool, &parts);
-            let tp = crate::sparse::ops::TransposedPattern::build(&c);
             let col_parts = tp.column_parts(p);
             let mut x_t = Dense::zeros(25, 7);
-            fused_type1_transposed(&c, &tp, &kt, &kor_t, &u_t, &mut x_t, &pool, &col_parts);
-            assert!(x_a.max_abs_diff(&x_t) < 1e-11, "p={p}");
+            iterate_single(&c, &tp, &kt, &kor_t, &u_t, &mut x_t, &pool, &col_parts);
+            // Each column accumulates in ascending source-row order no
+            // matter which thread owns it → bitwise equal.
+            assert_eq!(x_t, x_ref, "p={p}");
         }
-    }
-
-    #[test]
-    fn type2_equals_dense_formula() {
-        let mut rng = Pcg64::new(73);
-        for p in [1usize, 4] {
-            let (c, kt, _kor, km_t, u_t) = case(&mut rng, 20, 9, 5, 60);
-            // Dense oracle: v = c / (KT@u) at pattern; WMD = (u * (KM@v)).sum(0).
-            let u = u_t.transpose(); // v_r × N... careful: u in Algorithm 1 is v_r×N
-            let ktu = kt.matmul(&u_t.transpose()); // V×N
-            let mut vdense = Dense::zeros(c.nrows(), c.ncols());
-            for (i, j, cv) in c.iter() {
-                vdense.set(i, j, cv / ktu.get(i, j));
-            }
-            let km = km_t.transpose(); // v_r × V
-            let kmv = km.matmul(&vdense); // v_r × N
-            let mut oracle = vec![0.0; c.ncols()];
-            for jj in 0..c.ncols() {
-                for ii in 0..u.nrows() {
-                    oracle[jj] += u.get(ii, jj) * kmv.get(ii, jj);
-                }
-            }
-            let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
-            let mut wmd = vec![0.0; c.ncols()];
-            fused_type2(&c, &kt, &km_t, &u_t, &mut wmd, &pool, &parts, &mut FusedScratch::new());
-            for (a, b) in wmd.iter().zip(&oracle) {
-                assert!((a - b).abs() < 1e-11 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
-            }
-        }
-    }
-
-    #[test]
-    fn reused_dirty_scratch_matches_fresh_scratch() {
-        // One FusedScratch across differently-shaped type-2 calls: the
-        // clear+resize at checkout must erase every stale partial.
-        let mut rng = Pcg64::new(75);
-        let mut scratch = FusedScratch::new();
-        for (v, n, vr, nnz) in [(30usize, 12usize, 5usize, 150usize), (18, 7, 3, 40), (40, 20, 8, 280)] {
-            let (c, kt, _kor, km_t, u_t) = case(&mut rng, v, n, vr, nnz);
-            let pool = Pool::new(3);
-            let parts = balanced_nnz_partition(c.row_ptr(), 3);
-            let mut fresh = vec![0.0; n];
-            fused_type2(&c, &kt, &km_t, &u_t, &mut fresh, &pool, &parts, &mut FusedScratch::new());
-            let mut reused = vec![0.0; n];
-            fused_type2(&c, &kt, &km_t, &u_t, &mut reused, &pool, &parts, &mut scratch);
-            assert_eq!(fresh, reused, "dirty scratch perturbed the type-2 reduction");
-        }
-        assert!(scratch.retained_bytes() > 0);
     }
 
     /// A batch of queries over one shared pattern, with per-query v_r.
@@ -633,70 +315,22 @@ mod tests {
     }
 
     #[test]
-    fn type1_batch_equals_per_query() {
-        let mut rng = Pcg64::new(81);
-        let vrs = [3usize, 7, 5, 9];
-        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 45, 18, 250, &vrs);
-        for p in [1usize, 4, 7] {
-            let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
-            // Per-query reference.
-            let mut expected = Vec::new();
-            for q in 0..vrs.len() {
-                let mut x = Dense::zeros(18, vrs[q]);
-                fused_type1(&c, &kts[q], &kor_ts[q], &u_ts[q], &mut x, &pool, &parts);
-                expected.push(x);
-            }
-            // Batched, all active.
-            let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(18, vr)).collect();
-            fused_type1_batch(
-                &c, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
-                &[true; 4], &pool, &parts, &mut FusedScratch::new(),
-            );
-            for q in 0..vrs.len() {
-                assert!(x_ts[q].max_abs_diff(&expected[q]) < 1e-11, "p={p} q={q}");
-            }
-        }
-    }
-
-    #[test]
-    fn type1_batch_skips_inactive_queries() {
-        let mut rng = Pcg64::new(82);
-        let vrs = [4usize, 6, 5];
-        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 30, 12, 150, &vrs);
-        let pool = Pool::new(3);
-        let parts = balanced_nnz_partition(c.row_ptr(), 3);
-        // Sentinel-fill: an inactive (converged) query's x must be untouched.
-        let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(12, vr, 7.0)).collect();
-        fused_type1_batch(
-            &c, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
-            &[true, false, true], &pool, &parts, &mut FusedScratch::new(),
-        );
-        assert!(x_ts[1].as_slice().iter().all(|&v| v == 7.0), "inactive query was written");
-        let mut expected = Dense::zeros(12, vrs[0]);
-        fused_type1(&c, &kts[0], &kor_ts[0], &u_ts[0], &mut expected, &pool, &parts);
-        assert!(x_ts[0].max_abs_diff(&expected) < 1e-11);
-    }
-
-    #[test]
-    fn type1_transposed_batch_equals_per_query() {
+    fn batch_equals_per_query_bitwise() {
         let mut rng = Pcg64::new(83);
         let vrs = [5usize, 8, 4];
         let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 55, 21, 320, &vrs);
-        let tp = crate::sparse::ops::TransposedPattern::build(&c);
+        let tp = TransposedPattern::build(&c);
         for p in [1usize, 4, 6] {
             let pool = Pool::new(p);
             let col_parts = tp.column_parts(p);
             let mut expected = Vec::new();
             for q in 0..vrs.len() {
                 let mut x = Dense::zeros(21, vrs[q]);
-                fused_type1_transposed(
-                    &c, &tp, &kts[q], &kor_ts[q], &u_ts[q], &mut x, &pool, &col_parts,
-                );
+                iterate_single(&c, &tp, &kts[q], &kor_ts[q], &u_ts[q], &mut x, &pool, &col_parts);
                 expected.push(x);
             }
             let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(21, vr)).collect();
-            fused_type1_transposed_batch(
+            sddtmm_dstmmt_batch(
                 &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
                 &[true; 3], &pool, &col_parts, &mut FusedScratch::new(),
             );
@@ -708,26 +342,173 @@ mod tests {
     }
 
     #[test]
-    fn type2_batch_equals_per_query() {
+    fn batch_skips_inactive_queries() {
+        let mut rng = Pcg64::new(82);
+        let vrs = [4usize, 6, 5];
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 30, 12, 150, &vrs);
+        let tp = TransposedPattern::build(&c);
+        let pool = Pool::new(3);
+        let col_parts = tp.column_parts(3);
+        // Sentinel-fill: an inactive (converged) query's x must be untouched.
+        let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(12, vr, 7.0)).collect();
+        sddtmm_dstmmt_batch(
+            &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
+            &[true, false, true], &pool, &col_parts, &mut FusedScratch::new(),
+        );
+        assert!(x_ts[1].as_slice().iter().all(|&v| v == 7.0), "inactive query was written");
+        let mut expected = Dense::zeros(12, vrs[0]);
+        iterate_single(&c, &tp, &kts[0], &kor_ts[0], &u_ts[0], &mut expected, &pool, &col_parts);
+        assert_eq!(x_ts[0], expected);
+    }
+
+    #[test]
+    fn reused_dirty_scratch_matches_fresh_scratch() {
+        // One FusedScratch across differently-shaped calls: the act-list
+        // rebuild at entry must erase every stale index.
+        let mut rng = Pcg64::new(75);
+        let mut scratch = FusedScratch::new();
+        // Seed the scratch with a wide all-active batch first.
+        let vrs_big = [3usize, 5, 4, 6, 7];
+        let (c0, kts0, kor_ts0, _km0, u_ts0) = batch_case(&mut rng, 40, 16, 200, &vrs_big);
+        let tp0 = TransposedPattern::build(&c0);
+        let pool = Pool::new(3);
+        let mut x0: Vec<Dense> = vrs_big.iter().map(|&vr| Dense::zeros(16, vr)).collect();
+        sddtmm_dstmmt_batch(
+            &c0, &tp0, &refs(&kts0), &refs(&kor_ts0), &u_ts0, &mut x0,
+            &[true; 5], &pool, &tp0.column_parts(3), &mut scratch,
+        );
+        // Now a narrower, partially-active batch with the dirty scratch.
+        let vrs = [4usize, 6];
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 25, 10, 120, &vrs);
+        let tp = TransposedPattern::build(&c);
+        let col_parts = tp.column_parts(3);
+        let mut fresh: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(10, vr, 7.0)).collect();
+        sddtmm_dstmmt_batch(
+            &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut fresh,
+            &[false, true], &pool, &col_parts, &mut FusedScratch::new(),
+        );
+        let mut reused: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(10, vr, 7.0)).collect();
+        sddtmm_dstmmt_batch(
+            &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut reused,
+            &[false, true], &pool, &col_parts, &mut scratch,
+        );
+        assert_eq!(fresh[0], reused[0], "dirty scratch touched an inactive query");
+        assert_eq!(fresh[1], reused[1], "dirty scratch perturbed the iterate");
+        assert!(scratch.retained_bytes() > 0);
+    }
+
+    #[test]
+    fn f32_panels_match_f64_within_error_bound() {
+        let mut rng = Pcg64::new(91);
+        let (c, kt, kor_t, _km, u_t) = case(&mut rng, 50, 20, 13, 260);
+        let tp = TransposedPattern::build(&c);
+        for p in [1usize, 4] {
+            let pool = Pool::new(p);
+            let col_parts = tp.column_parts(p);
+            let mut x64 = Dense::zeros(20, 13);
+            iterate_single(&c, &tp, &kt, &kor_t, &u_t, &mut x64, &pool, &col_parts);
+            let mut kt_lo = Panel32::new();
+            kt_lo.reset_from(&kt, &pool);
+            let mut kor_lo = Panel32::new();
+            kor_lo.reset_from(&kor_t, &pool);
+            let mut u_lo = Panel32::new();
+            u_lo.reset_from(&u_t, &pool);
+            let mut x32 = Dense::zeros(20, 13);
+            sddtmm_dstmmt_batch(
+                &c,
+                &tp,
+                &[&kt_lo],
+                &[&kor_lo],
+                std::slice::from_ref(&u_lo),
+                std::slice::from_mut(&mut x32),
+                &[true],
+                &pool,
+                &col_parts,
+                &mut FusedScratch::new(),
+            );
+            // Single-step panel error is O(v_r · ε_f32) relative — far
+            // inside 1e-4 at these scales (end-to-end solves land ~1e-9;
+            // the solver-level gate is 1e-5).
+            for (a, b) in x32.as_slice().iter().zip(x64.as_slice()) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn wmd_epilogue_equals_dense_formula() {
+        let mut rng = Pcg64::new(73);
+        for p in [1usize, 4] {
+            let (c, kt, _kor, km_t, u_t) = case(&mut rng, 20, 9, 5, 60);
+            // Dense oracle: v = c / (KT@u) at pattern; WMD = (u * (KM@v)).sum(0).
+            let u = u_t.transpose(); // v_r × N
+            let ktu = kt.matmul(&u_t.transpose()); // V×N
+            let mut vdense = Dense::zeros(c.nrows(), c.ncols());
+            for (i, j, cv) in c.iter() {
+                vdense.set(i, j, cv / ktu.get(i, j));
+            }
+            let km = km_t.transpose(); // v_r × V
+            let kmv = km.matmul(&vdense); // v_r × N
+            let mut oracle = vec![0.0; c.ncols()];
+            for jj in 0..c.ncols() {
+                for ii in 0..u.nrows() {
+                    oracle[jj] += u.get(ii, jj) * kmv.get(ii, jj);
+                }
+            }
+            let pool = Pool::new(p);
+            let tp = TransposedPattern::build(&c);
+            let col_parts = tp.column_parts(p);
+            let mut wmd = vec![0.0; c.ncols()];
+            sddtmm_wmd_batch(
+                &c,
+                &tp,
+                &[&kt],
+                &[&km_t],
+                std::slice::from_ref(&u_t),
+                std::slice::from_mut(&mut wmd),
+                &pool,
+                &col_parts,
+            );
+            for (a, b) in wmd.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-11 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn wmd_epilogue_batch_bitwise_matches_single_and_threads() {
         let mut rng = Pcg64::new(84);
         let vrs = [6usize, 3, 8, 5];
         let (c, kts, _kor, km_ts, u_ts) = batch_case(&mut rng, 40, 15, 200, &vrs);
-        for p in [1usize, 4] {
+        let tp = TransposedPattern::build(&c);
+        let pool1 = Pool::new(1);
+        let cp1 = tp.column_parts(1);
+        let mut singles: Vec<Vec<Real>> = Vec::new();
+        for q in 0..vrs.len() {
+            let mut wmd = vec![0.0; 15];
+            sddtmm_wmd_batch(
+                &c,
+                &tp,
+                &[&kts[q]],
+                &[&km_ts[q]],
+                std::slice::from_ref(&u_ts[q]),
+                std::slice::from_mut(&mut wmd),
+                &pool1,
+                &cp1,
+            );
+            singles.push(wmd);
+        }
+        for p in [1usize, 4, 7] {
             let pool = Pool::new(p);
-            let parts = balanced_nnz_partition(c.row_ptr(), p);
+            let col_parts = tp.column_parts(p);
             let mut wmds: Vec<Vec<Real>> = (0..vrs.len()).map(|_| vec![0.0; 15]).collect();
-            fused_type2_batch(
-                &c, &refs(&kts), &refs(&km_ts), &u_ts, &mut wmds, &pool, &parts,
-                &mut FusedScratch::new(),
+            sddtmm_wmd_batch(
+                &c, &tp, &refs(&kts), &refs(&km_ts), &u_ts, &mut wmds, &pool, &col_parts,
             );
             for q in 0..vrs.len() {
-                let mut expected = vec![0.0; 15];
-                fused_type2(
-                    &c, &kts[q], &km_ts[q], &u_ts[q], &mut expected, &pool, &parts,
-                    &mut FusedScratch::new(),
-                );
-                // Same traversal and reduction order → bitwise equal.
-                assert_eq!(wmds[q], expected, "p={p} q={q}");
+                // Ascending-row per-slot accumulation order in every
+                // configuration → bitwise equal.
+                assert_eq!(wmds[q], singles[q], "p={p} q={q}");
             }
         }
     }

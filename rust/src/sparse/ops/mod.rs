@@ -1,28 +1,30 @@
 //! The paper's sparse kernels over CSR `c`:
 //!
-//! * [`sddmm`] — sampled dense-dense matmul: a dot product *only* at the
-//!   non-zero positions of `c` (Fig. 3 left).
-//! * [`spmm`] — sparse × dense scatter (Fig. 3 right), atomic and
-//!   pattern-transposed (atomic-free) variants.
-//! * [`fused`] — the paper's new `SDDMM_SpMM` kernel: one CSR pass,
-//!   SDDMM values fed straight into the SpMM accumulation (Fig. 4 left);
-//!   `type1` produces the next iterate `x`, `type2` produces the final
-//!   WMD reduction.
+//! * [`fused`] — **the** hot path: the single fused `SDDTMM→DSTMMT`
+//!   family. One traversal of the stationary transposed pattern per
+//!   Sinkhorn step computes each sampled dot product and immediately
+//!   feeds it to the column-owned axpy accumulation (no atomics, no
+//!   private buffers); generic over batch width and the panel scalar
+//!   (f64, or f32 compute panels for the mixed-precision mode).
+//! * [`sddmm`] — standalone sampled dense-dense matmul (Fig. 3 left) plus
+//!   the [`Panel`]/[`PanelElem`] primitives the fused family is built on.
+//! * [`spmm`] — standalone atomic scatter (Fig. 3 right) and the
+//!   [`TransposedPattern`]. `sddmm` + `spmm_atomic` form the `Unfused`
+//!   ablation baseline.
 //!
-//! All kernels take a precomputed nnz-balanced partition
-//! ([`crate::parallel::balanced_nnz_partition`]) so benches can ablate the
-//! partitioning strategy independently of the kernel.
+//! The fused kernels take a precomputed nnz-balanced *column* partition
+//! ([`TransposedPattern::column_parts`]); the unfused pair takes the
+//! row-major partition ([`crate::parallel::balanced_nnz_partition`]) —
+//! both precomputed so benches can ablate the partitioning strategy
+//! independently of the kernel.
 
 pub mod fused;
 pub mod sddmm;
 pub mod spmm;
 
-pub use fused::{
-    fused_type1, fused_type1_batch, fused_type1_private, fused_type1_transposed,
-    fused_type1_transposed_batch, fused_type2, fused_type2_batch, FusedScratch, PrivateBuffers,
-};
-pub use sddmm::{sddmm, sddmm_serial};
-pub use spmm::{spmm_atomic, spmm_serial, spmm_transposed, TransposedPattern};
+pub use fused::{sddtmm_dstmmt_batch, sddtmm_wmd_batch, FusedScratch};
+pub use sddmm::{sddmm, sddmm_serial, Panel, PanelElem};
+pub use spmm::{spmm_atomic, spmm_serial, TransposedPattern};
 
 use crate::parallel::NnzRange;
 

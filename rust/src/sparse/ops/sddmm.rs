@@ -1,4 +1,5 @@
-//! SDDMM — *sampled* dense-dense matrix multiplication.
+//! SDDMM — *sampled* dense-dense matrix multiplication — and the **panel
+//! primitives** the fused kernel family is built on.
 //!
 //! For the Sinkhorn iterate `v = c ⊘ (Kᵀ@u)`, the dense product `Kᵀ@u`
 //! (`V×N`, 91.9 % of the Python baseline's runtime, Table 1) is needed
@@ -10,12 +11,160 @@
 //! Both operands are stored transposed (`V×v_r` and `N×v_r` row-major) so
 //! the inner dot is unit-stride on both sides — the paper's "on the fly
 //! transpose for unit stride data access".
+//!
+//! Exports:
+//!
+//! * [`PanelElem`] / [`Panel`] — the scalar-type seam of the fused
+//!   `SDDTMM→DSTMMT` family ([`crate::sparse::ops::fused`]): a panel
+//!   element knows how to run the unit-stride dot and widening axpy over
+//!   the dense `v_r` panels with fixed-width chunked accumulators, in f64
+//!   (bitwise-compatible with the classic [`crate::sparse::dot`]) or in
+//!   f32 (8-wide lanes, widened to f64 once per reduction — the
+//!   mixed-precision compute panels).
+//! * [`sddmm`] / [`sddmm_serial`] — the standalone SDDMM used by the
+//!   `Unfused` ablation baseline (and tests).
 
 use super::for_each_nnz_in;
 use crate::parallel::{NnzRange, Pool};
-use crate::sparse::{dot, Csr, Dense};
+use crate::sparse::{dot, Csr, Dense, Panel32};
 use crate::util::SharedSlice;
 use crate::Real;
+
+/// A scalar type the fused kernels' dense inner loops can run in. The
+/// contract keeps every cross-element *reduction* in f64 (`dot` returns
+/// f64, `axpy` accumulates into an f64 row): only the panel operands and
+/// their products drop precision in the f32 instantiation.
+pub trait PanelElem: Copy + Send + Sync + 'static {
+    /// Narrow from the solver's f64 master value.
+    fn from_real(x: Real) -> Self;
+    /// Unit-stride panel dot product, widened to f64.
+    fn dot(a: &[Self], b: &[Self]) -> Real;
+    /// `out[k] += w · b[k]` with f64 accumulation (widening axpy).
+    fn axpy(out: &mut [Real], w: Real, b: &[Self]);
+}
+
+impl PanelElem for f64 {
+    #[inline(always)]
+    fn from_real(x: Real) -> f64 {
+        x
+    }
+
+    /// Delegates to the classic 4-way-unrolled [`crate::sparse::dot`] —
+    /// the f64 instantiation of the fused family is bitwise identical to
+    /// the pre-family kernels.
+    #[inline(always)]
+    fn dot(a: &[f64], b: &[f64]) -> Real {
+        dot(a, b)
+    }
+
+    #[inline(always)]
+    fn axpy(out: &mut [Real], w: Real, b: &[f64]) {
+        crate::sparse::axpy(out, w, b);
+    }
+}
+
+impl PanelElem for f32 {
+    #[inline(always)]
+    fn from_real(x: Real) -> f32 {
+        x as f32
+    }
+
+    /// 8-wide f32 lane accumulators (twice the f64 kernel's SIMD width on
+    /// AVX), widened to f64 once at the lane reduction. Worst-case
+    /// relative error of the f32 product accumulation is `O(v_r · ε_f32)`
+    /// ≈ 3e-6 at the paper's `v_r ≤ 43`; the measured end-to-end WMD error
+    /// of the mixed solve is ~2e-9 (the Sinkhorn contraction damps
+    /// per-iteration panel noise — see the equivalence suite's 1e-5 gate).
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> Real {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; 8];
+        let chunks = a.len() / 8;
+        // Pointer-arithmetic hot loop (bounds checks hoisted), mirroring
+        // the f64 `dot`.
+        unsafe {
+            let pa = a.as_ptr();
+            let pb = b.as_ptr();
+            for c in 0..chunks {
+                let i = c * 8;
+                acc[0] += *pa.add(i) * *pb.add(i);
+                acc[1] += *pa.add(i + 1) * *pb.add(i + 1);
+                acc[2] += *pa.add(i + 2) * *pb.add(i + 2);
+                acc[3] += *pa.add(i + 3) * *pb.add(i + 3);
+                acc[4] += *pa.add(i + 4) * *pb.add(i + 4);
+                acc[5] += *pa.add(i + 5) * *pb.add(i + 5);
+                acc[6] += *pa.add(i + 6) * *pb.add(i + 6);
+                acc[7] += *pa.add(i + 7) * *pb.add(i + 7);
+            }
+            let mut tail = 0.0f32;
+            for i in chunks * 8..a.len() {
+                tail += *pa.add(i) * *pb.add(i);
+            }
+            let lo = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            let hi = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+            ((lo + hi) + tail) as Real
+        }
+    }
+
+    /// The scale `w` stays f64 (it is a ratio of f64 values and can be
+    /// large when the SDDMM dot is small); each f32 panel element widens
+    /// into the f64 multiply-accumulate.
+    #[inline]
+    fn axpy(out: &mut [Real], w: Real, b: &[f32]) {
+        debug_assert_eq!(out.len(), b.len());
+        for (o, &x) in out.iter_mut().zip(b) {
+            *o += w * x as Real;
+        }
+    }
+}
+
+/// Row-major panel storage the fused kernels read: [`Dense`] for the f64
+/// path, [`Panel32`] for the mixed-precision compute panels. Rows are
+/// unit-stride `v_r` slices in both.
+pub trait Panel: Sync {
+    type Elem: PanelElem;
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    fn row(&self, i: usize) -> &[Self::Elem];
+}
+
+impl Panel for Dense {
+    type Elem = Real;
+
+    #[inline(always)]
+    fn nrows(&self) -> usize {
+        Dense::nrows(self)
+    }
+
+    #[inline(always)]
+    fn ncols(&self) -> usize {
+        Dense::ncols(self)
+    }
+
+    #[inline(always)]
+    fn row(&self, i: usize) -> &[Real] {
+        Dense::row(self, i)
+    }
+}
+
+impl Panel for Panel32 {
+    type Elem = f32;
+
+    #[inline(always)]
+    fn nrows(&self) -> usize {
+        Panel32::nrows(self)
+    }
+
+    #[inline(always)]
+    fn ncols(&self) -> usize {
+        Panel32::ncols(self)
+    }
+
+    #[inline(always)]
+    fn row(&self, i: usize) -> &[f32] {
+        Panel32::row(self, i)
+    }
+}
 
 /// Parallel SDDMM with divide-combine (the Sinkhorn `v` update):
 /// `w[e] = c.values[e] / ⟨kt[row], u_t[col]⟩`.

@@ -5,13 +5,17 @@
 //! the update per non-zero `(i, j)` is the unit-stride axpy
 //! `xᵀ[j, :] += w[e] · K_over_rᵀ[i, :]`.
 //!
-//! Two parallel strategies:
+//! Exports:
 //! * [`spmm_atomic`] — the paper's Fig. 3 kernel: nnz-partitioned, scatter
-//!   guarded by atomics (`#pragma omp atomic`).
-//! * [`spmm_transposed`] — atomic-free: a one-time [`TransposedPattern`]
-//!   of `c` (its pattern never changes across Sinkhorn iterations) lets
-//!   threads own whole output rows `xᵀ[j, :]`. This is the perf-pass
-//!   alternative benchmarked in `ablation_fusion`/§Perf.
+//!   guarded by atomics (`#pragma omp atomic`). Together with
+//!   [`crate::sparse::ops::sddmm`] it forms the `Unfused` ablation
+//!   baseline in the solver.
+//! * [`spmm_serial`] — serial reference used by tests.
+//! * [`TransposedPattern`] — the one-time column-major view of `c`'s
+//!   pattern (iteration-invariant, grow-only rebuild) that the fused
+//!   `SDDTMM→DSTMMT` family ([`crate::sparse::ops::fused`]) walks for its
+//!   atomic-free, column-owned traversal. The former standalone
+//!   `spmm_transposed` kernel was absorbed into that family.
 
 use super::for_each_nnz_in;
 use crate::parallel::{balanced_nnz_partition, AtomicF64Slice, NnzRange, Pool};
@@ -34,7 +38,8 @@ pub fn spmm_atomic(
     let vr = kor_t.ncols();
     assert_eq!(x_t.ncols(), vr);
     x_t.fill(0.0);
-    // Serial fast path — see fused_type1 (§Perf): avoid the CAS loop.
+    // Serial fast path (§Perf): a CAS loop per element costs ~7× even
+    // without contention, so a single thread writes directly.
     if pool.nthreads() == 1 {
         for (e, (row, col, _)) in c.iter().enumerate() {
             axpy(x_t.row_mut(col), w[e], kor_t.row(row));
@@ -141,35 +146,6 @@ impl TransposedPattern {
     }
 }
 
-/// Atomic-free SpMM via the transposed pattern: thread owning column `j`
-/// accumulates `xᵀ[j, :]` privately.
-pub fn spmm_transposed(
-    tp: &TransposedPattern,
-    w: &[Real],
-    kor_t: &Dense,
-    x_t: &mut Dense,
-    pool: &Pool,
-    col_parts: &[NnzRange],
-) {
-    let vr = kor_t.ncols();
-    assert_eq!(x_t.ncols(), vr);
-    assert_eq!(x_t.nrows() + 1, tp.col_ptr.len());
-    x_t.fill(0.0);
-    let x_view = crate::util::SharedSlice::new(x_t.as_mut_slice());
-    pool.run(|tid, _nt| {
-        let part = col_parts[tid];
-        // Column ranges never split a column (balanced over col_ptr), so
-        // each thread's writes to x_t rows are disjoint.
-        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
-            let row = tp.src_row[e] as usize;
-            let s = w[tp.src_pos[e] as usize];
-            // SAFETY: row j of x_t is owned by this thread.
-            let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
-            axpy(x_row, s, kor_t.row(row));
-        });
-    });
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,22 +185,6 @@ mod tests {
             let mut x_t = Dense::zeros(13, 6);
             spmm_atomic(&c, &w, &kor_t, &mut x_t, &pool, &parts);
             assert!(x_t.max_abs_diff(&oracle) < 1e-12, "p={p}");
-        }
-    }
-
-    #[test]
-    fn transposed_matches_serial() {
-        let mut rng = Pcg64::new(62);
-        for p in [1usize, 3, 8] {
-            let (c, w, kor_t) = random_case(&mut rng, 40, 17, 5, 150);
-            let mut x_serial = Dense::zeros(17, 5);
-            spmm_serial(&c, &w, &kor_t, &mut x_serial);
-            let tp = TransposedPattern::build(&c);
-            let pool = Pool::new(p);
-            let col_parts = tp.column_parts(p);
-            let mut x_t = Dense::zeros(17, 5);
-            spmm_transposed(&tp, &w, &kor_t, &mut x_t, &pool, &col_parts);
-            assert!(x_t.max_abs_diff(&x_serial) < 1e-12, "p={p}");
         }
     }
 

@@ -1,0 +1,280 @@
+//! Kernel-family equivalence suite: the fused `SDDTMM→DSTMMT` iterate
+//! against the `Unfused` ablation baseline over the full grid of batch
+//! sizes B ∈ {1, 4}, shard counts S ∈ {1, 2} and dirty-workspace reuse.
+//!
+//! * `Fused { F64 }` must be **bitwise** identical to `Unfused` at one
+//!   thread (same arithmetic in the same ascending-source-row order),
+//!   and bitwise invariant across thread counts (column-owned writes,
+//!   no atomic scatter).
+//! * `Fused { Mixed }` (when the `mixed-precision` feature is in) must
+//!   track the f64 solve within the documented 1e-5 relative gate,
+//!   report the identical set of `+inf` empty-document lanes, and
+//!   preserve the ranking of every pair the f64 solve separates by more
+//!   than 1e-4 relative.
+
+use sinkhorn_wmd::coordinator::{DocStore, ShardSet, ShardedDocStore};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{
+    IterateKernel, Precision, Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver,
+};
+use sinkhorn_wmd::sparse::{Coo, Csr};
+use std::sync::Arc;
+
+const FUSED_F64: IterateKernel = IterateKernel::Fused { precision: Precision::F64 };
+
+/// Empty documents at the first, a middle and the last column: their
+/// `+inf` lanes must survive every kernel, batch size and sharding.
+const KILL: [usize; 3] = [0, 23, 47];
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(600)
+        .num_docs(48)
+        .embedding_dim(16)
+        .n_topics(4)
+        .num_queries(4)
+        .query_words(5, 12)
+        .seed(77)
+        .build()
+}
+
+/// `c` with the given target columns emptied (empty documents).
+fn drop_columns(c: &Csr, kill: &[usize]) -> Csr {
+    let mut coo = Coo::new(c.nrows(), c.ncols());
+    for (i, j, v) in c.iter() {
+        if !kill.contains(&j) {
+            coo.push(i, j, v);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Fixed iterations, early exit off: "equal" means bitwise, not "both
+/// converged to the same place".
+fn config(kernel: IterateKernel) -> SinkhornConfig {
+    SinkhornConfig { kernel, tolerance: 0.0, max_iter: 12, ..Default::default() }
+}
+
+fn prepare_all(corpus: &SyntheticCorpus, pool: &Pool) -> Vec<Prepared> {
+    let solver = SparseSolver::new(SinkhornConfig::default());
+    corpus.queries.iter().map(|q| solver.prepare(&corpus.embeddings, q, pool)).collect()
+}
+
+/// Reference: the `Unfused` baseline, monolithic, one thread.
+fn unfused_reference(c: &Csr, preps: &[Prepared]) -> Vec<SolveOutput> {
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(config(IterateKernel::Unfused));
+    let refs: Vec<&Prepared> = preps.iter().collect();
+    solver.solve_batch(&refs, c, &pool)
+}
+
+#[test]
+fn fused_f64_is_bitwise_identical_to_unfused_across_batch_and_reuse() {
+    let corpus = corpus();
+    let c = drop_columns(&corpus.c, &KILL);
+    let pool = Pool::new(1);
+    let preps = prepare_all(&corpus, &pool);
+    let reference = unfused_reference(&c, &preps);
+    let solver = SparseSolver::new(config(FUSED_F64));
+    let mut ws = SolveWorkspace::new();
+    for b in [1usize, 4] {
+        let refs: Vec<&Prepared> = preps[..b].iter().collect();
+        let fresh = solver.solve_batch(&refs, &c, &pool);
+        // Dirty the workspace with a different batch shape, then solve
+        // the same batch through the reused buffers.
+        let _ = solver.solve_batch_in(&mut ws, &[&preps[2]], &c, &pool);
+        let reused = solver.solve_batch_in(&mut ws, &refs, &c, &pool);
+        for q in 0..b {
+            assert_eq!(fresh[q].wmd, reference[q].wmd, "b={b} q={q}: fused != unfused");
+            assert_eq!(reused[q].wmd, reference[q].wmd, "b={b} q={q}: dirty reuse diverged");
+            assert_eq!(fresh[q].iterations, reference[q].iterations, "b={b} q={q}");
+        }
+    }
+}
+
+#[test]
+fn fused_f64_is_bitwise_thread_count_invariant() {
+    let corpus = corpus();
+    let c = drop_columns(&corpus.c, &KILL);
+    let pool1 = Pool::new(1);
+    let preps = prepare_all(&corpus, &pool1);
+    let refs: Vec<&Prepared> = preps.iter().collect();
+    let solver = SparseSolver::new(config(FUSED_F64));
+    let base = solver.solve_batch(&refs, &c, &pool1);
+    for p in [2usize, 5] {
+        let pool = Pool::new(p);
+        let out = solver.solve_batch(&refs, &c, &pool);
+        for q in 0..refs.len() {
+            assert_eq!(out[q].wmd, base[q].wmd, "p={p} q={q}: column-owned writes must commute");
+        }
+    }
+}
+
+#[test]
+fn sharded_fused_matches_monolithic_unfused_bitwise() {
+    let corpus = corpus();
+    let c = drop_columns(&corpus.c, &KILL);
+    let pool = Pool::new(1);
+    let preps = prepare_all(&corpus, &pool);
+    let reference = unfused_reference(&c, &preps);
+    let store = DocStore::new(corpus.embeddings.clone(), c).into_arc();
+    let arcs: Vec<Arc<Prepared>> = preps.into_iter().map(Arc::new).collect();
+    for s in [1usize, 2] {
+        let set = ShardSet::start(
+            ShardedDocStore::split(Arc::clone(&store), s),
+            config(FUSED_F64),
+            1,
+        );
+        for b in [1usize, 4] {
+            let out = set.solve_batch(&arcs[..b]);
+            assert_eq!(out.outputs.len(), b);
+            for q in 0..b {
+                assert_eq!(
+                    out.outputs[q].wmd, reference[q].wmd,
+                    "S={s} b={b} q={q}: sharded fused diverged from unfused reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn steady_state_reuse_stops_growing_the_workspace() {
+    let corpus = corpus();
+    let c = drop_columns(&corpus.c, &KILL);
+    let pool = Pool::new(2);
+    let preps = prepare_all(&corpus, &pool);
+    let refs: Vec<&Prepared> = preps.iter().collect();
+    let mut kernels = vec![FUSED_F64];
+    #[cfg(feature = "mixed-precision")]
+    kernels.push(IterateKernel::Fused { precision: Precision::Mixed });
+    for kernel in kernels {
+        let solver = SparseSolver::new(config(kernel));
+        let mut ws = SolveWorkspace::new();
+        // Warm on the largest shape, then repeat it: every checkout after
+        // the first must find all buffers already big enough.
+        let _ = solver.solve_batch_in(&mut ws, &refs, &c, &pool);
+        let grows_after_warm = ws.stats().grows;
+        for _ in 0..3 {
+            let _ = solver.solve_batch_in(&mut ws, &refs, &c, &pool);
+            let _ = solver.solve_batch_in(&mut ws, &[&preps[1]], &c, &pool);
+        }
+        let s = ws.stats();
+        assert_eq!(
+            s.grows, grows_after_warm,
+            "{kernel:?}: steady-state solves must not grow the workspace"
+        );
+        assert_eq!(s.checkouts, 7, "{kernel:?}");
+    }
+}
+
+#[cfg(feature = "mixed-precision")]
+mod mixed {
+    use super::*;
+
+    const FUSED_MIXED: IterateKernel = IterateKernel::Fused { precision: Precision::Mixed };
+
+    /// Relative error of every finite lane, and identity of the +inf set.
+    fn assert_within_gate(mixed: &SolveOutput, f64_out: &SolveOutput, ctx: &str) {
+        assert_eq!(mixed.wmd.len(), f64_out.wmd.len(), "{ctx}");
+        for (j, (&m, &d)) in mixed.wmd.iter().zip(&f64_out.wmd).enumerate() {
+            assert_eq!(
+                m.is_infinite(),
+                d.is_infinite(),
+                "{ctx} j={j}: +inf empty-document lanes must match exactly"
+            );
+            if d.is_finite() {
+                let rel = (m - d).abs() / d.abs().max(1e-300);
+                assert!(rel <= 1e-5, "{ctx} j={j}: rel error {rel:.2e} above the 1e-5 gate");
+            }
+        }
+    }
+
+    /// Every pair the f64 solve separates by > 1e-4 relative must rank
+    /// the same way under mixed (ties inside the gate may legally flip).
+    fn assert_ordering_preserved(mixed: &SolveOutput, f64_out: &SolveOutput, ctx: &str) {
+        let n = f64_out.wmd.len();
+        let rank_of = |out: &SolveOutput| {
+            let order = out.top_k(n);
+            let mut rank = vec![0usize; n];
+            for (r, &(j, _)) in order.iter().enumerate() {
+                rank[j] = r;
+            }
+            rank
+        };
+        let (rm, rd) = (rank_of(mixed), rank_of(f64_out));
+        for a in 0..n {
+            for b in 0..n {
+                let (wa, wb) = (f64_out.wmd[a], f64_out.wmd[b]);
+                if !wa.is_finite() || !wb.is_finite() {
+                    continue;
+                }
+                let gap = (wa - wb).abs() / wa.abs().max(wb.abs()).max(1e-300);
+                if wa < wb && gap > 1e-4 {
+                    assert!(
+                        rm[a] < rm[b],
+                        "{ctx}: mixed flipped docs {a} (wmd {wa}) and {b} (wmd {wb})"
+                    );
+                    assert!(rd[a] < rd[b], "{ctx}: top_k disagrees with wmd order");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_tracks_f64_across_batch_shards_and_reuse() {
+        let corpus = corpus();
+        let c = drop_columns(&corpus.c, &KILL);
+        let pool = Pool::new(2);
+        let preps = prepare_all(&corpus, &pool);
+        let f64_solver = SparseSolver::new(config(FUSED_F64));
+        let mixed_solver = SparseSolver::new(config(FUSED_MIXED));
+        let refs: Vec<&Prepared> = preps.iter().collect();
+        let f64_out = f64_solver.solve_batch(&refs, &c, &pool);
+        let mut ws = SolveWorkspace::new();
+        for b in [1usize, 4] {
+            let batch: Vec<&Prepared> = preps[..b].iter().collect();
+            let fresh = mixed_solver.solve_batch(&batch, &c, &pool);
+            let _ = mixed_solver.solve_batch_in(&mut ws, &[&preps[2]], &c, &pool);
+            let reused = mixed_solver.solve_batch_in(&mut ws, &batch, &c, &pool);
+            for q in 0..b {
+                let ctx = format!("b={b} q={q}");
+                assert_within_gate(&fresh[q], &f64_out[q], &ctx);
+                assert_ordering_preserved(&fresh[q], &f64_out[q], &ctx);
+                assert_eq!(
+                    reused[q].wmd, fresh[q].wmd,
+                    "{ctx}: dirty-workspace mixed solve must be bitwise reproducible"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mixed_stays_within_gate() {
+        let corpus = corpus();
+        let c = drop_columns(&corpus.c, &KILL);
+        let pool = Pool::new(1);
+        let preps = prepare_all(&corpus, &pool);
+        let f64_solver = SparseSolver::new(config(FUSED_F64));
+        let refs: Vec<&Prepared> = preps.iter().collect();
+        let f64_out = f64_solver.solve_batch(&refs, &c, &pool);
+        let store = DocStore::new(corpus.embeddings.clone(), c).into_arc();
+        let arcs: Vec<Arc<Prepared>> = preps.into_iter().map(Arc::new).collect();
+        for s in [1usize, 2] {
+            let set = ShardSet::start(
+                ShardedDocStore::split(Arc::clone(&store), s),
+                config(FUSED_MIXED),
+                1,
+            );
+            for b in [1usize, 4] {
+                let out = set.solve_batch(&arcs[..b]);
+                for q in 0..b {
+                    let ctx = format!("S={s} b={b} q={q}");
+                    assert_within_gate(&out.outputs[q], &f64_out[q], &ctx);
+                    assert_ordering_preserved(&out.outputs[q], &f64_out[q], &ctx);
+                }
+            }
+        }
+    }
+}

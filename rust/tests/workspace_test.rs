@@ -1,24 +1,28 @@
 //! Dirty-buffer equivalence suite for the zero-alloc hot path: solving
 //! query A, then B, then A again through ONE reused [`SolveWorkspace`]
 //! must produce bitwise-identical outputs to fresh-allocation solves —
-//! across all four iterate kernels, batch sizes {1, 4} and S ∈ {1, 2}
-//! target-set shards. Everything runs on one thread so "identical" means
-//! `assert_eq!` on the raw `f64` vectors, not a tolerance.
+//! across every iterate kernel (fused f64, fused mixed when built in,
+//! unfused), batch sizes {1, 4} and S ∈ {1, 2} target-set shards.
+//! Everything runs on one thread so "identical" means `assert_eq!` on
+//! the raw `f64` vectors, not a tolerance.
 
 use sinkhorn_wmd::coordinator::{DocStore, ShardSet, ShardedDocStore};
 use sinkhorn_wmd::corpus::SyntheticCorpus;
 use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{
-    IterateKernel, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver,
+    IterateKernel, Precision, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver,
 };
 use std::sync::Arc;
 
-const KERNELS: [IterateKernel; 4] = [
-    IterateKernel::FusedAtomic,
-    IterateKernel::FusedPrivate,
-    IterateKernel::FusedTransposed,
-    IterateKernel::Unfused,
-];
+fn kernels() -> Vec<IterateKernel> {
+    let mut ks = vec![
+        IterateKernel::Fused { precision: Precision::F64 },
+        IterateKernel::Unfused,
+    ];
+    #[cfg(feature = "mixed-precision")]
+    ks.push(IterateKernel::Fused { precision: Precision::Mixed });
+    ks
+}
 
 fn corpus() -> SyntheticCorpus {
     SyntheticCorpus::builder()
@@ -36,7 +40,7 @@ fn corpus() -> SyntheticCorpus {
 fn reused_workspace_single_solves_bitwise_identical_across_kernels() {
     let corpus = corpus();
     let pool = Pool::new(1); // serial → bitwise-deterministic solves
-    for kernel in KERNELS {
+    for kernel in kernels() {
         let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
         let preps: Vec<Prepared> = corpus
             .queries
@@ -67,7 +71,7 @@ fn reused_workspace_single_solves_bitwise_identical_across_kernels() {
 fn reused_workspace_batched_solves_bitwise_identical() {
     let corpus = corpus();
     let pool = Pool::new(1);
-    for kernel in KERNELS {
+    for kernel in kernels() {
         let solver = SparseSolver::new(SinkhornConfig { kernel, ..Default::default() });
         let preps: Vec<Prepared> = corpus
             .queries
