@@ -1,20 +1,27 @@
-//! Retrieval ablation — the §2-cited Kusner pruning pipeline
-//! (WCD prefetch ordering + RWMD lower-bound pruning) vs brute-force
-//! one-to-many Sinkhorn for exact top-k retrieval.
+//! Retrieval ablation — the staged bound cascade (WCD → LC-RWMD →
+//! Sinkhorn, §2's cited pruning pipeline) vs the no-prune exact baseline,
+//! swept across per-stage budgets.
+//!
+//! Every unbounded cascade is gated against the `"sinkhorn"`-only
+//! reference at 1e-9: same per-candidate sub-solve machinery, so the
+//! top-k distances must agree to rounding — any drift is a soundness bug
+//! in the bounds, not noise. Results land in `BENCH_prune.json`
+//! (override with `WMD_BENCH_PRUNE_JSON`).
 
 #[path = "common/mod.rs"]
 mod common;
 
-use sinkhorn_wmd::bench::{bench_fn, Table};
+use sinkhorn_wmd::bench::{bench_fn, merge_bench_json, prune_json_path, Table};
 use sinkhorn_wmd::corpus::SyntheticCorpus;
 use sinkhorn_wmd::parallel::Pool;
-use sinkhorn_wmd::prune::{centroids, PrunedRetrieval};
-use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
+use sinkhorn_wmd::prune::{centroids, CascadeRetrieval, CascadeSpec};
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SolveWorkspace};
+use sinkhorn_wmd::util::json::{obj, Json};
 
 fn main() {
     common::header(
         "retrieval_prune",
-        "§2 — pruned top-k retrieval (WCD + RWMD bounds) vs brute force",
+        "§2 — staged bound cascade (WCD → LC-RWMD → Sinkhorn) vs no-prune top-k",
     );
     // Retrieval favors many short docs; independent of the eval corpus.
     let corpus = SyntheticCorpus::builder()
@@ -37,34 +44,101 @@ fn main() {
     let settings = common::settings();
     let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
 
-    let mut table = Table::new([
-        "query", "v_r", "k", "brute force", "pruned", "speedup", "exact evals", "pruned docs",
-    ]);
-    for (qi, query) in corpus.queries.iter().enumerate() {
-        for &k in &[1usize, 10] {
-            let solver = SparseSolver::new(config);
-            let r_brute = bench_fn("brute", &settings, || {
-                solver.wmd_one_to_many(&corpus.embeddings, query, &corpus.c, &pool).top_k(k)
+    // The budget sweep: no-prune baseline, WCD alone, the full unbounded
+    // cascade, and two budgeted settings (800 docs → 200/50 and 100/25).
+    let specs = [
+        "sinkhorn",
+        "wcd,sinkhorn",
+        "wcd,lcrwmd,sinkhorn",
+        "wcd:200,lcrwmd:50,sinkhorn",
+        "wcd:100,lcrwmd:25,sinkhorn",
+    ];
+
+    let mut table =
+        Table::new(["cascade", "k", "mean", "speedup", "exact evals", "pruned", "gate"]);
+    let mut json_rows = Vec::new();
+    for &k in &[1usize, 10] {
+        // Exact reference: the no-prune cascade, once per query.
+        let exact = CascadeRetrieval::new(config, CascadeSpec::parse("sinkhorn").unwrap());
+        let mut ws = SolveWorkspace::new();
+        let reference: Vec<_> = corpus
+            .queries
+            .iter()
+            .map(|q| exact.retrieve_in(&mut ws, &corpus.embeddings, q, &corpus.c, &cents, &pool, k))
+            .collect();
+        let mut baseline_secs = None;
+        for spec_str in &specs {
+            let spec = CascadeSpec::parse(spec_str).expect("bench spec");
+            let unbounded = spec.is_unbounded();
+            let retrieval = CascadeRetrieval::new(config, spec);
+            let r = bench_fn(&format!("{spec_str} k={k}"), &settings, || {
+                corpus
+                    .queries
+                    .iter()
+                    .map(|q| {
+                        retrieval.retrieve_in(
+                            &mut ws,
+                            &corpus.embeddings,
+                            q,
+                            &corpus.c,
+                            &cents,
+                            &pool,
+                            k,
+                        )
+                    })
+                    .collect::<Vec<_>>()
             });
-            let retrieval = PrunedRetrieval::new(config, k);
-            let r_pruned = bench_fn("pruned", &settings, || {
-                retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool)
-            });
-            let stats =
-                retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool).stats;
+            let outs: Vec<_> = corpus
+                .queries
+                .iter()
+                .map(|q| {
+                    retrieval.retrieve_in(&mut ws, &corpus.embeddings, q, &corpus.c, &cents, &pool, k)
+                })
+                .collect();
+            // Correctness gate: unbounded cascades must reproduce the
+            // exact top-k to 1e-9 relative (identical sub-solves modulo
+            // summation order).
+            if unbounded {
+                for (qi, (out, exact)) in outs.iter().zip(&reference).enumerate() {
+                    assert_eq!(out.top.len(), exact.top.len(), "{spec_str} q{qi} k={k}");
+                    for (rank, ((_, d), (_, de))) in out.top.iter().zip(&exact.top).enumerate() {
+                        assert!(
+                            (d - de).abs() <= 1e-9 * (1.0 + de.abs()),
+                            "{spec_str} q{qi} k={k} rank {rank}: {d} vs exact {de}"
+                        );
+                    }
+                }
+            }
+            let baseline = *baseline_secs.get_or_insert(r.mean_secs());
+            let exact_evals: usize = outs.iter().map(|o| o.stats.exact_evals).sum();
+            let total_docs: usize = outs.iter().map(|o| o.stats.total_docs).sum();
+            let pruned: usize = outs.iter().map(|o| o.stats.pruned_by_bound).sum();
             table.row([
-                qi.to_string(),
-                query.nnz().to_string(),
+                spec_str.to_string(),
                 k.to_string(),
-                format!("{:.1} ms", r_brute.mean_secs() * 1e3),
-                format!("{:.1} ms", r_pruned.mean_secs() * 1e3),
-                format!("{:.2}x", r_brute.mean_secs() / r_pruned.mean_secs()),
-                format!("{}/{}", stats.exact_evals, stats.total_docs),
-                stats.pruned_by_rwmd.to_string(),
+                format!("{:.1} ms", r.mean_secs() * 1e3),
+                format!("{:.2}x", baseline / r.mean_secs()),
+                format!("{exact_evals}/{total_docs}"),
+                pruned.to_string(),
+                if unbounded { "exact@1e-9".to_string() } else { "budgeted".to_string() },
             ]);
+            json_rows.push(obj([
+                ("spec", Json::Str(spec_str.to_string())),
+                ("k", Json::Num(k as f64)),
+                ("mean_ms", Json::Num(r.mean_secs() * 1e3)),
+                ("speedup_vs_noprune", Json::Num(baseline / r.mean_secs())),
+                ("exact_evals", Json::Num(exact_evals as f64)),
+                ("total_docs", Json::Num(total_docs as f64)),
+                ("unbounded", Json::Bool(unbounded)),
+            ]));
         }
     }
     table.print();
-    println!("\nKusner et al.'s prefetch-and-prune: the bounds keep exact evaluations to a");
-    println!("fraction of the corpus while returning the exact Sinkhorn top-k (verified in tests).");
+    let path = prune_json_path();
+    match merge_bench_json(&path, "retrieval_prune", Json::Arr(json_rows)) {
+        Ok(()) => println!("\n[retrieval_prune] results merged into {}", path.display()),
+        Err(e) => eprintln!("[retrieval_prune] could not write {}: {e}", path.display()),
+    }
+    println!("\nThe staged bounds keep exact Sinkhorn evaluations to a fraction of the corpus");
+    println!("while the unbounded cascades return the exact top-k (gated above at 1e-9).");
 }

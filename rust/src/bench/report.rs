@@ -20,6 +20,17 @@ pub fn bench_json_path() -> PathBuf {
     }
 }
 
+/// Retrieval-cascade report destination: the `WMD_BENCH_PRUNE_JSON` env
+/// var when set, else `BENCH_prune.json` in the working directory. Kept
+/// separate from the kernel report so CI can upload it as its own
+/// artifact.
+pub fn prune_json_path() -> PathBuf {
+    match std::env::var("WMD_BENCH_PRUNE_JSON") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from("BENCH_prune.json"),
+    }
+}
+
 /// Merge `entry` under the `bench` key into the report at
 /// [`bench_json_path`] and say so on stdout. IO errors are reported, not
 /// fatal — a read-only checkout must not kill a bench run.

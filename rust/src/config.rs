@@ -2,6 +2,7 @@
 //! `[section]` headers — no external TOML crate offline) plus programmatic
 //! defaults. Used by the CLI binary and the examples.
 
+use crate::prune::CascadeSpec;
 use crate::sinkhorn::{IterateKernel, Precision, SinkhornConfig};
 use crate::Real;
 use std::collections::BTreeMap;
@@ -69,6 +70,10 @@ pub struct RunConfig {
     /// Target-set shards for the query service (0 or 1 → one monolithic
     /// pool; `S ≥ 2` → S column slices, each with its own pool).
     pub shards: usize,
+    /// Retrieval cascade for top-k queries: `[prune]`
+    /// `cascade = "wcd,lcrwmd,sinkhorn"`, per-stage budgets as
+    /// `name:budget` (e.g. `"wcd:2000,lcrwmd:500,sinkhorn:100"`).
+    pub prune: CascadeSpec,
     /// Directory of AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -195,6 +200,7 @@ impl RunConfig {
                     }
                 };
             }
+            ("prune", "cascade") => self.prune = CascadeSpec::parse(value)?,
             (s, k) => return Err(format!("unknown key [{s}] {k}")),
         }
         Ok(())
@@ -219,7 +225,8 @@ impl RunConfig {
              n_topics = {}\ntokens_per_doc = {}\nnum_queries = {}\n\
              query_words_min = {}\nquery_words_max = {}\nseed = {}\n\n\
              [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
-             check_every = {}\nkernel = \"{}\"\nprecision = \"{}\"\n",
+             check_every = {}\nkernel = \"{}\"\nprecision = \"{}\"\n\n\
+             [prune]\ncascade = \"{}\"\n",
             top["threads"],
             top["shards"],
             top["artifacts_dir"],
@@ -238,6 +245,7 @@ impl RunConfig {
             self.sinkhorn.check_every,
             kernel,
             precision,
+            self.prune.render(),
         )
     }
 }
@@ -254,6 +262,7 @@ mod tests {
             artifacts_dir: "artifacts".into(),
             corpus: CorpusConfig { vocab_size: 1234, ..Default::default() },
             sinkhorn: SinkhornConfig { lambda: 7.5, kernel: IterateKernel::Unfused, ..Default::default() },
+            prune: CascadeSpec::parse("wcd:2000,lcrwmd:500,sinkhorn:100").unwrap(),
         };
         let text = cfg.render();
         let back = RunConfig::from_str(&text).unwrap();
@@ -262,6 +271,18 @@ mod tests {
         assert_eq!(back.corpus.vocab_size, 1234);
         assert_eq!(back.sinkhorn.lambda, 7.5);
         assert_eq!(back.sinkhorn.kernel, IterateKernel::Unfused);
+        assert_eq!(back.prune.render(), "wcd:2000,lcrwmd:500,sinkhorn:100");
+    }
+
+    #[test]
+    fn parses_prune_cascade_key() {
+        let cfg = RunConfig::from_str("[prune]\ncascade = \"wcd,rwmd,sinkhorn\"\n").unwrap();
+        assert_eq!(cfg.prune.render(), "wcd,rwmd,sinkhorn");
+        assert_eq!(RunConfig::default().prune, CascadeSpec::default());
+        let err = RunConfig::from_str("[prune]\ncascade = \"wcd\"\n").unwrap_err();
+        assert!(err.contains("sinkhorn"), "{err}");
+        let err = RunConfig::from_str("[prune]\nbogus = 1\n").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
     }
 
     #[test]

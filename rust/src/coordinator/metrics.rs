@@ -30,6 +30,16 @@ pub struct Metrics {
     workspace_bytes: AtomicU64,
     workspace_checkouts: AtomicU64,
     workspace_grows: AtomicU64,
+    cascade_queries: AtomicU64,
+    cascade_wcd_in: AtomicU64,
+    cascade_wcd_out: AtomicU64,
+    cascade_lcrwmd_in: AtomicU64,
+    cascade_lcrwmd_out: AtomicU64,
+    cascade_rwmd_in: AtomicU64,
+    cascade_rwmd_out: AtomicU64,
+    cascade_sinkhorn_in: AtomicU64,
+    cascade_sinkhorn_out: AtomicU64,
+    pruned_solves: AtomicU64,
 }
 
 impl Metrics {
@@ -109,6 +119,27 @@ impl Metrics {
         self.workspace_grows.store(stats.grows, Ordering::Relaxed);
     }
 
+    /// One top-k retrieval through the bound cascade: fold the per-stage
+    /// candidates-in/out counts and the exact solves the bounds avoided
+    /// into the running totals. Sharded retrievals arrive pre-merged
+    /// ([`crate::prune::merge_topk`] sums the shard-local stage stats).
+    pub fn record_cascade(&self, stats: &crate::prune::PruneStats) {
+        self.cascade_queries.fetch_add(1, Ordering::Relaxed);
+        for s in &stats.stages {
+            let (cin, cout) = match s.stage {
+                "wcd" => (&self.cascade_wcd_in, &self.cascade_wcd_out),
+                "lcrwmd" => (&self.cascade_lcrwmd_in, &self.cascade_lcrwmd_out),
+                "rwmd" => (&self.cascade_rwmd_in, &self.cascade_rwmd_out),
+                "sinkhorn" => (&self.cascade_sinkhorn_in, &self.cascade_sinkhorn_out),
+                _ => continue,
+            };
+            cin.fetch_add(s.candidates_in as u64, Ordering::Relaxed);
+            cout.fetch_add(s.candidates_out as u64, Ordering::Relaxed);
+        }
+        let pruned = stats.total_docs.saturating_sub(stats.exact_evals);
+        self.pruned_solves.fetch_add(pruned as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -139,6 +170,16 @@ impl Metrics {
             workspace_bytes: self.workspace_bytes.load(Ordering::Relaxed),
             workspace_checkouts: self.workspace_checkouts.load(Ordering::Relaxed),
             workspace_grows: self.workspace_grows.load(Ordering::Relaxed),
+            cascade_queries: self.cascade_queries.load(Ordering::Relaxed),
+            cascade_wcd_in: self.cascade_wcd_in.load(Ordering::Relaxed),
+            cascade_wcd_out: self.cascade_wcd_out.load(Ordering::Relaxed),
+            cascade_lcrwmd_in: self.cascade_lcrwmd_in.load(Ordering::Relaxed),
+            cascade_lcrwmd_out: self.cascade_lcrwmd_out.load(Ordering::Relaxed),
+            cascade_rwmd_in: self.cascade_rwmd_in.load(Ordering::Relaxed),
+            cascade_rwmd_out: self.cascade_rwmd_out.load(Ordering::Relaxed),
+            cascade_sinkhorn_in: self.cascade_sinkhorn_in.load(Ordering::Relaxed),
+            cascade_sinkhorn_out: self.cascade_sinkhorn_out.load(Ordering::Relaxed),
+            pruned_solves: self.pruned_solves.load(Ordering::Relaxed),
         }
     }
 }
@@ -189,6 +230,22 @@ pub struct MetricsSnapshot {
     /// climbing value means the serving shapes keep exceeding what the
     /// workspaces have seen (reuse is not kicking in).
     pub workspace_grows: u64,
+    /// Top-k queries answered through the retrieval cascade.
+    pub cascade_queries: u64,
+    /// Per-stage candidates in/out, summed over every cascade query (and
+    /// over shards for sharded retrievals). `in − out` is what the stage
+    /// pruned.
+    pub cascade_wcd_in: u64,
+    pub cascade_wcd_out: u64,
+    pub cascade_lcrwmd_in: u64,
+    pub cascade_lcrwmd_out: u64,
+    pub cascade_rwmd_in: u64,
+    pub cascade_rwmd_out: u64,
+    pub cascade_sinkhorn_in: u64,
+    pub cascade_sinkhorn_out: u64,
+    /// Exact Sinkhorn sub-solves the cascade's bounds avoided
+    /// (`total_docs − exact_evals`, summed over cascade queries).
+    pub pruned_solves: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -215,7 +272,9 @@ impl MetricsSnapshot {
              batched: solves={} queries={} \
              kernels: fused-f64={} fused-mixed={} unfused={} \
              sharded: batches={} shard-solves={} shard-iters={} \
-             workspace: bytes={} checkouts={} grows={}",
+             workspace: bytes={} checkouts={} grows={} \
+             cascade: queries={} wcd={}/{} lcrwmd={}/{} rwmd={}/{} sinkhorn={}/{} \
+             pruned-solves={}",
             self.queries,
             self.batches,
             self.errors,
@@ -237,7 +296,17 @@ impl MetricsSnapshot {
             self.shard_iterations,
             self.workspace_bytes,
             self.workspace_checkouts,
-            self.workspace_grows
+            self.workspace_grows,
+            self.cascade_queries,
+            self.cascade_wcd_in,
+            self.cascade_wcd_out,
+            self.cascade_lcrwmd_in,
+            self.cascade_lcrwmd_out,
+            self.cascade_rwmd_in,
+            self.cascade_rwmd_out,
+            self.cascade_sinkhorn_in,
+            self.cascade_sinkhorn_out,
+            self.pruned_solves
         )
     }
 }
@@ -344,6 +413,36 @@ mod tests {
         assert_eq!(s.workspace_checkouts, 9);
         assert_eq!(s.workspace_grows, 2);
         assert!(s.report().contains("workspace: bytes=8192 checkouts=9 grows=2"));
+    }
+
+    #[test]
+    fn cascade_counters_fold_per_stage_stats() {
+        use crate::prune::{PruneStats, StageStats};
+        let m = Metrics::new();
+        let stats = PruneStats {
+            total_docs: 100,
+            exact_evals: 12,
+            pruned_by_bound: 88,
+            stages: vec![
+                StageStats { stage: "wcd", candidates_in: 100, candidates_out: 40 },
+                StageStats { stage: "lcrwmd", candidates_in: 40, candidates_out: 40 },
+                StageStats { stage: "sinkhorn", candidates_in: 40, candidates_out: 12 },
+            ],
+        };
+        m.record_cascade(&stats);
+        m.record_cascade(&stats);
+        let s = m.snapshot();
+        assert_eq!(s.cascade_queries, 2);
+        assert_eq!(s.cascade_wcd_in, 200);
+        assert_eq!(s.cascade_wcd_out, 80);
+        assert_eq!(s.cascade_lcrwmd_in, 80);
+        assert_eq!(s.cascade_sinkhorn_out, 24);
+        assert_eq!(s.cascade_rwmd_in, 0, "no rwmd stage ran");
+        assert_eq!(s.pruned_solves, 176);
+        assert!(s
+            .report()
+            .contains("cascade: queries=2 wcd=200/80 lcrwmd=80/80 rwmd=0/0 sinkhorn=80/24"));
+        assert!(s.report().contains("pruned-solves=176"));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use super::shard::{ShardSet, ShardedDocStore};
 use super::state::{DocStore, PreparedCache, PreparedKey};
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
+use crate::prune::{CascadeRetrieval, CascadeSpec};
 use crate::sinkhorn::{
     DenseSolver, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver, WorkspaceStats,
 };
@@ -50,6 +51,11 @@ pub struct ServiceConfig {
     /// `threads` evenly across the shards (min 1 each); size it to one
     /// socket's cores to mirror the paper's multi-socket layout.
     pub shard_threads: usize,
+    /// The retrieval cascade serving [`QueryRequest::top_k`] requests
+    /// (config key `cascade = "wcd,lcrwmd,sinkhorn"`, per-stage budgets
+    /// as `name:budget`). Runs shard-locally when `shards ≥ 2` and the
+    /// local top-ks are merged.
+    pub cascade: CascadeSpec,
 }
 
 impl Default for ServiceConfig {
@@ -64,6 +70,7 @@ impl Default for ServiceConfig {
             cross_query_batch: true,
             shards: 1,
             shard_threads: 0,
+            cascade: CascadeSpec::default(),
         }
     }
 }
@@ -74,19 +81,32 @@ pub struct QueryRequest {
     pub query: SparseVec,
     /// Override the service-level backend preference.
     pub prefer: Option<Backend>,
+    /// `Some(k)` asks for the k nearest documents through the retrieval
+    /// cascade instead of the full-length WMD vector; the answer arrives
+    /// in [`QueryResponse::top`]. Always served by the sparse backend.
+    pub top_k: Option<usize>,
 }
 
 impl QueryRequest {
     pub fn new(query: SparseVec) -> Self {
-        Self { query, prefer: None }
+        Self { query, prefer: None, top_k: None }
+    }
+
+    /// A top-k retrieval request (served by the cascade).
+    pub fn top_k(query: SparseVec, k: usize) -> Self {
+        Self { query, prefer: None, top_k: Some(k) }
     }
 }
 
 /// The service's answer.
 #[derive(Clone, Debug)]
 pub struct QueryResponse {
-    /// WMD to every target document (empty on error).
+    /// WMD to every target document (empty on error and for top-k
+    /// requests).
     pub wmd: Vec<Real>,
+    /// The k nearest documents, `(doc, wmd)` ascending — only for
+    /// [`QueryRequest::top_k`] requests.
+    pub top: Vec<(usize, Real)>,
     pub iterations: usize,
     pub backend: Backend,
     pub latency: Duration,
@@ -118,6 +138,7 @@ struct Job {
 fn error_response(msg: String, latency: Duration) -> QueryResponse {
     QueryResponse {
         wmd: vec![],
+        top: vec![],
         iterations: 0,
         backend: Backend::SparseRust,
         latency,
@@ -222,8 +243,14 @@ fn dispatcher(
             config.shard_threads
         };
         let sharded = ShardedDocStore::split(Arc::clone(&store), config.shards);
-        ShardSet::start(sharded, config.sinkhorn, per_shard)
+        ShardSet::start_with_cascade(sharded, config.sinkhorn, per_shard, config.cascade.clone())
     });
+    // Top-k retrieval: the monolithic cascade plus its document-centroid
+    // matrix, built lazily on the first top-k request so solve-only
+    // deployments never pay for it. Sharded deployments run the cascade
+    // inside the shard workers instead (each owns its slice's centroids).
+    let cascade = CascadeRetrieval::new(config.sinkhorn, config.cascade.clone());
+    let mut doc_centroids: Option<crate::sparse::Dense> = None;
     // The cache lives on the dispatcher thread — no locking on the hot path.
     let mut cache = (config.prepare_cache > 0).then(|| {
         let cache = PreparedCache::new(config.prepare_cache);
@@ -246,11 +273,34 @@ fn dispatcher(
         // as ONE fused pass over `c` per Sinkhorn step; dense/PJRT jobs
         // (and everything when `cross_query_batch` is off) answer inline.
         let mut sparse_jobs: Vec<(Job, Arc<Prepared>, Instant)> = Vec::new();
+        let mut retrieval_jobs: Vec<(Job, Arc<Prepared>, usize, Instant)> = Vec::new();
         for job in batch {
             let started = Instant::now();
             if let Err(msg) = store.check_query(&job.req.query) {
                 metrics.record_error();
                 let _ = job.reply.send(error_response(msg, started.elapsed()));
+                continue;
+            }
+            if let Some(k) = job.req.top_k {
+                if k == 0 {
+                    metrics.record_error();
+                    let _ = job
+                        .reply
+                        .send(error_response("top_k must be at least 1".into(), started.elapsed()));
+                    continue;
+                }
+                // The cascade is sparse-backend only: it reuses the same
+                // prepared factors as a full solve, so the cache applies.
+                let prep = resolve_prepared(
+                    &store,
+                    &pool,
+                    &sparse,
+                    cache.as_mut(),
+                    &metrics,
+                    &mut ws,
+                    &job.req.query,
+                );
+                retrieval_jobs.push((job, prep, k, started));
                 continue;
             }
             let prefer = job.req.prefer.unwrap_or(config.prefer);
@@ -288,6 +338,7 @@ fn dispatcher(
                     metrics.record_query(latency, backend);
                     let _ = job.reply.send(QueryResponse {
                         wmd,
+                        top: vec![],
                         iterations,
                         backend,
                         latency,
@@ -351,12 +402,50 @@ fn dispatcher(
                 metrics.record_query(latency, Backend::SparseRust);
                 let _ = job.reply.send(QueryResponse {
                     wmd: out.wmd,
+                    top: vec![],
                     iterations: out.iterations,
                     backend: Backend::SparseRust,
                     latency,
                     error: None,
                 });
             }
+        }
+        // Phase 3: top-k retrieval through the bound cascade — shard-local
+        // (merged) when the shard set is up, monolithic otherwise.
+        for (job, prep, k, started) in retrieval_jobs {
+            let topk = match &shard_set {
+                Some(shards) => {
+                    let (out, wss) = shards.retrieve_topk(&job.req.query, &prep, k);
+                    shard_ws = wss;
+                    out
+                }
+                None => {
+                    let cents = doc_centroids.get_or_insert_with(|| {
+                        crate::prune::centroids(&store.embeddings, &store.c, &pool)
+                    });
+                    cascade.retrieve_prepared_in(
+                        &mut ws,
+                        &store.embeddings,
+                        &job.req.query,
+                        &prep,
+                        &store.c,
+                        cents,
+                        &pool,
+                        k,
+                    )
+                }
+            };
+            metrics.record_cascade(&topk.stats);
+            let latency = started.elapsed();
+            metrics.record_query(latency, Backend::SparseRust);
+            let _ = job.reply.send(QueryResponse {
+                wmd: vec![],
+                top: topk.top,
+                iterations: 0,
+                backend: Backend::SparseRust,
+                latency,
+                error: None,
+            });
         }
         // Publish the workspace gauges: the dispatcher's own arena plus
         // the latest per-shard snapshots.
@@ -768,7 +857,11 @@ mod tests {
         let (service, corpus) = small_service();
         let q = corpus.query(1).clone();
         let a = service.submit_wait(QueryRequest::new(q.clone()));
-        let b = service.submit_wait(QueryRequest { query: q, prefer: Some(Backend::DenseRust) });
+        let b = service.submit_wait(QueryRequest {
+            query: q,
+            prefer: Some(Backend::DenseRust),
+            top_k: None,
+        });
         assert!(a.is_ok() && b.is_ok());
         assert_eq!(b.backend, Backend::DenseRust);
         // Dense baseline runs fixed max_iter without early exit; compare
@@ -841,6 +934,88 @@ mod tests {
         assert_eq!(snap.prepare_cache_hits, 0);
         assert_eq!(snap.prepare_cache_misses, 0);
         assert_eq!(a.wmd, b.wmd);
+        service.shutdown();
+    }
+
+    #[test]
+    fn top_k_request_matches_direct_cascade() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(3)
+            .query_words(5, 10)
+            .seed(53)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let service = WmdService::start(
+            Arc::clone(&store),
+            ServiceConfig { threads: 1, ..Default::default() },
+            None,
+        );
+        let pool = Pool::new(1);
+        let cascade =
+            crate::prune::CascadeRetrieval::new(SinkhornConfig::default(), CascadeSpec::default());
+        let cents = crate::prune::centroids(&store.embeddings, &store.c, &pool);
+        for i in 0..3 {
+            let resp = service.submit_wait(QueryRequest::top_k(corpus.query(i).clone(), 5));
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            assert!(resp.wmd.is_empty(), "top-k responses carry no full vector");
+            let direct = cascade.retrieve(
+                &store.embeddings,
+                corpus.query(i),
+                &store.c,
+                &cents,
+                &pool,
+                5,
+            );
+            assert_eq!(resp.top, direct.top, "query {i}");
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.queries, 3);
+        assert_eq!(snap.cascade_queries, 3);
+        assert!(snap.pruned_solves > 0, "the bounds must have pruned something");
+        service.shutdown();
+    }
+
+    #[test]
+    fn sharded_top_k_matches_monolithic() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(3)
+            .query_words(5, 10)
+            .seed(59)
+            .build();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let mk = |shards: usize| {
+            WmdService::start(
+                Arc::clone(&store),
+                ServiceConfig { threads: 1, shards, shard_threads: 1, ..Default::default() },
+                None,
+            )
+        };
+        let base = mk(1);
+        for shards in [2, 3] {
+            let sharded = mk(shards);
+            for i in 0..3 {
+                let a = base.submit_wait(QueryRequest::top_k(corpus.query(i).clone(), 7));
+                let b = sharded.submit_wait(QueryRequest::top_k(corpus.query(i).clone(), 7));
+                assert!(a.is_ok() && b.is_ok());
+                assert_eq!(a.top, b.top, "query {i}, {shards} shards");
+            }
+            sharded.shutdown();
+        }
+        base.shutdown();
+    }
+
+    #[test]
+    fn top_k_of_zero_is_an_error() {
+        let (service, corpus) = small_service();
+        let resp = service.submit_wait(QueryRequest::top_k(corpus.query(0).clone(), 0));
+        assert!(!resp.is_ok());
+        assert_eq!(service.metrics().snapshot().errors, 1);
         service.shutdown();
     }
 

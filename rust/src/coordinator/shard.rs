@@ -19,7 +19,9 @@
 //! per-shard cache key.
 
 use super::state::DocStore;
+use crate::corpus::SparseVec;
 use crate::parallel::Pool;
+use crate::prune::{merge_topk, CascadeRetrieval, CascadeSpec, PruneStats, PrunedTopK};
 use crate::sinkhorn::{
     Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver, WorkspaceStats,
 };
@@ -131,10 +133,22 @@ impl ShardedDocStore {
     }
 }
 
-struct ShardJob {
-    preps: Vec<Arc<Prepared>>,
-    reply: mpsc::Sender<(usize, Vec<SolveOutput>, WorkspaceStats)>,
-    shard: usize,
+enum ShardJob {
+    /// One batched full-length solve over this shard's column slice.
+    Solve {
+        preps: Vec<Arc<Prepared>>,
+        reply: mpsc::Sender<(usize, Vec<SolveOutput>, WorkspaceStats)>,
+        shard: usize,
+    },
+    /// One shard-local cascade retrieval (top-k in local document ids;
+    /// the coordinator rebases by `col_start` and merges).
+    Retrieve {
+        query: SparseVec,
+        prep: Arc<Prepared>,
+        k: usize,
+        reply: mpsc::Sender<(usize, PrunedTopK, WorkspaceStats)>,
+        shard: usize,
+    },
 }
 
 struct ShardWorker {
@@ -184,43 +198,97 @@ impl ShardSet {
         config: SinkhornConfig,
         threads_per_shard: usize,
     ) -> Self {
+        Self::start_with_cascade(sharded, config, threads_per_shard, CascadeSpec::default())
+    }
+
+    /// [`ShardSet::start`] with an explicit retrieval cascade: every
+    /// worker builds its own [`CascadeRetrieval`] from `spec`, so
+    /// [`ShardSet::retrieve_topk`] runs the same staged bounds
+    /// shard-locally (per-shard budgets) and the merged top-k is exact at
+    /// unbounded budgets.
+    pub fn start_with_cascade(
+        sharded: ShardedDocStore,
+        config: SinkhornConfig,
+        threads_per_shard: usize,
+        spec: CascadeSpec,
+    ) -> Self {
         assert!(threads_per_shard >= 1, "each shard pool needs at least one thread");
-        let total_docs = sharded.num_docs();
-        let workers = sharded
-            .shards
+        let ShardedDocStore { store, shards } = sharded;
+        let total_docs = store.num_docs();
+        let workers = shards
             .into_iter()
             .enumerate()
             .map(|(idx, shard)| {
                 let (tx, rx) = mpsc::channel::<ShardJob>();
                 let c = shard.c;
+                let store = Arc::clone(&store);
+                let spec = spec.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("wmd-shard-{idx}"))
                     .spawn(move || {
                         let pool = Pool::new(threads_per_shard);
                         let solver = SparseSolver::new(config);
+                        let retrieval = CascadeRetrieval::new(config, spec);
+                        // Shard-local centroid matrix for the cascade's
+                        // WCD stage, built on the first retrieval (solve-
+                        // only deployments never pay for it). Equals the
+                        // `col_range` rows of the full-corpus centroids.
+                        let mut centroids: Option<Dense> = None;
                         // One long-lived workspace per shard worker: its
                         // buffers grow to this slice's shapes once, then
                         // every subsequent batch solves allocation-free.
                         let mut ws = SolveWorkspace::new();
                         while let Ok(job) = rx.recv() {
-                            let outs: Vec<SolveOutput> = if c.ncols() == 0 {
-                                // A zero-column shard has nothing to
-                                // iterate: empty slice, vacuously
-                                // converged, no iterations to fold.
-                                job.preps
-                                    .iter()
-                                    .map(|_| SolveOutput {
-                                        wmd: Vec::new(),
-                                        iterations: 0,
-                                        converged: true,
-                                    })
-                                    .collect()
-                            } else {
-                                let refs: Vec<&Prepared> =
-                                    job.preps.iter().map(|p| p.as_ref()).collect();
-                                solver.solve_batch_in(&mut ws, &refs, &c, &pool)
-                            };
-                            let _ = job.reply.send((job.shard, outs, ws.stats()));
+                            match job {
+                                ShardJob::Solve { preps, reply, shard } => {
+                                    let outs: Vec<SolveOutput> = if c.ncols() == 0 {
+                                        // A zero-column shard has nothing
+                                        // to iterate: empty slice,
+                                        // vacuously converged, no
+                                        // iterations to fold.
+                                        preps
+                                            .iter()
+                                            .map(|_| SolveOutput {
+                                                wmd: Vec::new(),
+                                                iterations: 0,
+                                                converged: true,
+                                            })
+                                            .collect()
+                                    } else {
+                                        let refs: Vec<&Prepared> =
+                                            preps.iter().map(|p| p.as_ref()).collect();
+                                        solver.solve_batch_in(&mut ws, &refs, &c, &pool)
+                                    };
+                                    let _ = reply.send((shard, outs, ws.stats()));
+                                }
+                                ShardJob::Retrieve { query, prep, k, reply, shard } => {
+                                    let out = if c.ncols() == 0 {
+                                        PrunedTopK {
+                                            top: Vec::new(),
+                                            stats: PruneStats::default(),
+                                        }
+                                    } else {
+                                        let cents = centroids.get_or_insert_with(|| {
+                                            crate::prune::centroids(
+                                                &store.embeddings,
+                                                &c,
+                                                &pool,
+                                            )
+                                        });
+                                        retrieval.retrieve_prepared_in(
+                                            &mut ws,
+                                            &store.embeddings,
+                                            &query,
+                                            &prep,
+                                            &c,
+                                            cents,
+                                            &pool,
+                                            k,
+                                        )
+                                    };
+                                    let _ = reply.send((shard, out, ws.stats()));
+                                }
+                            }
                         }
                     })
                     .expect("spawn shard worker");
@@ -255,7 +323,11 @@ impl ShardSet {
             w.tx
                 .as_ref()
                 .expect("shard worker running")
-                .send(ShardJob { preps: preps.to_vec(), reply: reply_tx.clone(), shard: idx })
+                .send(ShardJob::Solve {
+                    preps: preps.to_vec(),
+                    reply: reply_tx.clone(),
+                    shard: idx,
+                })
                 .expect("shard worker alive");
         }
         drop(reply_tx);
@@ -285,6 +357,51 @@ impl ShardSet {
             })
             .collect();
         ShardBatchOutput { outputs, shard_iterations, workspace }
+    }
+
+    /// Fan one top-k retrieval out to every shard's cascade and merge the
+    /// shard-local top-ks into the global answer ([`merge_topk`] rebases
+    /// local ids by each shard's column offset and sums the stage stats).
+    /// Exactness: every shard keeps its local top `k` (sub-solve
+    /// distances are per-candidate and thus shard-invariant), so the
+    /// merged set contains the global top `k` whenever budgets are
+    /// unbounded.
+    pub fn retrieve_topk(
+        &self,
+        query: &SparseVec,
+        prep: &Arc<Prepared>,
+        k: usize,
+    ) -> (PrunedTopK, Vec<WorkspaceStats>) {
+        let s = self.workers.len();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        for (idx, w) in self.workers.iter().enumerate() {
+            w.tx
+                .as_ref()
+                .expect("shard worker running")
+                .send(ShardJob::Retrieve {
+                    query: query.clone(),
+                    prep: Arc::clone(prep),
+                    k,
+                    reply: reply_tx.clone(),
+                    shard: idx,
+                })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let mut per_shard: Vec<Option<PrunedTopK>> = (0..s).map(|_| None).collect();
+        let mut workspace = vec![WorkspaceStats::default(); s];
+        for _ in 0..s {
+            let (idx, out, ws_stats) =
+                reply_rx.recv().expect("a shard worker died mid-retrieval");
+            per_shard[idx] = Some(out);
+            workspace[idx] = ws_stats;
+        }
+        let parts: Vec<(usize, PrunedTopK)> = per_shard
+            .into_iter()
+            .zip(&self.workers)
+            .map(|(out, w)| (w.col_start, out.expect("every shard replied")))
+            .collect();
+        (merge_topk(&parts, k), workspace)
     }
 }
 
@@ -389,6 +506,59 @@ mod tests {
             assert_eq!(b.grows, a.grows, "steady-state batch must not grow the workspace");
             assert_eq!(b.bytes_retained, a.bytes_retained);
         }
+    }
+
+    #[test]
+    fn sharded_retrieve_topk_matches_monolithic_cascade() {
+        // 1-thread shards + per-candidate sub-solves ⇒ shard-local
+        // distances are bitwise equal to the monolithic cascade's, so the
+        // merged top-k must match it exactly for S ∈ {1, 2, 3}.
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let pool = Pool::new(1);
+        let config = SinkhornConfig::default();
+        let solver = SparseSolver::new(config);
+        let retrieval = CascadeRetrieval::new(config, CascadeSpec::default());
+        let cents = crate::prune::centroids(&store.embeddings, &store.c, &pool);
+        let k = 5;
+        for s in [1usize, 2, 3] {
+            let sharded = ShardedDocStore::split(Arc::clone(&store), s);
+            let set = ShardSet::start(sharded, config, 1);
+            for (qi, q) in corpus.queries.iter().enumerate() {
+                let prep = Arc::new(solver.prepare(&store.embeddings, q, &pool));
+                let (merged, ws) = set.retrieve_topk(q, &prep, k);
+                assert_eq!(ws.len(), s);
+                let mono = retrieval.retrieve_prepared_in(
+                    &mut SolveWorkspace::new(),
+                    &store.embeddings,
+                    q,
+                    &prep,
+                    &store.c,
+                    &cents,
+                    &pool,
+                    k,
+                );
+                assert_eq!(merged.top, mono.top, "s={s} q={qi}");
+                assert_eq!(merged.stats.total_docs, store.num_docs(), "s={s} q={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn retrieve_topk_tolerates_empty_shards() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let n = store.num_docs();
+        let sharded =
+            ShardedDocStore::with_ranges(Arc::clone(&store), vec![0..0, 0..n, n..n]);
+        let set = ShardSet::start(sharded, SinkhornConfig::default(), 1);
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(SinkhornConfig::default());
+        let q = corpus.query(0);
+        let prep = Arc::new(solver.prepare(&store.embeddings, q, &pool));
+        let (merged, _) = set.retrieve_topk(q, &prep, 4);
+        assert_eq!(merged.top.len(), 4);
+        assert_eq!(merged.stats.total_docs, n, "only the populated shard contributes docs");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   ingest        build a v2 snapshot from .vec embeddings + documents
 //!   query         WMD of a sentence against the tiny real corpus
 //!   solve         run queries on a corpus (synthetic or snapshot)
+//!   evaluate      recall@k of the retrieval cascade vs the exact top-k
 //!   serve-demo    drive the batched query service
 //!   gen-config    print a default config file
 
@@ -18,7 +19,8 @@ use sinkhorn_wmd::corpus::{Corpus, DocFormat, SparseVec, TinyCorpus};
 use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
 use sinkhorn_wmd::bench::{SysInfo, Table};
-use std::path::Path;
+use sinkhorn_wmd::prune::{evaluate_recall, queries_from_docs, CascadeSpec};
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -34,6 +36,11 @@ Subcommands:
   query --text \"...\"           WMD against the tiny real corpus
   solve [--threads P] [--queries K] [--vocab N] [--docs N]
         [--corpus FILE] [--text \"...\"]
+  evaluate [--corpus FILE] [--k K] [--queries N] [--threads P]
+           [--cascades \"spec;spec\"] [--require-recall X] [--json FILE]
+                               recall@k + speedup of the bound cascade
+                               (WCD -> LC-RWMD -> Sinkhorn) against the
+                               exact top-k; writes a BENCH_prune.json row
   serve-demo [--threads P] [--shards S] [--requests K] [--prefer sparse|dense|pjrt]
              [--corpus FILE] [--text \"...\"]
   gen-config                   print a default run configuration
@@ -60,6 +67,7 @@ fn main() {
         Some("ingest") => cmd_ingest(&args),
         Some("query") => cmd_query(&args),
         Some("solve") => cmd_solve(&args),
+        Some("evaluate") => cmd_evaluate(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("gen-config") => {
             println!("{}", RunConfig::default().render());
@@ -264,6 +272,110 @@ fn best_match_cells(out: &sinkhorn_wmd::sinkhorn::SolveOutput) -> (String, Strin
     }
 }
 
+/// `evaluate`: recall@k of budgeted cascades against the exact top-k
+/// (the `"sinkhorn"`-only no-prune cascade), plus wall-clock speedup.
+/// With `--require-recall X` every *unbounded* cascade must reach X —
+/// the CI smoke gate (unbounded cascades are exact by construction, so
+/// anything below 1.0 is a soundness bug, not a tuning issue).
+fn cmd_evaluate(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let threads = args.get_or("threads", cfg.threads())?;
+    let k = args.get_or("k", 10usize)?;
+    if k == 0 {
+        return Err("--k must be at least 1".into());
+    }
+    let corpus = if let Some(path) = args.get("corpus") {
+        println!("loading corpus from {path} ...");
+        sinkhorn_wmd::corpus::io::load_corpus_any(Path::new(path))
+            .map_err(|e| format!("loading corpus: {e}"))?
+    } else {
+        println!("building corpus V={} N={} ...", cfg.corpus.vocab_size, cfg.corpus.num_docs);
+        cfg.corpus.build().into_corpus()
+    };
+    let n = corpus.c.ncols();
+    let queries = if corpus.queries.is_empty() {
+        // Ingested snapshots ship no query set: sample documents as
+        // queries (leave-one-in; the query's own document ranks first,
+        // which cancels out since cascade and reference share it).
+        queries_from_docs(&corpus.c, args.get_or("queries", 8usize)?)
+    } else {
+        corpus.queries.clone()
+    };
+    if queries.is_empty() {
+        return Err("no queries: corpus has none and every document is empty".into());
+    }
+    let specs: Vec<CascadeSpec> = match args.get("cascades") {
+        Some(list) => list
+            .split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(CascadeSpec::parse)
+            .collect::<Result<_, _>>()?,
+        None => {
+            // The stock sweep: each bound tier alone-with-sinkhorn, the
+            // full cascade, and one budgeted setting scaled to the corpus.
+            let b_wcd = (n / 4).max(4 * k);
+            let b_lc = (n / 10).max(2 * k);
+            vec![
+                CascadeSpec::parse("wcd,sinkhorn").unwrap(),
+                CascadeSpec::parse("wcd,lcrwmd,sinkhorn").unwrap(),
+                CascadeSpec::parse("wcd,lcrwmd,rwmd,sinkhorn").unwrap(),
+                CascadeSpec::parse(&format!("wcd:{b_wcd},lcrwmd:{b_lc},sinkhorn")).unwrap(),
+            ]
+        }
+    };
+    let pool = Pool::new(threads);
+    println!(
+        "recall@{k}: {} queries x {} documents, {} cascades, {} threads",
+        queries.len(),
+        n,
+        specs.len(),
+        threads
+    );
+    let rows =
+        evaluate_recall(&corpus.embeddings, &corpus.c, &queries, cfg.sinkhorn, k, &specs, &pool);
+    let mut t = Table::new(["cascade", "recall", "speedup", "cascade ms", "exact ms", "evals"]);
+    for r in &rows {
+        t.row([
+            r.spec.clone(),
+            format!("{:.4}", r.recall),
+            format!("{:.2}x", r.speedup),
+            format!("{:.1}", r.cascade_ms),
+            format!("{:.1}", r.exact_ms),
+            format!("{}/{}", r.exact_evals, r.total_docs),
+        ]);
+    }
+    t.print();
+    let json_path = args
+        .get("json")
+        .map(PathBuf::from)
+        .unwrap_or_else(sinkhorn_wmd::bench::prune_json_path);
+    let entry = sinkhorn_wmd::prune::recall::rows_json(&rows);
+    sinkhorn_wmd::bench::merge_bench_json(&json_path, "recall_at_k", entry)
+        .map_err(|e| format!("writing {}: {e}", json_path.display()))?;
+    println!("results merged into {}", json_path.display());
+    if let Some(min) = args.get("require-recall") {
+        let min: f64 = min.parse().map_err(|_| format!("bad --require-recall '{min}'"))?;
+        let mut gated = 0;
+        for (spec, r) in specs.iter().zip(&rows) {
+            if spec.is_unbounded() {
+                gated += 1;
+                if r.recall < min {
+                    return Err(format!(
+                        "recall gate failed: `{}` reached {:.4} < {min}",
+                        r.spec, r.recall
+                    ));
+                }
+            }
+        }
+        if gated == 0 {
+            return Err("--require-recall needs at least one unbounded cascade to gate".into());
+        }
+        println!("recall gate passed: {gated} unbounded cascade(s) at recall >= {min}");
+    }
+    Ok(())
+}
+
 fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let threads = args.get_or("threads", cfg.threads())?;
@@ -297,6 +409,7 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
             shards,
             sinkhorn: cfg.sinkhorn,
             prefer,
+            cascade: cfg.prune.clone(),
             ..Default::default()
         },
         pjrt_dir,

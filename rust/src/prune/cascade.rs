@@ -1,0 +1,589 @@
+//! The staged bound cascade: retrieval as a pipeline of pluggable
+//! [`BoundStage`]s, each tightening a per-document lower bound on the
+//! query↔document WMD, followed by exact Sinkhorn evaluation of the
+//! survivors.
+//!
+//! Every stage sees the accumulated bound vector and **max-combines** its
+//! own bound into it: each per-stage bound lower-bounds the exact EMD
+//! (and the Sinkhorn distance above it), so their running maximum is a
+//! valid — and monotonically tightening — bound. After scoring, the
+//! surviving candidate list is re-sorted by accumulated bound and cut to
+//! the stage's budget, so later (more expensive) stages only pay for the
+//! candidates the cheaper bounds could not separate.
+//!
+//! The stock cascade is `wcd,lcrwmd,sinkhorn` — the near-free centroid
+//! ordering, then Atasu et al.'s corpus-wide linear-complexity relaxed
+//! WMD, then the exact solve. A per-candidate `rwmd` stage (tighter,
+//! O(|supp|·v_r·w) per doc) can be spliced in; `sinkhorn` alone is the
+//! no-prune exact baseline.
+
+use crate::corpus::SparseVec;
+use crate::parallel::Pool;
+use crate::sinkhorn::{Prepared, SinkhornConfig, SolveWorkspace, SparseSolver};
+use crate::sparse::ops::TransposedPattern;
+use crate::sparse::{Csr, Dense};
+use crate::util::SharedSlice;
+use crate::Real;
+
+use super::{lcrwmd, rwmd, wcd, PruneScratch, PruneStats, PrunedTopK, StageStats};
+
+/// The bound stages the cascade knows how to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    /// Word-centroid distance: `‖Xᵀr − Xᵀc_j‖₂`. O(w) per doc.
+    Wcd,
+    /// Linear-complexity RWMD (doc→query direction, corpus-wide z pass).
+    LcRwmd,
+    /// Per-candidate relaxed WMD (query→doc direction). Tightest, priciest.
+    Rwmd,
+}
+
+impl StageKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Wcd => "wcd",
+            StageKind::LcRwmd => "lcrwmd",
+            StageKind::Rwmd => "rwmd",
+        }
+    }
+
+    fn parse(name: &str) -> Option<StageKind> {
+        match name {
+            "wcd" => Some(StageKind::Wcd),
+            "lcrwmd" => Some(StageKind::LcRwmd),
+            "rwmd" => Some(StageKind::Rwmd),
+            _ => None,
+        }
+    }
+}
+
+/// One configured bound stage: which bound, and how many candidates may
+/// survive it (`0` = unbounded). A stage never cuts below the requested
+/// `k`, so budgets bound *work*, not the answer length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageSpec {
+    pub kind: StageKind,
+    pub budget: usize,
+}
+
+/// A parsed cascade description, e.g. `"wcd:200,lcrwmd:50,sinkhorn"`:
+/// comma-separated `name[:budget]` entries, `sinkhorn` (the exact solve)
+/// mandatory and last — its budget caps the number of exact evaluations.
+/// `"sinkhorn"` alone is the no-prune exact baseline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CascadeSpec {
+    pub stages: Vec<StageSpec>,
+    /// Max exact Sinkhorn evaluations (`0` = unbounded).
+    pub sinkhorn_budget: usize,
+}
+
+impl Default for CascadeSpec {
+    /// The stock three-tier cascade, all budgets unbounded:
+    /// `wcd,lcrwmd,sinkhorn`.
+    fn default() -> Self {
+        CascadeSpec {
+            stages: vec![
+                StageSpec { kind: StageKind::Wcd, budget: 0 },
+                StageSpec { kind: StageKind::LcRwmd, budget: 0 },
+            ],
+            sinkhorn_budget: 0,
+        }
+    }
+}
+
+impl CascadeSpec {
+    pub fn parse(s: &str) -> Result<CascadeSpec, String> {
+        let toks: Vec<&str> = s.split(',').map(str::trim).filter(|t| !t.is_empty()).collect();
+        if toks.is_empty() {
+            return Err("empty cascade spec".into());
+        }
+        let mut stages = Vec::new();
+        let mut sinkhorn_budget = None;
+        for (i, tok) in toks.iter().enumerate() {
+            let (name, budget) = match tok.split_once(':') {
+                Some((n, b)) => {
+                    let b: usize = b
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad budget in cascade stage `{tok}`"))?;
+                    (n.trim(), b)
+                }
+                None => (*tok, 0),
+            };
+            if name == "sinkhorn" {
+                if i != toks.len() - 1 {
+                    return Err("`sinkhorn` must be the final cascade stage".into());
+                }
+                sinkhorn_budget = Some(budget);
+            } else {
+                let kind = StageKind::parse(name)
+                    .ok_or_else(|| format!("unknown cascade stage `{name}`"))?;
+                if stages.iter().any(|s: &StageSpec| s.kind == kind) {
+                    return Err(format!("duplicate cascade stage `{name}`"));
+                }
+                stages.push(StageSpec { kind, budget });
+            }
+        }
+        let sinkhorn_budget =
+            sinkhorn_budget.ok_or_else(|| "cascade must end with `sinkhorn`".to_string())?;
+        Ok(CascadeSpec { stages, sinkhorn_budget })
+    }
+
+    /// Round-trips through [`CascadeSpec::parse`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let tok = |out: &mut String, name: &str, budget: usize| {
+            if !out.is_empty() {
+                out.push(',');
+            }
+            out.push_str(name);
+            if budget != 0 {
+                out.push(':');
+                out.push_str(&budget.to_string());
+            }
+        };
+        for s in &self.stages {
+            tok(&mut out, s.kind.name(), s.budget);
+        }
+        tok(&mut out, "sinkhorn", self.sinkhorn_budget);
+        out
+    }
+
+    /// True when no stage cuts candidates: the cascade is guaranteed to
+    /// return the exact top-k (bounds only reorder and prune soundly).
+    pub fn is_unbounded(&self) -> bool {
+        self.sinkhorn_budget == 0 && self.stages.iter().all(|s| s.budget == 0)
+    }
+}
+
+/// Grow-only scratch shared by the bound stages; lives inside
+/// [`PruneScratch`] so the steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct StageScratch {
+    /// LC-RWMD per-vocabulary-row min distance to the query.
+    pub(crate) z: Vec<Real>,
+    /// Which vocabulary rows the survivors actually touch.
+    pub(crate) z_needed: Vec<bool>,
+}
+
+impl StageScratch {
+    pub(crate) fn retained_bytes(&self) -> usize {
+        self.z.capacity() * std::mem::size_of::<Real>() + self.z_needed.capacity()
+    }
+}
+
+/// Everything a bound stage may read or tighten. `bound` is indexed by
+/// document id (not survivor position) and stages must only *raise* it
+/// (max-combine) for documents listed in `survivors`.
+pub struct StageCx<'a> {
+    pub embeddings: &'a Dense,
+    pub query: &'a SparseVec,
+    /// `c.values()` — nnz values addressed through `pattern.src_pos`.
+    pub values: &'a [Real],
+    /// CSC view of the target set.
+    pub pattern: &'a TransposedPattern,
+    pub doc_centroids: &'a Dense,
+    pub pool: &'a Pool,
+    pub survivors: &'a [usize],
+    pub bound: &'a mut [Real],
+    pub scratch: &'a mut StageScratch,
+}
+
+/// A pluggable cascade stage: score every surviving candidate, tightening
+/// the accumulated lower bound in place.
+pub trait BoundStage: Send + Sync {
+    fn kind(&self) -> StageKind;
+    fn score(&self, cx: &mut StageCx<'_>);
+}
+
+/// [`StageKind::Wcd`] — centroid distance, parallel over survivors.
+pub struct WcdStage;
+
+impl BoundStage for WcdStage {
+    fn kind(&self) -> StageKind {
+        StageKind::Wcd
+    }
+
+    fn score(&self, cx: &mut StageCx<'_>) {
+        let qc = wcd::query_centroid(cx.embeddings, cx.query);
+        let (survivors, doc_centroids) = (cx.survivors, cx.doc_centroids);
+        let view = SharedSlice::new(cx.bound);
+        cx.pool.parallel_for(survivors.len(), |range| {
+            for p in range {
+                let j = survivors[p];
+                let mut acc = 0.0;
+                for (a, b) in qc.iter().zip(doc_centroids.row(j)) {
+                    let d = a - b;
+                    acc += d * d;
+                }
+                // SAFETY: survivor ids are unique → disjoint writes.
+                let cell = unsafe { view.slice_mut(j, 1) };
+                cell[0] = cell[0].max(acc.sqrt());
+            }
+        });
+    }
+}
+
+/// [`StageKind::LcRwmd`] — one corpus-wide `z` pass (restricted to the
+/// vocabulary rows the survivors touch), then an O(|supp|) gather per
+/// survivor.
+pub struct LcRwmdStage;
+
+impl BoundStage for LcRwmdStage {
+    fn kind(&self) -> StageKind {
+        StageKind::LcRwmd
+    }
+
+    fn score(&self, cx: &mut StageCx<'_>) {
+        let v = cx.embeddings.nrows();
+        let StageScratch { z, z_needed } = &mut *cx.scratch;
+        z_needed.clear();
+        z_needed.resize(v, false);
+        for &j in cx.survivors {
+            for e in cx.pattern.col_ptr[j]..cx.pattern.col_ptr[j + 1] {
+                z_needed[cx.pattern.src_row[e] as usize] = true;
+            }
+        }
+        lcrwmd::query_min_dists_into(cx.embeddings, cx.query, z_needed, cx.pool, z);
+        let z: &[Real] = z;
+        let (survivors, pattern, values) = (cx.survivors, cx.pattern, cx.values);
+        let view = SharedSlice::new(cx.bound);
+        cx.pool.parallel_for(survivors.len(), |range| {
+            for p in range {
+                let j = survivors[p];
+                let lb = lcrwmd::lcrwmd_from_pattern(values, pattern, z, j);
+                // SAFETY: survivor ids are unique → disjoint writes.
+                let cell = unsafe { view.slice_mut(j, 1) };
+                cell[0] = cell[0].max(lb);
+            }
+        });
+    }
+}
+
+/// [`StageKind::Rwmd`] — the per-candidate relaxed WMD, parallel over
+/// survivors (supports read straight out of the CSC spans).
+pub struct RwmdStage;
+
+impl BoundStage for RwmdStage {
+    fn kind(&self) -> StageKind {
+        StageKind::Rwmd
+    }
+
+    fn score(&self, cx: &mut StageCx<'_>) {
+        let (embeddings, query, survivors, pattern) =
+            (cx.embeddings, cx.query, cx.survivors, cx.pattern);
+        let view = SharedSlice::new(cx.bound);
+        cx.pool.parallel_for(survivors.len(), |range| {
+            for p in range {
+                let j = survivors[p];
+                let lb = rwmd::rwmd_from_pattern(embeddings, query, pattern, j);
+                // SAFETY: survivor ids are unique → disjoint writes.
+                let cell = unsafe { view.slice_mut(j, 1) };
+                cell[0] = cell[0].max(lb);
+            }
+        });
+    }
+}
+
+fn build_stage(kind: StageKind) -> Box<dyn BoundStage> {
+    match kind {
+        StageKind::Wcd => Box::new(WcdStage),
+        StageKind::LcRwmd => Box::new(LcRwmdStage),
+        StageKind::Rwmd => Box::new(RwmdStage),
+    }
+}
+
+/// k-NN retrieval through a configured bound cascade, ending in exact
+/// Sinkhorn evaluation of the survivors.
+pub struct CascadeRetrieval {
+    solver: SparseSolver,
+    spec: CascadeSpec,
+    stages: Vec<Box<dyn BoundStage>>,
+}
+
+impl CascadeRetrieval {
+    pub fn new(config: SinkhornConfig, spec: CascadeSpec) -> Self {
+        let stages = spec.stages.iter().map(|s| build_stage(s.kind)).collect();
+        Self { solver: SparseSolver::new(config), spec, stages }
+    }
+
+    pub fn spec(&self) -> &CascadeSpec {
+        &self.spec
+    }
+
+    /// One-shot retrieval (fresh workspace). `doc_centroids` comes from
+    /// [`wcd::centroids`] — one corpus-wide precompute reused across
+    /// queries.
+    pub fn retrieve(
+        &self,
+        embeddings: &Dense,
+        query: &SparseVec,
+        c: &Csr,
+        doc_centroids: &Dense,
+        pool: &Pool,
+        k: usize,
+    ) -> PrunedTopK {
+        self.retrieve_in(&mut SolveWorkspace::new(), embeddings, query, c, doc_centroids, pool, k)
+    }
+
+    /// Retrieval with all scratch borrowed from one retained workspace —
+    /// bound vectors, candidate order, CSC view, stage scratch, restricted
+    /// factors and the per-candidate sub-problem CSR are all grow-only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn retrieve_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        c: &Csr,
+        doc_centroids: &Dense,
+        pool: &Pool,
+        k: usize,
+    ) -> PrunedTopK {
+        let prep = self.solver.prepare_in(ws, embeddings, query, pool);
+        self.retrieve_prepared_in(ws, embeddings, query, &prep, c, doc_centroids, pool, k)
+    }
+
+    /// [`CascadeRetrieval::retrieve_in`] with the query's factor
+    /// precompute already in hand (the dispatcher's `PreparedCache` path).
+    ///
+    /// Soundness: every stage bound lower-bounds the exact EMD, and
+    /// sinkhorn ≥ emd ≥ bound for every document — so pruning on
+    /// `bound > current_kth` keeps the exact (Sinkhorn) top-k intact at
+    /// unbounded budgets. Budgets trade recall for work; the recall
+    /// harness measures exactly that trade.
+    #[allow(clippy::too_many_arguments)]
+    pub fn retrieve_prepared_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        prep: &Prepared,
+        c: &Csr,
+        doc_centroids: &Dense,
+        pool: &Pool,
+        k: usize,
+    ) -> PrunedTopK {
+        let n = c.ncols();
+        let k = k.min(n);
+        let mut stats = PruneStats { total_docs: n, ..Default::default() };
+        if k == 0 {
+            return PrunedTopK { top: Vec::new(), stats };
+        }
+
+        // The prune section moves out of the workspace for the duration of
+        // the retrieval, so the candidate sub-solves can check the same
+        // workspace out for their own lanes.
+        let mut ps = std::mem::take(&mut ws.prune);
+        ps.pattern.rebuild_from(c);
+        ps.bound.clear();
+        ps.bound.resize(n, 0.0);
+        ps.order.clear();
+        ps.order.extend(0..n);
+        let values = c.values();
+
+        // Bound stages: score all survivors, re-rank by the accumulated
+        // bound (ascending; NaN-safe, index tie-break so shards and reruns
+        // agree bitwise), cut to the stage budget.
+        for (stage, spec) in self.stages.iter().zip(&self.spec.stages) {
+            let candidates_in = ps.order.len();
+            {
+                let PruneScratch { bound, order, pattern, stage: scratch, .. } = &mut ps;
+                let mut cx = StageCx {
+                    embeddings,
+                    query,
+                    values,
+                    pattern,
+                    doc_centroids,
+                    pool,
+                    survivors: order,
+                    bound,
+                    scratch,
+                };
+                stage.score(&mut cx);
+            }
+            {
+                let bound = &ps.bound;
+                ps.order
+                    .sort_by(|&a, &b| bound[a].total_cmp(&bound[b]).then_with(|| a.cmp(&b)));
+            }
+            if spec.budget != 0 {
+                ps.order.truncate(spec.budget.max(k));
+            }
+            stats.stages.push(StageStats {
+                stage: stage.kind().name(),
+                candidates_in,
+                candidates_out: ps.order.len(),
+            });
+        }
+
+        // Sinkhorn stage: exact evaluation in accumulated-bound order.
+        // Each candidate is solved on a sub-problem restricted to its word
+        // support — zero rows of `c` touch no kernel, and the restriction
+        // turns a per-eval O(V·iters) row walk into O(|supp|·v_r·iters).
+        // Sub-problems are a few dozen non-zeros: fork/join barriers would
+        // dominate, so they run on an inline (1-thread) pool regardless of
+        // the caller's parallelism.
+        let serial = Pool::new(1);
+        let solver = &self.solver;
+        let survivors_in = ps.order.len();
+        let mut top: Vec<(usize, Real)> = Vec::with_capacity(k + 1);
+        let mut eval_exact = |j: usize,
+                              top: &mut Vec<(usize, Real)>,
+                              stats: &mut PruneStats,
+                              ws: &mut SolveWorkspace,
+                              ps: &mut PruneScratch| {
+            let span = ps.pattern.col_ptr[j]..ps.pattern.col_ptr[j + 1];
+            {
+                let (support, pattern) = (&mut ps.support, &ps.pattern);
+                support.clear();
+                support.extend(span.clone().map(|e| pattern.src_row[e] as usize));
+            }
+            // Sub-problem CSR from recycled backing vectors (reclaimed
+            // below via `into_parts`): |supp| rows × 1 column.
+            let m = ps.support.len();
+            {
+                let (vals, pattern) = (&mut ps.sub_vals, &ps.pattern);
+                vals.clear();
+                vals.extend(span.clone().map(|e| values[pattern.src_pos[e] as usize]));
+            }
+            let mut row_ptr = std::mem::take(&mut ps.sub_row_ptr);
+            row_ptr.clear();
+            row_ptr.extend(0..=m);
+            let mut col_idx = std::mem::take(&mut ps.sub_col_idx);
+            col_idx.clear();
+            col_idx.resize(m, 0u32);
+            let sub_c = crate::sparse::Csr::from_parts(
+                m,
+                1,
+                row_ptr,
+                col_idx,
+                std::mem::take(&mut ps.sub_vals),
+            );
+            let sub_prep = ps.sub_prep.get_or_insert_with(Prepared::default);
+            prep.factors.restrict_rows_into(&ps.support, &mut sub_prep.factors);
+            let d = solver.solve_in(ws, sub_prep, &sub_c, &serial).wmd[0];
+            let (_, _, row_ptr, col_idx, vals) = sub_c.into_parts();
+            ps.sub_row_ptr = row_ptr;
+            ps.sub_col_idx = col_idx;
+            ps.sub_vals = vals;
+            stats.exact_evals += 1;
+            // Non-finite distances (empty doc → +inf, NaN embeddings)
+            // never enter the top-k; total_cmp keeps the sort panic-free.
+            if d.is_finite() {
+                top.push((j, d));
+                top.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+                top.truncate(k);
+            }
+        };
+        #[allow(clippy::needless_range_loop)]
+        for idx in 0..ps.order.len() {
+            let j = ps.order[idx];
+            // The k-th best distance only prunes once k finite candidates
+            // are in hand (non-finite evaluations don't enter `top`).
+            if top.len() >= k {
+                let kth = top.last().map_or(Real::INFINITY, |&(_, d)| d);
+                // Survivors are sorted by accumulated bound: once one
+                // exceeds the k-th best, everything after it does too.
+                if ps.bound[j] > kth {
+                    stats.pruned_by_bound += ps.order.len() - idx;
+                    break;
+                }
+            }
+            if self.spec.sinkhorn_budget != 0 && stats.exact_evals >= self.spec.sinkhorn_budget {
+                break;
+            }
+            eval_exact(j, &mut top, &mut stats, ws, &mut ps);
+        }
+        stats.stages.push(StageStats {
+            stage: "sinkhorn",
+            candidates_in: survivors_in,
+            candidates_out: stats.exact_evals,
+        });
+        ws.prune = ps;
+        PrunedTopK { top, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_render_roundtrip() {
+        for s in ["sinkhorn", "wcd,lcrwmd,sinkhorn", "wcd:200,lcrwmd:50,sinkhorn:25",
+            "wcd,rwmd:10,sinkhorn", "wcd,lcrwmd,rwmd,sinkhorn"]
+        {
+            let spec = CascadeSpec::parse(s).unwrap();
+            assert_eq!(spec.render(), s, "roundtrip failed for `{s}`");
+            assert_eq!(CascadeSpec::parse(&spec.render()).unwrap(), spec);
+        }
+        assert_eq!(CascadeSpec::default().render(), "wcd,lcrwmd,sinkhorn");
+        assert!(CascadeSpec::default().is_unbounded());
+        assert!(!CascadeSpec::parse("wcd:9,sinkhorn").unwrap().is_unbounded());
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        for s in [
+            "",
+            "wcd",                    // no sinkhorn
+            "sinkhorn,wcd",           // sinkhorn not last
+            "wcd,wcd,sinkhorn",       // duplicate stage
+            "warp,sinkhorn",          // unknown stage
+            "wcd:abc,sinkhorn",       // bad budget
+            "wcd:-3,sinkhorn",        // negative budget
+        ] {
+            assert!(CascadeSpec::parse(s).is_err(), "`{s}` should be rejected");
+        }
+        // Whitespace is tolerated.
+        let spec = CascadeSpec::parse(" wcd : 16 , lcrwmd , sinkhorn ").unwrap();
+        assert_eq!(spec.render(), "wcd:16,lcrwmd,sinkhorn");
+    }
+
+    #[test]
+    fn budget_never_cuts_below_k() {
+        use crate::corpus::SyntheticCorpus;
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(200)
+            .num_docs(30)
+            .embedding_dim(10)
+            .num_queries(1)
+            .query_words(4, 6)
+            .seed(77)
+            .build();
+        let pool = Pool::new(2);
+        let cents = wcd::centroids(&corpus.embeddings, &corpus.c, &pool);
+        let spec = CascadeSpec::parse("wcd:1,lcrwmd:1,sinkhorn").unwrap();
+        let retrieval = CascadeRetrieval::new(SinkhornConfig::default(), spec);
+        let out =
+            retrieval.retrieve(&corpus.embeddings, corpus.query(0), &corpus.c, &cents, &pool, 5);
+        assert_eq!(out.top.len(), 5, "budget 1 must still yield k=5 results");
+        for st in &out.stats.stages {
+            if st.stage != "sinkhorn" {
+                assert_eq!(st.candidates_out, 5, "stage {} cut below k", st.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn sinkhorn_budget_caps_exact_evals() {
+        use crate::corpus::SyntheticCorpus;
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(200)
+            .num_docs(40)
+            .embedding_dim(10)
+            .num_queries(1)
+            .query_words(4, 6)
+            .seed(78)
+            .build();
+        let pool = Pool::new(2);
+        let cents = wcd::centroids(&corpus.embeddings, &corpus.c, &pool);
+        let spec = CascadeSpec::parse("wcd,sinkhorn:7").unwrap();
+        let retrieval = CascadeRetrieval::new(SinkhornConfig::default(), spec);
+        let out =
+            retrieval.retrieve(&corpus.embeddings, corpus.query(0), &corpus.c, &cents, &pool, 3);
+        assert!(out.stats.exact_evals <= 7, "{:?}", out.stats);
+        assert_eq!(out.top.len(), 3);
+    }
+}

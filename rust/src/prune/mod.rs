@@ -1,55 +1,71 @@
-//! Pruned retrieval — the lower-bound pipeline from Kusner et al. that
-//! the paper cites in §2 (*"Several pruning ideas have been proposed in
-//! [7] to speed up the document retrieval process that reduces the number
-//! of expensive WMD evaluations per query"*).
+//! Pruned retrieval — the lower-bound cascade from Kusner et al. and
+//! Atasu et al. that the paper cites in §2 (*"Several pruning ideas have
+//! been proposed in [7] to speed up the document retrieval process that
+//! reduces the number of expensive WMD evaluations per query"*).
 //!
-//! Two classic lower bounds on WMD:
+//! Three lower bounds on WMD, composable as cascade stages:
 //!
-//! * **WCD** (word-centroid distance): `‖X·r − X·c_j‖₂` — the distance
+//! * **WCD** (word-centroid distance): `‖Xᵀr − Xᵀc_j‖₂` — distance
 //!   between mass-weighted centroid embeddings. O(w) per document after
 //!   an O(nnz·w) corpus pass. Loose but nearly free.
-//! * **RWMD** (relaxed WMD): drop one marginal constraint; each query
-//!   word ships all its mass to the *closest* word of the target
-//!   document. Much tighter; O(nnz·v_r) per corpus.
+//! * **LC-RWMD** (linear-complexity relaxed WMD, Atasu et al.
+//!   1711.07227): each *corpus* word ships its mass to the closest query
+//!   word — one corpus-wide `z` pass plus an O(nnz) gather. The cheap
+//!   middle tier.
+//! * **RWMD** (relaxed WMD): each *query* word ships its mass to the
+//!   closest word of the target document. Tightest; O(|supp|·v_r·w) per
+//!   document.
 //!
-//! [`PrunedRetrieval`] composes them: rank all docs by WCD, take the top
-//! `k` exactly, then visit the rest in WCD order computing RWMD; a doc
-//! whose RWMD exceeds the current k-th best exact WMD is discarded
-//! without running Sinkhorn. Both bounds and the final ranking are
-//! validated against the exact solver in tests.
+//! [`CascadeRetrieval`] composes them as a configurable
+//! [`CascadeSpec`] (e.g. `"wcd,lcrwmd,sinkhorn"`): every [`BoundStage`]
+//! max-combines its bound into the accumulated per-document bound,
+//! survivors are re-ranked and cut to the stage budget, and the final
+//! Sinkhorn stage evaluates survivors exactly in bound order, pruning
+//! once the bound exceeds the current k-th best. Bounds, ranking and the
+//! cascade itself are validated against the exact solver in tests; the
+//! [`recall`] harness turns budgeted-cascade quality into a measured
+//! recall@k number.
 
+pub mod cascade;
+pub mod lcrwmd;
+pub mod recall;
 pub mod rwmd;
 pub mod wcd;
 
-pub use rwmd::rwmd_lower_bound;
+pub use cascade::{
+    BoundStage, CascadeRetrieval, CascadeSpec, StageCx, StageKind, StageSpec,
+};
+pub use lcrwmd::lcrwmd_lower_bounds;
+pub use recall::{evaluate_recall, queries_from_docs, RecallRow};
+pub use rwmd::{rwmd_from_pattern, rwmd_lower_bound, rwmd_with_support};
 pub use wcd::{centroids, wcd_lower_bound, wcd_lower_bound_into};
 
-use crate::corpus::SparseVec;
-use crate::parallel::Pool;
-use crate::sinkhorn::{Prepared, SinkhornConfig, SolveWorkspace, SparseSolver};
+use crate::sinkhorn::Prepared;
 use crate::sparse::ops::TransposedPattern;
-use crate::sparse::{Csr, Dense};
 use crate::Real;
 
-/// Reusable pruned-retrieval scratch — the WCD vector, candidate order,
-/// CSC view of the target set, per-candidate word supports and the
-/// restricted factor set. Held inside a [`SolveWorkspace`] (its `prune`
+/// Reusable retrieval scratch — the accumulated bound vector, candidate
+/// order, CSC view of the target set, per-stage scratch, the current
+/// candidate's word support and the restricted factor set. Held inside a
+/// [`SolveWorkspace`](crate::sinkhorn::SolveWorkspace) (its `prune`
 /// section), so one workspace serves both the retrieval bookkeeping and
 /// the per-candidate exact sub-solves.
 #[derive(Debug, Default)]
 pub struct PruneScratch {
-    /// Per-document WCD lower bounds.
-    wcd: Vec<Real>,
-    /// Candidate visit order (ascending WCD).
+    /// Accumulated (max-combined) per-document lower bounds.
+    bound: Vec<Real>,
+    /// Surviving candidates, ascending by accumulated bound.
     order: Vec<usize>,
     /// CSC view of `c` (per-document word supports in O(nnz) total).
     pattern: TransposedPattern,
+    /// Bound-stage scratch (LC-RWMD `z` vector and friends).
+    stage: cascade::StageScratch,
     /// Current candidate's word support.
     support: Vec<usize>,
     /// Reusable restricted-factor target for the candidate sub-problems.
     sub_prep: Option<Prepared>,
     /// Recycled backing vectors for the per-candidate sub-problem CSR
-    /// (reclaimed after each solve via [`Csr::into_parts`]).
+    /// (reclaimed after each solve via [`crate::sparse::Csr::into_parts`]).
     sub_row_ptr: Vec<usize>,
     sub_col_idx: Vec<u32>,
     sub_vals: Vec<Real>,
@@ -66,27 +82,43 @@ impl PruneScratch {
                 + p.factors.r.capacity())
                 * size_of::<Real>()
         });
-        self.wcd.capacity() * size_of::<Real>()
+        self.bound.capacity() * size_of::<Real>()
             + (self.order.capacity() + self.support.capacity() + self.sub_row_ptr.capacity())
                 * size_of::<usize>()
             + self.pattern.retained_bytes()
+            + self.stage.retained_bytes()
             + self.sub_col_idx.capacity() * size_of::<u32>()
             + self.sub_vals.capacity() * size_of::<Real>()
             + sub
     }
 }
 
-/// Statistics from one pruned retrieval.
+/// Candidates in/out of one cascade stage (the sinkhorn row reports
+/// exact evaluations as its `candidates_out`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageStats {
+    pub stage: &'static str,
+    pub candidates_in: usize,
+    pub candidates_out: usize,
+}
+
+/// Statistics from one cascade retrieval.
 #[derive(Clone, Debug, Default)]
 pub struct PruneStats {
     pub total_docs: usize,
     /// Documents whose exact WMD was computed.
     pub exact_evals: usize,
-    /// Documents discarded by the RWMD bound.
-    pub pruned_by_rwmd: usize,
+    /// Documents discarded because their accumulated lower bound exceeded
+    /// the k-th best exact distance (stage-budget cuts are visible in
+    /// `stages` instead).
+    pub pruned_by_bound: usize,
+    /// Per-stage candidate flow, in cascade order (bound stages first,
+    /// `"sinkhorn"` last).
+    pub stages: Vec<StageStats>,
 }
 
-/// Result of a pruned k-NN retrieval: the exact top-k plus statistics.
+/// Result of a pruned k-NN retrieval: the top-k plus statistics. Exact
+/// (equal to brute force) whenever the cascade ran unbounded.
 #[derive(Clone, Debug)]
 pub struct PrunedTopK {
     /// `(doc, wmd)` ascending by distance — exact Sinkhorn values.
@@ -97,202 +129,43 @@ pub struct PrunedTopK {
 /// Merge per-shard pruned retrievals into the global top-k. Each part
 /// covers one column slice of the target set and is given as
 /// `(col_offset, PrunedTopK)`: local doc ids are rebased by their shard
-/// offset, the union is re-ranked (`total_cmp`, so a NaN-free sort), and
-/// stats are summed. Every shard must have retrieved at least `k`
-/// candidates (or all of its documents) for the merged top-k to be exact
-/// — the same local-top-k ⊇ global-top-k argument as any distributed
-/// retrieval.
+/// offset, the union is re-ranked (`total_cmp` with index tie-break, so a
+/// NaN-free deterministic sort), and stats are summed stage-wise. Every
+/// shard must have retrieved at least `k` candidates (or all of its
+/// documents) for the merged top-k to be exact — the same
+/// local-top-k ⊇ global-top-k argument as any distributed retrieval.
 pub fn merge_topk(parts: &[(usize, PrunedTopK)], k: usize) -> PrunedTopK {
     let mut top: Vec<(usize, Real)> = parts
         .iter()
         .flat_map(|(off, p)| p.top.iter().map(move |&(j, d)| (off + j, d)))
         .collect();
-    top.sort_by(|a, b| a.1.total_cmp(&b.1));
+    top.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
     top.truncate(k);
     let mut stats = PruneStats::default();
     for (_, p) in parts {
         stats.total_docs += p.stats.total_docs;
         stats.exact_evals += p.stats.exact_evals;
-        stats.pruned_by_rwmd += p.stats.pruned_by_rwmd;
+        stats.pruned_by_bound += p.stats.pruned_by_bound;
+        // Shards run the same cascade, so stage lists align positionally.
+        for (i, st) in p.stats.stages.iter().enumerate() {
+            if i == stats.stages.len() {
+                stats.stages.push(*st);
+            } else {
+                debug_assert_eq!(stats.stages[i].stage, st.stage);
+                stats.stages[i].candidates_in += st.candidates_in;
+                stats.stages[i].candidates_out += st.candidates_out;
+            }
+        }
     }
     PrunedTopK { top, stats }
-}
-
-/// k-NN retrieval with WCD prefetch ordering + RWMD pruning.
-pub struct PrunedRetrieval {
-    solver: SparseSolver,
-    k: usize,
-}
-
-impl PrunedRetrieval {
-    pub fn new(config: SinkhornConfig, k: usize) -> Self {
-        assert!(k >= 1);
-        Self { solver: SparseSolver::new(config), k }
-    }
-
-    /// Exact top-k under the Sinkhorn WMD, evaluating as few documents as
-    /// the bounds allow. `doc_centroids` comes from [`centroids`] (one
-    /// corpus-wide precompute, reused across queries).
-    ///
-    /// Soundness caveat (inherited from Kusner et al.): RWMD lower-bounds
-    /// the *exact* EMD; the Sinkhorn distance upper-bounds it. Pruning on
-    /// `rwmd > current_kth` is exact for EMD and (slightly conservative ⇒
-    /// still safe) for the Sinkhorn distance, because sinkhorn ≥ emd ≥
-    /// rwmd for every document.
-    pub fn retrieve(
-        &self,
-        embeddings: &Dense,
-        query: &SparseVec,
-        c: &Csr,
-        doc_centroids: &Dense,
-        pool: &Pool,
-    ) -> PrunedTopK {
-        self.retrieve_in(&mut SolveWorkspace::new(), embeddings, query, c, doc_centroids, pool)
-    }
-
-    /// [`PrunedRetrieval::retrieve`] with all retrieval scratch — the WCD
-    /// vector, candidate order, CSC view, supports, restricted factors,
-    /// the per-candidate sub-problem CSR (recycled through
-    /// [`Csr::into_parts`]) — and the exact sub-solves borrowing from one
-    /// retained workspace. Once warm, the only per-candidate allocation
-    /// left is each sub-solve's one-element `wmd` output vector.
-    pub fn retrieve_in(
-        &self,
-        ws: &mut SolveWorkspace,
-        embeddings: &Dense,
-        query: &SparseVec,
-        c: &Csr,
-        doc_centroids: &Dense,
-        pool: &Pool,
-    ) -> PrunedTopK {
-        let n = c.ncols();
-        let k = self.k.min(n);
-        let mut stats = PruneStats { total_docs: n, ..Default::default() };
-
-        // The prune section moves out of the workspace for the duration
-        // of the retrieval, so the candidate sub-solves can check the same
-        // workspace out for their own lanes.
-        let mut ps = std::mem::take(&mut ws.prune);
-
-        // Phase 1: WCD ordering (cheap) + one transposed pass over `c`
-        // for per-document word supports (O(nnz) total — scanning rows
-        // per candidate would cost O(N·V) and dwarf the savings).
-        wcd_lower_bound_into(embeddings, query, doc_centroids, pool, &mut ps.wcd);
-        ps.order.clear();
-        ps.order.extend(0..n);
-        {
-            // total_cmp: a NaN distance (poisoned embedding, degenerate
-            // doc) sorts last instead of panicking the whole retrieval.
-            let wcd = &ps.wcd;
-            ps.order.sort_by(|&a, &b| wcd[a].total_cmp(&wcd[b]));
-        }
-        ps.pattern.rebuild_from(c);
-
-        // Phase 2: exact WMD for the k WCD-nearest docs. Each candidate
-        // is solved on a sub-problem restricted to its word support —
-        // zero rows of `c` touch no kernel, and the restriction turns a
-        // per-eval O(V·iters) row walk into O(|supp|·v_r·iters).
-        let prep = self.solver.prepare_in(ws, embeddings, query, pool);
-        let values = c.values();
-        // Sub-problems are a few dozen non-zeros: fork/join barriers would
-        // dominate, so they run on an inline (1-thread) pool regardless of
-        // the caller's parallelism.
-        let serial = Pool::new(1);
-        let solver = &self.solver;
-        let mut top: Vec<(usize, Real)> = Vec::with_capacity(k + 1);
-        let mut eval_exact = |j: usize,
-                              top: &mut Vec<(usize, Real)>,
-                              stats: &mut PruneStats,
-                              ws: &mut SolveWorkspace,
-                              ps: &mut PruneScratch| {
-            let span = ps.pattern.col_ptr[j]..ps.pattern.col_ptr[j + 1];
-            {
-                let (support, pattern) = (&mut ps.support, &ps.pattern);
-                support.clear();
-                support.extend(span.clone().map(|e| pattern.src_row[e] as usize));
-            }
-            // Sub-problem CSR from recycled backing vectors (reclaimed
-            // below via `into_parts`): |supp| rows × 1 column.
-            let m = ps.support.len();
-            {
-                let (vals, pattern) = (&mut ps.sub_vals, &ps.pattern);
-                vals.clear();
-                vals.extend(span.clone().map(|e| values[pattern.src_pos[e] as usize]));
-            }
-            let mut row_ptr = std::mem::take(&mut ps.sub_row_ptr);
-            row_ptr.clear();
-            row_ptr.extend(0..=m);
-            let mut col_idx = std::mem::take(&mut ps.sub_col_idx);
-            col_idx.clear();
-            col_idx.resize(m, 0u32);
-            let sub_c = crate::sparse::Csr::from_parts(
-                m,
-                1,
-                row_ptr,
-                col_idx,
-                std::mem::take(&mut ps.sub_vals),
-            );
-            let sub_prep = ps.sub_prep.get_or_insert_with(Prepared::default);
-            prep.factors.restrict_rows_into(&ps.support, &mut sub_prep.factors);
-            let d = solver.solve_in(ws, sub_prep, &sub_c, &serial).wmd[0];
-            let (_, _, row_ptr, col_idx, vals) = sub_c.into_parts();
-            ps.sub_row_ptr = row_ptr;
-            ps.sub_col_idx = col_idx;
-            ps.sub_vals = vals;
-            stats.exact_evals += 1;
-            // Non-finite distances (empty doc → +inf, NaN embeddings)
-            // never enter the top-k; total_cmp keeps the sort panic-free.
-            if d.is_finite() {
-                top.push((j, d));
-                top.sort_by(|a, b| a.1.total_cmp(&b.1));
-                top.truncate(k);
-            }
-        };
-        // Indexed loops (not iterators) because `ps` must be reborrowed
-        // mutably inside the body for the candidate evaluations.
-        #[allow(clippy::needless_range_loop)]
-        for idx in 0..k {
-            let j = ps.order[idx];
-            eval_exact(j, &mut top, &mut stats, ws, &mut ps);
-        }
-
-        // Phase 3: the rest in WCD order, pruned by max(WCD, RWMD) —
-        // both lower-bound the exact EMD, so their max is a valid (and
-        // tighter) bound; neither dominates pointwise.
-        #[allow(clippy::needless_range_loop)]
-        for idx in k..n {
-            let j = ps.order[idx];
-            // The k-th best bound is only valid once k finite candidates
-            // are in hand (non-finite evaluations don't enter `top`).
-            let kth = if top.len() < k {
-                Real::INFINITY
-            } else {
-                top.last().map(|&(_, d)| d).unwrap_or(Real::INFINITY)
-            };
-            let lb = {
-                let (support, pattern) = (&mut ps.support, &ps.pattern);
-                support.clear();
-                support.extend(
-                    (pattern.col_ptr[j]..pattern.col_ptr[j + 1])
-                        .map(|e| pattern.src_row[e] as usize),
-                );
-                ps.wcd[j].max(rwmd::rwmd_with_support(embeddings, query, &ps.support))
-            };
-            if lb > kth {
-                stats.pruned_by_rwmd += 1;
-                continue;
-            }
-            eval_exact(j, &mut top, &mut stats, ws, &mut ps);
-        }
-        ws.prune = ps;
-        PrunedTopK { top, stats }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::corpus::SyntheticCorpus;
+    use crate::parallel::Pool;
+    use crate::sinkhorn::{SinkhornConfig, SolveWorkspace, SparseSolver};
 
     fn corpus() -> SyntheticCorpus {
         SyntheticCorpus::builder()
@@ -306,34 +179,35 @@ mod tests {
             .build()
     }
 
+    fn tight_config() -> SinkhornConfig {
+        SinkhornConfig { lambda: 20.0, max_iter: 4000, tolerance: 1e-9, ..Default::default() }
+    }
+
     #[test]
-    fn pruned_topk_equals_bruteforce_topk() {
+    fn cascade_topk_equals_bruteforce_topk() {
         let corpus = corpus();
         let pool = Pool::new(2);
-        let config = SinkhornConfig {
-            lambda: 20.0,
-            max_iter: 4000,
-            tolerance: 1e-9,
-            ..Default::default()
-        };
+        let config = tight_config();
         let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
-        let retrieval = PrunedRetrieval::new(config, 5);
-        for q in 0..3 {
-            let query = corpus.query(q);
-            // Brute force.
-            let solver = SparseSolver::new(config);
-            let brute = solver.wmd_one_to_many(&corpus.embeddings, query, &corpus.c, &pool);
-            let brute_top = brute.top_k(5);
-            // Pruned.
-            let pruned =
-                retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool);
-            assert_eq!(pruned.top.len(), 5);
-            for (i, ((ja, da), (jb, db))) in pruned.top.iter().zip(&brute_top).enumerate() {
-                // Distances must agree; doc ids may swap only on exact ties.
-                assert!(
-                    (da - db).abs() < 1e-6 * (1.0 + db.abs()),
-                    "q{q} rank {i}: {ja}:{da} vs {jb}:{db}"
-                );
+        for spec in ["sinkhorn", "wcd,lcrwmd,sinkhorn", "wcd,lcrwmd,rwmd,sinkhorn"] {
+            let retrieval = CascadeRetrieval::new(config, CascadeSpec::parse(spec).unwrap());
+            for q in 0..3 {
+                let query = corpus.query(q);
+                // Brute force.
+                let solver = SparseSolver::new(config);
+                let brute = solver.wmd_one_to_many(&corpus.embeddings, query, &corpus.c, &pool);
+                let brute_top = brute.top_k(5);
+                // Cascade (unbounded budgets ⇒ exact).
+                let pruned =
+                    retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool, 5);
+                assert_eq!(pruned.top.len(), 5);
+                for (i, ((ja, da), (jb, db))) in pruned.top.iter().zip(&brute_top).enumerate() {
+                    // Distances must agree; doc ids may swap only on ties.
+                    assert!(
+                        (da - db).abs() < 1e-6 * (1.0 + db.abs()),
+                        "spec {spec} q{q} rank {i}: {ja}:{da} vs {jb}:{db}"
+                    );
+                }
             }
         }
     }
@@ -341,7 +215,7 @@ mod tests {
     #[test]
     fn nan_distances_do_not_panic_retrieval() {
         // Poison the embedding of a word that appears only on the document
-        // side: the affected documents' WCD/RWMD/WMD all go NaN. Ranking
+        // side: the affected documents' bounds and WMD all go NaN. Ranking
         // must not panic (f64::total_cmp) and NaN documents must never
         // enter the returned top-k.
         let mut corpus = corpus();
@@ -355,8 +229,8 @@ mod tests {
         corpus.embeddings.row_mut(poisoned).fill(f64::NAN);
         let pool = Pool::new(2);
         let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
-        let retrieval = PrunedRetrieval::new(SinkhornConfig::default(), 5);
-        let out = retrieval.retrieve(&corpus.embeddings, &query, &corpus.c, &cents, &pool);
+        let retrieval = CascadeRetrieval::new(SinkhornConfig::default(), CascadeSpec::default());
+        let out = retrieval.retrieve(&corpus.embeddings, &query, &corpus.c, &cents, &pool, 5);
         assert!(!out.top.is_empty(), "finite documents must still rank");
         assert!(out.top.iter().all(|&(_, d)| d.is_finite()));
         for w in out.top.windows(2) {
@@ -365,33 +239,28 @@ mod tests {
     }
 
     #[test]
-    fn sharded_pruned_retrieval_matches_unsharded() {
+    fn sharded_cascade_retrieval_matches_unsharded() {
         // Per-shard retrieval: each shard ranks/prunes its own column
         // slice with its own centroids (centroids of a slice equal the
         // corresponding rows of the full centroid matrix); the merged
         // local top-ks must reproduce the unsharded top-k.
         let corpus = corpus();
         let pool = Pool::new(2);
-        let config = SinkhornConfig {
-            lambda: 20.0,
-            max_iter: 4000,
-            tolerance: 1e-9,
-            ..Default::default()
-        };
+        let config = tight_config();
         let k = 5;
-        let retrieval = PrunedRetrieval::new(config, k);
+        let retrieval = CascadeRetrieval::new(config, CascadeSpec::default());
         let n = corpus.c.ncols();
         let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
         let query = corpus.query(0);
-        let whole = retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool);
+        let whole = retrieval.retrieve(&corpus.embeddings, query, &corpus.c, &cents, &pool, k);
         for cuts in [vec![0, n / 2, n], vec![0, n / 3, 2 * n / 3, n]] {
             let parts: Vec<(usize, PrunedTopK)> = cuts
                 .windows(2)
                 .map(|w| {
                     let slice = corpus.c.slice_columns(w[0]..w[1]);
                     let slice_cents = centroids(&corpus.embeddings, &slice, &pool);
-                    let local =
-                        retrieval.retrieve(&corpus.embeddings, query, &slice, &slice_cents, &pool);
+                    let local = retrieval
+                        .retrieve(&corpus.embeddings, query, &slice, &slice_cents, &pool, k);
                     (w[0], local)
                 })
                 .collect();
@@ -414,18 +283,14 @@ mod tests {
         // distances and pruning decisions alike.
         let corpus = corpus();
         let pool = Pool::new(2);
-        let config = SinkhornConfig {
-            lambda: 20.0,
-            max_iter: 2000,
-            tolerance: 1e-8,
-            ..Default::default()
-        };
+        let config =
+            SinkhornConfig { lambda: 20.0, max_iter: 2000, tolerance: 1e-8, ..Default::default() };
         let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
-        let retrieval = PrunedRetrieval::new(config, 4);
+        let retrieval = CascadeRetrieval::new(config, CascadeSpec::default());
         let mut ws = SolveWorkspace::new();
         for q in [0usize, 1, 0] {
-            let fresh =
-                retrieval.retrieve(&corpus.embeddings, corpus.query(q), &corpus.c, &cents, &pool);
+            let fresh = retrieval
+                .retrieve(&corpus.embeddings, corpus.query(q), &corpus.c, &cents, &pool, 4);
             let reused = retrieval.retrieve_in(
                 &mut ws,
                 &corpus.embeddings,
@@ -433,10 +298,12 @@ mod tests {
                 &corpus.c,
                 &cents,
                 &pool,
+                4,
             );
             assert_eq!(fresh.top, reused.top, "q={q}: reused workspace changed the top-k");
             assert_eq!(fresh.stats.exact_evals, reused.stats.exact_evals, "q={q}");
-            assert_eq!(fresh.stats.pruned_by_rwmd, reused.stats.pruned_by_rwmd, "q={q}");
+            assert_eq!(fresh.stats.pruned_by_bound, reused.stats.pruned_by_bound, "q={q}");
+            assert_eq!(fresh.stats.stages, reused.stats.stages, "q={q}");
         }
         let stats = ws.stats();
         assert!(stats.checkouts > 0, "sub-solves must check the workspace out");
@@ -444,27 +311,26 @@ mod tests {
     }
 
     #[test]
-    fn pruning_actually_prunes() {
+    fn pruning_actually_prunes_and_stage_flow_balances() {
         let corpus = corpus();
         let pool = Pool::new(2);
-        let config = SinkhornConfig {
-            lambda: 20.0,
-            max_iter: 2000,
-            tolerance: 1e-8,
-            ..Default::default()
-        };
+        let config =
+            SinkhornConfig { lambda: 20.0, max_iter: 2000, tolerance: 1e-8, ..Default::default() };
         let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
-        let retrieval = PrunedRetrieval::new(config, 3);
-        let out = retrieval.retrieve(&corpus.embeddings, corpus.query(0), &corpus.c, &cents, &pool);
+        let retrieval = CascadeRetrieval::new(config, CascadeSpec::default());
+        let out =
+            retrieval.retrieve(&corpus.embeddings, corpus.query(0), &corpus.c, &cents, &pool, 3);
         assert_eq!(out.stats.total_docs, 60);
-        assert!(
-            out.stats.pruned_by_rwmd > 0,
-            "no documents pruned: {:?}",
-            out.stats
-        );
-        assert_eq!(
-            out.stats.exact_evals + out.stats.pruned_by_rwmd,
-            out.stats.total_docs
-        );
+        assert!(out.stats.pruned_by_bound > 0, "no documents pruned: {:?}", out.stats);
+        // Unbounded budgets: every stage passes all candidates through;
+        // the sinkhorn stage accounts for every survivor.
+        assert_eq!(out.stats.stages.len(), 3);
+        for st in &out.stats.stages {
+            assert_eq!(st.candidates_in, 60, "{st:?}");
+        }
+        let sink = out.stats.stages.last().unwrap();
+        assert_eq!(sink.stage, "sinkhorn");
+        assert_eq!(sink.candidates_out, out.stats.exact_evals);
+        assert_eq!(out.stats.exact_evals + out.stats.pruned_by_bound, out.stats.total_docs);
     }
 }

@@ -1,0 +1,263 @@
+//! Recall@k harness: measure the cascade's speed/quality trade as a
+//! number instead of a guess.
+//!
+//! The reference ranking is the **no-prune cascade** (`"sinkhorn"` alone)
+//! — every document evaluated exactly through the same per-candidate
+//! sub-solve machinery the budgeted cascades use, so an unbounded cascade
+//! reproduces it *identically* (recall@k = 1.0 by construction, the CI
+//! smoke gate) and any recall loss is purely a budget effect, never
+//! solver noise. Speedup is wall-clock of the reference pass over the
+//! cascade pass, both through one retained workspace after a warm-up
+//! query.
+
+use crate::corpus::SparseVec;
+use crate::parallel::Pool;
+use crate::sinkhorn::{SinkhornConfig, SolveWorkspace};
+use crate::sparse::ops::TransposedPattern;
+use crate::sparse::{Csr, Dense};
+use crate::util::json::{obj, Json};
+use crate::Real;
+use std::time::Instant;
+
+use super::{centroids, CascadeRetrieval, CascadeSpec, PrunedTopK};
+
+/// One measured (cascade spec, k) setting.
+#[derive(Clone, Debug)]
+pub struct RecallRow {
+    /// Rendered cascade spec, e.g. `"wcd:200,lcrwmd:50,sinkhorn"`.
+    pub spec: String,
+    pub k: usize,
+    pub queries: usize,
+    /// Mean over queries of |cascade top-k ∩ exact top-k| / |exact top-k|.
+    pub recall: f64,
+    /// `exact_ms / cascade_ms` — > 1 means the cascade is faster than
+    /// evaluating every document exactly.
+    pub speedup: f64,
+    pub cascade_ms: f64,
+    pub exact_ms: f64,
+    /// Exact Sinkhorn evaluations across all queries (vs
+    /// `total_docs` = documents × queries for the no-prune reference).
+    pub exact_evals: usize,
+    pub total_docs: usize,
+}
+
+/// Run every spec over every query and score against the exact top-k.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_recall(
+    embeddings: &Dense,
+    c: &Csr,
+    queries: &[SparseVec],
+    config: SinkhornConfig,
+    k: usize,
+    specs: &[CascadeSpec],
+    pool: &Pool,
+) -> Vec<RecallRow> {
+    assert!(!queries.is_empty(), "recall evaluation needs at least one query");
+    assert!(k >= 1);
+    let cents = centroids(embeddings, c, pool);
+    let exact = CascadeRetrieval::new(config, CascadeSpec::parse("sinkhorn").unwrap());
+    let mut ws = SolveWorkspace::new();
+    // Warm-up (grow the workspace once), then the timed pass.
+    let _ = exact.retrieve_in(&mut ws, embeddings, &queries[0], c, &cents, pool, k);
+    let started = Instant::now();
+    let reference: Vec<PrunedTopK> = queries
+        .iter()
+        .map(|q| exact.retrieve_in(&mut ws, embeddings, q, c, &cents, pool, k))
+        .collect();
+    let exact_ms = started.elapsed().as_secs_f64() * 1e3;
+
+    specs
+        .iter()
+        .map(|spec| {
+            let retrieval = CascadeRetrieval::new(config, spec.clone());
+            let _ = retrieval.retrieve_in(&mut ws, embeddings, &queries[0], c, &cents, pool, k);
+            let started = Instant::now();
+            let outs: Vec<PrunedTopK> = queries
+                .iter()
+                .map(|q| retrieval.retrieve_in(&mut ws, embeddings, q, c, &cents, pool, k))
+                .collect();
+            let cascade_ms = started.elapsed().as_secs_f64() * 1e3;
+            let mut recall_sum = 0.0;
+            let mut exact_evals = 0;
+            let mut total_docs = 0;
+            for (out, exact) in outs.iter().zip(&reference) {
+                exact_evals += out.stats.exact_evals;
+                total_docs += out.stats.total_docs;
+                if exact.top.is_empty() {
+                    recall_sum += 1.0;
+                } else {
+                    let hits = out
+                        .top
+                        .iter()
+                        .filter(|(j, _)| exact.top.iter().any(|&(je, _)| je == *j))
+                        .count();
+                    recall_sum += hits as f64 / exact.top.len() as f64;
+                }
+            }
+            RecallRow {
+                spec: spec.render(),
+                k,
+                queries: queries.len(),
+                recall: recall_sum / queries.len() as f64,
+                speedup: exact_ms / cascade_ms.max(1e-9),
+                cascade_ms,
+                exact_ms,
+                exact_evals,
+                total_docs,
+            }
+        })
+        .collect()
+}
+
+/// Synthesize queries from document histograms — the fallback when a
+/// corpus ships no query set (ingested snapshots): up to `limit`
+/// non-empty documents, strided across the corpus so topical clusters
+/// are all represented. Column spans of the CSC view are row-ascending,
+/// so the resulting histograms are valid `SparseVec`s; mass is
+/// re-normalized to 1.
+pub fn queries_from_docs(c: &Csr, limit: usize) -> Vec<SparseVec> {
+    let pattern = TransposedPattern::build(c);
+    let values = c.values();
+    let n = c.ncols();
+    let step = (n / limit.max(1)).max(1);
+    let mut out = Vec::new();
+    let mut j = 0;
+    while j < n && out.len() < limit {
+        let span = pattern.col_ptr[j]..pattern.col_ptr[j + 1];
+        let total: Real =
+            span.clone().map(|e| values[pattern.src_pos[e] as usize]).sum();
+        if !span.is_empty() && total > 0.0 && total.is_finite() {
+            out.push(SparseVec {
+                dim: c.nrows(),
+                idx: span.clone().map(|e| pattern.src_row[e]).collect(),
+                val: span.map(|e| values[pattern.src_pos[e] as usize] / total).collect(),
+            });
+        }
+        j += step;
+    }
+    out
+}
+
+/// The rows as a JSON array — one `BENCH_prune.json` entry per harness
+/// run, written through [`crate::bench::merge_bench_json`].
+pub fn rows_json(rows: &[RecallRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj([
+                    ("spec", Json::Str(r.spec.clone())),
+                    ("k", Json::Num(r.k as f64)),
+                    ("queries", Json::Num(r.queries as f64)),
+                    ("recall", Json::Num(r.recall)),
+                    ("speedup", Json::Num(r.speedup)),
+                    ("cascade_ms", Json::Num(r.cascade_ms)),
+                    ("exact_ms", Json::Num(r.exact_ms)),
+                    ("exact_evals", Json::Num(r.exact_evals as f64)),
+                    ("total_docs", Json::Num(r.total_docs as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{docs_to_csr, SyntheticCorpus};
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::builder()
+            .vocab_size(400)
+            .num_docs(50)
+            .embedding_dim(12)
+            .n_topics(4)
+            .num_queries(3)
+            .query_words(5, 9)
+            .seed(404)
+            .build()
+    }
+
+    #[test]
+    fn unbounded_cascades_have_perfect_recall() {
+        let corpus = corpus();
+        let pool = Pool::new(2);
+        let specs = [
+            CascadeSpec::default(),
+            CascadeSpec::parse("wcd,lcrwmd,rwmd,sinkhorn").unwrap(),
+            CascadeSpec::parse("wcd,rwmd,sinkhorn").unwrap(),
+        ];
+        let rows = evaluate_recall(
+            &corpus.embeddings,
+            &corpus.c,
+            &corpus.queries,
+            SinkhornConfig::default(),
+            5,
+            &specs,
+            &pool,
+        );
+        for r in &rows {
+            assert_eq!(r.recall, 1.0, "unbounded `{}` must be exact: {r:?}", r.spec);
+            assert_eq!(r.total_docs, 50 * 3);
+            assert!(r.cascade_ms > 0.0 && r.exact_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn budgets_cap_exact_evals_and_recall_stays_a_fraction() {
+        let corpus = corpus();
+        let pool = Pool::new(2);
+        let specs = [CascadeSpec::parse("wcd:8,sinkhorn").unwrap()];
+        let rows = evaluate_recall(
+            &corpus.embeddings,
+            &corpus.c,
+            &corpus.queries,
+            SinkhornConfig::default(),
+            5,
+            &specs,
+            &pool,
+        );
+        let r = &rows[0];
+        assert!(r.exact_evals <= 8 * 3, "budget 8 × 3 queries: {r:?}");
+        assert!((0.0..=1.0).contains(&r.recall), "{r:?}");
+    }
+
+    #[test]
+    fn queries_from_docs_skips_empty_and_normalizes() {
+        let mut docs = vec![SparseVec::empty(40)];
+        docs.push(SparseVec::from_counts(40, &[(3, 2), (7, 1)]));
+        docs.push(SparseVec::from_counts(40, &[(1, 1), (9, 4)]));
+        let c = docs_to_csr(40, &docs);
+        let qs = queries_from_docs(&c, 8);
+        assert_eq!(qs.len(), 2, "the empty document must be skipped");
+        for q in &qs {
+            assert_eq!(q.dim, 40);
+            let mass: Real = q.val.iter().sum();
+            assert!((mass - 1.0).abs() < 1e-12);
+            for w in q.idx.windows(2) {
+                assert!(w[0] < w[1], "indices must be ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_serialize_to_json() {
+        let rows = vec![RecallRow {
+            spec: "wcd,lcrwmd,sinkhorn".into(),
+            k: 10,
+            queries: 4,
+            recall: 1.0,
+            speedup: 3.5,
+            cascade_ms: 10.0,
+            exact_ms: 35.0,
+            exact_evals: 64,
+            total_docs: 200,
+        }];
+        let json = rows_json(&rows);
+        let text = json.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get_str("spec"), Some("wcd,lcrwmd,sinkhorn"));
+        assert_eq!(row.get("recall").unwrap().as_f64(), Some(1.0));
+        assert_eq!(row.get("exact_evals").unwrap().as_usize(), Some(64));
+    }
+}

@@ -6,38 +6,75 @@
 //!
 //! (Any feasible plan moves `r_k` mass from word `k` at per-unit cost at
 //! least the minimum distance, so the relaxation lower-bounds every plan.)
+//!
+//! Document supports come from the CSC view of the target set
+//! ([`TransposedPattern`]): column `j`'s entries are one contiguous span,
+//! so per-document support discovery is O(|supp(c_j)|) — batching callers
+//! build the pattern once (O(nnz)) and amortize it over every document.
 
 use crate::corpus::SparseVec;
-use crate::sparse::{Csr, Dense};
+use crate::sparse::ops::TransposedPattern;
+use crate::sparse::Dense;
 use crate::Real;
 
 /// RWMD of `query` against target document `j` (column of `c`).
-/// Cost: `O(|supp(c_j)| · v_r · w)` — used inside the pruned retrieval
-/// loop only for candidates that survive the WCD ordering.
-pub fn rwmd_lower_bound(embeddings: &Dense, query: &SparseVec, c: &Csr, j: usize) -> Real {
-    // Collect the support of column j. `c` is CSR by vocab rows; for the
-    // retrieval loop we fetch via the transposed scan of the column —
-    // acceptable because callers batch by document.
-    let mut support: Vec<usize> = Vec::new();
-    for (row, cols_vals) in (0..c.nrows()).map(|r| (r, c.row(r))) {
-        let (cols, _) = cols_vals;
-        if cols.binary_search(&(j as u32)).is_ok() {
-            support.push(row);
-        }
-    }
-    rwmd_with_support(embeddings, query, &support)
+///
+/// Convenience entry point: builds the CSC view of `c` for one document
+/// (O(nnz)). Callers scoring many documents should build the
+/// [`TransposedPattern`] once and call [`rwmd_from_pattern`] per document
+/// — that is what the retrieval cascade's RWMD stage does.
+pub fn rwmd_lower_bound(
+    embeddings: &Dense,
+    query: &SparseVec,
+    c: &crate::sparse::Csr,
+    j: usize,
+) -> Real {
+    let pattern = TransposedPattern::build(c);
+    rwmd_from_pattern(embeddings, query, &pattern, j)
 }
 
-/// RWMD given the target document's word support (preferred entry point:
-/// the retrieval pipeline precomputes supports from the CSC view).
+/// RWMD of `query` against document `j`, reading the support directly out
+/// of a prebuilt CSC view — O(|supp(c_j)| · v_r · w), no per-call support
+/// materialization.
+pub fn rwmd_from_pattern(
+    embeddings: &Dense,
+    query: &SparseVec,
+    pattern: &TransposedPattern,
+    j: usize,
+) -> Real {
+    let span = pattern.col_ptr[j]..pattern.col_ptr[j + 1];
+    if span.is_empty() {
+        // Empty target document: WMD is +inf (no feasible transport), so
+        // the lower bound is too — it never wins an argmin and never
+        // triggers an exact evaluation.
+        return Real::INFINITY;
+    }
+    rwmd_over(embeddings, query, span.map(|e| pattern.src_row[e] as usize))
+}
+
+/// RWMD given the target document's word support (preferred entry point
+/// when the caller already holds supports). An empty support means an
+/// empty document: the bound is `+inf`, matching the empty-doc semantics
+/// of the exact solver (empty columns score `+inf`, never win argmin).
 pub fn rwmd_with_support(embeddings: &Dense, query: &SparseVec, support: &[usize]) -> Real {
-    assert!(!support.is_empty(), "empty target document");
+    if support.is_empty() {
+        return Real::INFINITY;
+    }
+    rwmd_over(embeddings, query, support.iter().copied())
+}
+
+/// The shared kernel: Σ_k r_k · min over the (non-empty) row iterator of
+/// ‖e_k − e_i‖.
+fn rwmd_over<I>(embeddings: &Dense, query: &SparseVec, rows: I) -> Real
+where
+    I: Iterator<Item = usize> + Clone,
+{
     let w = embeddings.ncols();
     let mut total = 0.0;
     for (&k, &mass) in query.idx.iter().zip(&query.val) {
         let qe = embeddings.row(k as usize);
         let mut best = Real::INFINITY;
-        for &i in support {
+        for i in rows.clone() {
             let ye = embeddings.row(i);
             let mut acc = 0.0;
             for d in 0..w {
@@ -69,14 +106,57 @@ mod tests {
             .query_words(4, 8)
             .seed(5)
             .build();
+        let pattern = TransposedPattern::build(&corpus.c);
         for q in &corpus.queries {
             for (j, doc) in corpus.docs.iter().enumerate() {
                 let exact = exact_wmd(&corpus.embeddings, q, doc);
-                let lb = rwmd_lower_bound(&corpus.embeddings, q, &corpus.c, j);
+                let lb = rwmd_from_pattern(&corpus.embeddings, q, &pattern, j);
                 assert!(lb <= exact + 1e-9, "RWMD {lb} > exact {exact} (doc {j})");
                 assert!(lb >= 0.0);
             }
         }
+    }
+
+    #[test]
+    fn one_shot_entry_point_matches_pattern_entry_point() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(120)
+            .num_docs(8)
+            .embedding_dim(8)
+            .num_queries(1)
+            .query_words(4, 6)
+            .seed(17)
+            .build();
+        let pattern = TransposedPattern::build(&corpus.c);
+        let q = corpus.query(0);
+        for j in 0..corpus.c.ncols() {
+            let a = rwmd_lower_bound(&corpus.embeddings, q, &corpus.c, j);
+            let b = rwmd_from_pattern(&corpus.embeddings, q, &pattern, j);
+            assert_eq!(a, b, "doc {j}: one-shot and pattern entry points disagree");
+        }
+    }
+
+    #[test]
+    fn empty_support_scores_plus_infinity_not_panic() {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(60)
+            .num_docs(3)
+            .embedding_dim(6)
+            .num_queries(1)
+            .query_words(3, 3)
+            .seed(9)
+            .build();
+        let q = corpus.query(0);
+        // Empty support = empty document: +inf, matching the solver's
+        // empty-column semantics (never wins argmin, never crashes).
+        assert_eq!(rwmd_with_support(&corpus.embeddings, q, &[]), Real::INFINITY);
+        // Same through the pattern path: an all-zero column.
+        let doc = crate::corpus::SparseVec::empty(60);
+        let full = crate::corpus::SparseVec::from_counts(60, &[(1, 2), (4, 1)]);
+        let c = crate::corpus::docs_to_csr(60, &[full, doc]);
+        let pattern = TransposedPattern::build(&c);
+        assert_eq!(rwmd_from_pattern(&corpus.embeddings, q, &pattern, 1), Real::INFINITY);
+        assert!(rwmd_from_pattern(&corpus.embeddings, q, &pattern, 0).is_finite());
     }
 
     #[test]
@@ -103,9 +183,9 @@ mod tests {
         // Neither bound dominates pointwise (on topic-clustered synthetic
         // corpora WCD is often the tighter one — centroids separate well
         // while every doc contains a few near words). The retrieval
-        // pipeline therefore prunes on max(WCD, RWMD); verify that the
-        // combined bound stays below the exact WMD and improves on each
-        // component somewhere.
+        // cascade therefore max-combines the per-stage bounds; verify that
+        // the combined bound stays below the exact WMD and improves on
+        // each component somewhere.
         let corpus = SyntheticCorpus::builder()
             .vocab_size(300)
             .num_docs(30)
@@ -118,10 +198,11 @@ mod tests {
         let cents = super::super::wcd::centroids(&corpus.embeddings, &corpus.c, &pool);
         let q = corpus.query(0);
         let wcd = super::super::wcd::wcd_lower_bound(&corpus.embeddings, q, &cents, &pool);
+        let pattern = TransposedPattern::build(&corpus.c);
         let mut rwmd_beats_wcd = 0usize;
         let mut wcd_beats_rwmd = 0usize;
         for (j, doc) in corpus.docs.iter().enumerate() {
-            let rw = rwmd_lower_bound(&corpus.embeddings, q, &corpus.c, j);
+            let rw = rwmd_from_pattern(&corpus.embeddings, q, &pattern, j);
             let combined = rw.max(wcd[j]);
             let exact = exact_wmd(&corpus.embeddings, q, doc);
             assert!(combined <= exact + 1e-9, "combined bound {combined} > exact {exact}");

@@ -63,7 +63,7 @@ impl WorkspaceStats {
 /// The arena. Construct once per long-lived solving thread with
 /// [`SolveWorkspace::new`] and pass to the `*_in` solver entry points
 /// (`SparseSolver::{solve_in, solve_batch_in, prepare_in}`,
-/// `DenseSolver::solve_prepared_in`, `PrunedRetrieval::retrieve_in`).
+/// `DenseSolver::solve_prepared_in`, `CascadeRetrieval::retrieve_in`).
 #[derive(Debug, Default)]
 pub struct SolveWorkspace {
     /// Per-query iterate planes, one lane per batch slot: `x` (transposed),

@@ -1,0 +1,155 @@
+//! Integration tests for the staged bound cascade: bound ordering
+//! against the exact EMD, shard-vs-monolithic equivalence through the
+//! query service, and recall@k == 1.0 at unbounded budgets.
+
+use sinkhorn_wmd::coordinator::{DocStore, QueryRequest, ServiceConfig, WmdService};
+use sinkhorn_wmd::corpus::{SparseVec, SyntheticCorpus};
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::prune::{
+    centroids, evaluate_recall, lcrwmd_lower_bounds, rwmd_lower_bound, wcd_lower_bound,
+    CascadeSpec,
+};
+use sinkhorn_wmd::sinkhorn::SinkhornConfig;
+use sinkhorn_wmd::sparse::ops::TransposedPattern;
+use sinkhorn_wmd::Real;
+use std::sync::Arc;
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(500)
+        .num_docs(48)
+        .embedding_dim(12)
+        .n_topics(4)
+        .num_queries(3)
+        .query_words(5, 10)
+        .seed(777)
+        .build()
+}
+
+/// Column `j` of the target CSR as a standalone histogram.
+fn doc_histogram(c: &sinkhorn_wmd::sparse::Csr, pattern: &TransposedPattern, j: usize) -> SparseVec {
+    let values = c.values();
+    let span = pattern.col_ptr[j]..pattern.col_ptr[j + 1];
+    SparseVec {
+        dim: c.nrows(),
+        idx: span.clone().map(|e| pattern.src_row[e]).collect(),
+        val: span.map(|e| values[pattern.src_pos[e] as usize]).collect(),
+    }
+}
+
+#[test]
+fn accumulated_stage_bounds_stay_below_exact_emd() {
+    // The cascade max-combines per-stage bounds. Validity requires every
+    // accumulated bound — max(wcd), max(wcd, lcrwmd), max(wcd, lcrwmd,
+    // rwmd) — to lower-bound the exact EMD; accumulation is monotone by
+    // construction, so the load-bearing check is `accumulated ≤ exact`
+    // after every stage.
+    let corpus = corpus();
+    let pool = Pool::new(2);
+    let cents = centroids(&corpus.embeddings, &corpus.c, &pool);
+    let pattern = TransposedPattern::build(&corpus.c);
+    let tol = 1e-9;
+    for q in 0..3 {
+        let query = corpus.query(q);
+        let wcd = wcd_lower_bound(&corpus.embeddings, query, &cents, &pool);
+        let lc = lcrwmd_lower_bounds(&corpus.embeddings, query, &corpus.c, &pool);
+        for j in 0..corpus.c.ncols() {
+            let doc = doc_histogram(&corpus.c, &pattern, j);
+            if doc.idx.is_empty() {
+                assert_eq!(lc[j], Real::INFINITY, "empty doc must bound at +inf");
+                continue;
+            }
+            let exact = sinkhorn_wmd::emd::exact_wmd(&corpus.embeddings, query, &doc);
+            let rw = rwmd_lower_bound(&corpus.embeddings, query, &corpus.c, j);
+            let acc1 = wcd[j];
+            let acc2 = acc1.max(lc[j]);
+            let acc3 = acc2.max(rw);
+            assert!(acc1 <= acc2 && acc2 <= acc3, "accumulation must tighten monotonically");
+            for (stage, acc) in [("wcd", acc1), ("+lcrwmd", acc2), ("+rwmd", acc3)] {
+                assert!(
+                    acc <= exact + tol * (1.0 + exact.abs()),
+                    "q{q} doc{j} {stage}: accumulated bound {acc} exceeds exact EMD {exact}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn raw_bounds_individually_lower_bound_exact_emd() {
+    let corpus = corpus();
+    let pool = Pool::new(2);
+    let pattern = TransposedPattern::build(&corpus.c);
+    let query = corpus.query(0);
+    let lc = lcrwmd_lower_bounds(&corpus.embeddings, query, &corpus.c, &pool);
+    for j in 0..corpus.c.ncols() {
+        let doc = doc_histogram(&corpus.c, &pattern, j);
+        if doc.idx.is_empty() {
+            continue;
+        }
+        let exact = sinkhorn_wmd::emd::exact_wmd(&corpus.embeddings, query, &doc);
+        let rw = rwmd_lower_bound(&corpus.embeddings, query, &corpus.c, j);
+        assert!(lc[j] <= exact + 1e-9 * (1.0 + exact.abs()), "doc{j}: lcrwmd {} > {exact}", lc[j]);
+        assert!(rw <= exact + 1e-9 * (1.0 + exact.abs()), "doc{j}: rwmd {rw} > {exact}");
+    }
+}
+
+#[test]
+fn sharded_service_top_k_equals_monolithic_for_one_two_three_shards() {
+    let corpus = corpus();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    // One thread everywhere + unbounded budgets: the merged shard-local
+    // top-ks must reproduce the monolithic answer exactly.
+    let mk = |shards: usize| {
+        WmdService::start(
+            Arc::clone(&store),
+            ServiceConfig { threads: 1, shards, shard_threads: 1, ..Default::default() },
+            None,
+        )
+    };
+    let mono = mk(1);
+    for shards in [2usize, 3] {
+        let svc = mk(shards);
+        for q in 0..3 {
+            let a = mono.submit_wait(QueryRequest::top_k(corpus.query(q).clone(), 6));
+            let b = svc.submit_wait(QueryRequest::top_k(corpus.query(q).clone(), 6));
+            assert!(a.is_ok() && b.is_ok(), "{:?} / {:?}", a.error, b.error);
+            assert_eq!(a.top.len(), 6);
+            assert_eq!(a.top, b.top, "q{q}: {shards}-shard cascade diverged");
+        }
+        let snap = svc.metrics().snapshot();
+        assert_eq!(snap.cascade_queries, 3);
+        assert_eq!(snap.cascade_wcd_in as usize, 3 * corpus.c.ncols());
+        svc.shutdown();
+    }
+    mono.shutdown();
+}
+
+#[test]
+fn recall_at_k_is_one_for_every_unbounded_cascade() {
+    let corpus = corpus();
+    let pool = Pool::new(2);
+    let specs = [
+        CascadeSpec::parse("wcd,sinkhorn").unwrap(),
+        CascadeSpec::parse("wcd,lcrwmd,sinkhorn").unwrap(),
+        CascadeSpec::parse("wcd,lcrwmd,rwmd,sinkhorn").unwrap(),
+        CascadeSpec::parse("lcrwmd,sinkhorn").unwrap(),
+    ];
+    let rows = evaluate_recall(
+        &corpus.embeddings,
+        &corpus.c,
+        &corpus.queries,
+        SinkhornConfig::default(),
+        10,
+        &specs,
+        &pool,
+    );
+    assert_eq!(rows.len(), specs.len());
+    for r in &rows {
+        assert_eq!(r.recall, 1.0, "unbounded `{}` must be exact: {r:?}", r.spec);
+        assert!(
+            r.exact_evals <= r.total_docs,
+            "bounds can only reduce exact evaluations: {r:?}"
+        );
+    }
+}
