@@ -76,7 +76,7 @@ fn phase_a() {
             .iter()
             .zip(&pjrt.wmd)
             .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
-            .fold(0.0f64, f64::max);
+            .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
         // ε-padding transient at 15 iterations explains small deviations
         // for non-bucket-exact queries; bucket-exact ones match to 1e-9.
         let verdict = if max_rel < 1e-9 {

@@ -87,7 +87,8 @@ fn main() {
             .enumerate()
             .map(|(j, d)| (j, bow_cosine(query, d)))
             .collect();
-        sims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // NaN-safe descending sort (a NaN cosine must not panic the demo).
+        sims.sort_by(|a, b| b.1.total_cmp(&a.1));
         let votes: Vec<u32> = sims[..k].iter().map(|&(j, _)| corpus.doc_topics[j]).collect();
         if majority_vote(&votes) == truth {
             bow_correct += 1;

@@ -1,0 +1,52 @@
+//! Repo-specific lint gate: `cargo run --bin lint-rules [-- --self-test]`.
+//!
+//! Scans the crate sources, tests, benches, the `xla` stub crate, and the
+//! top-level examples for violations of the conventions in
+//! [`sinkhorn_wmd::testing::lint`] (NaN-unsafe comparisons on score paths,
+//! `unsafe` outside the audited module list, missing safety paperwork).
+//! Exits non-zero on any violation, so CI can gate on it.
+//!
+//! `--self-test` first seeds one violation per rule through the scanner and
+//! fails loudly if any rule does NOT fire — proving a green tree scan means
+//! "no violations", not "scanner broke".
+
+use sinkhorn_wmd::testing::lint;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let self_test = std::env::args().any(|a| a == "--self-test");
+    if self_test {
+        match lint::self_test() {
+            Ok(caught) => {
+                println!("self-test: all {} rules fired on seeded violations:", caught.len());
+                for v in &caught {
+                    println!("  caught {v}");
+                }
+            }
+            Err(why) => {
+                eprintln!("lint-rules self-test FAILED: {why}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = match lint::lint_tree(manifest, lint::DEFAULT_ROOTS) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("lint-rules: scan failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!("lint-rules: tree clean ({} roots scanned)", lint::DEFAULT_ROOTS.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lint-rules: {} violation(s):", violations.len());
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        ExitCode::FAILURE
+    }
+}

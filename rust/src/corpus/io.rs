@@ -367,9 +367,16 @@ fn read_v2_body(r: &mut impl Read) -> io::Result<Corpus> {
 pub fn load_corpus_any(path: &Path) -> io::Result<Corpus> {
     let file = std::fs::File::open(path)?;
     let mut r = io::BufReader::new(file);
-    match read_header(&mut r)? {
-        VERSION => Ok(read_v1_body(&mut r)?.into_corpus()),
-        VERSION_V2 => read_v2_body(&mut r),
+    read_corpus_any(&mut r)
+}
+
+/// Reader-based form of [`load_corpus_any`]: parse a WMDC snapshot from any
+/// byte stream. This is the entry point the structured fuzzer
+/// (`testing::fuzz`) drives with corrupted in-memory snapshots.
+pub fn read_corpus_any(r: &mut impl Read) -> io::Result<Corpus> {
+    match read_header(r)? {
+        VERSION => Ok(read_v1_body(r)?.into_corpus()),
+        VERSION_V2 => read_v2_body(r),
         v => Err(io::Error::new(
             io::ErrorKind::InvalidData,
             format!("unsupported WMDC version {v}"),

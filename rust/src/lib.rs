@@ -17,6 +17,16 @@
 //! * **L1** — Pallas kernels for the compute hot-spots
 //!   (`python/compile/kernels/`), lowered into the same HLO artifacts.
 //!
+//! ## Unsafe policy
+//!
+//! Every `unsafe` block lives in one of the audited modules listed in
+//! [`testing::lint::UNSAFE_AUDITED`], carries a `SAFETY:` comment, and every
+//! `unsafe fn` documents its contract under a `# Safety` heading. The
+//! `strict-checks` cargo feature turns the honor-system partition contract of
+//! [`util::SharedSlice`] into a runtime-verified one (see
+//! `README.md` § Correctness tooling), and `cargo run --bin lint-rules`
+//! enforces the policy mechanically in CI.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -36,6 +46,7 @@
 //! let wmd = solver.solve(&prep, &corpus.c, &pool);
 //! println!("closest doc: {:?}", wmd.argmin());
 //! ```
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod cli;

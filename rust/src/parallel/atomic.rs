@@ -11,11 +11,13 @@ pub struct AtomicF64Slice<'a> {
 
 impl<'a> AtomicF64Slice<'a> {
     /// Reinterpret `&mut [f64]` as `&[AtomicU64]`.
-    ///
-    /// Sound because the mutable borrow guarantees exclusive provenance,
-    /// `f64` and `AtomicU64` have identical size/alignment, and all writes
-    /// during the borrow go through atomic operations.
     pub fn new(data: &'a mut [f64]) -> Self {
+        // SAFETY: the mutable borrow guarantees exclusive write provenance
+        // for the borrow's lifetime; `f64` and `AtomicU64` have identical
+        // size/alignment (both 8/8); and a shared reference to an
+        // interior-mutable type may write through provenance derived from
+        // `as_mut_ptr` (the `as *const` cast changes only the type, not the
+        // provenance). All writes during the borrow go through atomic ops.
         let cells = unsafe {
             std::slice::from_raw_parts(data.as_mut_ptr() as *const AtomicU64, data.len())
         };
@@ -64,7 +66,10 @@ mod tests {
         let mut data = vec![0.0f64; 16];
         let view = AtomicF64Slice::new(&mut data);
         let pool = Pool::new(8);
+        #[cfg(not(miri))]
         let per_thread = 10_000;
+        #[cfg(miri)]
+        let per_thread = 256;
         pool.run(|_tid, _nt| {
             for k in 0..per_thread {
                 view.fetch_add(k % 16, 1.0);

@@ -25,6 +25,9 @@ struct JobSlot {
     region: Option<Region>,
     /// Workers still running the current region.
     pending: usize,
+    /// First worker panic message of the current region, re-raised on the
+    /// submitting thread after the join barrier.
+    panic_msg: Option<String>,
     shutdown: bool,
 }
 
@@ -51,7 +54,13 @@ impl Pool {
     pub fn new(nthreads: usize) -> Self {
         assert!(nthreads >= 1, "pool needs at least one thread");
         let shared = Arc::new(Shared {
-            job: Mutex::new(JobSlot { epoch: 0, region: None, pending: 0, shutdown: false }),
+            job: Mutex::new(JobSlot {
+                epoch: 0,
+                region: None,
+                pending: 0,
+                panic_msg: None,
+                shutdown: false,
+            }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
         });
@@ -77,17 +86,25 @@ impl Pool {
     /// Execute an SPMD region: `f(tid, nthreads)` runs once on every
     /// thread, and `run` returns after all have finished (implicit
     /// barrier, like the end of an OpenMP parallel region).
+    ///
+    /// A panic on any lane (worker or caller) still drains the barrier —
+    /// the region closure lives on this stack frame, so unwinding past the
+    /// barrier while workers hold the raw region pointer would be a
+    /// use-after-free. Worker panics are re-raised here after the join.
     pub fn run<F>(&self, f: F)
     where
         F: Fn(usize, usize) + Sync,
     {
+        #[cfg(feature = "strict-checks")]
+        crate::util::shared::strict_begin_region();
         if self.nthreads == 1 {
             f(0, 1);
             return;
         }
         let region_ref: &(dyn Fn(usize, usize) + Sync) = &f;
         // SAFETY: we erase the lifetime; the closure outlives the region
-        // because this function blocks until `pending == 0`.
+        // because this function blocks until `pending == 0` even when a
+        // lane panics (see below).
         let region: Region = unsafe { std::mem::transmute(region_ref) };
         {
             let mut slot = self.shared.job.lock().unwrap();
@@ -95,16 +112,28 @@ impl Pool {
             slot.epoch += 1;
             slot.region = Some(region);
             slot.pending = self.nthreads - 1;
+            slot.panic_msg = None;
             self.shared.work_cv.notify_all();
         }
-        // The caller participates as tid 0.
-        f(0, self.nthreads);
+        // The caller participates as tid 0. Catch its panic so the join
+        // barrier below always runs before `f` is dropped.
+        let caller_result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, self.nthreads)));
         // Join barrier.
-        let mut slot = self.shared.job.lock().unwrap();
-        while slot.pending > 0 {
-            slot = self.shared.done_cv.wait(slot).unwrap();
+        let worker_panic = {
+            let mut slot = self.shared.job.lock().unwrap();
+            while slot.pending > 0 {
+                slot = self.shared.done_cv.wait(slot).unwrap();
+            }
+            slot.region = None;
+            slot.panic_msg.take()
+        };
+        if let Err(payload) = caller_result {
+            std::panic::resume_unwind(payload);
         }
-        slot.region = None;
+        if let Some(msg) = worker_panic {
+            panic!("worker thread panicked in parallel region: {msg}");
+        }
     }
 
     /// Statically-chunked parallel for over `0..n`: each thread receives
@@ -207,13 +236,22 @@ fn worker_loop(shared: Arc<Shared>, tid: usize, nthreads: usize) {
             }
         };
         // SAFETY: the submitter blocks in `run` until we decrement
-        // `pending`, keeping the closure alive.
-        unsafe { (*region)(tid, nthreads) };
+        // `pending`, keeping the closure alive. Catch a panicking region so
+        // the decrement below always happens — a skipped decrement would
+        // deadlock the submitter's join barrier.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*region)(tid, nthreads)
+            }));
         let mut slot = shared.job.lock().unwrap();
+        if let Err(payload) = result {
+            slot.panic_msg.get_or_insert_with(|| crate::testing::payload_message(&payload));
+        }
         slot.pending -= 1;
         if slot.pending == 0 {
             shared.done_cv.notify_all();
         }
+        drop(slot);
     }
 }
 
@@ -261,7 +299,10 @@ mod tests {
     #[test]
     fn parallel_for_covers_range() {
         let pool = Pool::new(4);
+        #[cfg(not(miri))]
         let n = 100_000;
+        #[cfg(miri)]
+        let n = 1_000;
         let sum = AtomicU64::new(0);
         pool.parallel_for(n, |r| {
             let local: u64 = r.map(|i| i as u64).sum();
@@ -273,7 +314,10 @@ mod tests {
     #[test]
     fn parallel_for_dynamic_covers_range() {
         let pool = Pool::new(3);
+        #[cfg(not(miri))]
         let n = 10_007;
+        #[cfg(miri)]
+        let n = 257;
         let count = AtomicUsize::new(0);
         pool.parallel_for_dynamic(n, 64, |r| {
             count.fetch_add(r.len(), Ordering::Relaxed);
@@ -316,12 +360,60 @@ mod tests {
     fn many_regions_back_to_back() {
         let pool = Pool::new(4);
         let counter = AtomicUsize::new(0);
-        for _ in 0..200 {
+        #[cfg(not(miri))]
+        let regions = 200;
+        #[cfg(miri)]
+        let regions = 20;
+        for _ in 0..regions {
             pool.run(|_, _| {
                 counter.fetch_add(1, Ordering::Relaxed);
             });
         }
-        assert_eq!(counter.load(Ordering::SeqCst), 800);
+        assert_eq!(counter.load(Ordering::SeqCst), regions * 4);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = Pool::new(4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|tid, _| {
+                if tid == 2 {
+                    panic!("lane {tid} exploded");
+                }
+            });
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("lane 2 exploded"), "payload lost: {msg}");
+        // The pool stays usable: the barrier drained, region cleared.
+        let hits = AtomicUsize::new(0);
+        pool.run(|_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn caller_panic_drains_barrier_before_unwinding() {
+        let pool = Pool::new(4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|tid, _| {
+                if tid == 0 {
+                    panic!("caller lane panicked");
+                }
+            });
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("<non-string panic>");
+        assert!(msg.contains("caller lane panicked"), "payload lost: {msg}");
+        let hits = AtomicUsize::new(0);
+        pool.run(|_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
     }
 
     #[test]

@@ -100,7 +100,7 @@ pub fn simulate(
         let share = shares(p);
         assert_eq!(share.len(), p);
         let total: f64 = share.iter().sum();
-        let share_max = share.iter().cloned().fold(0.0, f64::max) / total.max(1e-300);
+        let share_max = crate::util::nan_max(share.iter().cloned()) / total.max(1e-300);
 
         // How many sockets are in use?
         let sockets_used = p.div_ceil(topo.cores_per_socket);

@@ -1229,8 +1229,8 @@ mod tests {
         let a = wmd_at(5);
         let b = wmd_at(40);
         let c = wmd_at(80);
-        let diff_ab: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
-        let diff_bc: f64 = b.iter().zip(&c).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+        let diff_ab: f64 = crate::util::nan_max(a.iter().zip(&b).map(|(x, y)| (x - y).abs()));
+        let diff_bc: f64 = crate::util::nan_max(b.iter().zip(&c).map(|(x, y)| (x - y).abs()));
         assert!(diff_bc < diff_ab, "no stabilization: {diff_ab} -> {diff_bc}");
     }
 

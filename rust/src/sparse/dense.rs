@@ -147,14 +147,11 @@ impl Dense {
         }
     }
 
-    /// Max |a - b| over all elements.
+    /// Max |a - b| over all elements. NaN anywhere poisons the result
+    /// (`nan_max`) so equivalence gates cannot pass on NaN garbage.
     pub fn max_abs_diff(&self, other: &Dense) -> Real {
         assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, Real::max)
+        crate::util::nan_max(self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()))
     }
 }
 
@@ -255,7 +252,10 @@ pub fn dot(a: &[Real], b: &[Real]) -> Real {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f64; 4];
     let chunks = a.len() / 4;
-    // Pointer-arithmetic hot loop (bounds checks hoisted).
+    // SAFETY: pointer-arithmetic hot loop (bounds checks hoisted). Every
+    // offset is `< a.len()` == `b.len()` (asserted above): `c * 4 + 3 <
+    // chunks * 4 <= a.len()` in the unrolled body, `i < a.len()` in the
+    // tail.
     unsafe {
         let pa = a.as_ptr();
         let pb = b.as_ptr();

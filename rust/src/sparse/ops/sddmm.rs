@@ -80,8 +80,10 @@ impl PanelElem for f32 {
         debug_assert_eq!(a.len(), b.len());
         let mut acc = [0.0f32; 8];
         let chunks = a.len() / 8;
-        // Pointer-arithmetic hot loop (bounds checks hoisted), mirroring
-        // the f64 `dot`.
+        // SAFETY: pointer-arithmetic hot loop (bounds checks hoisted),
+        // mirroring the f64 `dot`. Every offset is `< a.len()` == `b.len()`
+        // (asserted above): `c * 8 + 7 < chunks * 8 <= a.len()` in the
+        // unrolled body and `i < a.len()` in the tail.
         unsafe {
             let pa = a.as_ptr();
             let pb = b.as_ptr();

@@ -1,0 +1,336 @@
+//! Repo-specific lint rules, enforced in CI by `cargo run --bin lint-rules`.
+//!
+//! The rules encode conventions this codebase has already paid for
+//! violating (NaN panics in ranking paths, un-audited `unsafe`):
+//!
+//! * **nan_cmp** — `.partial_cmp(..)` chained with `.unwrap()` on one line
+//!   is denied outside [`SCORE_CMP_ALLOWLIST`]; score paths must use
+//!   `total_cmp` (the PR-2 convention — a NaN score must rank, not panic).
+//! * **nan_fold** — `.fold(..)` with `f64::max`/`Real::max` is denied:
+//!   `f64::max` *discards* NaN operands, so a NaN residual silently passes
+//!   convergence/equivalence gates. Use `util::nan_max`/`nan_max2`.
+//! * **unsafe_module** — the token `unsafe` may appear only in the audited
+//!   file list [`UNSAFE_AUDITED`].
+//! * **unsafe_fn_doc** — every `unsafe fn` must document its contract
+//!   under a `# Safety` heading in its doc comment.
+//! * **unsafe_block_comment** — every other `unsafe` site (block, `impl`)
+//!   must have a `SAFETY:` comment within the preceding few lines.
+//!
+//! The scanner is line-based and textual (comments stripped first), which
+//! is deliberately simple: false negatives on exotic multi-line chains are
+//! acceptable, false positives are not. The deny patterns are assembled
+//! with `concat!` below so this file's own source never matches them.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Files allowed to contain the `unsafe` token. Additions require an audit:
+/// a `# Safety` doc on every unsafe fn and a `SAFETY:` comment on every
+/// unsafe block (the two companion rules enforce the paperwork).
+pub const UNSAFE_AUDITED: &[&str] = &[
+    "src/util/shared.rs",
+    "src/parallel/pool.rs",
+    "src/parallel/atomic.rs",
+    "src/sparse/dense.rs",
+    "src/sparse/ops/fused.rs",
+    "src/sparse/ops/sddmm.rs",
+    "src/sinkhorn/solver.rs",
+    "src/sinkhorn/dense.rs",
+    "src/dist/cdist.rs",
+    "src/dist/factors.rs",
+    "src/prune/wcd.rs",
+    "src/prune/cascade.rs",
+    "src/prune/lcrwmd.rs",
+    // Deliberately exercises the unsafe API to prove strict-checks fires.
+    "tests/strict_checks.rs",
+];
+
+/// Files allowed to keep `partial_cmp(..).unwrap()` / `fold(f64::max)`.
+/// Empty today — every score path uses `total_cmp`/`nan_max`; the
+/// mechanism exists so a future justified exception is an explicit,
+/// reviewed entry instead of a rule bypass.
+pub const SCORE_CMP_ALLOWLIST: &[&str] = &[];
+
+// Deny patterns, split so this source file never matches itself.
+const P_PARTIAL_CMP: &str = concat!(".partial_", "cmp(");
+const P_UNWRAP: &str = concat!(".unw", "rap()");
+const P_FOLD: &str = concat!(".fo", "ld(");
+const P_F64_MAX: &str = concat!("f64::", "max");
+const P_REAL_MAX: &str = concat!("Real::", "max");
+const TOK_UNSAFE: &str = concat!("uns", "afe");
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to the cargo manifest dir (e.g. `src/util/stats.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    /// The offending line, trimmed.
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// Lint one source file (`path` is the manifest-relative label used for
+/// allowlist membership and reports).
+pub fn lint_source(path: &str, text: &str) -> Vec<Violation> {
+    let audited = UNSAFE_AUDITED.contains(&path);
+    let cmp_allowed = SCORE_CMP_ALLOWLIST.contains(&path);
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, raw: &str| {
+        let mut excerpt: String = raw.trim().chars().take(120).collect();
+        if raw.trim().chars().count() > 120 {
+            excerpt.push('…');
+        }
+        out.push(Violation { file: path.to_string(), line, rule, excerpt });
+    };
+    for (idx, raw) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = strip_line_comment(raw);
+        if !cmp_allowed && code.contains(P_PARTIAL_CMP) && code.contains(P_UNWRAP) {
+            push(lineno, "nan_cmp", raw);
+        }
+        if !cmp_allowed
+            && code.contains(P_FOLD)
+            && (code.contains(P_F64_MAX) || code.contains(P_REAL_MAX))
+        {
+            push(lineno, "nan_fold", raw);
+        }
+        if let Some(after) = token_tail(code, TOK_UNSAFE) {
+            if !audited {
+                push(lineno, "unsafe_module", raw);
+            }
+            if after.trim_start().starts_with("fn") {
+                if !doc_block_has_safety(&lines, idx) {
+                    push(lineno, "unsafe_fn_doc", raw);
+                }
+            } else if !window_has_safety_marker(&lines, idx) {
+                push(lineno, "unsafe_block_comment", raw);
+            }
+        }
+    }
+    out
+}
+
+/// Walk a source tree and lint every `.rs` file. `manifest_dir` is the
+/// crate root (`CARGO_MANIFEST_DIR`); `roots` are the relative directories
+/// to scan. Paths in reports are normalized relative to `manifest_dir`
+/// (`../examples/x.rs` → `examples/x.rs`).
+pub fn lint_tree(manifest_dir: &Path, roots: &[&str]) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    for root in roots {
+        let dir = manifest_dir.join(root);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = normalize_rel(manifest_dir, &f);
+        let text = std::fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+/// The scan roots CI uses: crate sources, integration tests, benches, the
+/// workspace stub crate, and the top-level examples.
+pub const DEFAULT_ROOTS: &[&str] = &["src", "tests", "benches", "xla/src", "../examples"];
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn normalize_rel(manifest_dir: &Path, file: &Path) -> String {
+    let rel = match file.strip_prefix(manifest_dir) {
+        Ok(r) => r.to_path_buf(),
+        Err(_) => match manifest_dir.parent().and_then(|p| file.strip_prefix(p).ok()) {
+            Some(r) => r.to_path_buf(),
+            None => file.to_path_buf(),
+        },
+    };
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Strip a trailing `//` comment (naive: does not parse string literals;
+/// a `//` inside a string truncates the scanned code, which can only
+/// suppress findings on that line, never invent one).
+fn strip_line_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// If `tok` occurs in `line` as a standalone identifier, return the text
+/// after its first occurrence.
+fn token_tail<'a>(line: &'a str, tok: &str) -> Option<&'a str> {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(tok) {
+        let s = from + pos;
+        let e = s + tok.len();
+        let pre_ok = s == 0 || !is_ident_byte(bytes[s - 1]);
+        let post_ok = e >= bytes.len() || !is_ident_byte(bytes[e]);
+        if pre_ok && post_ok {
+            return Some(&line[e..]);
+        }
+        from = e;
+    }
+    None
+}
+
+/// For an `unsafe fn` at `lines[idx]`: walk up through the contiguous
+/// doc-comment/attribute block and require a `# Safety` heading.
+fn doc_block_has_safety(lines: &[&str], idx: usize) -> bool {
+    let mut i = idx;
+    let mut budget = 40;
+    while i > 0 && budget > 0 {
+        i -= 1;
+        budget -= 1;
+        let t = lines[i].trim_start();
+        if t.starts_with("///") || t.starts_with("//!") {
+            if t.contains("# Safety") {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#![") || t.starts_with("//") {
+            // Attributes and plain comments may sit between doc and fn.
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// For an `unsafe` block/impl at `lines[idx]`: require a `SAFETY` marker on
+/// the line itself or within the preceding few lines (comment blocks above
+/// the statement).
+fn window_has_safety_marker(lines: &[&str], idx: usize) -> bool {
+    let lo = idx.saturating_sub(9);
+    lines[lo..=idx].iter().any(|l| l.contains("SAFETY"))
+}
+
+/// Seeded-violation self-test: proves each rule actually fires (and stays
+/// quiet on clean input) before CI trusts a green tree scan. Returns the
+/// caught violations for display on success; `Err` describes what failed
+/// to fire.
+pub fn self_test() -> Result<Vec<Violation>, String> {
+    // Fixtures assembled so THIS file doesn't trip its own scanner.
+    let bad_cmp = concat!("    xs.sort_by(|a, b| a.partial_", "cmp(b).unw", "rap());");
+    let bad_fold = concat!("    let m = xs.iter().fo", "ld(0.0, f64::", "max);");
+    let bad_unsafe_block =
+        concat!("    let v = uns", "afe { *p.add(1) };");
+    let bad_unsafe_fn = concat!("    pub uns", "afe fn poke(p: *mut u8) {}");
+    let clean = "    xs.sort_by(|a, b| a.total_cmp(b));\n    let m = crate::util::nan_max(xs);";
+
+    let mut caught = Vec::new();
+    let cases: &[(&str, &str, &str)] = &[
+        ("nan_cmp", "selftest/score.rs", bad_cmp),
+        ("nan_fold", "selftest/score.rs", bad_fold),
+        ("unsafe_module", "selftest/rogue.rs", bad_unsafe_block),
+        ("unsafe_block_comment", "selftest/rogue.rs", bad_unsafe_block),
+        ("unsafe_fn_doc", "selftest/rogue.rs", bad_unsafe_fn),
+    ];
+    for (rule, label, source) in cases {
+        let found = lint_source(label, source);
+        match found.iter().find(|v| v.rule == *rule) {
+            Some(v) => caught.push(v.clone()),
+            None => {
+                return Err(format!(
+                    "rule '{rule}' failed to fire on its seeded violation: {source:?} \
+                     (got {found:?})"
+                ))
+            }
+        }
+    }
+    let false_pos = lint_source("selftest/clean.rs", clean);
+    if !false_pos.is_empty() {
+        return Err(format!("clean fixture produced violations: {false_pos:?}"));
+    }
+    Ok(caught)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_test_passes() {
+        let caught = self_test().expect("seeded violations must all fire");
+        assert_eq!(caught.len(), 5);
+    }
+
+    #[test]
+    fn audited_file_still_needs_safety_comments() {
+        // An audited file escapes `unsafe_module` but not the paperwork.
+        let source = concat!("fn f(p: *const u8) -> u8 { uns", "afe { *p } }");
+        let v = lint_source("src/util/shared.rs", source);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unsafe_block_comment");
+        // With the marker present, silence.
+        let ok = format!("// SAFETY: p is valid.\n{source}");
+        assert!(lint_source("src/util/shared.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_doc_accepts_attributes_between_doc_and_fn() {
+        let src = concat!(
+            "/// Does a thing.\n",
+            "///\n",
+            "/// # Safety\n",
+            "/// `p` must be valid.\n",
+            "#[inline(always)]\n",
+            "pub uns", "afe fn poke(p: *mut u8) {}\n"
+        );
+        let v = lint_source("src/util/shared.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn identifier_containing_the_token_is_not_a_match() {
+        // `unsafe_op_in_unsafe_fn` (the lint name in lib.rs) must not trip
+        // the word-boundary matcher.
+        let src = concat!("#![deny(uns", "afe_op_in_uns", "afe_fn)]");
+        assert!(lint_source("src/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comments_do_not_trip_rules() {
+        let src = concat!("// talking about .partial_", "cmp(x).unw", "rap() is fine");
+        assert!(lint_source("src/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        // The same scan CI runs via `cargo run --bin lint-rules`, kept as a
+        // unit test so `cargo test` alone catches regressions.
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let violations = lint_tree(manifest, DEFAULT_ROOTS).expect("scan tree");
+        let report: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(violations.is_empty(), "lint violations:\n{}", report.join("\n"));
+    }
+}

@@ -15,6 +15,10 @@
 
 use crate::util::Pcg64;
 
+pub mod fuzz;
+pub mod interleave;
+pub mod lint;
+
 /// Generator handed to each property case; wraps the seeded PRNG with
 /// convenience samplers.
 pub struct Gen {
@@ -112,7 +116,12 @@ fn name_seed(name: &str) -> u64 {
     h
 }
 
-fn payload_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+/// Best-effort extraction of a panic payload's message (`&str` / `String`
+/// payloads; everything else collapses to a placeholder). Shared by the
+/// property runner, the pool's cross-thread panic propagation, and the
+/// fuzzer's crash reports.
+#[allow(clippy::borrowed_box)]
+pub fn payload_message(payload: &Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         s.to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

@@ -17,9 +17,15 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container-nesting depth the parser accepts. The descent is
+/// recursive, so without a cap a `[[[[...` byte stream overflows the stack —
+/// an abort, not a catchable error — which is fatal for a server parsing
+/// untrusted JSONL (found by the structured fuzzer, `testing::fuzz`).
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -186,6 +192,8 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container-nesting depth, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -215,8 +223,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => self.nested(Self::object),
+            b'[' => self.nested(Self::array),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.literal("true", Json::Bool(true)),
             b'f' => self.literal("false", Json::Bool(false)),
@@ -224,6 +232,21 @@ impl<'a> Parser<'a> {
             b'-' | b'0'..=b'9' => self.number(),
             c => Err(self.err(&format!("unexpected byte '{}'", c as char))),
         }
+    }
+
+    /// Run a container parser one level deeper, rejecting pathological
+    /// nesting before the process stack does.
+    fn nested(
+        &mut self,
+        inner: fn(&mut Self) -> Result<Json, JsonError>,
+    ) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = inner(self);
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
@@ -394,6 +417,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // Fuzzer-class regression: unbounded recursion on `[[[[...` used to
+        // abort the process. 2_000 levels is far past MAX_DEPTH.
+        let bomb = "[".repeat(2_000) + &"]".repeat(2_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // ... while legitimate nesting well under the cap still parses.
+        let ok = "[".repeat(64) + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

@@ -35,6 +35,30 @@ pub fn num_cpus() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// NaN-propagating maximum over a stream of non-negative values (residuals,
+/// |diffs|, load shares), with identity `0.0` for the empty stream.
+///
+/// This is the mandated replacement for `fold(0.0, f64::max)` on score and
+/// gate paths (`lint-rules` denies the latter): `f64::max` returns the
+/// *non*-NaN operand, so a NaN residual silently vanishes and a broken
+/// solve can pass its convergence gate. Here any NaN poisons the result and
+/// the downstream `<` comparison fails loudly.
+#[inline]
+pub fn nan_max(values: impl IntoIterator<Item = f64>) -> f64 {
+    values.into_iter().fold(0.0, nan_max2)
+}
+
+/// Binary NaN-propagating max — the `fold` companion of [`nan_max`], for
+/// call sites that keep their own iterator chain.
+#[inline]
+pub fn nan_max2(a: f64, b: f64) -> f64 {
+    if a.is_nan() || b.is_nan() {
+        f64::NAN
+    } else {
+        a.max(b)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +83,14 @@ mod tests {
     #[test]
     fn num_cpus_positive() {
         assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn nan_max_propagates_nan() {
+        assert_eq!(nan_max([1.0, 3.0, 2.0]), 3.0);
+        assert_eq!(nan_max([]), 0.0);
+        // The whole point: `fold(0.0, f64::max)` would return 2.0 here.
+        assert!(nan_max([1.0, f64::NAN, 2.0]).is_nan());
+        assert!(nan_max([f64::NAN]).is_nan());
     }
 }

@@ -177,20 +177,30 @@ mod tests {
 
     #[test]
     fn below_is_uniform_ish() {
+        #[cfg(not(miri))]
+        let n = 100_000;
+        #[cfg(miri)]
+        let n = 2_000;
         let mut rng = Pcg64::new(4);
         let mut counts = [0usize; 10];
-        for _ in 0..100_000 {
+        for _ in 0..n {
             counts[rng.below(10)] += 1;
         }
         for &c in &counts {
-            assert!((8_000..12_000).contains(&c), "count {c} out of band");
+            // ±20% band around the expected n/10 per bucket.
+            assert!((n / 10 * 4 / 5..n / 10 * 6 / 5).contains(&c), "count {c} out of band");
         }
     }
 
     #[test]
     fn gaussian_moments() {
+        // Tolerances scale roughly with 1/sqrt(n); the miri leg trades
+        // statistical power for a run that finishes under interpretation.
+        #[cfg(not(miri))]
+        let (n, mean_tol, var_tol) = (200_000, 0.02, 0.05);
+        #[cfg(miri)]
+        let (n, mean_tol, var_tol) = (2_000, 0.1, 0.15);
         let mut rng = Pcg64::new(5);
-        let n = 200_000;
         let (mut sum, mut sq) = (0.0, 0.0);
         for _ in 0..n {
             let x = rng.next_gaussian();
@@ -199,8 +209,8 @@ mod tests {
         }
         let mean = sum / n as f64;
         let var = sq / n as f64 - mean * mean;
-        assert!(mean.abs() < 0.02, "mean {mean}");
-        assert!((var - 1.0).abs() < 0.05, "var {var}");
+        assert!(mean.abs() < mean_tol, "mean {mean}");
+        assert!((var - 1.0).abs() < var_tol, "var {var}");
     }
 
     #[test]
@@ -219,8 +229,12 @@ mod tests {
     fn zipf_rank_ordering() {
         let mut rng = Pcg64::new(8);
         let z = Zipf::new(100, 1.1);
+        #[cfg(not(miri))]
+        let n = 50_000;
+        #[cfg(miri)]
+        let n = 2_000;
         let mut counts = vec![0usize; 100];
-        for _ in 0..50_000 {
+        for _ in 0..n {
             counts[z.sample(&mut rng)] += 1;
         }
         assert!(counts[0] > counts[10]);

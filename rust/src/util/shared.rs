@@ -3,6 +3,15 @@
 //! `#pragma omp parallel for` over an output array). Callers must ensure
 //! distinct threads write distinct indices; all kernel call-sites in this
 //! crate partition the index space before writing.
+//!
+//! Under the `strict-checks` cargo feature the contract stops being an
+//! honor system: every `write`/`slice_mut` records its claimed interval in
+//! a per-slice tracker and the process panics on any cross-thread overlap
+//! or out-of-bounds claim. [`Pool::run`](crate::parallel::Pool::run) opens
+//! a fresh claim region per parallel section, so repartitioning the same
+//! buffer across regions (dynamic scheduling, ping-pong buffers) never
+//! false-positives. The tracker compiles out entirely when the feature is
+//! off — zero cost on release paths.
 
 use std::marker::PhantomData;
 
@@ -16,7 +25,8 @@ pub struct SharedSlice<'a, T> {
 }
 
 // SAFETY: access discipline is "disjoint indices per thread", enforced by
-// the partitioning at every call-site.
+// the partitioning at every call-site (and verified at runtime under the
+// `strict-checks` feature).
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
 unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
@@ -42,6 +52,10 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline(always)]
     pub unsafe fn write(&self, i: usize, value: T) {
         debug_assert!(i < self.len);
+        #[cfg(feature = "strict-checks")]
+        strict::claim(self.ptr as usize, self.len, i, i + 1);
+        // SAFETY: caller guarantees `i < len` and exclusive ownership of
+        // index `i` within the current parallel region.
         unsafe { *self.ptr.add(i) = value };
     }
 
@@ -55,6 +69,8 @@ impl<'a, T> SharedSlice<'a, T> {
         T: Copy,
     {
         debug_assert!(i < self.len);
+        // SAFETY: caller guarantees `i < len` and that no concurrent
+        // writer holds index `i`.
         unsafe { *self.ptr.add(i) }
     }
 
@@ -65,7 +81,13 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline(always)]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
-        debug_assert!(start + len <= self.len);
+        // `checked_add`: a corrupt `start` near `usize::MAX` must not wrap
+        // past the bound check in debug builds.
+        debug_assert!(start.checked_add(len).is_some_and(|end| end <= self.len));
+        #[cfg(feature = "strict-checks")]
+        strict::claim(self.ptr as usize, self.len, start, start.saturating_add(len));
+        // SAFETY: caller guarantees the range is in-bounds and disjoint
+        // from every other thread's claimed range for this region.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 
@@ -77,6 +99,142 @@ impl<'a, T> SharedSlice<'a, T> {
     }
 }
 
+/// Marks the start of a new parallel region for the `strict-checks` claim
+/// tracker. Called by `Pool::run`; a no-op build-wise when the feature is
+/// disabled (the cfg'd call-site compiles out).
+#[cfg(feature = "strict-checks")]
+pub fn strict_begin_region() {
+    strict::begin_region();
+}
+
+/// Interval-claim tracker behind the `strict-checks` feature.
+///
+/// Design notes:
+/// * Keyed by the slice's base address so `SharedSlice` stays `Copy` with
+///   no extra fields — the release-mode layout is unchanged.
+/// * A global region epoch (bumped by `Pool::run`) invalidates stale
+///   claims lazily: repartitioning the same buffer in a later region is
+///   legal, overlapping within one region is not. False negatives across
+///   interleaved regions of *different* pools are accepted; false
+///   positives are not.
+/// * Same-thread claims merge into maximal intervals, so per-nnz claims
+///   over a contiguous column range cost O(1) amortized per claim.
+#[cfg(feature = "strict-checks")]
+mod strict {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+    use std::thread::ThreadId;
+
+    /// Bumped at the start of every parallel region.
+    static REGION_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+    struct ThreadClaims {
+        id: ThreadId,
+        name: String,
+        /// Disjoint-or-abutting half-open intervals, unordered.
+        ivals: Vec<(usize, usize)>,
+    }
+
+    struct SliceClaims {
+        epoch: u64,
+        claims: Vec<ThreadClaims>,
+    }
+
+    fn registry() -> MutexGuard<'static, HashMap<usize, SliceClaims>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<usize, SliceClaims>>> = OnceLock::new();
+        // A claim panic (the tracker's whole point) poisons the mutex for
+        // every later test in the process; recover the inner map instead.
+        REGISTRY
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    pub(super) fn begin_region() {
+        REGION_EPOCH.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn thread_label() -> String {
+        std::thread::current().name().unwrap_or("<unnamed>").to_string()
+    }
+
+    /// Record the claim `[start, end)` on the slice based at `base` (element
+    /// units). Panics on out-of-bounds claims and on overlap with an
+    /// interval claimed by a *different* thread in the same region.
+    pub(super) fn claim(base: usize, slice_len: usize, start: usize, end: usize) {
+        if start == end {
+            return;
+        }
+        if end > slice_len || start > end {
+            panic!(
+                "SharedSlice strict-checks: out-of-bounds claim [{start}..{end}) by thread \
+                 '{}' on slice of len {slice_len} (base {base:#x})",
+                thread_label()
+            );
+        }
+        let epoch = REGION_EPOCH.load(Ordering::SeqCst);
+        let me = std::thread::current().id();
+        let mut map = registry();
+        let entry = map
+            .entry(base)
+            .or_insert_with(|| SliceClaims { epoch, claims: Vec::new() });
+        if entry.epoch != epoch {
+            // New parallel region: previous partition no longer applies.
+            entry.claims.clear();
+            entry.epoch = epoch;
+        }
+        let mut conflict: Option<(String, ThreadId, usize, usize)> = None;
+        for other in entry.claims.iter() {
+            if other.id == me {
+                continue;
+            }
+            for &(s, e) in &other.ivals {
+                if s < end && start < e {
+                    conflict = Some((other.name.clone(), other.id, s.max(start), e.min(end)));
+                    break;
+                }
+            }
+            if conflict.is_some() {
+                break;
+            }
+        }
+        if let Some((other_name, other_id, os, oe)) = conflict {
+            let mine = thread_label();
+            let my_id = me;
+            // Release the registry before unwinding so later tests (and the
+            // poison-recovery above) see a consistent tracker.
+            drop(map);
+            panic!(
+                "SharedSlice strict-checks: overlapping parallel claims on slice base \
+                 {base:#x}: thread '{mine}' ({my_id:?}) claimed [{start}..{end}) which \
+                 overlaps [{os}..{oe}) already claimed by thread '{other_name}' \
+                 ({other_id:?}) in the same parallel region — partitioned writes must be \
+                 disjoint"
+            );
+        }
+        match entry.claims.iter_mut().find(|c| c.id == me) {
+            Some(own) => {
+                // Merge with an overlapping-or-abutting own interval when
+                // possible; contiguous per-nnz claims stay O(1) intervals.
+                for ival in own.ivals.iter_mut() {
+                    if start <= ival.1 && ival.0 <= end {
+                        ival.0 = ival.0.min(start);
+                        ival.1 = ival.1.max(end);
+                        return;
+                    }
+                }
+                own.ivals.push((start, end));
+            }
+            None => entry.claims.push(ThreadClaims {
+                id: me,
+                name: thread_label(),
+                ivals: vec![(start, end)],
+            }),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,7 +242,10 @@ mod tests {
 
     #[test]
     fn disjoint_parallel_writes() {
+        #[cfg(not(miri))]
         let n = 10_000;
+        #[cfg(miri)]
+        let n = 512;
         let mut data = vec![0u64; n];
         let view = SharedSlice::new(&mut data);
         let pool = Pool::new(4);
@@ -93,6 +254,7 @@ mod tests {
             let start = tid * chunk;
             let end = (start + chunk).min(n);
             for i in start..end {
+                // SAFETY: [start, end) ranges are disjoint across tids.
                 unsafe { view.write(i, i as u64 * 3) };
             }
         });
@@ -108,6 +270,7 @@ mod tests {
         let pool = Pool::new(5);
         pool.run(|tid, nthreads| {
             let chunk = 100 / nthreads;
+            // SAFETY: each tid claims its own disjoint chunk.
             let s = unsafe { view.slice_mut(tid * chunk, chunk) };
             s.fill(tid as u32 + 1);
         });

@@ -25,7 +25,9 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // NaN-safe total order (the PR-2 ranking convention): a NaN sample
+        // sorts last instead of panicking mid-bench.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Self {
             n,
             mean,
@@ -92,7 +94,9 @@ pub fn least_squares(features: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
     }
     // Gaussian elimination with partial pivoting.
     for col in 0..k {
-        let piv = (col..k).max_by(|&p, &q| a[p][col].abs().partial_cmp(&a[q][col].abs()).unwrap()).unwrap();
+        let piv = (col..k)
+            .max_by(|&p, &q| a[p][col].abs().total_cmp(&a[q][col].abs()))
+            .unwrap();
         a.swap(col, piv);
         let d = a[col][col];
         assert!(d.abs() > 1e-300, "singular normal matrix");
@@ -124,6 +128,29 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` used to panic here. NaN now
+        // sorts last under `total_cmp`, so min/p50 stay finite and max
+        // reports the NaN poisoning instead of aborting the bench run.
+        let s = Summary::from_samples(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
+    fn least_squares_nan_input_fails_with_diagnosis_not_unwrap() {
+        // Regression: a NaN feature used to panic inside partial pivoting
+        // via `partial_cmp().unwrap()`. Under `total_cmp` the NaN pivot is
+        // selected deterministically and rejected by the explicit
+        // singularity check — a diagnosable failure, not an opaque unwrap.
+        let feats: Vec<Vec<f64>> = vec![vec![1.0, f64::NAN], vec![0.0, 1.0], vec![1.0, 2.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let err = std::panic::catch_unwind(|| least_squares(&feats, &ys)).unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("singular normal matrix"), "unexpected panic: {msg}");
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Pinned parser-hardening regressions: one hand-reduced malformed input
+//! per failure class, per parser. Each case documents a way a parser
+//! could plausibly panic (or abort) on untrusted bytes and asserts the
+//! structured `Err` instead. When the fuzzer (`tests/fuzz_smoke.rs`)
+//! finds a new crash, its report carries a per-case seed — append it here
+//! as `assert!(replay_case(target, seed).is_none())` so the fix stays
+//! fixed with the exact mutated input, forever reconstructible.
+
+use sinkhorn_wmd::config::RunConfig;
+use sinkhorn_wmd::corpus::io::read_corpus_any;
+use sinkhorn_wmd::corpus::{read_vec, DocFormat, DocReader};
+use sinkhorn_wmd::testing::fuzz::{replay_case, TARGETS};
+use std::io::ErrorKind;
+
+// ---------------------------------------------------------------- snapshots
+
+#[test]
+fn snapshot_bad_magic_is_invalid_data() {
+    let err = read_corpus_any(&mut &b"XMDC\x01\x00\x00\x00"[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData);
+}
+
+#[test]
+fn snapshot_unknown_version_is_invalid_data() {
+    let err = read_corpus_any(&mut &b"WMDC\x09\x00\x00\x00"[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData);
+}
+
+#[test]
+fn snapshot_truncated_mid_header_is_eof_not_panic() {
+    for cut in [&b""[..], &b"WM"[..], &b"WMDC"[..], &b"WMDC\x02\x00"[..]] {
+        assert!(read_corpus_any(&mut &cut[..]).is_err(), "{cut:?} must not load");
+    }
+}
+
+#[test]
+fn snapshot_lying_length_prefix_is_eof_not_oom() {
+    // A valid v2 header followed by a section length claiming ~2^64
+    // elements and no payload: the reader must hit UnexpectedEof under its
+    // preallocation cap, not attempt a multi-EB Vec (the abort-class
+    // failure the fuzzer's len-bomb mutation hunts for).
+    let mut bytes = b"WMDC\x02\x00\x00\x00".to_vec();
+    bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+    let err = read_corpus_any(&mut &bytes[..]).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+}
+
+// --------------------------------------------------------------------- .vec
+
+#[test]
+fn vec_bom_header_is_invalid_data() {
+    // A UTF-8 BOM glued to the word count: "\u{FEFF}4" is not a usize.
+    let err = read_vec("\u{FEFF}4 1\na 1.0\n".as_bytes(), None).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData);
+}
+
+#[test]
+fn vec_crlf_line_endings_still_parse() {
+    // Windows-edited .vec files: `lines()` strips the \r, so CRLF must be
+    // transparent, not a bogus trailing-field error.
+    let v = read_vec(&b"2 2\r\na 1.0 2.0\r\nb 3.0 4.0\r\n"[..], None).unwrap();
+    assert_eq!(v.vocab.len(), 2);
+    assert_eq!(v.embeddings.row(1), &[3.0, 4.0]);
+}
+
+#[test]
+fn vec_negative_and_overflowing_header_counts_error() {
+    for text in ["-1 2\na 1.0 2.0\n", "99999999999999999999999999 2\na 1.0 2.0\n"] {
+        let err = read_vec(text.as_bytes(), None)
+            .expect_err(&format!("{text:?} must not parse"));
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+}
+
+#[test]
+fn vec_nan_and_inf_payloads_are_rejected() {
+    // Rust's f64 parser happily accepts "NaN"/"inf" strings; the loader
+    // must not let non-finite coordinates into the distance kernels.
+    for text in ["1 2\na NaN 1.0\n", "1 2\na 1.0 inf\n", "1 2\na -inf 0.0\n"] {
+        let err = read_vec(text.as_bytes(), None)
+            .expect_err(&format!("{text:?} must not parse"));
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+}
+
+// -------------------------------------------------------------------- jsonl
+
+#[test]
+fn jsonl_deep_nesting_is_an_error_not_a_stack_overflow() {
+    // The fuzzer-class finding that motivated the depth cap in util/json:
+    // unbounded recursive descent on `[[[[…` was a stack-overflow ABORT
+    // (not even catchable). Must now surface as an Err item.
+    let bomb = format!("{}{}\n", "[".repeat(2_000), "]".repeat(2_000));
+    let docs: Vec<_> = DocReader::new(bomb.as_bytes(), DocFormat::Jsonl).collect();
+    assert_eq!(docs.len(), 1);
+    let err = docs[0].as_ref().unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData);
+    assert!(err.to_string().contains("jsonl line 1"), "{err}");
+}
+
+#[test]
+fn jsonl_malformed_records_error_with_line_numbers() {
+    let stream = concat!(
+        "{\"text\": \"fine\"}\n",
+        "{\"text\": \"unterminated\n",   // unterminated string
+        "{\"text\": 42}\n",              // wrong type for "text"
+        "{\"body\": \"no text field\"}\n",
+        "not json at all\n",
+    );
+    let docs: Vec<_> = DocReader::new(stream.as_bytes(), DocFormat::Jsonl).collect();
+    assert_eq!(docs.len(), 5);
+    assert_eq!(docs[0].as_ref().unwrap(), "fine");
+    for (i, doc) in docs.iter().enumerate().skip(1) {
+        let err = doc.as_ref().expect_err("malformed record must be Err");
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(
+            err.to_string().contains(&format!("line {}", i + 1)),
+            "record {i}: {err}"
+        );
+    }
+}
+
+// ------------------------------------------------------------------- config
+
+#[test]
+fn config_overflowing_numbers_are_errors_not_panics() {
+    for text in [
+        "threads = 99999999999999999999999999\n",
+        "threads = 1e99\n",
+        "[sinkhorn]\nmax_iter = -3\n",
+    ] {
+        assert!(RunConfig::from_str(text).is_err(), "{text:?} must not parse");
+    }
+}
+
+#[test]
+fn config_structural_garbage_is_an_error() {
+    for text in ["= 5\n", "[sinkhorn\nlambda = 1\n", "[nosuch]\nx = 1\n", "keyonly\n"] {
+        assert!(RunConfig::from_str(text).is_err(), "{text:?} must not parse");
+    }
+}
+
+// -------------------------------------------------------- fuzz-seed pinning
+
+/// Formerly-crashing (or representative) fuzz seeds, replayed
+/// byte-identically through the deterministic mutation engine. New fuzzer
+/// finds get appended to the relevant target's list with a comment naming
+/// the failure; an empty extra list means no crash has survived review.
+#[test]
+fn pinned_fuzz_seeds_stay_fixed() {
+    let pinned: &[(&'static str, &[u64])] = &[
+        // The JSON depth cap (see the jsonl stack-overflow test above) was
+        // driven by the `[[[[[[[[` hostile token; these seeds exercise the
+        // first cases of each target's lineage as canaries.
+        ("snapshot-v1", &[1, 2, 3]),
+        ("snapshot-v2", &[1, 2, 3]),
+        ("vec", &[1, 2, 3]),
+        ("jsonl", &[1, 2, 3]),
+        ("config", &[1, 2, 3]),
+    ];
+    // Every target must keep a pinned list — a new parser target without
+    // regression coverage fails here, not in review.
+    for target in TARGETS {
+        assert!(
+            pinned.iter().any(|(t, _)| t == target),
+            "fuzz target '{target}' has no pinned regression seeds"
+        );
+    }
+    for (target, seeds) in pinned {
+        for &seed in *seeds {
+            if let Some(crash) = replay_case(target, seed) {
+                panic!("pinned case regressed: {crash}");
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! CI fuzz budget over every parser target (`testing::fuzz`): a fixed
+//! master seed so runs are reproducible, scaled by `WMD_FUZZ_ITERS`
+//! (default 250 cases per target; the CI job sets a larger budget).
+//! Any crash report carries the per-case seed — pin it as a
+//! `replay_case` regression in `tests/fuzz_regressions.rs`.
+
+use sinkhorn_wmd::testing::fuzz::{fuzz_all, fuzz_target, TARGETS};
+
+fn budget() -> u64 {
+    std::env::var("WMD_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250)
+}
+
+/// The same master seed every run: a CI failure is reproducible locally
+/// with nothing but the printed per-case seed.
+const MASTER_SEED: u64 = 0x00C0_FFEE_0B5C_0DE5;
+
+#[test]
+fn all_parsers_survive_the_fuzz_budget() {
+    let iters = budget();
+    let crashes = fuzz_all(iters, MASTER_SEED);
+    let report: Vec<String> = crashes.iter().map(|c| c.to_string()).collect();
+    assert!(
+        crashes.is_empty(),
+        "{} crash(es) in {iters} cases/target — pin each seed in \
+         tests/fuzz_regressions.rs:\n{}",
+        crashes.len(),
+        report.join("\n")
+    );
+}
+
+#[test]
+fn a_second_seed_lineage_also_survives() {
+    // A disjoint case lineage (different master seed) at a small budget:
+    // guards against the main seed lineage happening to miss an entire
+    // mutation class.
+    for target in TARGETS {
+        let crashes = fuzz_target(target, 50, MASTER_SEED ^ u64::MAX);
+        let report: Vec<String> = crashes.iter().map(|c| c.to_string()).collect();
+        assert!(crashes.is_empty(), "[{target}]:\n{}", report.join("\n"));
+    }
+}

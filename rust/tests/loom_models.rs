@@ -1,0 +1,384 @@
+//! loom-style exhaustive interleaving models of the two condvar protocols
+//! in this crate, driven by `testing::interleave` (the in-tree explorer;
+//! real `loom` is unavailable offline):
+//!
+//! 1. [`PoolModel`] — the `Pool::run` submit → execute → join-barrier
+//!    handoff (`parallel/pool.rs`): a caller thread publishes a region,
+//!    participates as tid 0, then blocks on `done_cv` until every worker's
+//!    decrement; workers park on `work_cv` between regions and exit on
+//!    shutdown. The model proves, over EVERY schedule: no lost wakeup (a
+//!    deadlock would be reported), every thread executes every region
+//!    exactly once, and shutdown terminates all workers.
+//! 2. [`BatcherModel`] — the `BatchQueue` close-while-consumer-waits path
+//!    (`coordinator/batcher.rs`): a consumer parked inside the
+//!    `wait_timeout` deadline window must be woken by `close()` and hand
+//!    over the partial batch; a push racing with close either lands (and
+//!    is delivered) or fails fast — the item is never silently dropped.
+//!
+//! Model granularity is one critical section per step (see the
+//! `interleave` module docs for why that coarsening is sound for
+//! mutex-protected state). The expected execution counts are pinned: they
+//! were computed by exhaustive enumeration of these exact state machines,
+//! and a count change means the model (or the explorer) changed semantics.
+
+use sinkhorn_wmd::testing::interleave::{explore, Model};
+
+// ---------------------------------------------------------------------------
+// Pool::run / join-barrier model
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CallerPc {
+    /// Lock, publish region (epoch += 1, pending = W), notify `work_cv`.
+    Submit,
+    /// Run the region body as tid 0 (outside the lock).
+    ExecSelf,
+    /// Lock, check `pending`; park on `done_cv` if workers are still
+    /// running, otherwise retire the region and move on.
+    Join,
+    /// Lock, set `shutdown`, notify `work_cv` (the `Drop` impl).
+    Shutdown,
+    /// `JoinHandle::join` on every worker.
+    JoinWorkers,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WorkerPc {
+    /// One pass of the worker's locked acquire loop: exit on shutdown,
+    /// take an unseen region, or park on `work_cv`.
+    Acquire,
+    /// Run the region body (outside the lock).
+    Exec,
+    /// Lock, `pending -= 1`, notify `done_cv` when it hits zero.
+    Decr,
+    Done,
+}
+
+/// Thread 0 is the caller; threads `1..=w` are workers.
+struct PoolModel {
+    w: usize,
+    regions: usize,
+    // The `JobSlot` state (everything below the waitsets is mutex-guarded
+    // in the real code, hence one mutation batch per step).
+    epoch: u64,
+    has_region: bool,
+    pending: usize,
+    shutdown: bool,
+    // Condvar waitsets: parked threads are *disabled* until a notify step
+    // clears them (condvar wait releases the lock atomically, so
+    // check-then-park is a single step — exactly the real code's shape).
+    work_waiters: Vec<bool>,
+    done_waiter: bool,
+    caller_pc: CallerPc,
+    submitted: usize,
+    worker_pc: Vec<WorkerPc>,
+    seen_epoch: Vec<u64>,
+    executed: Vec<usize>,
+}
+
+impl PoolModel {
+    fn new(w: usize, regions: usize) -> Self {
+        Self {
+            w,
+            regions,
+            epoch: 0,
+            has_region: false,
+            pending: 0,
+            shutdown: false,
+            work_waiters: vec![false; w],
+            done_waiter: false,
+            caller_pc: CallerPc::Submit,
+            submitted: 0,
+            worker_pc: vec![WorkerPc::Acquire; w],
+            seen_epoch: vec![0; w],
+            executed: vec![0; w + 1],
+        }
+    }
+
+    fn notify_work_cv(&mut self) {
+        self.work_waiters.iter_mut().for_each(|p| *p = false);
+    }
+}
+
+impl Model for PoolModel {
+    fn threads(&self) -> usize {
+        self.w + 1
+    }
+
+    fn done(&self, t: usize) -> bool {
+        if t == 0 {
+            self.caller_pc == CallerPc::Done
+        } else {
+            self.worker_pc[t - 1] == WorkerPc::Done
+        }
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        if t == 0 {
+            match self.caller_pc {
+                CallerPc::Join => !self.done_waiter,
+                CallerPc::JoinWorkers => {
+                    self.worker_pc.iter().all(|&pc| pc == WorkerPc::Done)
+                }
+                _ => true,
+            }
+        } else {
+            match self.worker_pc[t - 1] {
+                WorkerPc::Acquire => !self.work_waiters[t - 1],
+                _ => true,
+            }
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        if t == 0 {
+            match self.caller_pc {
+                CallerPc::Submit => {
+                    self.epoch += 1;
+                    self.has_region = true;
+                    self.pending = self.w;
+                    self.notify_work_cv();
+                    self.caller_pc = CallerPc::ExecSelf;
+                }
+                CallerPc::ExecSelf => {
+                    self.executed[0] += 1;
+                    self.caller_pc = CallerPc::Join;
+                }
+                CallerPc::Join => {
+                    if self.pending > 0 {
+                        self.done_waiter = true;
+                    } else {
+                        self.has_region = false;
+                        self.submitted += 1;
+                        self.caller_pc = if self.submitted == self.regions {
+                            CallerPc::Shutdown
+                        } else {
+                            CallerPc::Submit
+                        };
+                    }
+                }
+                CallerPc::Shutdown => {
+                    self.shutdown = true;
+                    self.notify_work_cv();
+                    self.caller_pc = CallerPc::JoinWorkers;
+                }
+                CallerPc::JoinWorkers => self.caller_pc = CallerPc::Done,
+                CallerPc::Done => unreachable!(),
+            }
+        } else {
+            let i = t - 1;
+            match self.worker_pc[i] {
+                WorkerPc::Acquire => {
+                    if self.shutdown {
+                        self.worker_pc[i] = WorkerPc::Done;
+                    } else if self.epoch != self.seen_epoch[i] && self.has_region {
+                        self.seen_epoch[i] = self.epoch;
+                        self.worker_pc[i] = WorkerPc::Exec;
+                    } else {
+                        self.work_waiters[i] = true;
+                    }
+                }
+                WorkerPc::Exec => {
+                    self.executed[t] += 1;
+                    self.worker_pc[i] = WorkerPc::Decr;
+                }
+                WorkerPc::Decr => {
+                    self.pending -= 1;
+                    if self.pending == 0 && self.done_waiter {
+                        self.done_waiter = false;
+                    }
+                    self.worker_pc[i] = WorkerPc::Acquire;
+                }
+                WorkerPc::Done => unreachable!(),
+            }
+        }
+    }
+
+    fn check(&self) {
+        assert!(self.pending <= self.w, "pending underflow");
+        for (t, &e) in self.executed.iter().enumerate() {
+            assert!(e <= self.regions, "thread {t} over-executed: {e}");
+        }
+    }
+
+    fn check_final(&self) {
+        assert_eq!(self.pending, 0);
+        assert_eq!(self.submitted, self.regions);
+        for (t, &e) in self.executed.iter().enumerate() {
+            assert_eq!(e, self.regions, "thread {t} executed {e} of {} regions", self.regions);
+        }
+    }
+}
+
+#[test]
+fn pool_one_worker_two_regions_all_schedules() {
+    let stats = explore(|| PoolModel::new(1, 2), 50_000);
+    // Exact exhaustive counts for this state machine; a change means the
+    // protocol model changed, not just noise.
+    assert_eq!(stats.executions, 1_922);
+    assert_eq!(stats.max_depth, 20);
+}
+
+#[test]
+fn pool_two_workers_one_region_all_schedules() {
+    let stats = explore(|| PoolModel::new(2, 1), 1_000_000);
+    assert_eq!(stats.executions, 95_900);
+    assert_eq!(stats.max_depth, 18);
+}
+
+#[test]
+fn pool_one_worker_three_regions_all_schedules() {
+    let stats = explore(|| PoolModel::new(1, 3), 1_000_000);
+    assert_eq!(stats.executions, 59_582);
+    assert_eq!(stats.max_depth, 28);
+}
+
+// ---------------------------------------------------------------------------
+// BatchQueue close-while-waiting model
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Park {
+    /// Inside `cv.wait` (queue was empty).
+    Untimed,
+    /// Inside `cv.wait_timeout` (holding a batch below the flush bar).
+    Timed,
+}
+
+/// Thread 0 = consumer (`next_batch` loop until `None`), 1 = producer (one
+/// `push`), 2 = closer (`close`), 3 = the clock (fires the `max_wait`
+/// deadline). `max_batch` is modeled as unreachable (100), so the only
+/// flush triggers are the deadline and close — the exact path the real
+/// `close_while_consumer_waits_flushes_immediately` test exercises, but
+/// here over every schedule, including push-after-close.
+struct BatcherModel {
+    queue: usize,
+    closed: bool,
+    deadline: bool,
+    pushed: usize,
+    delivered: usize,
+    got_none: bool,
+    park: Option<Park>,
+    consumer_done: bool,
+    producer_done: bool,
+    closer_done: bool,
+    clock_done: bool,
+}
+
+impl BatcherModel {
+    fn new() -> Self {
+        Self {
+            queue: 0,
+            closed: false,
+            deadline: false,
+            pushed: 0,
+            delivered: 0,
+            got_none: false,
+            park: None,
+            consumer_done: false,
+            producer_done: false,
+            closer_done: false,
+            clock_done: false,
+        }
+    }
+}
+
+impl Model for BatcherModel {
+    fn threads(&self) -> usize {
+        4
+    }
+
+    fn done(&self, t: usize) -> bool {
+        match t {
+            0 => self.consumer_done,
+            1 => self.producer_done,
+            2 => self.closer_done,
+            _ => self.clock_done,
+        }
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        if t == 0 {
+            match self.park {
+                Some(Park::Untimed) => false,
+                // A timed wait self-wakes once the deadline lapses.
+                Some(Park::Timed) => self.deadline,
+                None => true,
+            }
+        } else {
+            true
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        match t {
+            0 => {
+                // One locked pass of next_batch's loop (a timeout wake
+                // re-acquires the lock and re-checks in the same pass).
+                if self.park == Some(Park::Timed) && self.deadline {
+                    self.park = None;
+                }
+                if self.queue > 0 {
+                    if self.deadline || self.closed {
+                        self.delivered += self.queue;
+                        self.queue = 0;
+                    } else {
+                        self.park = Some(Park::Timed);
+                    }
+                } else if self.closed {
+                    self.got_none = true;
+                    self.consumer_done = true;
+                } else {
+                    self.park = Some(Park::Untimed);
+                }
+            }
+            1 => {
+                // push(): fails fast when closed, else enqueue + notify_all.
+                if !self.closed {
+                    self.queue += 1;
+                    self.pushed += 1;
+                    self.park = None;
+                }
+                self.producer_done = true;
+            }
+            2 => {
+                // close(): flag + notify_all.
+                self.closed = true;
+                self.park = None;
+                self.closer_done = true;
+            }
+            _ => {
+                // The max_wait deadline lapses; a timed waiter wakes.
+                self.deadline = true;
+                if self.park == Some(Park::Timed) {
+                    self.park = None;
+                }
+                self.clock_done = true;
+            }
+        }
+    }
+
+    fn check(&self) {
+        assert!(self.queue <= 1);
+        assert!(self.delivered <= self.pushed, "delivered an item never pushed");
+    }
+
+    fn check_final(&self) {
+        assert!(self.got_none, "consumer must terminate via None after close");
+        assert_eq!(
+            self.delivered, self.pushed,
+            "a successfully-pushed item was dropped (or duplicated) across close"
+        );
+        assert_eq!(self.queue, 0, "queue must be drained at shutdown");
+    }
+}
+
+#[test]
+fn batcher_close_while_waiting_all_schedules() {
+    let stats = explore(BatcherModel::new, 10_000);
+    // Exhaustive over every producer/closer/deadline interleaving,
+    // including push-after-close (delivered == 0) and close-while-parked.
+    assert_eq!(stats.executions, 51);
+    assert_eq!(stats.max_depth, 8);
+}

@@ -66,7 +66,7 @@ fn pjrt_solve_matches_rust_sparse_at_exact_bucket() {
             .iter()
             .zip(&out.wmd)
             .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
-            .fold(0.0f64, f64::max);
+            .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
         // Tolerance: XLA's matmul accumulation order differs from our
         // 4-lane dot, and the GEMM-form cdist amplifies cancellation
         // noise near zero distances by √ then ×λ — a few 1e-9 relative
@@ -104,7 +104,7 @@ fn pjrt_padding_perturbation_is_small_at_convergence() {
         .iter()
         .zip(&padded_out.wmd)
         .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
-        .fold(0.0f64, f64::max);
+        .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
     assert!(max_rel < 1e-4, "padding perturbs converged WMD by {max_rel:.3e}");
 }
 
@@ -150,7 +150,7 @@ fn cdist_k_artifact_matches_rust_precompute() {
             .iter()
             .zip(rust)
             .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
-            .fold(0.0f64, f64::max);
+            .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
         // The GEMM-form d² = ‖q‖²+‖y‖²−2q·y has absolute cancellation
         // noise ~1e-16·‖q‖² near d = 0; √ turns that into ~1e-8 on d and
         // exp(−λd) into ~1e-6 on K near self-distances (amplified by 1/r

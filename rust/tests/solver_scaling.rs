@@ -51,7 +51,7 @@ fn kernels_and_threads_commute_at_mid_scale() {
                 .iter()
                 .zip(&reference.wmd)
                 .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
-                .fold(0.0f64, f64::max);
+                .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
             assert!(max_rel < tol, "{kernel:?} p={p}: {max_rel:.2e}");
         }
     }
@@ -71,7 +71,7 @@ fn dense_baseline_agrees_at_mid_scale() {
         .iter()
         .zip(&dense.wmd)
         .map(|(a, b)| (a - b).abs() / b.abs().max(1e-300))
-        .fold(0.0f64, f64::max);
+        .fold(0.0f64, sinkhorn_wmd::util::nan_max2);
     assert!(max_rel < 1e-9, "dense vs sparse: {max_rel:.2e}");
     // The Table-1 shape: the dense matmul dominates the dense pipeline.
     let rows = times.rows();
