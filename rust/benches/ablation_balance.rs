@@ -11,7 +11,7 @@ mod common;
 use sinkhorn_wmd::bench::{bench_fn, write_bench_json, Table};
 use sinkhorn_wmd::parallel::{even_rows_partition, partition::imbalance, NnzRange, Pool};
 use sinkhorn_wmd::sinkhorn::SinkhornConfig;
-use sinkhorn_wmd::sparse::ops::{sddtmm_dstmmt_batch, FusedScratch, TransposedPattern};
+use sinkhorn_wmd::sparse::ops::{sddtmm_dstmmt_batch, ActiveView, FusedScratch, TransposedPattern};
 use sinkhorn_wmd::sparse::Dense;
 use sinkhorn_wmd::util::json::{obj, Json};
 
@@ -42,6 +42,7 @@ fn main() {
             std::slice::from_ref(u_t),
             std::slice::from_mut(x_t),
             &[true],
+            ActiveView::full(),
             pool,
             parts,
             &mut scratch,

@@ -1,0 +1,158 @@
+//! Per-document convergence ablation on a skewed corpus: exact global
+//! stopping vs per-document freezing vs freezing + active-set compaction.
+//!
+//! The workload is the power-law document-length mix (`doc_length_skew`)
+//! the feature targets: short documents converge orders of magnitude
+//! earlier than the heavy tail, so the exact criterion pays full-corpus
+//! iterate cost until the very last straggler while the compacting solver
+//! shrinks its traversal to the surviving columns. The headline numbers
+//! are **nnz traversed** (the machine-checkable work metric) and wall
+//! time; the freeze-iteration histogram (min/p50/max) shows the spread
+//! that makes compaction pay. Results land in `BENCH_convergence.json`
+//! (override with `WMD_BENCH_CONVERGENCE_JSON`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{bench_fn, convergence_json_path, merge_bench_json, Table};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver};
+use sinkhorn_wmd::util::json::{obj, Json};
+
+fn main() {
+    common::header(
+        "convergence_skew",
+        "per-document convergence: freezing + active-set compaction on a skewed corpus",
+    );
+    let (v, n, w) = match common::scale() {
+        common::Scale::Quick => (2_000, 200, 32),
+        common::Scale::Default => (8_000, 1_000, 64),
+        common::Scale::Paper => (20_000, 4_000, 128),
+    };
+    // Pareto document lengths: a few heavy documents carry most of the
+    // nnz and converge last — the regime the active set is built for.
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(v)
+        .num_docs(n)
+        .embedding_dim(w)
+        .n_topics(8)
+        .tokens_per_doc(40)
+        .doc_length_skew(1.1)
+        .num_queries(4)
+        .query_words(8, 16)
+        .seed(808)
+        .build();
+    let pool = Pool::new(sinkhorn_wmd::util::num_cpus());
+    let settings = common::settings();
+    let base = SinkhornConfig {
+        lambda: 3.0,
+        tolerance: 1e-5,
+        check_every: 4,
+        max_iter: 4_000,
+        ..Default::default()
+    };
+
+    // The ablation ladder: exact global criterion → per-document freezing
+    // without compaction → freezing + traversal compaction (the default).
+    let modes: [(&str, SinkhornConfig); 3] = [
+        ("exact-global", SinkhornConfig { compact_every: 0, ..base }),
+        ("freeze-only", SinkhornConfig { compact_threshold: 0.0, compact_every: 1, ..base }),
+        ("freeze+compact", SinkhornConfig { compact_threshold: 0.75, compact_every: 1, ..base }),
+    ];
+
+    let mut table = Table::new([
+        "mode",
+        "mean/query",
+        "speedup",
+        "iters",
+        "nnz traversed",
+        "vs full",
+        "compactions",
+        "freeze iters min/p50/max",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut baseline_secs = None;
+    let mut reference: Option<Vec<SolveOutput>> = None;
+    for (name, config) in modes {
+        let solver = SparseSolver::new(config);
+        let mut ws = SolveWorkspace::new();
+        let preps: Vec<_> = corpus
+            .queries
+            .iter()
+            .map(|q| solver.prepare_in(&mut ws, &corpus.embeddings, q, &pool))
+            .collect();
+        let r = bench_fn(name, &settings, || {
+            preps
+                .iter()
+                .map(|p| solver.solve_in(&mut ws, p, &corpus.c, &pool))
+                .collect::<Vec<_>>()
+        });
+        let outs: Vec<SolveOutput> =
+            preps.iter().map(|p| solver.solve_in(&mut ws, p, &corpus.c, &pool)).collect();
+        // Sanity gate: a frozen document sits within O(tolerance / (1 − ρ))
+        // of where the exact stop leaves it, so the freezing modes must
+        // track the exact run within a tolerance-scaled band (1e-2 ≈
+        // 1000 × tol). The tight 1e-9 equivalence lives in
+        // tests/compaction_test.rs at tight tolerances; this gate catches
+        // gross pinning bugs, which surface as O(1) errors.
+        match &reference {
+            None => reference = Some(outs.clone()),
+            Some(exact) => {
+                for (q, (out, re)) in outs.iter().zip(exact).enumerate() {
+                    for (j, (&d, &de)) in out.wmd.iter().zip(&re.wmd).enumerate() {
+                        assert!(
+                            (d - de).abs() <= 1e-2 * (1.0 + de.abs()),
+                            "{name} q{q} doc {j}: {d} vs exact {de}"
+                        );
+                    }
+                }
+            }
+        }
+        let mean_per_query = r.mean_secs() / corpus.queries.len() as f64;
+        let baseline = *baseline_secs.get_or_insert(mean_per_query);
+        let iters: usize = outs.iter().map(|o| o.iterations).sum();
+        let traversed: u64 = outs.iter().map(|o| o.conv.nnz_traversed).sum();
+        let full: u64 = outs.iter().map(|o| o.conv.nnz_full).sum();
+        let compactions: usize = outs.iter().map(|o| o.conv.compactions).sum();
+        let mut hist = outs[0].conv.freeze_iters;
+        for o in &outs[1..] {
+            hist.merge(&o.conv.freeze_iters);
+        }
+        let (fmin, fp50, fmax) = if hist.count == 0 {
+            (0, 0, 0)
+        } else {
+            (hist.min, hist.p50().unwrap_or(0), hist.max)
+        };
+        table.row([
+            name.to_string(),
+            format!("{:.1} ms", mean_per_query * 1e3),
+            format!("{:.2}x", baseline / mean_per_query),
+            iters.to_string(),
+            traversed.to_string(),
+            format!("{:.1}%", 100.0 * traversed as f64 / full as f64),
+            compactions.to_string(),
+            format!("{fmin}/{fp50}/{fmax}"),
+        ]);
+        json_rows.push(obj([
+            ("mode", Json::Str(name.to_string())),
+            ("mean_ms_per_query", Json::Num(mean_per_query * 1e3)),
+            ("speedup_vs_exact", Json::Num(baseline / mean_per_query)),
+            ("iterations", Json::Num(iters as f64)),
+            ("nnz_traversed", Json::Num(traversed as f64)),
+            ("nnz_full", Json::Num(full as f64)),
+            ("compactions", Json::Num(compactions as f64)),
+            ("freeze_iters_min", Json::Num(fmin as f64)),
+            ("freeze_iters_p50", Json::Num(fp50 as f64)),
+            ("freeze_iters_max", Json::Num(fmax as f64)),
+        ]));
+    }
+    table.print();
+    let path = convergence_json_path();
+    match merge_bench_json(&path, "convergence_skew", Json::Arr(json_rows)) {
+        Ok(()) => println!("\n[convergence_skew] results merged into {}", path.display()),
+        Err(e) => eprintln!("[convergence_skew] could not write {}: {e}", path.display()),
+    }
+    println!("\nFreezing pins early-converging documents; compaction stops walking them.");
+    println!("The nnz-traversed column is the work actually done by the iterate kernel.");
+}

@@ -7,7 +7,9 @@ pub mod runner;
 pub mod sysinfo;
 pub mod table;
 
-pub use report::{bench_json_path, merge_bench_json, prune_json_path, write_bench_json};
+pub use report::{
+    bench_json_path, convergence_json_path, merge_bench_json, prune_json_path, write_bench_json,
+};
 pub use runner::{bench_fn, BenchResult, BenchSettings};
 pub use sysinfo::SysInfo;
 pub use table::Table;

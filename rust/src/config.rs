@@ -21,6 +21,12 @@ pub struct CorpusConfig {
     pub query_words_min: usize,
     pub query_words_max: usize,
     pub seed: u64,
+    /// Document-length skew exponent. `0` keeps every document at
+    /// `tokens_per_doc` (the uniform default); `> 0` draws lengths from a
+    /// power law (Pareto with shape `alpha = doc_length_skew`) so a few
+    /// documents are much longer than the rest — the workload where
+    /// per-document convergence tracking pays off most.
+    pub doc_length_skew: f64,
 }
 
 impl Default for CorpusConfig {
@@ -35,6 +41,7 @@ impl Default for CorpusConfig {
             query_words_min: 19,
             query_words_max: 43,
             seed: 42,
+            doc_length_skew: 0.0,
         }
     }
 }
@@ -53,6 +60,7 @@ impl CorpusConfig {
             .embedding_dim(self.embedding_dim)
             .n_topics(self.n_topics)
             .tokens_per_doc(self.tokens_per_doc)
+            .doc_length_skew(self.doc_length_skew)
             .num_queries(self.num_queries)
             .query_words(self.query_words_min, self.query_words_max)
             .seed(self.seed)
@@ -122,6 +130,9 @@ impl RunConfig {
             cfg.apply(&section, key, value)
                 .map_err(|e| format!("line {}: {e}", lineno + 1))?;
         }
+        // Cross-key invariants the per-line parser cannot see: reject
+        // configs the solver would panic on, with the offending key named.
+        cfg.sinkhorn.validate()?;
         Ok(cfg)
     }
 
@@ -142,10 +153,24 @@ impl RunConfig {
             ("corpus", "query_words_min") => self.corpus.query_words_min = p(value)?,
             ("corpus", "query_words_max") => self.corpus.query_words_max = p(value)?,
             ("corpus", "seed") => self.corpus.seed = p(value)?,
+            ("corpus", "doc_length_skew") => {
+                let skew: f64 = p(value)?;
+                if !(skew >= 0.0 && skew.is_finite()) {
+                    return Err(format!(
+                        "corpus.doc_length_skew must be non-negative and finite, got {skew} \
+                         (0 keeps uniform document lengths)"
+                    ));
+                }
+                self.corpus.doc_length_skew = skew;
+            }
             ("sinkhorn", "lambda") => self.sinkhorn.lambda = p::<Real>(value)?,
             ("sinkhorn", "max_iter") => self.sinkhorn.max_iter = p(value)?,
             ("sinkhorn", "tolerance") => self.sinkhorn.tolerance = p::<Real>(value)?,
             ("sinkhorn", "check_every") => self.sinkhorn.check_every = p(value)?,
+            ("sinkhorn", "compact_threshold") => {
+                self.sinkhorn.compact_threshold = p::<Real>(value)?
+            }
+            ("sinkhorn", "compact_every") => self.sinkhorn.compact_every = p(value)?,
             ("sinkhorn", "kernel") => {
                 self.sinkhorn.kernel = match value {
                     // Preserve an already-set precision when re-selecting
@@ -222,10 +247,11 @@ impl RunConfig {
             "# sinkhorn-wmd run configuration\n\
              threads = {}\nshards = {}\nartifacts_dir = {}\n\n\
              [corpus]\nvocab_size = {}\nnum_docs = {}\nembedding_dim = {}\n\
-             n_topics = {}\ntokens_per_doc = {}\nnum_queries = {}\n\
+             n_topics = {}\ntokens_per_doc = {}\ndoc_length_skew = {}\nnum_queries = {}\n\
              query_words_min = {}\nquery_words_max = {}\nseed = {}\n\n\
              [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
-             check_every = {}\nkernel = \"{}\"\nprecision = \"{}\"\n\n\
+             check_every = {}\ncompact_threshold = {}\ncompact_every = {}\n\
+             kernel = \"{}\"\nprecision = \"{}\"\n\n\
              [prune]\ncascade = \"{}\"\n",
             top["threads"],
             top["shards"],
@@ -235,6 +261,7 @@ impl RunConfig {
             self.corpus.embedding_dim,
             self.corpus.n_topics,
             self.corpus.tokens_per_doc,
+            self.corpus.doc_length_skew,
             self.corpus.num_queries,
             self.corpus.query_words_min,
             self.corpus.query_words_max,
@@ -243,6 +270,8 @@ impl RunConfig {
             self.sinkhorn.max_iter,
             self.sinkhorn.tolerance,
             self.sinkhorn.check_every,
+            self.sinkhorn.compact_threshold,
+            self.sinkhorn.compact_every,
             kernel,
             precision,
             self.prune.render(),
@@ -351,6 +380,43 @@ mod tests {
             let err = RunConfig::from_str("[sinkhorn]\nprecision = \"mixed\"\n").unwrap_err();
             assert!(err.contains("mixed-precision` feature"), "{err}");
         }
+    }
+
+    #[test]
+    fn parses_and_roundtrips_convergence_keys() {
+        let cfg = RunConfig::from_str(
+            "[sinkhorn]\ncompact_threshold = 0.5\ncompact_every = 2\n\
+             [corpus]\ndoc_length_skew = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sinkhorn.compact_threshold, 0.5);
+        assert_eq!(cfg.sinkhorn.compact_every, 2);
+        assert_eq!(cfg.corpus.doc_length_skew, 1.5);
+        let back = RunConfig::from_str(&cfg.render()).unwrap();
+        assert_eq!(back.sinkhorn.compact_threshold, 0.5);
+        assert_eq!(back.sinkhorn.compact_every, 2);
+        assert_eq!(back.corpus.doc_length_skew, 1.5);
+        // compact_every = 0 is the exact-mode opt-out, legal in files too.
+        let cfg = RunConfig::from_str("[sinkhorn]\ncompact_every = 0\n").unwrap();
+        assert_eq!(cfg.sinkhorn.compact_every, 0);
+    }
+
+    #[test]
+    fn rejects_invalid_sinkhorn_values_at_parse_time() {
+        // The solver would panic on these; the parser must catch them
+        // with the key named in the message instead.
+        let err = RunConfig::from_str("[sinkhorn]\ncheck_every = 0\n").unwrap_err();
+        assert!(err.contains("sinkhorn.check_every"), "{err}");
+        let err = RunConfig::from_str("[sinkhorn]\ntolerance = -0.5\n").unwrap_err();
+        assert!(err.contains("sinkhorn.tolerance"), "{err}");
+        let err = RunConfig::from_str("[sinkhorn]\nmax_iter = 0\n").unwrap_err();
+        assert!(err.contains("sinkhorn.max_iter"), "{err}");
+        let err = RunConfig::from_str("[sinkhorn]\nlambda = 0\n").unwrap_err();
+        assert!(err.contains("sinkhorn.lambda"), "{err}");
+        let err = RunConfig::from_str("[sinkhorn]\ncompact_threshold = 1.5\n").unwrap_err();
+        assert!(err.contains("sinkhorn.compact_threshold"), "{err}");
+        let err = RunConfig::from_str("[corpus]\ndoc_length_skew = -1\n").unwrap_err();
+        assert!(err.contains("doc_length_skew"), "{err}");
     }
 
     #[test]

@@ -6,6 +6,36 @@ use std::time::Duration;
 /// Number of log₂ latency buckets: bucket `i` covers `[2^i, 2^{i+1}) µs`.
 const BUCKETS: usize = 32;
 
+/// Buckets of the iterations-to-freeze histogram (mirrors
+/// [`crate::sinkhorn::FreezeHistogram`]).
+const FREEZE_BUCKETS: usize = 16;
+
+/// An atomic running minimum whose "empty" state is `u64::MAX` (the
+/// derive-friendly wrapper `fetch_min` needs — a plain `AtomicU64`
+/// defaults to 0, which would absorb every later minimum).
+#[derive(Debug)]
+struct AtomicMin(AtomicU64);
+
+impl Default for AtomicMin {
+    fn default() -> Self {
+        Self(AtomicU64::new(u64::MAX))
+    }
+}
+
+impl AtomicMin {
+    fn record(&self, v: u64) {
+        self.0.fetch_min(v, Ordering::Relaxed);
+    }
+
+    /// The minimum seen so far, or `None` if nothing was recorded.
+    fn load(&self) -> Option<u64> {
+        match self.0.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            v => Some(v),
+        }
+    }
+}
+
 /// Shared service metrics. All methods are thread-safe.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -40,6 +70,14 @@ pub struct Metrics {
     cascade_sinkhorn_in: AtomicU64,
     cascade_sinkhorn_out: AtomicU64,
     pruned_solves: AtomicU64,
+    conv_frozen_cols: AtomicU64,
+    conv_compactions: AtomicU64,
+    conv_nnz_traversed: AtomicU64,
+    conv_nnz_full: AtomicU64,
+    freeze_cols: AtomicU64,
+    freeze_min: AtomicMin,
+    freeze_max: AtomicU64,
+    freeze_hist: [AtomicU64; FREEZE_BUCKETS],
 }
 
 impl Metrics {
@@ -140,6 +178,30 @@ impl Metrics {
         self.pruned_solves.fetch_add(pruned as u64, Ordering::Relaxed);
     }
 
+    /// Fold one solve's per-document convergence telemetry in: frozen
+    /// columns, compactions and nnz traversal counters sum; the
+    /// iterations-to-freeze histogram merges bucket-wise (min via
+    /// `fetch_min`, max via `fetch_max`), so the serving-wide min/p50/max
+    /// is exact over every solve recorded.
+    pub fn record_convergence(&self, conv: &crate::sinkhorn::ConvergenceStats) {
+        self.conv_frozen_cols.fetch_add(conv.frozen_columns as u64, Ordering::Relaxed);
+        self.conv_compactions.fetch_add(conv.compactions as u64, Ordering::Relaxed);
+        self.conv_nnz_traversed.fetch_add(conv.nnz_traversed, Ordering::Relaxed);
+        self.conv_nnz_full.fetch_add(conv.nnz_full, Ordering::Relaxed);
+        let h = &conv.freeze_iters;
+        if h.count == 0 {
+            return;
+        }
+        self.freeze_cols.fetch_add(h.count, Ordering::Relaxed);
+        self.freeze_min.record(h.min as u64);
+        self.freeze_max.fetch_max(h.max as u64, Ordering::Relaxed);
+        for (slot, &k) in self.freeze_hist.iter().zip(&h.buckets) {
+            if k > 0 {
+                slot.fetch_add(k, Ordering::Relaxed);
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -180,6 +242,24 @@ impl Metrics {
             cascade_sinkhorn_in: self.cascade_sinkhorn_in.load(Ordering::Relaxed),
             cascade_sinkhorn_out: self.cascade_sinkhorn_out.load(Ordering::Relaxed),
             pruned_solves: self.pruned_solves.load(Ordering::Relaxed),
+            conv_frozen_cols: self.conv_frozen_cols.load(Ordering::Relaxed),
+            conv_compactions: self.conv_compactions.load(Ordering::Relaxed),
+            conv_nnz_traversed: self.conv_nnz_traversed.load(Ordering::Relaxed),
+            conv_nnz_full: self.conv_nnz_full.load(Ordering::Relaxed),
+            freeze_iters: {
+                // Reassemble the serving-wide histogram so p50 comes from
+                // the same bucket logic the per-solve stats use.
+                let mut h = crate::sinkhorn::FreezeHistogram {
+                    count: self.freeze_cols.load(Ordering::Relaxed),
+                    min: self.freeze_min.load().map_or(u32::MAX, |v| v.min(u32::MAX as u64) as u32),
+                    max: self.freeze_max.load(Ordering::Relaxed).min(u32::MAX as u64) as u32,
+                    buckets: [0; FREEZE_BUCKETS],
+                };
+                for (dst, src) in h.buckets.iter_mut().zip(&self.freeze_hist) {
+                    *dst = src.load(Ordering::Relaxed);
+                }
+                h
+            },
         }
     }
 }
@@ -246,6 +326,18 @@ pub struct MetricsSnapshot {
     /// Exact Sinkhorn sub-solves the cascade's bounds avoided
     /// (`total_docs − exact_evals`, summed over cascade queries).
     pub pruned_solves: u64,
+    /// Target columns frozen by per-document convergence, summed over
+    /// every sparse solve recorded.
+    pub conv_frozen_cols: u64,
+    /// Active-set traversal compactions performed.
+    pub conv_compactions: u64,
+    /// Pattern entries actually walked by the iterate (what compaction
+    /// shrinks) vs what the full traversal would have cost.
+    pub conv_nnz_traversed: u64,
+    pub conv_nnz_full: u64,
+    /// Serving-wide iterations-to-freeze distribution (exact min/max;
+    /// p50 at power-of-two bucket resolution).
+    pub freeze_iters: crate::sinkhorn::FreezeHistogram,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -266,6 +358,9 @@ fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
+        // Min reads 0 (not the u32::MAX sentinel) while nothing froze.
+        let freeze_min = if self.freeze_iters.count == 0 { 0 } else { self.freeze_iters.min };
+        let freeze_p50 = self.freeze_iters.p50().unwrap_or(0);
         format!(
             "queries={} batches={} errors={} mean={:?} p50≤{:?} p95≤{:?} \
              backends: sparse={} dense={} pjrt={} prep-cache: hits={} misses={} \
@@ -274,7 +369,9 @@ impl MetricsSnapshot {
              sharded: batches={} shard-solves={} shard-iters={} \
              workspace: bytes={} checkouts={} grows={} \
              cascade: queries={} wcd={}/{} lcrwmd={}/{} rwmd={}/{} sinkhorn={}/{} \
-             pruned-solves={}",
+             pruned-solves={} \
+             convergence: frozen-cols={} compactions={} nnz-traversed={} nnz-full={} \
+             freeze-iters: min={} p50≤{} max={}",
             self.queries,
             self.batches,
             self.errors,
@@ -306,7 +403,14 @@ impl MetricsSnapshot {
             self.cascade_rwmd_out,
             self.cascade_sinkhorn_in,
             self.cascade_sinkhorn_out,
-            self.pruned_solves
+            self.pruned_solves,
+            self.conv_frozen_cols,
+            self.conv_compactions,
+            self.conv_nnz_traversed,
+            self.conv_nnz_full,
+            freeze_min,
+            freeze_p50,
+            self.freeze_iters.max
         )
     }
 }
@@ -443,6 +547,60 @@ mod tests {
             .report()
             .contains("cascade: queries=2 wcd=200/80 lcrwmd=80/80 rwmd=0/0 sinkhorn=80/24"));
         assert!(s.report().contains("pruned-solves=176"));
+    }
+
+    #[test]
+    fn convergence_counters_fold_solve_stats() {
+        use crate::sinkhorn::{ConvergenceStats, FreezeHistogram};
+        let m = Metrics::new();
+        let mut h1 = FreezeHistogram::default();
+        h1.record(4);
+        h1.record(9);
+        let mut h2 = FreezeHistogram::default();
+        h2.record(2);
+        m.record_convergence(&ConvergenceStats {
+            frozen_columns: 10,
+            compactions: 2,
+            nnz_traversed: 700,
+            nnz_full: 1000,
+            freeze_iters: h1,
+        });
+        m.record_convergence(&ConvergenceStats {
+            frozen_columns: 5,
+            compactions: 0,
+            nnz_traversed: 300,
+            nnz_full: 400,
+            freeze_iters: h2,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.conv_frozen_cols, 15);
+        assert_eq!(s.conv_compactions, 2);
+        assert_eq!(s.conv_nnz_traversed, 1000);
+        assert_eq!(s.conv_nnz_full, 1400);
+        assert_eq!(s.freeze_iters.count, 3);
+        assert_eq!(s.freeze_iters.min, 2);
+        assert_eq!(s.freeze_iters.max, 9);
+        assert!(s.report().contains(
+            "convergence: frozen-cols=15 compactions=2 nnz-traversed=1000 nnz-full=1400"
+        ));
+        assert!(s.report().contains("freeze-iters: min=2"));
+        assert!(s.report().contains("max=9"));
+    }
+
+    #[test]
+    fn convergence_min_reads_zero_before_any_freeze() {
+        use crate::sinkhorn::ConvergenceStats;
+        let m = Metrics::new();
+        // Exact-mode solves carry an empty histogram — min must stay the
+        // sentinel internally and read 0 in the report.
+        m.record_convergence(&ConvergenceStats {
+            nnz_traversed: 10,
+            nnz_full: 10,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        assert_eq!(s.freeze_iters.count, 0);
+        assert!(s.report().contains("freeze-iters: min=0 p50≤0 max=0"));
     }
 
     #[test]

@@ -397,6 +397,12 @@ fn dispatcher(
                 metrics.record_batched_solve(sparse_jobs.len());
             }
             metrics.record_kernel_queries(config.sinkhorn.kernel, sparse_jobs.len() as u64);
+            // Per-document convergence telemetry (frozen columns,
+            // compactions, nnz traversed vs full, iterations-to-freeze
+            // histogram) — sharded outputs arrive pre-merged.
+            for out in &outs {
+                metrics.record_convergence(&out.conv);
+            }
             for ((job, _prep, started), out) in sparse_jobs.into_iter().zip(outs) {
                 let latency = started.elapsed();
                 metrics.record_query(latency, Backend::SparseRust);

@@ -249,9 +249,8 @@ impl ShardSet {
                                         preps
                                             .iter()
                                             .map(|_| SolveOutput {
-                                                wmd: Vec::new(),
-                                                iterations: 0,
                                                 converged: true,
+                                                ..Default::default()
                                             })
                                             .collect()
                                     } else {

@@ -23,6 +23,7 @@ pub struct CorpusBuilder {
     n_topics: usize,
     tokens_per_doc: usize,
     zipf_alpha: f64,
+    doc_length_skew: f64,
     num_queries: usize,
     query_words_min: usize,
     query_words_max: usize,
@@ -38,6 +39,7 @@ impl Default for CorpusBuilder {
             n_topics: 8,
             tokens_per_doc: 60, // ≈ 34 distinct words under Zipf sampling
             zipf_alpha: 1.05,
+            doc_length_skew: 0.0,
             num_queries: 10,
             query_words_min: 19,
             query_words_max: 43,
@@ -64,6 +66,19 @@ impl CorpusBuilder {
     setter!(zipf_alpha, f64);
     setter!(num_queries, usize);
     setter!(seed, u64);
+
+    /// Power-law document-length skew. `0` (the default) keeps every
+    /// document at `tokens_per_doc`; `alpha > 0` draws each document's
+    /// token count from a Pareto distribution with shape `alpha` and
+    /// minimum `tokens_per_doc / 4` (capped at `16 × tokens_per_doc`), so
+    /// a few documents carry most of the corpus nnz — the skewed workload
+    /// the solver's per-document convergence tracking targets. Smaller
+    /// `alpha` means heavier skew.
+    pub fn doc_length_skew(mut self, alpha: f64) -> Self {
+        assert!(alpha >= 0.0 && alpha.is_finite(), "doc_length_skew must be >= 0");
+        self.doc_length_skew = alpha;
+        self
+    }
 
     pub fn query_words(mut self, min: usize, max: usize) -> Self {
         assert!(min >= 1 && min <= max);
@@ -106,12 +121,24 @@ impl CorpusBuilder {
                 .collect()
         };
 
-        // Target documents.
+        // Target documents. Uniform lengths by default; with a skew
+        // exponent, per-document token counts follow a Pareto law
+        // `len = min_len · u^{-1/alpha}` (inverse-CDF sampling), capped so
+        // one astronomically lucky draw cannot dominate the corpus.
         let mut docs = Vec::with_capacity(self.num_docs);
         let mut doc_topics = Vec::with_capacity(self.num_docs);
+        let min_len = (self.tokens_per_doc / 4).max(4);
+        let max_len = self.tokens_per_doc * 16;
         for _ in 0..self.num_docs {
             let topic = rng.below(self.n_topics);
-            let ids = draw_tokens(&mut rng, topic, self.tokens_per_doc);
+            let count = if self.doc_length_skew > 0.0 {
+                let u = rng.next_f64().max(1e-12);
+                let len = min_len as f64 * u.powf(-1.0 / self.doc_length_skew);
+                (len as usize).clamp(min_len, max_len)
+            } else {
+                self.tokens_per_doc
+            };
+            let ids = draw_tokens(&mut rng, topic, count);
             docs.push(SparseVec::from_token_ids(self.vocab_size, &ids));
             doc_topics.push(topic as u32);
         }
@@ -306,6 +333,78 @@ mod tests {
         }
         let frac = in_topic as f64 / total as f64;
         assert!(frac > 0.6, "topic coherence too low: {frac}");
+    }
+
+    #[test]
+    fn doc_length_skew_produces_heavy_tail() {
+        let uniform = small();
+        let skewed = SyntheticCorpus::builder()
+            .vocab_size(2_000)
+            .num_docs(100)
+            .embedding_dim(32)
+            .n_topics(4)
+            .num_queries(5)
+            .query_words(10, 20)
+            .seed(7)
+            .doc_length_skew(1.1)
+            .build();
+        // Same shapes and invariants as the uniform corpus…
+        assert_eq!(skewed.c.nrows(), 2_000);
+        assert_eq!(skewed.c.ncols(), 100);
+        for s in skewed.c.column_sums() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // …but the per-document support sizes spread out: the largest
+        // document is much bigger than the median, unlike the uniform
+        // corpus whose sizes cluster tightly.
+        let sizes = |c: &crate::sparse::Csr| -> Vec<usize> {
+            let mut counts = vec![0usize; c.ncols()];
+            for &j in c.col_idx() {
+                counts[j as usize] += 1;
+            }
+            counts.sort_unstable();
+            counts
+        };
+        let su = sizes(&uniform.c);
+        let ss = sizes(&skewed.c);
+        let ratio = |s: &[usize]| s[s.len() - 1] as f64 / s[s.len() / 2].max(1) as f64;
+        assert!(
+            ratio(&ss) > 2.0 && ratio(&ss) > 1.5 * ratio(&su),
+            "skewed max/median {:.2} vs uniform {:.2}",
+            ratio(&ss),
+            ratio(&su)
+        );
+        // Deterministic under the same seed, like the uniform generator.
+        let again = SyntheticCorpus::builder()
+            .vocab_size(2_000)
+            .num_docs(100)
+            .embedding_dim(32)
+            .n_topics(4)
+            .num_queries(5)
+            .query_words(10, 20)
+            .seed(7)
+            .doc_length_skew(1.1)
+            .build();
+        assert_eq!(skewed.c, again.c);
+    }
+
+    #[test]
+    fn zero_skew_is_the_uniform_generator() {
+        // doc_length_skew(0.0) must leave the token stream untouched —
+        // bitwise the same corpus as never calling the setter.
+        let a = small();
+        let b = SyntheticCorpus::builder()
+            .vocab_size(2_000)
+            .num_docs(100)
+            .embedding_dim(32)
+            .n_topics(4)
+            .num_queries(5)
+            .query_words(10, 20)
+            .seed(7)
+            .doc_length_skew(0.0)
+            .build();
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.queries, b.queries);
     }
 
     #[test]

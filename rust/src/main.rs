@@ -447,6 +447,7 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
             wmd: resp.wmd,
             iterations: resp.iterations,
             converged: true,
+            ..Default::default()
         };
         println!("\nquery: {text:?}");
         let mut t = Table::new(["rank", "doc", "wmd", "label"]);
@@ -475,10 +476,10 @@ mod tests {
         let out = SolveOutput {
             wmd: vec![Real::INFINITY, Real::NAN, Real::INFINITY],
             iterations: 4,
-            converged: false,
+            ..Default::default()
         };
         assert_eq!(best_match_cells(&out), ("-".to_string(), "no match".to_string()));
-        let out = SolveOutput { wmd: vec![], iterations: 0, converged: false };
+        let out = SolveOutput::default();
         assert_eq!(best_match_cells(&out).1, "no match");
     }
 
@@ -488,6 +489,7 @@ mod tests {
             wmd: vec![2.5, Real::INFINITY, 1.25],
             iterations: 4,
             converged: true,
+            ..Default::default()
         };
         assert_eq!(best_match_cells(&out), ("2".to_string(), "1.2500".to_string()));
     }

@@ -20,7 +20,8 @@ pub mod simulator;
 
 pub use atomic::AtomicF64Slice;
 pub use partition::{
-    balanced_nnz_partition, balanced_nnz_partition_into, even_rows_partition, NnzRange,
+    balanced_nnz_partition, balanced_nnz_partition_into, even_rows_partition,
+    subset_nnz_prefix_into, NnzRange,
 };
 pub use pool::Pool;
 

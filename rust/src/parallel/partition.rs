@@ -59,6 +59,27 @@ pub fn balanced_nnz_partition_into(row_ptr: &[usize], nthreads: usize, out: &mut
     }));
 }
 
+/// Cumulative nnz prefix of a *subset* of rows (or columns): `out[s+1] -
+/// out[s]` is the nnz count of `subset[s]` under `ptr`. The resulting
+/// prefix array is exactly the `row_ptr` shape [`balanced_nnz_partition_into`]
+/// expects, so a partition over the subset is the composition of the two —
+/// the building block of the solver's active-set compaction (partition the
+/// surviving columns of a mostly-frozen solve without rebuilding the
+/// pattern). Writes into a caller-owned grow-only buffer; subset indices
+/// are `u32` to match [`crate::sparse::ops::TransposedPattern`]'s entry
+/// index width.
+pub fn subset_nnz_prefix_into(ptr: &[usize], subset: &[u32], out: &mut Vec<usize>) {
+    out.clear();
+    out.reserve(subset.len() + 1);
+    out.push(0);
+    let mut acc = 0usize;
+    for &j in subset {
+        let j = j as usize;
+        acc += ptr[j + 1] - ptr[j];
+        out.push(acc);
+    }
+}
+
 /// Row containing nnz index `k`: the last row `r` with `row_ptr[r] <= k`.
 /// For `k == nnz` returns `nrows` (the end sentinel). Skips empty rows.
 #[inline]
@@ -194,5 +215,59 @@ mod tests {
         let rp = vec![0usize, 0, 0];
         let parts = balanced_nnz_partition(&rp, 4);
         assert!(parts.iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn subset_prefix_matches_per_row_counts() {
+        let mut rng = Pcg64::new(14);
+        for _ in 0..30 {
+            let nrows = rng.range(1, 120);
+            let rp = random_row_ptr(&mut rng, nrows, 13);
+            // Random strictly-ascending subset.
+            let subset: Vec<u32> =
+                (0..nrows as u32).filter(|_| rng.next_f64() < 0.4).collect();
+            let mut prefix = Vec::new();
+            subset_nnz_prefix_into(&rp, &subset, &mut prefix);
+            assert_eq!(prefix.len(), subset.len() + 1);
+            assert_eq!(prefix[0], 0);
+            for (s, &j) in subset.iter().enumerate() {
+                let j = j as usize;
+                assert_eq!(prefix[s + 1] - prefix[s], rp[j + 1] - rp[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn subset_prefix_partitions_like_a_row_ptr() {
+        // The prefix composes with the nnz partitioner: a balanced split of
+        // the subset covers its nnz disjointly and start_row is a subset
+        // *position* (not a global row id).
+        let rp = vec![0usize, 5, 5, 9, 20, 21, 30];
+        let subset = vec![0u32, 3, 5];
+        let mut prefix = Vec::new();
+        subset_nnz_prefix_into(&rp, &subset, &mut prefix);
+        assert_eq!(prefix, vec![0, 5, 16, 25]);
+        let parts = balanced_nnz_partition(&prefix, 3);
+        assert_eq!(parts[0].nnz_start, 0);
+        assert_eq!(parts[2].nnz_end, 25);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].nnz_end, w[1].nnz_start);
+        }
+        for part in &parts {
+            if !part.is_empty() {
+                assert!(prefix[part.start_row] <= part.nnz_start);
+                assert!(prefix[part.start_row + 1] > part.nnz_start);
+            }
+        }
+    }
+
+    #[test]
+    fn subset_prefix_reuses_dirty_buffer() {
+        let rp = vec![0usize, 2, 6, 7];
+        let mut prefix = vec![99usize; 40];
+        subset_nnz_prefix_into(&rp, &[1, 2], &mut prefix);
+        assert_eq!(prefix, vec![0, 4, 5]);
+        subset_nnz_prefix_into(&rp, &[], &mut prefix);
+        assert_eq!(prefix, vec![0]);
     }
 }

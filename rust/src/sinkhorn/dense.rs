@@ -241,7 +241,12 @@ impl DenseSolver {
             }
             times.finish = t.elapsed();
 
-            SolveOutput { wmd, iterations: self.config.max_iter, converged: false }
+            SolveOutput {
+                wmd,
+                iterations: self.config.max_iter,
+                converged: false,
+                ..Default::default()
+            }
         };
         ws.end_checkout(bytes_before);
         (out, times)

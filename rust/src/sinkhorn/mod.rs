@@ -15,5 +15,8 @@ pub mod solver;
 pub mod workspace;
 
 pub use dense::{DenseSolver, DenseStageTimes};
-pub use solver::{IterateKernel, Precision, Prepared, SinkhornConfig, SolveOutput, SparseSolver};
+pub use solver::{
+    ConvergenceStats, FreezeHistogram, IterateKernel, Precision, Prepared, SinkhornConfig,
+    SolveOutput, SparseSolver,
+};
 pub use workspace::{SolveWorkspace, WorkspaceStats};

@@ -17,8 +17,8 @@
 use super::workspace::SolveWorkspace;
 use crate::corpus::SparseVec;
 use crate::dist::{precompute_factors_in, QueryFactors};
-use crate::parallel::{balanced_nnz_partition_into, Pool};
-use crate::sparse::ops::{sddmm, sddtmm_dstmmt_batch, sddtmm_wmd_batch, spmm_atomic};
+use crate::parallel::{balanced_nnz_partition_into, subset_nnz_prefix_into, NnzRange, Pool};
+use crate::sparse::ops::{sddmm, sddtmm_dstmmt_batch, sddtmm_wmd_batch, spmm_atomic, ActiveView};
 use crate::sparse::{Csr, Dense, Panel32};
 use crate::util::SharedSlice;
 use crate::Real;
@@ -125,17 +125,77 @@ pub struct SinkhornConfig {
     pub tolerance: Real,
     /// Evaluate the convergence check every `check_every` iterations.
     pub check_every: usize,
+    /// Active-set compaction trigger. With per-document freezing on
+    /// (`tolerance > 0` and `compact_every > 0`), the solver rebuilds the
+    /// iterate's traversal over the surviving columns once their nnz share
+    /// drops below this fraction of the current traversal — and keeps
+    /// re-compacting as the active set shrinks further. `0.0` freezes
+    /// columns but never compacts the walk. Must lie in `[0, 1]`.
+    pub compact_threshold: Real,
+    /// Consider compaction every `compact_every`-th convergence check.
+    /// `0` is the **exact-mode opt-out**: no per-document freezing and no
+    /// compaction — the solver stops on the global max-residual criterion
+    /// and is bitwise identical to the pre-compaction implementation.
+    pub compact_every: usize,
     /// Iterate kernel choice.
     pub kernel: IterateKernel,
 }
 
 impl Default for SinkhornConfig {
     fn default() -> Self {
-        Self { lambda: 10.0, max_iter: 64, tolerance: 1e-3, check_every: 4, kernel: IterateKernel::default() }
+        Self {
+            lambda: 10.0,
+            max_iter: 64,
+            tolerance: 1e-3,
+            check_every: 4,
+            compact_threshold: 0.75,
+            compact_every: 1,
+            kernel: IterateKernel::default(),
+        }
     }
 }
 
 impl SinkhornConfig {
+    /// Check the invariants the solver relies on, with an actionable
+    /// message for config files. Rejects `check_every == 0` (it is the
+    /// check-cadence divisor in `iterations % check_every`), `max_iter ==
+    /// 0`, non-finite/negative `tolerance` and `lambda`, and a
+    /// `compact_threshold` outside `[0, 1]`. `compact_every == 0` is
+    /// *valid* — the exact-mode opt-out.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.lambda > 0.0 && self.lambda.is_finite()) {
+            return Err(format!(
+                "sinkhorn.lambda must be positive and finite, got {}",
+                self.lambda
+            ));
+        }
+        if self.max_iter == 0 {
+            return Err("sinkhorn.max_iter must be at least 1".into());
+        }
+        if !(self.tolerance >= 0.0 && self.tolerance.is_finite()) {
+            return Err(format!(
+                "sinkhorn.tolerance must be non-negative and finite, got {} \
+                 (use 0 to disable the early exit)",
+                self.tolerance
+            ));
+        }
+        if self.check_every == 0 {
+            return Err(
+                "sinkhorn.check_every must be at least 1 (the convergence check runs \
+                 every check_every iterations)"
+                    .into(),
+            );
+        }
+        if !(self.compact_threshold >= 0.0 && self.compact_threshold <= 1.0) {
+            return Err(format!(
+                "sinkhorn.compact_threshold must lie in [0, 1], got {} \
+                 (0 freezes columns without compacting the traversal)",
+                self.compact_threshold
+            ));
+        }
+        Ok(())
+    }
+
     /// Phase-1 preparation shared by every solver consuming `dist`
     /// factors (sparse and dense alike): select the query's non-zero
     /// words and run the fused precompute with this config's λ.
@@ -183,8 +243,101 @@ impl Prepared {
     }
 }
 
+/// Power-of-two histogram of per-column iterations-to-freeze: bucket `b`
+/// counts columns that froze in `[2^b, 2^(b+1))` iterations. Columns that
+/// never froze are recorded at the solve's final iteration count, so the
+/// histogram always describes every non-empty column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FreezeHistogram {
+    /// Columns recorded.
+    pub count: u64,
+    /// Fewest iterations any column took (`u32::MAX` while empty).
+    pub min: u32,
+    /// Most iterations any column took.
+    pub max: u32,
+    /// Power-of-two buckets; the last one is open-ended.
+    pub buckets: [u64; 16],
+}
+
+impl Default for FreezeHistogram {
+    fn default() -> Self {
+        Self { count: 0, min: u32::MAX, max: 0, buckets: [0; 16] }
+    }
+}
+
+impl FreezeHistogram {
+    pub fn record(&mut self, iters: u32) {
+        self.count += 1;
+        self.min = self.min.min(iters);
+        self.max = self.max.max(iters);
+        let b = (31 - iters.max(1).leading_zeros()).min(15) as usize;
+        self.buckets[b] += 1;
+    }
+
+    pub fn merge(&mut self, other: &FreezeHistogram) {
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Median iterations-to-freeze, as the upper bound of the bucket that
+    /// crosses half the mass (clamped to the observed `[min, max]`).
+    /// `None` while the histogram is empty.
+    pub fn p50(&self) -> Option<u32> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = (self.count + 1) / 2;
+        let mut cum = 0u64;
+        for (b, &k) in self.buckets.iter().enumerate() {
+            cum += k;
+            if cum >= target {
+                let hi = if b >= 15 { u32::MAX } else { (1u32 << (b + 1)) - 1 };
+                return Some(hi.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
+
+/// Per-solve convergence telemetry: what the freeze/compaction machinery
+/// actually did. Attached to every [`SolveOutput`] and folded into the
+/// coordinator's metrics. Under the exact-mode opt-out (`compact_every =
+/// 0`) the freeze/compaction counters stay zero and `nnz_traversed ==
+/// nnz_full` — the full pattern is walked every iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConvergenceStats {
+    /// Columns whose per-document residual froze before the solve ended.
+    pub frozen_columns: usize,
+    /// Traversal compactions performed.
+    pub compactions: usize,
+    /// Pattern entries actually walked by the iterate, summed over
+    /// iterations — the quantity compaction shrinks.
+    pub nnz_traversed: u64,
+    /// What the walk would have cost without compaction
+    /// (`iterations × nnz`).
+    pub nnz_full: u64,
+    /// Per-column iterations-to-freeze distribution.
+    pub freeze_iters: FreezeHistogram,
+}
+
+impl ConvergenceStats {
+    /// Fold another solve's (or shard's) stats in: counters sum, the
+    /// histogram merges.
+    pub fn merge(&mut self, other: &ConvergenceStats) {
+        self.frozen_columns += other.frozen_columns;
+        self.compactions += other.compactions;
+        self.nnz_traversed += other.nnz_traversed;
+        self.nnz_full += other.nnz_full;
+        self.freeze_iters.merge(&other.freeze_iters);
+    }
+}
+
 /// Result of a one-to-many solve.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SolveOutput {
     /// `wmd[j]` = Sinkhorn distance from the query to target doc `j`.
     pub wmd: Vec<Real>,
@@ -192,6 +345,8 @@ pub struct SolveOutput {
     pub iterations: usize,
     /// Whether the tolerance-based early exit fired.
     pub converged: bool,
+    /// Per-document convergence telemetry for this solve.
+    pub conv: ConvergenceStats,
 }
 
 impl SolveOutput {
@@ -224,6 +379,7 @@ impl SolveOutput {
         let mut covered = 0usize;
         let mut iterations = 0usize;
         let mut converged = true;
+        let mut conv = ConvergenceStats::default();
         for (offset, part) in parts {
             assert!(
                 offset + part.wmd.len() <= total_docs,
@@ -236,9 +392,10 @@ impl SolveOutput {
             covered += part.wmd.len();
             iterations = iterations.max(part.iterations);
             converged &= part.converged;
+            conv.merge(&part.conv);
         }
         assert_eq!(covered, total_docs, "shard slices must tile the target set exactly");
-        SolveOutput { wmd, iterations, converged }
+        SolveOutput { wmd, iterations, converged, conv }
     }
 
     /// Indices of the `k` most similar documents, ascending by distance.
@@ -277,9 +434,9 @@ pub struct SparseSolver {
 
 impl SparseSolver {
     pub fn new(config: SinkhornConfig) -> Self {
-        assert!(config.lambda > 0.0, "lambda must be positive");
-        assert!(config.max_iter >= 1);
-        assert!(config.check_every >= 1);
+        if let Err(msg) = config.validate() {
+            panic!("invalid Sinkhorn config: {msg}");
+        }
         Self { config }
     }
 
@@ -361,6 +518,12 @@ impl SparseSolver {
                 kt_lo,
                 kor_lo,
                 u_lo,
+                frozen,
+                resid,
+                freeze_iter,
+                active_cols,
+                act_ptr,
+                act_parts,
                 ..
             } = &mut *ws;
             empty_columns_into(c, empty);
@@ -394,9 +557,40 @@ impl SparseSolver {
                 u_lo[0].reset(n, v_r, v_r as f32);
             }
 
+            // Per-document convergence state. `freezing` is the default
+            // mode (tolerance-based early exit with per-column freezing);
+            // `compact_every = 0` opts back into the exact global
+            // criterion, bitwise identical to the pre-compaction solver.
+            let freezing = self.config.tolerance > 0.0 && self.config.compact_every > 0;
+            let can_compact = freezing
+                && self.config.compact_threshold > 0.0
+                && matches!(self.config.kernel, IterateKernel::Fused { .. });
+            frozen.clear();
+            frozen.resize(n, false);
+            resid.clear();
+            resid.resize(n, 0.0);
+            freeze_iter.clear();
+            freeze_iter.resize(n, 0);
+            let full_nnz = c.nnz();
+            let mut active_cols_count = empty.iter().filter(|&&e| !e).count();
+            let mut active_nnz = full_nnz;
+            let mut traversal_nnz = full_nnz;
+            let mut compacted = false;
+            let mut checks_done = 0usize;
+            let mut conv = ConvergenceStats::default();
+
             let mut iterations = 0;
             let mut converged = false;
             while iterations < self.config.max_iter {
+                let view = if freezing {
+                    ActiveView {
+                        cols: if compacted { Some((&active_cols[..], &act_ptr[..])) } else { None },
+                        frozen: Some(&frozen[..]),
+                    }
+                } else {
+                    ActiveView::full()
+                };
+                let iter_parts: &[NnzRange] = if compacted { act_parts } else { col_parts };
                 match self.config.kernel {
                     IterateKernel::Fused { .. } => {
                         if mixed {
@@ -408,8 +602,9 @@ impl SparseSolver {
                                 &u_lo[..1],
                                 std::slice::from_mut(x_new),
                                 &[true],
+                                view,
                                 pool,
-                                col_parts,
+                                iter_parts,
                                 fused,
                             );
                         } else {
@@ -421,37 +616,96 @@ impl SparseSolver {
                                 std::slice::from_ref(&*u_t),
                                 std::slice::from_mut(x_new),
                                 &[true],
+                                view,
                                 pool,
-                                col_parts,
+                                iter_parts,
                                 fused,
                             );
                         }
                     }
                     IterateKernel::Unfused => {
+                        // The unfused baseline never compacts (it walks the
+                        // row-major pattern); freezing still pins u rows.
                         let w = w_slot.as_deref_mut().expect("w buffer");
                         sddmm(c, &f.kt, u_t, w, pool, parts);
                         spmm_atomic(c, &w[..], &f.kor_t, x_new, pool, parts);
                     }
                 }
+                conv.nnz_traversed += traversal_nnz as u64;
+                conv.nnz_full += full_nnz as u64;
                 iterations += 1;
                 let check = self.config.tolerance > 0.0
                     && (iterations % self.config.check_every == 0
                         || iterations == self.config.max_iter);
                 // One fused pass: marginal residual (needs the OLD u against
                 // the RAW new x) + per-column renormalization + u update.
-                let residual = update_u(
+                update_u(
                     x_new,
                     u_t,
                     &f.r,
                     empty,
+                    if freezing { Some(&frozen[..]) } else { None },
                     check,
+                    resid,
                     pool,
                     if mixed { Some(&mut u_lo[0]) } else { None },
                 );
                 std::mem::swap(x_t, x_new);
-                if check && residual <= self.config.tolerance {
-                    converged = true;
-                    break;
+                if !check {
+                    continue;
+                }
+                if freezing {
+                    // Freeze every column whose own marginal residual just
+                    // dropped below tolerance: its u row stays pinned from
+                    // here on (update_u skipped it next iteration onward).
+                    for j in 0..n {
+                        if !empty[j] && !frozen[j] && resid[j] <= self.config.tolerance {
+                            frozen[j] = true;
+                            freeze_iter[j] = iterations as u32;
+                            active_cols_count -= 1;
+                            active_nnz -= pattern.col_ptr[j + 1] - pattern.col_ptr[j];
+                        }
+                    }
+                    if active_cols_count == 0 {
+                        converged = true;
+                        break;
+                    }
+                    checks_done += 1;
+                    if can_compact
+                        && checks_done % self.config.compact_every == 0
+                        && (active_nnz as Real)
+                            < self.config.compact_threshold * traversal_nnz as Real
+                    {
+                        // Compact the traversal to the surviving columns:
+                        // subset prefix + nnz-balanced partition over it,
+                        // all into retained workspace buffers.
+                        active_cols.clear();
+                        active_cols
+                            .extend((0..n).filter(|&j| !empty[j] && !frozen[j]).map(|j| j as u32));
+                        subset_nnz_prefix_into(&pattern.col_ptr, active_cols, act_ptr);
+                        balanced_nnz_partition_into(act_ptr, pool.nthreads(), act_parts);
+                        compacted = true;
+                        traversal_nnz = active_nnz;
+                        conv.compactions += 1;
+                    }
+                } else {
+                    // Exact mode: the global max-residual criterion. Max of
+                    // f64 is order-independent, so folding the per-column
+                    // lanes serially reproduces the old parallel reduction
+                    // bitwise.
+                    let worst = resid.iter().fold(0.0f64, |w, &r| if r > w { r } else { w });
+                    if worst <= self.config.tolerance {
+                        converged = true;
+                        break;
+                    }
+                }
+            }
+            conv.frozen_columns = frozen.iter().filter(|&&fz| fz).count();
+            for j in 0..n {
+                if !empty[j] {
+                    let it =
+                        if freeze_iter[j] > 0 { freeze_iter[j] } else { iterations as u32 };
+                    conv.freeze_iters.record(it);
                 }
             }
 
@@ -475,7 +729,7 @@ impl SparseSolver {
                     *w = Real::INFINITY;
                 }
             }
-            SolveOutput { wmd, iterations, converged }
+            SolveOutput { wmd, iterations, converged, conv }
         };
         ws.end_checkout(bytes_before);
         out
@@ -547,6 +801,12 @@ impl SparseSolver {
                 kt_lo,
                 kor_lo,
                 u_lo,
+                frozen,
+                resid,
+                freeze_iter,
+                active_cols,
+                act_ptr,
+                act_parts,
                 ..
             } = &mut *ws;
             empty_columns_into(c, empty);
@@ -585,31 +845,68 @@ impl SparseSolver {
             active.clear();
             active.resize(b, true);
 
+            // Per-(query, column) convergence state, flat B × N. The
+            // compacted column list is the *union* of the active queries'
+            // survivors, so it always covers every unfrozen (q, j) — the
+            // per-query masks do the fine-grained skipping.
+            let freezing = self.config.tolerance > 0.0 && self.config.compact_every > 0;
+            let can_compact = freezing && self.config.compact_threshold > 0.0;
+            frozen.clear();
+            frozen.resize(b * n, false);
+            resid.clear();
+            resid.resize(b * n, 0.0);
+            freeze_iter.clear();
+            freeze_iter.resize(b * n, 0);
+            let full_nnz = c.nnz();
+            let n_nonempty = empty.iter().filter(|&&e| !e).count();
+            let mut remaining: Vec<usize> = vec![n_nonempty; b];
+            let mut convs: Vec<ConvergenceStats> = vec![ConvergenceStats::default(); b];
+            let mut traversal_nnz = full_nnz;
+            let mut compacted = false;
+            let mut checks_done = 0usize;
+
             let mut iter = 0;
             while iter < self.config.max_iter && active.iter().any(|&a| a) {
+                let view = if freezing {
+                    ActiveView {
+                        cols: if compacted { Some((&active_cols[..], &act_ptr[..])) } else { None },
+                        frozen: Some(&frozen[..]),
+                    }
+                } else {
+                    ActiveView::full()
+                };
+                let iter_parts: &[NnzRange] = if compacted { act_parts } else { col_parts };
                 // The u lanes pass straight through as slices — no
                 // per-iteration reference-vector rebuild.
                 if mixed {
                     sddtmm_dstmmt_batch(
-                        c, &*pattern, &kt_lo_refs, &kor_lo_refs, &u_lo[..b], x_new, active,
-                        pool, col_parts, fused,
+                        c, &*pattern, &kt_lo_refs, &kor_lo_refs, &u_lo[..b], x_new, active, view,
+                        pool, iter_parts, fused,
                     );
                 } else {
                     sddtmm_dstmmt_batch(
-                        c, &*pattern, &kts, &kor_ts, &*u_t, x_new, active, pool, col_parts,
+                        c, &*pattern, &kts, &kor_ts, &*u_t, x_new, active, view, pool, iter_parts,
                         fused,
                     );
+                }
+                for q in 0..b {
+                    if active[q] {
+                        convs[q].nnz_traversed += traversal_nnz as u64;
+                        convs[q].nnz_full += full_nnz as u64;
+                    }
                 }
                 iter += 1;
                 let check = self.config.tolerance > 0.0
                     && (iter % self.config.check_every == 0 || iter == self.config.max_iter);
-                let residuals = update_u_batch(
+                update_u_batch(
                     x_new,
                     u_t,
                     &rs,
                     empty,
                     active,
+                    if freezing { Some(&frozen[..]) } else { None },
                     check,
+                    resid,
                     pool,
                     if mixed { Some(&mut u_lo[..b]) } else { None },
                 );
@@ -619,9 +916,81 @@ impl SparseSolver {
                     }
                     iterations[q] = iter;
                     std::mem::swap(&mut x_t[q], &mut x_new[q]);
-                    if check && residuals[q] <= self.config.tolerance {
-                        converged[q] = true;
-                        active[q] = false;
+                }
+                if !check {
+                    continue;
+                }
+                if freezing {
+                    // Per-column freezing, independently per query — the
+                    // same decisions a single-query solve of q would make,
+                    // so batch results stay bitwise equal to singles.
+                    for q in 0..b {
+                        if !active[q] {
+                            continue;
+                        }
+                        for j in 0..n {
+                            let qj = q * n + j;
+                            if !empty[j] && !frozen[qj] && resid[qj] <= self.config.tolerance {
+                                frozen[qj] = true;
+                                freeze_iter[qj] = iter as u32;
+                                remaining[q] -= 1;
+                            }
+                        }
+                        if remaining[q] == 0 {
+                            converged[q] = true;
+                            active[q] = false;
+                        }
+                    }
+                    checks_done += 1;
+                    if can_compact
+                        && checks_done % self.config.compact_every == 0
+                        && active.iter().any(|&a| a)
+                    {
+                        let col_alive = |j: usize| {
+                            !empty[j] && (0..b).any(|q| active[q] && !frozen[q * n + j])
+                        };
+                        let union_nnz: usize = (0..n)
+                            .filter(|&j| col_alive(j))
+                            .map(|j| pattern.col_ptr[j + 1] - pattern.col_ptr[j])
+                            .sum();
+                        if (union_nnz as Real)
+                            < self.config.compact_threshold * traversal_nnz as Real
+                        {
+                            active_cols.clear();
+                            active_cols.extend((0..n).filter(|&j| col_alive(j)).map(|j| j as u32));
+                            subset_nnz_prefix_into(&pattern.col_ptr, active_cols, act_ptr);
+                            balanced_nnz_partition_into(act_ptr, pool.nthreads(), act_parts);
+                            compacted = true;
+                            traversal_nnz = union_nnz;
+                            for cq in convs.iter_mut().zip(&*active) {
+                                if *cq.1 {
+                                    cq.0.compactions += 1;
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    for q in 0..b {
+                        if !active[q] {
+                            continue;
+                        }
+                        let lane = &resid[q * n..(q + 1) * n];
+                        let worst = lane.iter().fold(0.0f64, |w, &r| if r > w { r } else { w });
+                        if worst <= self.config.tolerance {
+                            converged[q] = true;
+                            active[q] = false;
+                        }
+                    }
+                }
+            }
+            for q in 0..b {
+                convs[q].frozen_columns =
+                    frozen[q * n..(q + 1) * n].iter().filter(|&&fz| fz).count();
+                for j in 0..n {
+                    if !empty[j] {
+                        let fi = freeze_iter[q * n + j];
+                        let it = if fi > 0 { fi } else { iterations[q] as u32 };
+                        convs[q].freeze_iters.record(it);
                     }
                 }
             }
@@ -639,7 +1008,12 @@ impl SparseSolver {
                             *w = Real::INFINITY;
                         }
                     }
-                    SolveOutput { wmd, iterations: iterations[q], converged: converged[q] }
+                    SolveOutput {
+                        wmd,
+                        iterations: iterations[q],
+                        converged: converged[q],
+                        conv: convs[q],
+                    }
                 })
                 .collect::<Vec<SolveOutput>>()
         };
@@ -682,78 +1056,90 @@ impl SparseSolver {
 /// (undeliverable mass, constant 1) would block convergence forever. The
 /// solve reports those documents as `+inf` in the epilogue instead.
 ///
+/// Rows flagged in `frozen` (per-document convergence, when given) are
+/// skipped the same way: their `u` row keeps the value pinned at the check
+/// that froze them, which is what the WMD epilogue reads.
+///
 /// When `u_lo` is given (mixed precision), the freshly written f64 `u`
 /// row is also narrowed into the f32 mirror in the same pass — the next
 /// iterate reads the mirror, every other consumer reads the f64 master.
-/// Mirror rows of empty documents stay stale, matching the skipped f64
-/// rows; the kernels never read them (empty columns have no entries).
+/// Mirror rows of empty (or frozen) documents stay stale, matching the
+/// skipped f64 rows; the kernels never read them.
 ///
-/// Returns the max residual over documents (0.0 when not checking).
+/// When `check` is set, each processed row's marginal residual is written
+/// to its `resid` slot (skipped rows keep their previous value; the caller
+/// only inspects unfrozen non-empty slots, or relies on the solve-entry
+/// zero fill).
+#[allow(clippy::too_many_arguments)]
 fn update_u(
     x_new: &mut Dense,
     u_t: &mut Dense,
     r: &[Real],
     empty: &[bool],
+    frozen: Option<&[bool]>,
     check: bool,
+    resid: &mut [Real],
     pool: &Pool,
     u_lo: Option<&mut Panel32>,
-) -> Real {
+) {
     let n = x_new.nrows();
     let vr = x_new.ncols();
     debug_assert_eq!(r.len(), vr);
     debug_assert_eq!(empty.len(), n);
+    debug_assert_eq!(resid.len(), n);
+    if let Some(fz) = frozen {
+        debug_assert_eq!(fz.len(), n);
+    }
     let x_view = SharedSlice::new(x_new.as_mut_slice());
     let u_view = SharedSlice::new(u_t.as_mut_slice());
+    let resid_view = SharedSlice::new(resid);
     let u_lo_view: Option<SharedSlice<f32>> = u_lo.map(|p| {
         debug_assert_eq!(p.nrows(), n);
         debug_assert_eq!(p.ncols(), vr);
         SharedSlice::new(p.as_mut_slice())
     });
-    pool.parallel_reduce(
-        n,
-        0.0f64,
-        |rows, worst| {
-            for j in rows {
-                if empty[j] {
-                    continue;
-                }
-                // SAFETY: row j is owned by exactly one thread.
-                let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
-                let u_row = unsafe { u_view.slice_mut(j * vr, vr) };
-                if check {
-                    let mut res = 0.0;
-                    for k in 0..vr {
-                        res += (u_row[k] * r[k] * x_row[k] - r[k]).abs();
-                    }
-                    if res > *worst {
-                        *worst = res;
-                    }
-                }
-                let mean: Real = x_row.iter().sum::<Real>() / vr as Real;
-                let inv_mean = 1.0 / mean;
+    pool.parallel_for(n, |rows| {
+        for j in rows {
+            if empty[j] || frozen.map_or(false, |fz| fz[j]) {
+                continue;
+            }
+            // SAFETY: row j (and resid slot j) is owned by exactly one
+            // thread — parallel_for hands out disjoint row ranges.
+            let x_row = unsafe { x_view.slice_mut(j * vr, vr) };
+            let u_row = unsafe { u_view.slice_mut(j * vr, vr) };
+            if check {
+                let mut res = 0.0;
                 for k in 0..vr {
-                    let xn = x_row[k] * inv_mean;
-                    x_row[k] = xn;
-                    u_row[k] = 1.0 / xn;
+                    res += (u_row[k] * r[k] * x_row[k] - r[k]).abs();
                 }
-                if let Some(v) = &u_lo_view {
-                    // SAFETY: row j of the mirror is owned by this thread.
-                    let lo = unsafe { v.slice_mut(j * vr, vr) };
-                    for k in 0..vr {
-                        lo[k] = u_row[k] as f32;
-                    }
+                unsafe { resid_view.slice_mut(j, 1)[0] = res };
+            }
+            let mean: Real = x_row.iter().sum::<Real>() / vr as Real;
+            let inv_mean = 1.0 / mean;
+            for k in 0..vr {
+                let xn = x_row[k] * inv_mean;
+                x_row[k] = xn;
+                u_row[k] = 1.0 / xn;
+            }
+            if let Some(v) = &u_lo_view {
+                // SAFETY: row j of the mirror is owned by this thread.
+                let lo = unsafe { v.slice_mut(j * vr, vr) };
+                for k in 0..vr {
+                    lo[k] = u_row[k] as f32;
                 }
             }
-        },
-        Real::max,
-    )
+        }
+    });
 }
 
 /// Batched [`update_u`]: one parallel region renormalizes every active
-/// query's iterate and computes per-query residuals (the per-query
-/// convergence masks), instead of `B` fork/join barriers per Sinkhorn
+/// query's iterate and writes per-(query, column) residuals into the flat
+/// `B × N` `resid` lanes, instead of `B` fork/join barriers per Sinkhorn
 /// step. Row-wise arithmetic is identical to the single-query pass, so
-/// the batched update is bitwise equivalent per query. `u_los` mirrors
+/// the batched update is bitwise equivalent per query; since the per-row
+/// residual is now a plain owned write (no cross-thread max), no per-check
+/// reduction state is allocated at all. `frozen` is the flat `B × N`
+/// per-document mask ([`update_u`] semantics per lane); `u_los` mirrors
 /// [`update_u`]'s `u_lo` per lane (mixed precision only).
 #[allow(clippy::too_many_arguments)]
 fn update_u_batch(
@@ -762,73 +1148,74 @@ fn update_u_batch(
     rs: &[&[Real]],
     empty: &[bool],
     active: &[bool],
+    frozen: Option<&[bool]>,
     check: bool,
+    resid: &mut [Real],
     pool: &Pool,
     u_los: Option<&mut [Panel32]>,
-) -> Vec<Real> {
+) {
     let b = x_new.len();
     debug_assert_eq!(u_t.len(), b);
     debug_assert_eq!(rs.len(), b);
     debug_assert_eq!(active.len(), b);
     if b == 0 {
-        return Vec::new();
+        return;
     }
     let n = x_new[0].nrows();
     debug_assert_eq!(empty.len(), n);
+    debug_assert_eq!(resid.len(), b * n);
+    if let Some(fz) = frozen {
+        debug_assert_eq!(fz.len(), b * n);
+    }
     let vrs: Vec<usize> = x_new.iter().map(|x| x.ncols()).collect();
     let x_views: Vec<SharedSlice<Real>> =
         x_new.iter_mut().map(|x| SharedSlice::new(x.as_mut_slice())).collect();
     let u_views: Vec<SharedSlice<Real>> =
         u_t.iter_mut().map(|u| SharedSlice::new(u.as_mut_slice())).collect();
+    let resid_view = SharedSlice::new(resid);
     let u_lo_views: Option<Vec<SharedSlice<f32>>> = u_los.map(|ps| {
         debug_assert_eq!(ps.len(), b);
         ps.iter_mut().map(|p| SharedSlice::new(p.as_mut_slice())).collect()
     });
-    pool.parallel_reduce(
-        n,
-        vec![0.0f64; b],
-        |rows, worst| {
-            for j in rows {
-                if empty[j] {
+    pool.parallel_for(n, |rows| {
+        for j in rows {
+            if empty[j] {
+                continue;
+            }
+            for q in 0..b {
+                if !active[q] || frozen.map_or(false, |fz| fz[q * n + j]) {
                     continue;
                 }
-                for q in 0..b {
-                    if !active[q] {
-                        continue;
-                    }
-                    let vr = vrs[q];
-                    // SAFETY: row j of query q is owned by exactly one thread.
-                    let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
-                    let u_row = unsafe { u_views[q].slice_mut(j * vr, vr) };
-                    let r = rs[q];
-                    if check {
-                        let mut res = 0.0;
-                        for k in 0..vr {
-                            res += (u_row[k] * r[k] * x_row[k] - r[k]).abs();
-                        }
-                        if res > worst[q] {
-                            worst[q] = res;
-                        }
-                    }
-                    let mean: Real = x_row.iter().sum::<Real>() / vr as Real;
-                    let inv_mean = 1.0 / mean;
+                let vr = vrs[q];
+                // SAFETY: row j of query q (and resid slot q·n + j) is
+                // owned by exactly one thread.
+                let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
+                let u_row = unsafe { u_views[q].slice_mut(j * vr, vr) };
+                let r = rs[q];
+                if check {
+                    let mut res = 0.0;
                     for k in 0..vr {
-                        let xn = x_row[k] * inv_mean;
-                        x_row[k] = xn;
-                        u_row[k] = 1.0 / xn;
+                        res += (u_row[k] * r[k] * x_row[k] - r[k]).abs();
                     }
-                    if let Some(vs) = &u_lo_views {
-                        // SAFETY: row j of mirror q is owned by this thread.
-                        let lo = unsafe { vs[q].slice_mut(j * vr, vr) };
-                        for k in 0..vr {
-                            lo[k] = u_row[k] as f32;
-                        }
+                    unsafe { resid_view.slice_mut(q * n + j, 1)[0] = res };
+                }
+                let mean: Real = x_row.iter().sum::<Real>() / vr as Real;
+                let inv_mean = 1.0 / mean;
+                for k in 0..vr {
+                    let xn = x_row[k] * inv_mean;
+                    x_row[k] = xn;
+                    u_row[k] = 1.0 / xn;
+                }
+                if let Some(vs) = &u_lo_views {
+                    // SAFETY: row j of mirror q is owned by this thread.
+                    let lo = unsafe { vs[q].slice_mut(j * vr, vr) };
+                    for k in 0..vr {
+                        lo[k] = u_row[k] as f32;
                     }
                 }
             }
-        },
-        |a, c| a.into_iter().zip(c).map(|(x, y)| x.max(y)).collect(),
-    )
+        }
+    });
 }
 
 /// `empty[j]` ⇔ target column `j` has no non-zeros (an empty document),
@@ -1041,6 +1428,7 @@ mod tests {
             wmd: vec![3.0, 1.0, 2.0, 1.0, Real::NAN, 0.5, Real::INFINITY, 1.0, 2.0],
             iterations: 1,
             converged: true,
+            ..Default::default()
         };
         let mut reference: Vec<(usize, Real)> =
             out.wmd.iter().copied().enumerate().filter(|(_, v)| v.is_finite()).collect();
@@ -1059,14 +1447,14 @@ mod tests {
         let out = SolveOutput {
             wmd: vec![Real::NAN, 2.0, Real::INFINITY, 1.0],
             iterations: 1,
-            converged: false,
+            ..Default::default()
         };
         assert_eq!(out.argmin(), Some(3));
         assert_eq!(out.top_k(10), vec![(3, 1.0), (1, 2.0)]);
         let none = SolveOutput {
             wmd: vec![Real::NAN, Real::INFINITY],
             iterations: 1,
-            converged: false,
+            ..Default::default()
         };
         assert_eq!(none.argmin(), None);
         assert!(none.top_k(3).is_empty());
@@ -1192,7 +1580,7 @@ mod tests {
                     // Zero-column slices skip the solver, like the shard
                     // runtime does.
                     let out = if c.ncols() == 0 {
-                        SolveOutput { wmd: Vec::new(), iterations: 0, converged: true }
+                        SolveOutput { converged: true, ..Default::default() }
                     } else {
                         solver.solve(&prep, &c, &pool)
                     };
@@ -1208,7 +1596,8 @@ mod tests {
     #[test]
     #[should_panic(expected = "tile the target set")]
     fn merge_shards_rejects_gaps() {
-        let part = SolveOutput { wmd: vec![1.0, 2.0], iterations: 1, converged: true };
+        let part =
+            SolveOutput { wmd: vec![1.0, 2.0], iterations: 1, converged: true, ..Default::default() };
         let _ = SolveOutput::merge_shards(3, &[(0, part)]);
     }
 
@@ -1232,6 +1621,136 @@ mod tests {
         let diff_ab: f64 = crate::util::nan_max(a.iter().zip(&b).map(|(x, y)| (x - y).abs()));
         let diff_bc: f64 = crate::util::nan_max(b.iter().zip(&c).map(|(x, y)| (x - y).abs()));
         assert!(diff_bc < diff_ab, "no stabilization: {diff_ab} -> {diff_bc}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs_with_actionable_messages() {
+        let ok = SinkhornConfig::default();
+        assert!(ok.validate().is_ok());
+        // compact_every = 0 is the exact-mode opt-out, not an error.
+        assert!(SinkhornConfig { compact_every: 0, ..ok }.validate().is_ok());
+        // tolerance = 0 disables the early exit, also valid.
+        assert!(SinkhornConfig { tolerance: 0.0, ..ok }.validate().is_ok());
+        let cases: Vec<(SinkhornConfig, &str)> = vec![
+            (SinkhornConfig { lambda: 0.0, ..ok }, "sinkhorn.lambda"),
+            (SinkhornConfig { lambda: -1.0, ..ok }, "sinkhorn.lambda"),
+            (SinkhornConfig { lambda: Real::NAN, ..ok }, "sinkhorn.lambda"),
+            (SinkhornConfig { max_iter: 0, ..ok }, "sinkhorn.max_iter"),
+            (SinkhornConfig { tolerance: -1e-3, ..ok }, "sinkhorn.tolerance"),
+            (SinkhornConfig { tolerance: Real::INFINITY, ..ok }, "sinkhorn.tolerance"),
+            (SinkhornConfig { check_every: 0, ..ok }, "sinkhorn.check_every"),
+            (SinkhornConfig { compact_threshold: -0.1, ..ok }, "sinkhorn.compact_threshold"),
+            (SinkhornConfig { compact_threshold: 1.5, ..ok }, "sinkhorn.compact_threshold"),
+            (SinkhornConfig { compact_threshold: Real::NAN, ..ok }, "sinkhorn.compact_threshold"),
+        ];
+        for (cfg, key) in cases {
+            let err = cfg.validate().expect_err(key);
+            assert!(err.contains(key), "message {err:?} should name {key}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid Sinkhorn config")]
+    fn solver_constructor_panics_on_invalid_config() {
+        let _ = SparseSolver::new(SinkhornConfig { check_every: 0, ..Default::default() });
+    }
+
+    #[test]
+    fn freeze_histogram_buckets_min_max_and_p50() {
+        let mut h = FreezeHistogram::default();
+        assert_eq!(h.p50(), None);
+        // Power-of-two buckets: 1 → bucket 0, 2..3 → 1, 4..7 → 2, …
+        for it in [1u32, 2, 3, 4, 4, 7, 8] {
+            h.record(it);
+        }
+        assert_eq!(h.count, 7);
+        assert_eq!(h.min, 1);
+        assert_eq!(h.max, 8);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 2);
+        assert_eq!(h.buckets[2], 3);
+        assert_eq!(h.buckets[3], 1);
+        // target = 4: cumulative crosses at bucket 2 → upper bound 7.
+        assert_eq!(h.p50(), Some(7));
+        // record(0) is clamped into bucket 0 (columns freeze at iter ≥ 1).
+        let mut z = FreezeHistogram::default();
+        z.record(0);
+        assert_eq!(z.buckets[0], 1);
+        // Huge iteration counts land in the open-ended last bucket.
+        let mut big = FreezeHistogram::default();
+        big.record(u32::MAX);
+        assert_eq!(big.buckets[15], 1);
+        assert_eq!(big.p50(), Some(u32::MAX));
+    }
+
+    #[test]
+    fn freeze_histogram_and_stats_merge() {
+        let mut a = FreezeHistogram::default();
+        a.record(2);
+        a.record(5);
+        let mut b = FreezeHistogram::default();
+        b.record(40);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.min, 2);
+        assert_eq!(a.max, 40);
+        // Merging an empty histogram must not disturb min (u32::MAX sentinel).
+        a.merge(&FreezeHistogram::default());
+        assert_eq!(a.min, 2);
+        let mut s = ConvergenceStats {
+            frozen_columns: 3,
+            compactions: 1,
+            nnz_traversed: 100,
+            nnz_full: 200,
+            freeze_iters: a,
+        };
+        let t = ConvergenceStats {
+            frozen_columns: 2,
+            compactions: 0,
+            nnz_traversed: 50,
+            nnz_full: 60,
+            freeze_iters: b,
+        };
+        s.merge(&t);
+        assert_eq!(s.frozen_columns, 5);
+        assert_eq!(s.compactions, 1);
+        assert_eq!(s.nnz_traversed, 150);
+        assert_eq!(s.nnz_full, 260);
+        assert_eq!(s.freeze_iters.count, 4);
+    }
+
+    #[test]
+    fn default_mode_reports_convergence_stats() {
+        // The default config freezes per document: every non-empty column
+        // of a converged solve must be frozen, the histogram must cover
+        // all of them, and the traversal accounting must be consistent.
+        let corpus = toy();
+        let pool = Pool::new(4);
+        let solver = SparseSolver::new(SinkhornConfig {
+            lambda: 3.0,
+            tolerance: 1e-4,
+            max_iter: 5000,
+            ..Default::default()
+        });
+        let out = solver.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+        assert!(out.converged);
+        let nonempty = corpus.c.ncols(); // synthetic corpora have no empty docs
+        assert_eq!(out.conv.frozen_columns, nonempty);
+        assert_eq!(out.conv.freeze_iters.count, nonempty as u64);
+        assert!(out.conv.freeze_iters.max as usize <= out.iterations);
+        assert!(out.conv.nnz_traversed <= out.conv.nnz_full);
+        assert_eq!(out.conv.nnz_full, out.iterations as u64 * corpus.c.nnz() as u64);
+        // Exact mode opts out: all-zero telemetry.
+        let exact = SparseSolver::new(SinkhornConfig {
+            lambda: 3.0,
+            tolerance: 1e-4,
+            max_iter: 5000,
+            compact_every: 0,
+            ..Default::default()
+        });
+        let out = exact.wmd_one_to_many(&corpus.embeddings, corpus.query(0), &corpus.c, &pool);
+        assert_eq!(out.conv.frozen_columns, 0);
+        assert_eq!(out.conv.compactions, 0);
     }
 
     #[cfg(feature = "mixed-precision")]

@@ -98,6 +98,19 @@ pub struct SolveWorkspace {
     pub(crate) iterations: Vec<usize>,
     pub(crate) converged: Vec<bool>,
     pub(crate) active: Vec<bool>,
+    /// Per-document convergence state, flat `B × N`: the frozen mask the
+    /// kernels skip on, the per-column marginal residual lanes
+    /// `update_u*` fills at each check, and the iteration each column
+    /// froze at (0 ⇔ never froze — columns start at iteration 1).
+    pub(crate) frozen: Vec<bool>,
+    pub(crate) resid: Vec<Real>,
+    pub(crate) freeze_iter: Vec<u32>,
+    /// Active-set compaction scratch: surviving column list, its subset
+    /// nnz prefix over the pattern's `col_ptr`, and the nnz-balanced
+    /// partition of that prefix.
+    pub(crate) active_cols: Vec<u32>,
+    pub(crate) act_ptr: Vec<usize>,
+    pub(crate) act_parts: Vec<NnzRange>,
     /// dist-layer prepare scratch (query panel, norms, reciprocal masses).
     pub(crate) dist: DistScratch,
     /// Pruned-retrieval scratch (WCD vector, candidate order, supports,
@@ -148,6 +161,12 @@ impl SolveWorkspace {
             + self.fused.retained_bytes()
             + self.iterations.capacity() * size_of::<usize>()
             + (self.converged.capacity() + self.active.capacity()) * size_of::<bool>()
+            + self.frozen.capacity() * size_of::<bool>()
+            + self.resid.capacity() * size_of::<Real>()
+            + self.freeze_iter.capacity() * size_of::<u32>()
+            + self.active_cols.capacity() * size_of::<u32>()
+            + self.act_ptr.capacity() * size_of::<usize>()
+            + self.act_parts.capacity() * size_of::<NnzRange>()
             + self.dist.retained_bytes()
             + self.prune.retained_bytes()
     }

@@ -38,8 +38,8 @@
 //! / `type1_transposed` / `type2` variants (and their `_batch` twins)
 //! collapsed into this family.
 
-use super::for_each_nnz_in;
 use super::sddmm::{Panel, PanelElem};
+use super::{for_each_nnz_in, for_each_nnz_in_subset};
 use crate::parallel::{NnzRange, Pool};
 use crate::sparse::{dot, Csr, Dense};
 use crate::util::SharedSlice;
@@ -69,6 +69,36 @@ impl FusedScratch {
     }
 }
 
+/// The iterate's view of the target columns — how the solver's
+/// per-document convergence tracking reaches the kernel.
+///
+/// * `cols`: when set, the traversal is **compacted** to the given column
+///   subset — `(cols, sub_ptr)` with `sub_ptr` the subset nnz prefix
+///   ([`crate::parallel::subset_nnz_prefix_into`] over the pattern's
+///   `col_ptr`). The caller's `col_parts` must then partition `sub_ptr`,
+///   and only the subset's `xᵀ` rows are zeroed/written. `None` walks the
+///   full pattern (today's behaviour).
+/// * `frozen`: flat `B × N` mask (`frozen[q·N + j]`): a column already
+///   converged for query `q` is skipped — no dot/axpy runs for it, so its
+///   `xᵀ` row is dead weight (zeroed by the full clear, or left stale
+///   under compaction; the solver's pinned state lives in `u`, which the
+///   WMD epilogue reads). `None` means nothing is frozen and the
+///   arithmetic is bitwise identical to the pre-compaction kernel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActiveView<'a> {
+    /// Compacted column subset (ascending) and its subset nnz prefix.
+    pub cols: Option<(&'a [u32], &'a [usize])>,
+    /// Flat `B × N` per-(query, column) frozen mask.
+    pub frozen: Option<&'a [bool]>,
+}
+
+impl ActiveView<'_> {
+    /// Full traversal, nothing frozen — the exact-mode view.
+    pub fn full() -> Self {
+        Self::default()
+    }
+}
+
 /// Fused batched iterate over the stationary transposed pattern
 /// (SDDTMM→DSTMMT): for each pattern entry `(i, j)` and each *active*
 /// query `q`,
@@ -85,7 +115,12 @@ impl FusedScratch {
 /// Atomic-free: a thread owns whole columns `j` (the column partition
 /// never splits a column), hence row `j` of every query's `xᵀ`. Queries
 /// whose `active[q]` is false (already converged) are skipped without
-/// stalling the rest of the batch; their `x_ts[q]` is untouched.
+/// stalling the rest of the batch; their `x_ts[q]` is untouched. The
+/// finer-grained [`ActiveView`] masks individual (query, column) pairs —
+/// frozen columns keep their pinned `xᵀ` row — and can compact the
+/// traversal itself to the surviving columns (`view.cols`, in which case
+/// `col_parts` partitions the subset prefix instead of the full
+/// `col_ptr`).
 ///
 /// `u_ts` is a plain `&[P]` (not `&[&P]`): the per-query `u` states live
 /// contiguously in the solver workspace's lanes, so the per-iteration
@@ -100,6 +135,7 @@ pub fn sddtmm_dstmmt_batch<P: Panel>(
     u_ts: &[P],
     x_ts: &mut [Dense],
     active: &[bool],
+    view: ActiveView<'_>,
     pool: &Pool,
     col_parts: &[NnzRange],
     scratch: &mut FusedScratch,
@@ -115,6 +151,10 @@ pub fn sddtmm_dstmmt_batch<P: Panel>(
     if act.is_empty() {
         return;
     }
+    let n = tp.col_ptr.len() - 1;
+    if let Some(fr) = view.frozen {
+        debug_assert_eq!(fr.len(), b * n);
+    }
     for &q in act {
         let vr = kts[q].ncols();
         debug_assert_eq!(kor_ts[q].ncols(), vr);
@@ -123,17 +163,33 @@ pub fn sddtmm_dstmmt_batch<P: Panel>(
         debug_assert_eq!(kts[q].nrows(), c.nrows());
         debug_assert_eq!(u_ts[q].nrows(), c.ncols());
         debug_assert_eq!(x_ts[q].nrows() + 1, tp.col_ptr.len());
-        x_ts[q].fill(0.0);
+        match view.cols {
+            // Compacted: only the surviving columns' accumulator rows are
+            // reset — frozen rows keep their pinned values (never read
+            // again, but cheaper than a full-plane clear).
+            Some((cols, _)) => {
+                for &j in cols {
+                    x_ts[q].row_mut(j as usize).fill(0.0);
+                }
+            }
+            None => x_ts[q].fill(0.0),
+        }
     }
     let values = c.values();
+    let frozen = view.frozen;
     let x_views: Vec<SharedSlice<Real>> =
         x_ts.iter_mut().map(|x| SharedSlice::new(x.as_mut_slice())).collect();
     pool.run(|tid, _nt| {
         let part = col_parts[tid];
-        for_each_nnz_in(part, &tp.col_ptr, |e, j| {
+        let body = |e: usize, j: usize| {
             let i = tp.src_row[e] as usize;
             let cv = values[tp.src_pos[e] as usize];
             for &q in act {
+                if let Some(fr) = frozen {
+                    if fr[q * n + j] {
+                        continue;
+                    }
+                }
                 let u_row = u_ts[q].row(j);
                 let w = cv / <P::Elem as PanelElem>::dot(kts[q].row(i), u_row);
                 let vr = kts[q].ncols();
@@ -142,7 +198,14 @@ pub fn sddtmm_dstmmt_batch<P: Panel>(
                 let x_row = unsafe { x_views[q].slice_mut(j * vr, vr) };
                 <P::Elem as PanelElem>::axpy(x_row, w, kor_ts[q].row(i));
             }
-        });
+        };
+        match view.cols {
+            // Same per-entry body either way: the subset cursor hands out
+            // full-pattern entry indices in the same ascending per-column
+            // order, so compaction never changes a column's accumulation.
+            Some((cols, sub_ptr)) => for_each_nnz_in_subset(part, sub_ptr, cols, &tp.col_ptr, body),
+            None => for_each_nnz_in(part, &tp.col_ptr, body),
+        }
     });
 }
 
@@ -241,6 +304,7 @@ mod tests {
             std::slice::from_ref(u_t),
             std::slice::from_mut(x_t),
             &[true],
+            ActiveView::full(),
             pool,
             col_parts,
             &mut FusedScratch::new(),
@@ -332,7 +396,7 @@ mod tests {
             let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(21, vr)).collect();
             sddtmm_dstmmt_batch(
                 &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
-                &[true; 3], &pool, &col_parts, &mut FusedScratch::new(),
+                &[true; 3], ActiveView::full(), &pool, &col_parts, &mut FusedScratch::new(),
             );
             for q in 0..vrs.len() {
                 // Same per-column accumulation order → bitwise equal.
@@ -353,7 +417,7 @@ mod tests {
         let mut x_ts: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(12, vr, 7.0)).collect();
         sddtmm_dstmmt_batch(
             &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ts,
-            &[true, false, true], &pool, &col_parts, &mut FusedScratch::new(),
+            &[true, false, true], ActiveView::full(), &pool, &col_parts, &mut FusedScratch::new(),
         );
         assert!(x_ts[1].as_slice().iter().all(|&v| v == 7.0), "inactive query was written");
         let mut expected = Dense::zeros(12, vrs[0]);
@@ -375,7 +439,7 @@ mod tests {
         let mut x0: Vec<Dense> = vrs_big.iter().map(|&vr| Dense::zeros(16, vr)).collect();
         sddtmm_dstmmt_batch(
             &c0, &tp0, &refs(&kts0), &refs(&kor_ts0), &u_ts0, &mut x0,
-            &[true; 5], &pool, &tp0.column_parts(3), &mut scratch,
+            &[true; 5], ActiveView::full(), &pool, &tp0.column_parts(3), &mut scratch,
         );
         // Now a narrower, partially-active batch with the dirty scratch.
         let vrs = [4usize, 6];
@@ -385,12 +449,12 @@ mod tests {
         let mut fresh: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(10, vr, 7.0)).collect();
         sddtmm_dstmmt_batch(
             &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut fresh,
-            &[false, true], &pool, &col_parts, &mut FusedScratch::new(),
+            &[false, true], ActiveView::full(), &pool, &col_parts, &mut FusedScratch::new(),
         );
         let mut reused: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(10, vr, 7.0)).collect();
         sddtmm_dstmmt_batch(
             &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut reused,
-            &[false, true], &pool, &col_parts, &mut scratch,
+            &[false, true], ActiveView::full(), &pool, &col_parts, &mut scratch,
         );
         assert_eq!(fresh[0], reused[0], "dirty scratch touched an inactive query");
         assert_eq!(fresh[1], reused[1], "dirty scratch perturbed the iterate");
@@ -422,6 +486,7 @@ mod tests {
                 std::slice::from_ref(&u_lo),
                 std::slice::from_mut(&mut x32),
                 &[true],
+                ActiveView::full(),
                 &pool,
                 &col_parts,
                 &mut FusedScratch::new(),
@@ -431,6 +496,99 @@ mod tests {
             // the solver-level gate is 1e-5).
             for (a, b) in x32.as_slice().iter().zip(x64.as_slice()) {
                 assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_mask_matches_reference_on_unfrozen_rows() {
+        let mut rng = Pcg64::new(93);
+        for p in [1usize, 3, 8] {
+            let (c, kt, kor_t, _km, u_t) = case(&mut rng, 45, 18, 6, 260);
+            let tp = TransposedPattern::build(&c);
+            let pool = Pool::new(p);
+            let col_parts = tp.column_parts(p);
+            let mut x_ref = Dense::zeros(18, 6);
+            iterate_single(&c, &tp, &kt, &kor_t, &u_t, &mut x_ref, &pool, &col_parts);
+            let frozen: Vec<bool> = (0..18).map(|_| rng.next_f64() < 0.4).collect();
+            let mut x_t = Dense::filled(18, 6, 7.0);
+            sddtmm_dstmmt_batch(
+                &c,
+                &tp,
+                &[&kt],
+                &[&kor_t],
+                std::slice::from_ref(&u_t),
+                std::slice::from_mut(&mut x_t),
+                &[true],
+                ActiveView { cols: None, frozen: Some(&frozen) },
+                &pool,
+                &col_parts,
+                &mut FusedScratch::new(),
+            );
+            for j in 0..18 {
+                if frozen[j] {
+                    // Frozen rows are cleared by the full zeroing pass but
+                    // never accumulated into.
+                    assert!(x_t.row(j).iter().all(|&v| v == 0.0), "p={p} j={j}");
+                } else {
+                    // Unfrozen rows accumulate in the same order → bitwise.
+                    assert_eq!(x_t.row(j), x_ref.row(j), "p={p} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compacted_traversal_bitwise_equals_full_on_surviving_columns() {
+        use crate::parallel::{balanced_nnz_partition, subset_nnz_prefix_into};
+        let mut rng = Pcg64::new(94);
+        let vrs = [5usize, 7];
+        let n = 22;
+        let (c, kts, kor_ts, _km, u_ts) = batch_case(&mut rng, 50, n, 340, &vrs);
+        let tp = TransposedPattern::build(&c);
+        // Per-query frozen masks; the compacted column list is the union of
+        // the queries' survivors — exactly what the solver builds.
+        let frozen: Vec<bool> = (0..vrs.len() * n).map(|_| rng.next_f64() < 0.5).collect();
+        let cols: Vec<u32> = (0..n as u32)
+            .filter(|&j| (0..vrs.len()).any(|q| !frozen[q * n + j as usize]))
+            .collect();
+        let mut sub_ptr = Vec::new();
+        subset_nnz_prefix_into(&tp.col_ptr, &cols, &mut sub_ptr);
+        for p in [1usize, 3, 8] {
+            let pool = Pool::new(p);
+            // Reference: full traversal with the same frozen mask.
+            let full_parts = tp.column_parts(p);
+            let mut x_ref: Vec<Dense> = vrs.iter().map(|&vr| Dense::zeros(n, vr)).collect();
+            sddtmm_dstmmt_batch(
+                &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_ref,
+                &[true; 2], ActiveView { cols: None, frozen: Some(&frozen) },
+                &pool, &full_parts, &mut FusedScratch::new(),
+            );
+            // Compacted: partition the subset prefix, sentinel-fill to prove
+            // non-subset rows are never touched.
+            let sub_parts = balanced_nnz_partition(&sub_ptr, p);
+            let mut x_cmp: Vec<Dense> = vrs.iter().map(|&vr| Dense::filled(n, vr, 7.0)).collect();
+            sddtmm_dstmmt_batch(
+                &c, &tp, &refs(&kts), &refs(&kor_ts), &u_ts, &mut x_cmp,
+                &[true; 2], ActiveView { cols: Some((&cols, &sub_ptr)), frozen: Some(&frozen) },
+                &pool, &sub_parts, &mut FusedScratch::new(),
+            );
+            for q in 0..vrs.len() {
+                for j in 0..n {
+                    if !cols.contains(&(j as u32)) {
+                        assert!(
+                            x_cmp[q].row(j).iter().all(|&v| v == 7.0),
+                            "p={p} q={q} j={j}: non-subset row touched"
+                        );
+                    } else if frozen[q * n + j] {
+                        // In the union but frozen for this query: zeroed,
+                        // never accumulated.
+                        assert!(x_cmp[q].row(j).iter().all(|&v| v == 0.0), "p={p} q={q} j={j}");
+                    } else {
+                        // Same ascending per-column accumulation → bitwise.
+                        assert_eq!(x_cmp[q].row(j), x_ref[q].row(j), "p={p} q={q} j={j}");
+                    }
+                }
             }
         }
     }

@@ -22,7 +22,7 @@ pub mod fused;
 pub mod sddmm;
 pub mod spmm;
 
-pub use fused::{sddtmm_dstmmt_batch, sddtmm_wmd_batch, FusedScratch};
+pub use fused::{sddtmm_dstmmt_batch, sddtmm_wmd_batch, ActiveView, FusedScratch};
 pub use sddmm::{sddmm, sddmm_serial, Panel, PanelElem};
 pub use spmm::{spmm_atomic, spmm_serial, TransposedPattern};
 
@@ -43,10 +43,39 @@ pub(crate) fn for_each_nnz_in(part: NnzRange, row_ptr: &[usize], mut f: impl FnM
     }
 }
 
+/// [`for_each_nnz_in`] over a compacted *subset* of columns: `sub_ptr` is
+/// the subset nnz prefix ([`crate::parallel::subset_nnz_prefix_into`]) of
+/// `cols` under the full `col_ptr`, and `part` addresses subset-nnz
+/// coordinates (`start_row` is a subset *position*). Calls `f(e, j)` with
+/// `e` the entry's index in the **full** pattern and `j` the global column
+/// — so the kernel body is identical to the full-traversal one; only the
+/// walk shrinks to the surviving columns (the solver's active-set
+/// compaction). Entries of a column are visited in the same ascending
+/// order as the full traversal, which keeps compacted iterates bitwise
+/// equal per column.
+#[inline]
+pub(crate) fn for_each_nnz_in_subset(
+    part: NnzRange,
+    sub_ptr: &[usize],
+    cols: &[u32],
+    col_ptr: &[usize],
+    mut f: impl FnMut(usize, usize),
+) {
+    let mut s = part.start_row;
+    for es in part.nnz_start..part.nnz_end {
+        while es >= sub_ptr[s + 1] {
+            s += 1;
+        }
+        let j = cols[s] as usize;
+        let e = col_ptr[j] + (es - sub_ptr[s]);
+        f(e, j);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::parallel::balanced_nnz_partition;
+    use crate::parallel::{balanced_nnz_partition, subset_nnz_prefix_into};
     use crate::sparse::{Coo, Csr};
     use crate::util::Pcg64;
 
@@ -73,6 +102,42 @@ mod tests {
                     let row = row.expect("nnz not visited");
                     assert!(m.row_ptr()[row] <= e && e < m.row_ptr()[row + 1]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn subset_cursor_visits_exactly_the_subset_in_full_order() {
+        let mut rng = Pcg64::new(42);
+        for _ in 0..30 {
+            let nrows = rng.range(1, 40);
+            let mut coo = Coo::new(nrows, 10);
+            for _ in 0..rng.below(150) {
+                coo.push(rng.below(nrows), rng.below(10), 1.0);
+            }
+            let m = Csr::from_coo(coo);
+            let rp = m.row_ptr();
+            let subset: Vec<u32> =
+                (0..nrows as u32).filter(|_| rng.next_f64() < 0.5).collect();
+            let mut sub_ptr = Vec::new();
+            subset_nnz_prefix_into(rp, &subset, &mut sub_ptr);
+            for p in [1usize, 3, 8] {
+                let mut visited: Vec<(usize, usize)> = Vec::new();
+                for part in balanced_nnz_partition(&sub_ptr, p) {
+                    for_each_nnz_in_subset(part, &sub_ptr, &subset, rp, |e, row| {
+                        visited.push((e, row));
+                    });
+                }
+                // Exactly the subset rows' entries, each once, in full-
+                // traversal (ascending-entry) order per row.
+                let expected: Vec<(usize, usize)> = subset
+                    .iter()
+                    .flat_map(|&r| {
+                        let r = r as usize;
+                        (rp[r]..rp[r + 1]).map(move |e| (e, r))
+                    })
+                    .collect();
+                assert_eq!(visited, expected, "p={p}");
             }
         }
     }

@@ -1,0 +1,342 @@
+//! Per-document convergence equivalence suite: freezing + active-set
+//! compaction against the exact-mode opt-out (`compact_every = 0`).
+//!
+//! The per-document criterion stops each column at its own convergence
+//! check instead of the global max-residual one, so the two modes are
+//! *numerically* (not bitwise) equal: a frozen column's `u` stops moving
+//! while the reference keeps polishing it below tolerance. At a tight
+//! tolerance the residual bound makes that drift vanish — the suite gates
+//! the default f64 kernels at **1e-9 relative** against the no-compaction
+//! reference, across kernels × batch sizes × shard counts. What *is*
+//! bitwise: `compact_every = 0` versus any compaction knobs when the
+//! early exit is off, batch versus single solves under compaction, shard
+//! merges versus monolithic solves, and dirty-workspace reuse.
+
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{
+    IterateKernel, Precision, Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver,
+};
+
+const FUSED_F64: IterateKernel = IterateKernel::Fused { precision: Precision::F64 };
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(300)
+        .num_docs(24)
+        .embedding_dim(8)
+        .n_topics(3)
+        .num_queries(4)
+        .query_words(4, 8)
+        .seed(131)
+        .build()
+}
+
+fn skewed_corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(400)
+        .num_docs(32)
+        .embedding_dim(8)
+        .n_topics(3)
+        .tokens_per_doc(20)
+        .num_queries(2)
+        .query_words(4, 8)
+        .seed(137)
+        .doc_length_skew(1.1)
+        .build()
+}
+
+/// Tight-tolerance config: at `tol = 1e-12` the post-freeze drift of the
+/// reference (bounded by `tol / (1 − ρ)` with ρ the contraction rate) is
+/// far inside the 1e-9 gate. λ = 2 keeps the contraction fast enough
+/// that every column reaches 1e-12 well inside `max_iter`.
+fn tight(kernel: IterateKernel, compact_every: usize) -> SinkhornConfig {
+    SinkhornConfig {
+        kernel,
+        lambda: 2.0,
+        tolerance: 1e-12,
+        check_every: 4,
+        max_iter: 20_000,
+        compact_every,
+        ..Default::default()
+    }
+}
+
+fn prepare_all(corpus: &SyntheticCorpus, pool: &Pool) -> Vec<Prepared> {
+    let solver = SparseSolver::new(SinkhornConfig::default());
+    corpus.queries.iter().map(|q| solver.prepare(&corpus.embeddings, q, pool)).collect()
+}
+
+fn assert_close(a: &SolveOutput, b: &SolveOutput, gate: f64, ctx: &str) {
+    assert_eq!(a.wmd.len(), b.wmd.len(), "{ctx}");
+    for (j, (&x, &y)) in a.wmd.iter().zip(&b.wmd).enumerate() {
+        assert_eq!(x.is_finite(), y.is_finite(), "{ctx} j={j}: finiteness must match");
+        if y.is_finite() {
+            assert!(
+                (x - y).abs() <= gate * (1.0 + y.abs()),
+                "{ctx} j={j}: {x} vs {y} exceeds the {gate:.0e} gate"
+            );
+        }
+    }
+}
+
+#[test]
+fn compaction_matches_no_compaction_reference_across_kernels_and_batches() {
+    let corpus = corpus();
+    let pool = Pool::new(4);
+    let preps = prepare_all(&corpus, &pool);
+    for kernel in [FUSED_F64, IterateKernel::Unfused] {
+        let reference = SparseSolver::new(tight(kernel, 0));
+        let compacting = SparseSolver::new(tight(kernel, 1));
+        // B = 1.
+        let r = reference.solve(&preps[0], &corpus.c, &pool);
+        let c = compacting.solve(&preps[0], &corpus.c, &pool);
+        assert!(r.converged && c.converged, "{kernel:?}: both modes must converge");
+        assert_close(&c, &r, 1e-9, &format!("{kernel:?} B=1"));
+        // Freezing telemetry only on the compacting side.
+        assert_eq!(r.conv.frozen_columns, 0, "{kernel:?}: exact mode must not freeze");
+        assert_eq!(c.conv.frozen_columns, corpus.c.ncols(), "{kernel:?}: all docs freeze");
+        // B = 4 (the unfused kernel falls back to per-query solves, which
+        // still exercises freezing without compaction).
+        let prefs: Vec<&Prepared> = preps.iter().collect();
+        let rs = reference.solve_batch(&prefs, &corpus.c, &pool);
+        let cs = compacting.solve_batch(&prefs, &corpus.c, &pool);
+        for q in 0..prefs.len() {
+            assert!(rs[q].converged && cs[q].converged, "{kernel:?} q={q}");
+            assert_close(&cs[q], &rs[q], 1e-9, &format!("{kernel:?} B=4 q={q}"));
+        }
+    }
+}
+
+#[cfg(feature = "mixed-precision")]
+#[test]
+fn compaction_matches_reference_under_mixed_precision() {
+    // The f32 u-mirror can limit-cycle the residual around 1e-8, so the
+    // mixed comparison runs at a serviceable 1e-6 tolerance; a frozen
+    // column sits within O(tolerance / (1 − ρ)) of where the reference
+    // polishes it, so the gate is tolerance-scaled (1e-3 ≈ 1000 × tol),
+    // not the f64 suite's 1e-9.
+    let corpus = corpus();
+    let pool = Pool::new(4);
+    let preps = prepare_all(&corpus, &pool);
+    let kernel = IterateKernel::Fused { precision: Precision::Mixed };
+    let cfg = |compact_every| SinkhornConfig {
+        kernel,
+        lambda: 3.0,
+        tolerance: 1e-6,
+        check_every: 4,
+        max_iter: 10_000,
+        compact_every,
+        ..Default::default()
+    };
+    let reference = SparseSolver::new(cfg(0));
+    let compacting = SparseSolver::new(cfg(1));
+    let prefs: Vec<&Prepared> = preps.iter().collect();
+    let rs = reference.solve_batch(&prefs, &corpus.c, &pool);
+    let cs = compacting.solve_batch(&prefs, &corpus.c, &pool);
+    for q in 0..prefs.len() {
+        assert!(rs[q].converged && cs[q].converged, "q={q}");
+        assert_close(&cs[q], &rs[q], 1e-3, &format!("mixed q={q}"));
+    }
+}
+
+#[test]
+fn sharded_compaction_is_bitwise_identical_to_monolithic() {
+    // Per-column freezing decisions depend only on that column's own
+    // residual, so a column slice freezes (and compacts around) exactly
+    // the same columns at the same checks as the monolithic solve — the
+    // merge must be bitwise, iterations included.
+    let corpus = skewed_corpus();
+    let pool = Pool::new(1);
+    let preps = prepare_all(&corpus, &pool);
+    let solver = SparseSolver::new(SinkhornConfig {
+        lambda: 3.0,
+        tolerance: 1e-4,
+        check_every: 4,
+        max_iter: 5_000,
+        ..Default::default()
+    });
+    let full = solver.solve(&preps[0], &corpus.c, &pool);
+    assert!(full.converged);
+    let n = corpus.c.ncols();
+    for cuts in [vec![0, n], vec![0, n / 2, n], vec![0, n / 3, 2 * n / 3, n]] {
+        let parts: Vec<(usize, SolveOutput)> = cuts
+            .windows(2)
+            .map(|w| (w[0], solver.solve(&preps[0], &corpus.c.slice_columns(w[0]..w[1]), &pool)))
+            .collect();
+        let merged = SolveOutput::merge_shards(n, &parts);
+        assert_eq!(merged.wmd, full.wmd, "cuts {cuts:?}: shard merge must be bitwise");
+        assert_eq!(merged.iterations, full.iterations, "cuts {cuts:?}");
+        assert_eq!(merged.conv.frozen_columns, full.conv.frozen_columns, "cuts {cuts:?}");
+    }
+}
+
+#[test]
+fn batched_compaction_is_bitwise_identical_to_single_solves() {
+    // The batch path compacts over the *union* of the active queries'
+    // surviving columns; the per-query frozen masks do the fine-grained
+    // skipping, so each lane's arithmetic is exactly the single solve's.
+    let corpus = skewed_corpus();
+    for p in [1usize, 4] {
+        let pool = Pool::new(p);
+        let preps = prepare_all(&corpus, &pool);
+        let solver = SparseSolver::new(SinkhornConfig {
+            lambda: 3.0,
+            tolerance: 1e-4,
+            check_every: 4,
+            max_iter: 5_000,
+            ..Default::default()
+        });
+        let prefs: Vec<&Prepared> = preps.iter().collect();
+        let outs = solver.solve_batch(&prefs, &corpus.c, &pool);
+        for (q, prep) in preps.iter().enumerate() {
+            let single = solver.solve(prep, &corpus.c, &pool);
+            assert_eq!(outs[q].wmd, single.wmd, "p={p} q={q}");
+            assert_eq!(outs[q].iterations, single.iterations, "p={p} q={q}");
+            assert_eq!(outs[q].converged, single.converged, "p={p} q={q}");
+            assert_eq!(
+                outs[q].conv.frozen_columns, single.conv.frozen_columns,
+                "p={p} q={q}"
+            );
+            assert_eq!(
+                outs[q].conv.freeze_iters, single.conv.freeze_iters,
+                "p={p} q={q}: per-column freeze iterations must match"
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_mode_knobs_are_inert_and_fixed_iterations_are_bitwise() {
+    // With the early exit off (`tolerance = 0`) freezing never engages, so
+    // every compaction knob must be a no-op — the run is the pre-compaction
+    // fixed-iteration solve, bitwise, whatever the knobs say.
+    let corpus = corpus();
+    let pool = Pool::new(4);
+    let preps = prepare_all(&corpus, &pool);
+    let base_cfg = SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() };
+    let base = SparseSolver::new(base_cfg).solve(&preps[0], &corpus.c, &pool);
+    for (thr, every) in [(0.75, 0), (0.0, 1), (1.0, 7), (0.5, 1)] {
+        let solver = SparseSolver::new(SinkhornConfig {
+            compact_threshold: thr,
+            compact_every: every,
+            ..base_cfg
+        });
+        let out = solver.solve(&preps[0], &corpus.c, &pool);
+        assert_eq!(out.wmd, base.wmd, "thr={thr} every={every}");
+        assert_eq!(out.iterations, 12);
+        assert_eq!(out.conv.frozen_columns, 0);
+        assert_eq!(out.conv.compactions, 0);
+    }
+    // Same with tolerance on: compact_every = 0 must pin the exact global
+    // criterion regardless of the threshold knob.
+    let exact_cfg = SinkhornConfig {
+        lambda: 2.0,
+        tolerance: 1e-6,
+        max_iter: 20_000,
+        compact_every: 0,
+        ..Default::default()
+    };
+    let a = SparseSolver::new(exact_cfg).solve(&preps[0], &corpus.c, &pool);
+    let b = SparseSolver::new(SinkhornConfig { compact_threshold: 0.1, ..exact_cfg })
+        .solve(&preps[0], &corpus.c, &pool);
+    assert!(a.converged);
+    assert_eq!(a.wmd, b.wmd);
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn dirty_workspace_reuse_is_bitwise_under_compaction() {
+    // A → B → A: the compaction scratch (column list, subset prefix,
+    // partitions, frozen masks) must fully re-shape on every checkout.
+    let a = skewed_corpus();
+    let b = corpus();
+    let pool = Pool::new(3);
+    let preps_a = prepare_all(&a, &pool);
+    let preps_b = prepare_all(&b, &pool);
+    let solver = SparseSolver::new(SinkhornConfig {
+        lambda: 3.0,
+        tolerance: 1e-4,
+        check_every: 4,
+        max_iter: 5_000,
+        ..Default::default()
+    });
+    let prefs_a: Vec<&Prepared> = preps_a.iter().collect();
+    let prefs_b: Vec<&Prepared> = preps_b.iter().collect();
+    let fresh = solver.solve_batch(&prefs_a, &a.c, &pool);
+    let mut ws = SolveWorkspace::new();
+    let first = solver.solve_batch_in(&mut ws, &prefs_a, &a.c, &pool);
+    let _ = solver.solve_batch_in(&mut ws, &prefs_b, &b.c, &pool);
+    let again = solver.solve_batch_in(&mut ws, &prefs_a, &a.c, &pool);
+    for q in 0..prefs_a.len() {
+        assert_eq!(first[q].wmd, fresh[q].wmd, "q={q}: workspace first use diverged");
+        assert_eq!(again[q].wmd, fresh[q].wmd, "q={q}: dirty reuse diverged");
+        assert_eq!(again[q].iterations, fresh[q].iterations, "q={q}");
+    }
+}
+
+#[test]
+fn all_columns_freeze_at_the_first_check() {
+    // A huge tolerance freezes every non-empty column at the very first
+    // convergence check: the solve must stop right there, with the
+    // histogram pinned at check_every, and match the exact-mode stop
+    // bitwise (freezing happens after the identical update_u pass).
+    let corpus = corpus();
+    let pool = Pool::new(2);
+    let preps = prepare_all(&corpus, &pool);
+    let cfg = SinkhornConfig {
+        tolerance: 1e9,
+        check_every: 4,
+        max_iter: 64,
+        ..Default::default()
+    };
+    let out = SparseSolver::new(cfg).solve(&preps[0], &corpus.c, &pool);
+    assert!(out.converged);
+    assert_eq!(out.iterations, 4);
+    assert_eq!(out.conv.frozen_columns, corpus.c.ncols());
+    assert_eq!(out.conv.compactions, 0, "nothing left to compact after a full freeze");
+    assert_eq!(out.conv.freeze_iters.min, 4);
+    assert_eq!(out.conv.freeze_iters.max, 4);
+    let exact = SparseSolver::new(SinkhornConfig { compact_every: 0, ..cfg })
+        .solve(&preps[0], &corpus.c, &pool);
+    assert_eq!(out.wmd, exact.wmd, "first-check freeze must equal the exact-mode stop");
+    assert_eq!(out.iterations, exact.iterations);
+    // Batched: every lane freezes wholesale at the first check too.
+    let prefs: Vec<&Prepared> = preps.iter().take(2).collect();
+    for o in SparseSolver::new(cfg).solve_batch(&prefs, &corpus.c, &pool) {
+        assert!(o.converged);
+        assert_eq!(o.iterations, 4);
+        assert_eq!(o.conv.frozen_columns, corpus.c.ncols());
+    }
+}
+
+#[test]
+fn compaction_reduces_nnz_traversed_on_a_skewed_corpus() {
+    // The perf claim behind the whole feature: on a skewed corpus the
+    // short documents freeze early, compaction drops them from the walk,
+    // and the traversed-nnz total lands well under iterations × nnz.
+    let corpus = skewed_corpus();
+    let pool = Pool::new(4);
+    let preps = prepare_all(&corpus, &pool);
+    let solver = SparseSolver::new(SinkhornConfig {
+        lambda: 3.0,
+        tolerance: 1e-4,
+        check_every: 4,
+        max_iter: 5_000,
+        compact_threshold: 0.95,
+        compact_every: 1,
+        ..Default::default()
+    });
+    let out = solver.solve(&preps[0], &corpus.c, &pool);
+    assert!(out.converged);
+    assert!(out.conv.compactions >= 1, "compaction never triggered");
+    assert!(
+        out.conv.nnz_traversed < out.conv.nnz_full,
+        "traversed {} must undercut full {}",
+        out.conv.nnz_traversed,
+        out.conv.nnz_full
+    );
+    // The histogram spread is what staggers the freezing: on a skewed
+    // corpus the fastest doc freezes strictly earlier than the slowest.
+    assert!(out.conv.freeze_iters.min < out.conv.freeze_iters.max);
+}
