@@ -1,0 +1,167 @@
+//! Live-corpus streaming ingest: sustained documents/s appended through
+//! the epoch-versioned delta path while the service keeps answering
+//! full-solve queries, with the per-query latency held to a fixed bound.
+//!
+//! A feeder thread appends pre-built delta segments as fast as the store
+//! takes them (the tweet-firehose producer); the main thread plays the
+//! reader, submitting queries back-to-back and recording each latency.
+//! The headline numbers are **docs/s appended** and the query latency
+//! p50/p95 against the scale's bound. Results land in
+//! `BENCH_stream.json` (override with `WMD_BENCH_STREAM_JSON`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sinkhorn_wmd::bench::{merge_bench_json, stream_json_path, Table};
+use sinkhorn_wmd::coordinator::{DocStore, LiveDocStore, QueryRequest, ServiceConfig, WmdService};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::sparse::{Coo, Csr};
+use sinkhorn_wmd::util::json::{obj, Json};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A synthetic delta segment: `docs` documents of ~8 words over the
+/// shared vocabulary (the firehose payload).
+fn delta(vocab: usize, docs: usize, seed: u64) -> Csr {
+    let mut rng = sinkhorn_wmd::util::Pcg64::new(seed);
+    let mut coo = Coo::new(vocab, docs);
+    for j in 0..docs {
+        for _ in 0..8 {
+            coo.push(rng.below(vocab), j, rng.next_f64() + 0.1);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[i]
+}
+
+fn main() {
+    common::header(
+        "stream_ingest",
+        "sustained append throughput while serving queries (live corpus)",
+    );
+    let (v, n, w, batches, batch, bound_ms) = match common::scale() {
+        common::Scale::Quick => (2_000, 200, 16, 30, 32, 500.0),
+        common::Scale::Default => (10_000, 1_000, 64, 150, 32, 1_000.0),
+        common::Scale::Paper => (50_000, 5_000, 300, 400, 64, 2_500.0),
+    };
+    let corpus = SyntheticCorpus::builder()
+        .vocab_size(v)
+        .num_docs(n)
+        .embedding_dim(w)
+        .n_topics(8)
+        .num_queries(8)
+        .query_words(8, 16)
+        .seed(4242)
+        .build();
+    let store = DocStore::from_synthetic(&corpus).into_arc();
+    let live = LiveDocStore::new(store).into_arc();
+    let service = WmdService::start_live(
+        Arc::clone(&live),
+        ServiceConfig {
+            threads: sinkhorn_wmd::util::num_cpus(),
+            compact_segments: 8,
+            compact_interval_ms: 20,
+            ..Default::default()
+        },
+        None,
+    );
+    // Pre-build the firehose so the feeder measures append cost, not
+    // synthesis cost.
+    let deltas: Vec<Csr> = (0..batches).map(|i| delta(v, batch, 1_000 + i as u64)).collect();
+    let total_docs = batches * batch;
+    println!(
+        "base corpus: V={v} N={n}; streaming {total_docs} docs in {batches} batches of {batch}"
+    );
+
+    let done = Arc::new(AtomicBool::new(false));
+    let feeder = {
+        let live = Arc::clone(&live);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            for (i, d) in deltas.into_iter().enumerate() {
+                let k = d.ncols();
+                live.append(d, vec![i as i64; k]);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            done.store(true, Ordering::Relaxed);
+            secs
+        })
+    };
+    // The reader: back-to-back queries until the firehose runs dry (at
+    // least a handful even if the feeder wins the race).
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut qi = 0usize;
+    loop {
+        let q = corpus.queries[qi % corpus.queries.len()].clone();
+        qi += 1;
+        let t = Instant::now();
+        let resp = service.submit_wait(QueryRequest::new(q));
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        if done.load(Ordering::Relaxed) && latencies_ms.len() >= 5 {
+            break;
+        }
+    }
+    let feed_secs = feeder.join().expect("feeder thread");
+    let docs_per_sec = total_docs as f64 / feed_secs;
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    let p50 = percentile(&latencies_ms, 0.50);
+    let p95 = percentile(&latencies_ms, 0.95);
+    let within_bound = p95 <= bound_ms;
+    let stats = live.stats();
+
+    let mut table = Table::new([
+        "docs appended",
+        "docs/s",
+        "queries",
+        "latency p50",
+        "latency p95",
+        "bound",
+        "epoch",
+        "compactions",
+    ]);
+    table.row([
+        total_docs.to_string(),
+        format!("{docs_per_sec:.0}"),
+        latencies_ms.len().to_string(),
+        format!("{p50:.1} ms"),
+        format!("{p95:.1} ms"),
+        format!("{bound_ms:.0} ms ({})", if within_bound { "ok" } else { "MISSED" }),
+        stats.epoch.to_string(),
+        stats.compactions.to_string(),
+    ]);
+    table.print();
+
+    let entry = obj([
+        ("docs_appended", Json::Num(total_docs as f64)),
+        ("feed_secs", Json::Num(feed_secs)),
+        ("docs_per_sec", Json::Num(docs_per_sec)),
+        ("queries_answered", Json::Num(latencies_ms.len() as f64)),
+        ("query_p50_ms", Json::Num(p50)),
+        ("query_p95_ms", Json::Num(p95)),
+        ("latency_bound_ms", Json::Num(bound_ms)),
+        ("within_bound", Json::Bool(within_bound)),
+        ("final_epoch", Json::Num(stats.epoch as f64)),
+        ("final_segments", Json::Num(stats.segments as f64)),
+        ("final_docs", Json::Num(stats.num_docs as f64)),
+        ("compactions", Json::Num(stats.compactions as f64)),
+        ("compaction_ms", Json::Num(stats.compaction_ms as f64)),
+    ]);
+    let path = stream_json_path();
+    match merge_bench_json(&path, "stream_ingest", entry) {
+        Ok(()) => println!("\n[stream_ingest] results merged into {}", path.display()),
+        Err(e) => eprintln!("[stream_ingest] could not write {}: {e}", path.display()),
+    }
+    service.shutdown();
+    println!("\nAppends land as immutable delta segments behind the epoch; queries pin one");
+    println!("view per batch, so the firehose never blocks (or torments) a running solve.");
+}

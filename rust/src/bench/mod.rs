@@ -8,7 +8,8 @@ pub mod sysinfo;
 pub mod table;
 
 pub use report::{
-    bench_json_path, convergence_json_path, merge_bench_json, prune_json_path, write_bench_json,
+    bench_json_path, convergence_json_path, merge_bench_json, prune_json_path, stream_json_path,
+    write_bench_json,
 };
 pub use runner::{bench_fn, BenchResult, BenchSettings};
 pub use sysinfo::SysInfo;

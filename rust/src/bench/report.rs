@@ -42,6 +42,17 @@ pub fn convergence_json_path() -> PathBuf {
     }
 }
 
+/// Streaming-ingest report destination: the `WMD_BENCH_STREAM_JSON` env
+/// var when set, else `BENCH_stream.json` in the working directory. Its
+/// own file (like the prune report) so CI uploads it as a separate
+/// artifact.
+pub fn stream_json_path() -> PathBuf {
+    match std::env::var("WMD_BENCH_STREAM_JSON") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from("BENCH_stream.json"),
+    }
+}
+
 /// Merge `entry` under the `bench` key into the report at
 /// [`bench_json_path`] and say so on stdout. IO errors are reported, not
 /// fatal — a read-only checkout must not kill a bench run.

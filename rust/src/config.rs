@@ -84,6 +84,13 @@ pub struct RunConfig {
     pub prune: CascadeSpec,
     /// Directory of AOT artifacts.
     pub artifacts_dir: String,
+    /// Live-corpus compaction threshold (`[live] compact_segments`): fold
+    /// the delta segments back into the base CSR once the view holds this
+    /// many segments. `0` (default) disables background compaction.
+    pub compact_segments: usize,
+    /// Compactor poll interval in milliseconds (`[live]
+    /// compact_interval_ms`); `0` (default) means the service default.
+    pub compact_interval_ms: u64,
 }
 
 impl RunConfig {
@@ -98,6 +105,16 @@ impl RunConfig {
     /// Shard count for the service (`0` in the file means "unsharded").
     pub fn shards(&self) -> usize {
         self.shards.max(1)
+    }
+
+    /// Compactor poll interval (`0` in the file means the service
+    /// default, 250 ms).
+    pub fn compact_interval_ms(&self) -> u64 {
+        if self.compact_interval_ms == 0 {
+            250
+        } else {
+            self.compact_interval_ms
+        }
     }
 
     /// Parse a TOML-subset file: `[section]` headers, `key = value` lines,
@@ -226,6 +243,8 @@ impl RunConfig {
                 };
             }
             ("prune", "cascade") => self.prune = CascadeSpec::parse(value)?,
+            ("live", "compact_segments") => self.compact_segments = p(value)?,
+            ("live", "compact_interval_ms") => self.compact_interval_ms = p(value)?,
             (s, k) => return Err(format!("unknown key [{s}] {k}")),
         }
         Ok(())
@@ -252,7 +271,8 @@ impl RunConfig {
              [sinkhorn]\nlambda = {}\nmax_iter = {}\ntolerance = {}\n\
              check_every = {}\ncompact_threshold = {}\ncompact_every = {}\n\
              kernel = \"{}\"\nprecision = \"{}\"\n\n\
-             [prune]\ncascade = \"{}\"\n",
+             [prune]\ncascade = \"{}\"\n\n\
+             [live]\ncompact_segments = {}\ncompact_interval_ms = {}\n",
             top["threads"],
             top["shards"],
             top["artifacts_dir"],
@@ -275,6 +295,8 @@ impl RunConfig {
             kernel,
             precision,
             self.prune.render(),
+            self.compact_segments,
+            self.compact_interval_ms,
         )
     }
 }
@@ -292,6 +314,8 @@ mod tests {
             corpus: CorpusConfig { vocab_size: 1234, ..Default::default() },
             sinkhorn: SinkhornConfig { lambda: 7.5, kernel: IterateKernel::Unfused, ..Default::default() },
             prune: CascadeSpec::parse("wcd:2000,lcrwmd:500,sinkhorn:100").unwrap(),
+            compact_segments: 6,
+            compact_interval_ms: 100,
         };
         let text = cfg.render();
         let back = RunConfig::from_str(&text).unwrap();
@@ -301,6 +325,22 @@ mod tests {
         assert_eq!(back.sinkhorn.lambda, 7.5);
         assert_eq!(back.sinkhorn.kernel, IterateKernel::Unfused);
         assert_eq!(back.prune.render(), "wcd:2000,lcrwmd:500,sinkhorn:100");
+        assert_eq!(back.compact_segments, 6);
+        assert_eq!(back.compact_interval_ms, 100);
+    }
+
+    #[test]
+    fn live_section_parses_and_defaults() {
+        let cfg =
+            RunConfig::from_str("[live]\ncompact_segments = 3\ncompact_interval_ms = 50\n")
+                .unwrap();
+        assert_eq!(cfg.compact_segments, 3);
+        assert_eq!(cfg.compact_interval_ms(), 50);
+        // Defaults: compaction off, interval falls back to the service's.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.compact_segments, 0);
+        assert_eq!(cfg.compact_interval_ms, 0);
+        assert_eq!(cfg.compact_interval_ms(), 250);
     }
 
     #[test]

@@ -78,6 +78,14 @@ pub struct Metrics {
     freeze_min: AtomicMin,
     freeze_max: AtomicU64,
     freeze_hist: [AtomicU64; FREEZE_BUCKETS],
+    live_epoch: AtomicU64,
+    live_segments: AtomicU64,
+    live_docs: AtomicU64,
+    live_deleted: AtomicU64,
+    live_base_nnz: AtomicU64,
+    live_delta_nnz: AtomicU64,
+    live_compactions: AtomicU64,
+    live_compaction_ms: AtomicU64,
 }
 
 impl Metrics {
@@ -202,6 +210,20 @@ impl Metrics {
         }
     }
 
+    /// Publish the live-store shape (gauges: last write wins — the
+    /// dispatcher records the pinned view of every popped batch, so these
+    /// track the store the answers were actually computed against).
+    pub fn record_live(&self, stats: &super::LiveStoreStats) {
+        self.live_epoch.store(stats.epoch, Ordering::Relaxed);
+        self.live_segments.store(stats.segments as u64, Ordering::Relaxed);
+        self.live_docs.store(stats.num_docs as u64, Ordering::Relaxed);
+        self.live_deleted.store(stats.deleted as u64, Ordering::Relaxed);
+        self.live_base_nnz.store(stats.base_nnz as u64, Ordering::Relaxed);
+        self.live_delta_nnz.store(stats.delta_nnz as u64, Ordering::Relaxed);
+        self.live_compactions.store(stats.compactions, Ordering::Relaxed);
+        self.live_compaction_ms.store(stats.compaction_ms, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let queries = self.queries.load(Ordering::Relaxed);
         let hist: Vec<u64> = self.latency_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
@@ -260,6 +282,14 @@ impl Metrics {
                 }
                 h
             },
+            live_epoch: self.live_epoch.load(Ordering::Relaxed),
+            live_segments: self.live_segments.load(Ordering::Relaxed),
+            live_docs: self.live_docs.load(Ordering::Relaxed),
+            live_deleted: self.live_deleted.load(Ordering::Relaxed),
+            live_base_nnz: self.live_base_nnz.load(Ordering::Relaxed),
+            live_delta_nnz: self.live_delta_nnz.load(Ordering::Relaxed),
+            live_compactions: self.live_compactions.load(Ordering::Relaxed),
+            live_compaction_ms: self.live_compaction_ms.load(Ordering::Relaxed),
         }
     }
 }
@@ -338,6 +368,22 @@ pub struct MetricsSnapshot {
     /// Serving-wide iterations-to-freeze distribution (exact min/max;
     /// p50 at power-of-two bucket resolution).
     pub freeze_iters: crate::sinkhorn::FreezeHistogram,
+    /// Live-store gauges, as of the last batch the dispatcher pinned:
+    /// the epoch, segment count, document count (appended docs included)
+    /// and tombstone count of the serving view.
+    pub live_epoch: u64,
+    pub live_segments: u64,
+    pub live_docs: u64,
+    pub live_deleted: u64,
+    /// Non-zeros in the base segment vs in the delta segments — the
+    /// delta share is the fraction of the target set compaction would
+    /// fold back into the base.
+    pub live_base_nnz: u64,
+    pub live_delta_nnz: u64,
+    /// Background compactions completed, and the milliseconds they took
+    /// in total (off the query path).
+    pub live_compactions: u64,
+    pub live_compaction_ms: u64,
 }
 
 fn percentile_from_hist(hist: &[u64], q: f64) -> Duration {
@@ -371,7 +417,9 @@ impl MetricsSnapshot {
              cascade: queries={} wcd={}/{} lcrwmd={}/{} rwmd={}/{} sinkhorn={}/{} \
              pruned-solves={} \
              convergence: frozen-cols={} compactions={} nnz-traversed={} nnz-full={} \
-             freeze-iters: min={} p50≤{} max={}",
+             freeze-iters: min={} p50≤{} max={} \
+             live: epoch={} segments={} docs={} deleted={} delta-nnz={}/{} \
+             compactions={} compaction-ms={}",
             self.queries,
             self.batches,
             self.errors,
@@ -410,7 +458,15 @@ impl MetricsSnapshot {
             self.conv_nnz_full,
             freeze_min,
             freeze_p50,
-            self.freeze_iters.max
+            self.freeze_iters.max,
+            self.live_epoch,
+            self.live_segments,
+            self.live_docs,
+            self.live_deleted,
+            self.live_delta_nnz,
+            self.live_base_nnz + self.live_delta_nnz,
+            self.live_compactions,
+            self.live_compaction_ms
         )
     }
 }
@@ -601,6 +657,44 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.freeze_iters.count, 0);
         assert!(s.report().contains("freeze-iters: min=0 p50≤0 max=0"));
+    }
+
+    #[test]
+    fn live_store_gauges_reflect_last_record() {
+        use crate::coordinator::LiveStoreStats;
+        let m = Metrics::new();
+        m.record_live(&LiveStoreStats {
+            epoch: 3,
+            segments: 2,
+            num_docs: 45,
+            deleted: 1,
+            base_nnz: 900,
+            delta_nnz: 100,
+            compactions: 0,
+            compaction_ms: 0,
+        });
+        m.record_live(&LiveStoreStats {
+            epoch: 4,
+            segments: 1,
+            num_docs: 45,
+            deleted: 1,
+            base_nnz: 980,
+            delta_nnz: 0,
+            compactions: 1,
+            compaction_ms: 7,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.live_epoch, 4, "gauge: last write wins");
+        assert_eq!(s.live_segments, 1);
+        assert_eq!(s.live_docs, 45);
+        assert_eq!(s.live_deleted, 1);
+        assert_eq!(s.live_base_nnz, 980);
+        assert_eq!(s.live_delta_nnz, 0);
+        assert_eq!(s.live_compactions, 1);
+        assert!(s.report().contains(
+            "live: epoch=4 segments=1 docs=45 deleted=1 delta-nnz=0/980 \
+             compactions=1 compaction-ms=7"
+        ));
     }
 
     #[test]

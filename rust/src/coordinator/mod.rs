@@ -22,6 +22,7 @@
 //! responses (fig. 5's multi-socket model as real multi-pool dispatch).
 
 pub mod batcher;
+pub mod live;
 pub mod metrics;
 pub mod pjrt_backend;
 pub mod router;
@@ -30,6 +31,7 @@ pub mod shard;
 pub mod state;
 
 pub use batcher::{BatchQueue, BatcherConfig};
+pub use live::{EpochView, LiveDocStore, LiveStoreStats, Segment};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pjrt_backend::PjrtBackend;
 pub use router::{Backend, Router};

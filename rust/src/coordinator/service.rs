@@ -3,6 +3,7 @@
 //! prepared-factor cache so repeated queries skip the `dist` precompute.
 
 use super::batcher::{BatchQueue, BatcherConfig};
+use super::live::LiveDocStore;
 use super::metrics::Metrics;
 use super::pjrt_backend::PjrtBackend;
 use super::router::Backend;
@@ -10,11 +11,13 @@ use super::shard::{ShardSet, ShardedDocStore};
 use super::state::{DocStore, PreparedCache, PreparedKey};
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
-use crate::prune::{CascadeRetrieval, CascadeSpec};
+use crate::prune::{merge_topk, CascadeRetrieval, CascadeSpec, PrunedTopK};
 use crate::sinkhorn::{
     DenseSolver, Prepared, SinkhornConfig, SolveWorkspace, SparseSolver, WorkspaceStats,
 };
+use crate::sparse::Csr;
 use crate::Real;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -56,6 +59,14 @@ pub struct ServiceConfig {
     /// as `name:budget`). Runs shard-locally when `shards ≥ 2` and the
     /// local top-ks are merged.
     pub cascade: CascadeSpec,
+    /// Background compaction threshold for a live store: when the view
+    /// holds at least this many segments, the `wmd-compactor` thread
+    /// folds the deltas back into one base CSR off the query path
+    /// (atomic swap at an epoch boundary). `0` or `1` disables the
+    /// compactor (the default — static deployments never spawn it).
+    pub compact_segments: usize,
+    /// Poll interval of the compactor thread, in milliseconds.
+    pub compact_interval_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +82,8 @@ impl Default for ServiceConfig {
             shards: 1,
             shard_threads: 0,
             cascade: CascadeSpec::default(),
+            compact_segments: 0,
+            compact_interval_ms: 250,
         }
     }
 }
@@ -85,16 +98,28 @@ pub struct QueryRequest {
     /// cascade instead of the full-length WMD vector; the answer arrives
     /// in [`QueryResponse::top`]. Always served by the sparse backend.
     pub top_k: Option<usize>,
+    /// Time-windowed retrieval: only documents with ingest timestamp
+    /// `>= since` are eligible for [`QueryRequest::top_k`] answers (the
+    /// tweet-firehose "similar tweets of a given day" scenario). Ignored
+    /// for full-vector solves, which always cover every column. Documents
+    /// of a static store all carry timestamp 0.
+    pub since: Option<i64>,
 }
 
 impl QueryRequest {
     pub fn new(query: SparseVec) -> Self {
-        Self { query, prefer: None, top_k: None }
+        Self { query, prefer: None, top_k: None, since: None }
     }
 
     /// A top-k retrieval request (served by the cascade).
     pub fn top_k(query: SparseVec, k: usize) -> Self {
-        Self { query, prefer: None, top_k: Some(k) }
+        Self { query, prefer: None, top_k: Some(k), since: None }
+    }
+
+    /// A top-k retrieval restricted to documents ingested at or after
+    /// `since`.
+    pub fn top_k_since(query: SparseVec, k: usize, since: i64) -> Self {
+        Self { query, prefer: None, top_k: Some(k), since: Some(since) }
     }
 }
 
@@ -150,40 +175,86 @@ fn error_response(msg: String, latency: Duration) -> QueryResponse {
 pub struct WmdService {
     queue: Arc<BatchQueue<Job>>,
     metrics: Arc<Metrics>,
+    live: Arc<LiveDocStore>,
     worker: Option<std::thread::JoinHandle<()>>,
+    compactor: Option<std::thread::JoinHandle<()>>,
+    compactor_stop: Arc<AtomicBool>,
 }
 
 impl WmdService {
-    /// Start the dispatcher thread. `pjrt_dir` optionally points at the
-    /// AOT artifacts directory; the PJRT client is **not** `Send` (the
-    /// `xla` crate wraps an `Rc`), so the backend is constructed on the
-    /// dispatcher thread itself. Loading failures degrade to the sparse
-    /// backend (logged to stderr), matching "artifacts not built yet".
+    /// Start the dispatcher thread over a static target set. `pjrt_dir`
+    /// optionally points at the AOT artifacts directory; the PJRT client
+    /// is **not** `Send` (the `xla` crate wraps an `Rc`), so the backend
+    /// is constructed on the dispatcher thread itself. Loading failures
+    /// degrade to the sparse backend (logged to stderr), matching
+    /// "artifacts not built yet".
     pub fn start(
         store: Arc<DocStore>,
         config: ServiceConfig,
         pjrt_dir: Option<std::path::PathBuf>,
     ) -> Self {
+        Self::start_live(LiveDocStore::new(store).into_arc(), config, pjrt_dir)
+    }
+
+    /// [`WmdService::start`] over a **live** store: documents may be
+    /// appended and deleted while the service answers queries. The
+    /// dispatcher pins one [`super::EpochView`] per popped batch, so
+    /// every answer in a batch reflects exactly one epoch — mutations
+    /// landing mid-batch are picked up by the next batch. With
+    /// [`ServiceConfig::compact_segments`] ≥ 2 a background
+    /// `wmd-compactor` thread folds accumulated delta segments back into
+    /// the base CSR off the query path.
+    pub fn start_live(
+        live: Arc<LiveDocStore>,
+        config: ServiceConfig,
+        pjrt_dir: Option<std::path::PathBuf>,
+    ) -> Self {
         let queue = Arc::new(BatchQueue::new(config.batcher));
         let metrics = Arc::new(Metrics::new());
+        let compactor_stop = Arc::new(AtomicBool::new(false));
+        let compactor = (config.compact_segments >= 2).then(|| {
+            let live = Arc::clone(&live);
+            let stop = Arc::clone(&compactor_stop);
+            let threshold = config.compact_segments;
+            let interval = Duration::from_millis(config.compact_interval_ms.max(1));
+            std::thread::Builder::new()
+                .name("wmd-compactor".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        if live.view().num_segments() >= threshold {
+                            live.compact();
+                        }
+                        std::thread::park_timeout(interval);
+                    }
+                })
+                .expect("spawn compactor")
+        });
         let worker = {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
+            let live = Arc::clone(&live);
             std::thread::Builder::new()
                 .name("wmd-dispatch".into())
                 .spawn(move || {
-                    let pjrt = pjrt_dir.and_then(|dir| match PjrtBackend::load(&dir, &store) {
-                        Ok(b) => b,
-                        Err(e) => {
-                            eprintln!("wmd-service: PJRT backend unavailable: {e:#}");
-                            None
+                    let pjrt = pjrt_dir.and_then(|dir| {
+                        match PjrtBackend::load(&dir, live.store()) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!("wmd-service: PJRT backend unavailable: {e:#}");
+                                None
+                            }
                         }
                     });
-                    dispatcher(store, config, pjrt, queue, metrics)
+                    dispatcher(live, config, pjrt, queue, metrics)
                 })
                 .expect("spawn dispatcher")
         };
-        Self { queue, metrics, worker: Some(worker) }
+        Self { queue, metrics, live, worker: Some(worker), compactor, compactor_stop }
+    }
+
+    /// The live store behind the service — the append/delete handle.
+    pub fn live(&self) -> &Arc<LiveDocStore> {
+        &self.live
     }
 
     /// Submit a query; the response arrives on the returned channel.
@@ -204,39 +275,53 @@ impl WmdService {
         &self.metrics
     }
 
-    /// Graceful shutdown: drain in-flight work, join the dispatcher.
+    /// Graceful shutdown: drain in-flight work, join the dispatcher and
+    /// the compactor.
     pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
         self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+        self.compactor_stop.store(true, Ordering::Relaxed);
+        if let Some(c) = self.compactor.take() {
+            c.thread().unpark();
+            let _ = c.join();
         }
     }
 }
 
 impl Drop for WmdService {
     fn drop(&mut self) {
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop_threads();
     }
 }
 
 fn dispatcher(
-    store: Arc<DocStore>,
+    live: Arc<LiveDocStore>,
     config: ServiceConfig,
     pjrt: Option<PjrtBackend>,
     queue: Arc<BatchQueue<Job>>,
     metrics: Arc<Metrics>,
 ) {
+    // Embeddings, vocabulary and query validation are epoch-invariant
+    // (appends reuse the vocabulary); only the target columns live behind
+    // the epoch. The store handle serves the former, the pinned view the
+    // latter.
+    let store = Arc::clone(live.store());
     let nthreads = if config.threads == 0 { crate::util::num_cpus() } else { config.threads };
     let pool = Pool::new(nthreads);
     let sparse = SparseSolver::new(config.sinkhorn);
     let dense = DenseSolver::new(config.sinkhorn);
     // S ≥ 2: split the target set into nnz-balanced column slices, one
     // worker pool per shard. The dispatcher's own pool keeps serving the
-    // prepare phase and the monolithic (dense/PJRT) backends.
-    let shard_set = (config.shards >= 2).then(|| {
+    // prepare phase and the monolithic (dense/PJRT) backends. The set is
+    // re-synced against the pinned view at every popped batch (no-op
+    // while the epoch holds still).
+    let mut shard_set = (config.shards >= 2).then(|| {
         let per_shard = if config.shard_threads == 0 {
             (nthreads / config.shards).max(1)
         } else {
@@ -245,12 +330,15 @@ fn dispatcher(
         let sharded = ShardedDocStore::split(Arc::clone(&store), config.shards);
         ShardSet::start_with_cascade(sharded, config.sinkhorn, per_shard, config.cascade.clone())
     });
-    // Top-k retrieval: the monolithic cascade plus its document-centroid
-    // matrix, built lazily on the first top-k request so solve-only
-    // deployments never pay for it. Sharded deployments run the cascade
-    // inside the shard workers instead (each owns its slice's centroids).
+    // Top-k retrieval: the monolithic cascade plus one document-centroid
+    // matrix per live segment, built lazily on the first top-k request so
+    // solve-only deployments never pay for it, and keyed on the segment's
+    // allocation identity so a replaced segment (delete, compaction) can
+    // never serve stale centroids. Sharded deployments run the cascade
+    // inside the shard workers instead (each owns its subs' centroids).
     let cascade = CascadeRetrieval::new(config.sinkhorn, config.cascade.clone());
-    let mut doc_centroids: Option<crate::sparse::Dense> = None;
+    let mut seg_centroids: std::collections::HashMap<usize, crate::sparse::Dense> =
+        std::collections::HashMap::new();
     // The cache lives on the dispatcher thread — no locking on the hot path.
     let mut cache = (config.prepare_cache > 0).then(|| {
         let cache = PreparedCache::new(config.prepare_cache);
@@ -268,6 +356,27 @@ fn dispatcher(
     let mut shard_ws: Vec<WorkspaceStats> = Vec::new();
     while let Some(batch) = queue.next_batch() {
         metrics.record_batch(batch.len());
+        // Pin ONE epoch view for the whole popped batch: every job below
+        // resolves against `view`, so appends and deletes landing while
+        // this batch solves are invisible to it (they are served by the
+        // next batch's pin). Clones are cheap — Arc bumps per segment.
+        let view = live.view();
+        metrics.record_live(&live.stats());
+        if let Some(shards) = shard_set.as_mut() {
+            shards.sync(&view);
+        }
+        // A store that has ever mutated serves every solve through the
+        // segmented sparse path: the dense/PJRT backends were built
+        // against the epoch-0 monolith and would answer with stale (or
+        // wrongly-sized) vectors, so they degrade to sparse.
+        let mutated = view.epoch != 0;
+        // Evict centroids of segments no longer in the view (replaced by
+        // delete COW or folded away by compaction).
+        if mutated && !seg_centroids.is_empty() {
+            let alive: std::collections::HashSet<usize> =
+                view.segments.iter().map(|s| Arc::as_ptr(&s.c) as usize).collect();
+            seg_centroids.retain(|k, _| alive.contains(k));
+        }
         // Phase 1: validate, route and prepare every job of the popped
         // batch. Sparse-backend jobs are deferred so the whole group runs
         // as ONE fused pass over `c` per Sinkhorn step; dense/PJRT jobs
@@ -299,14 +408,21 @@ fn dispatcher(
                     &metrics,
                     &mut ws,
                     &job.req.query,
+                    view.epoch,
                 );
                 retrieval_jobs.push((job, prep, k, started));
                 continue;
             }
             let prefer = job.req.prefer.unwrap_or(config.prefer);
-            let backend = resolve_backend(prefer, pjrt.as_ref(), &job.req.query);
+            let backend = if mutated {
+                Backend::SparseRust
+            } else {
+                resolve_backend(prefer, pjrt.as_ref(), &job.req.query)
+            };
             let sharded = shard_set.is_some() && backend.supports_sharding();
-            if backend == Backend::SparseRust && (config.cross_query_batch || sharded) {
+            if backend == Backend::SparseRust
+                && (config.cross_query_batch || sharded || mutated)
+            {
                 let query = &job.req.query;
                 let prep = resolve_prepared(
                     &store,
@@ -316,6 +432,7 @@ fn dispatcher(
                     &metrics,
                     &mut ws,
                     query,
+                    view.epoch,
                 );
                 sparse_jobs.push((job, prep, started));
                 continue;
@@ -385,7 +502,12 @@ fn dispatcher(
                 None => {
                     let preps: Vec<&Prepared> =
                         sparse_jobs.iter().map(|(_, p, _)| p.as_ref()).collect();
-                    sparse.solve_batch_in(&mut ws, &preps, &store.c, &pool)
+                    // Per-segment solves merged to full length; a
+                    // single-segment (static) view takes the one-pass
+                    // monolithic path inside solve_segments_in.
+                    let segs: Vec<(usize, &Csr)> =
+                        view.segments.iter().map(|s| (s.start, s.c.as_ref())).collect();
+                    sparse.solve_segments_in(&mut ws, &preps, &segs, view.num_docs(), &pool)
                 }
             };
             // Only count real fused batches: solve_batch falls back to a
@@ -419,26 +541,52 @@ fn dispatcher(
         // Phase 3: top-k retrieval through the bound cascade — shard-local
         // (merged) when the shard set is up, monolithic otherwise.
         for (job, prep, k, started) in retrieval_jobs {
+            // The admission mask folds tombstones and the request's time
+            // window together; `None` whenever everything is admitted, so
+            // static stores keep the unmasked (bitwise-legacy) path.
+            let allowed = view.allowed_mask(job.req.since).map(Arc::new);
             let topk = match &shard_set {
                 Some(shards) => {
-                    let (out, wss) = shards.retrieve_topk(&job.req.query, &prep, k);
+                    let (out, wss) =
+                        shards.retrieve_topk_masked(&job.req.query, &prep, k, allowed);
                     shard_ws = wss;
                     out
                 }
                 None => {
-                    let cents = doc_centroids.get_or_insert_with(|| {
-                        crate::prune::centroids(&store.embeddings, &store.c, &pool)
-                    });
-                    cascade.retrieve_prepared_in(
-                        &mut ws,
-                        &store.embeddings,
-                        &job.req.query,
-                        &prep,
-                        &store.c,
-                        cents,
-                        &pool,
-                        k,
-                    )
+                    let mut parts: Vec<(usize, PrunedTopK)> = Vec::new();
+                    for seg in view.segments.iter().filter(|s| s.c.ncols() > 0) {
+                        let key = Arc::as_ptr(&seg.c) as usize;
+                        if !seg_centroids.contains_key(&key) {
+                            seg_centroids.insert(
+                                key,
+                                crate::prune::centroids(&store.embeddings, &seg.c, &pool),
+                            );
+                        }
+                        let cents = seg_centroids.get(&key).expect("just inserted");
+                        let local = allowed
+                            .as_deref()
+                            .map(|m| &m[seg.start..seg.start + seg.c.ncols()]);
+                        let out = cascade.retrieve_prepared_masked_in(
+                            &mut ws,
+                            &store.embeddings,
+                            &job.req.query,
+                            &prep,
+                            &seg.c,
+                            cents,
+                            &pool,
+                            k,
+                            local,
+                        );
+                        parts.push((seg.start, out));
+                    }
+                    if parts.len() == 1 && parts[0].0 == 0 && allowed.is_none() {
+                        // Static store, no mask: the single part IS the
+                        // answer — skip the merge re-sort so the legacy
+                        // ordering is preserved bit for bit.
+                        parts.pop().expect("one part").1
+                    } else {
+                        merge_topk(&parts, k)
+                    }
                 }
             };
             metrics.record_cascade(&topk.stats);
@@ -485,6 +633,7 @@ fn resolve_backend(
 /// an `Arc<Prepared>` (the factor planes themselves are the cached
 /// artifact — they are allocated once and retained by the cache, not by
 /// the workspace).
+#[allow(clippy::too_many_arguments)]
 fn resolve_prepared(
     store: &DocStore,
     pool: &Pool,
@@ -493,11 +642,16 @@ fn resolve_prepared(
     metrics: &Metrics,
     ws: &mut SolveWorkspace,
     query: &SparseVec,
+    epoch: u64,
 ) -> Arc<Prepared> {
     let prepare = || sparse.prepare_in(ws, &store.embeddings, query, pool);
     match cache {
         Some(cache) => {
-            let key = PreparedKey::new(query, sparse.config().lambda);
+            // The factors depend only on embeddings + query, but the key
+            // carries the store epoch: entries admitted before a mutation
+            // are unreachable afterwards, so staleness is structurally
+            // impossible (and the LRU retires the dead epochs' entries).
+            let key = PreparedKey::with_epoch(query, sparse.config().lambda, epoch);
             let (prep, hit) = cache.get_or_insert_with(key, prepare);
             metrics.record_prepare_cache(hit);
             prep
@@ -529,8 +683,10 @@ fn answer(
         return Ok((wmd, b.max_v_r(), backend));
     }
     // Both in-process solvers share the same factors — `precompute_factors`
-    // with the service λ.
-    let prep = resolve_prepared(store, pool, sparse, cache, metrics, ws, &req.query);
+    // with the service λ. This path is only reachable on a pristine store
+    // (a mutated view degrades every job to the deferred segmented solve),
+    // so the cache key is pinned to epoch 0.
+    let prep = resolve_prepared(store, pool, sparse, cache, metrics, ws, &req.query, 0);
     match backend {
         Backend::SparseRust => {
             let out = sparse.solve_in(ws, &prep, &store.c, pool);
@@ -867,6 +1023,7 @@ mod tests {
             query: q,
             prefer: Some(Backend::DenseRust),
             top_k: None,
+            since: None,
         });
         assert!(a.is_ok() && b.is_ok());
         assert_eq!(b.backend, Backend::DenseRust);
@@ -1038,5 +1195,136 @@ mod tests {
             let resp = rx.recv().expect("reply delivered before shutdown completed");
             assert!(resp.is_ok());
         }
+    }
+
+    /// `docs` synthetic delta documents over the same vocabulary, three
+    /// words each — the live-service tests' append payload.
+    fn delta_docs(vocab: usize, docs: usize, seed: u64) -> Csr {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let mut coo = crate::sparse::Coo::new(vocab, docs);
+        for j in 0..docs {
+            for _ in 0..3 {
+                coo.push(rng.below(vocab), j, rng.next_f64() + 0.1);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    fn live_corpus(seed: u64) -> (Arc<LiveDocStore>, SyntheticCorpus) {
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(500)
+            .num_docs(40)
+            .embedding_dim(16)
+            .num_queries(2)
+            .query_words(5, 10)
+            .seed(seed)
+            .build();
+        let live = LiveDocStore::new(DocStore::from_synthetic(&corpus).into_arc()).into_arc();
+        (live, corpus)
+    }
+
+    #[test]
+    fn live_append_grows_the_answer_and_rekeys_the_cache() {
+        let (live, corpus) = live_corpus(3);
+        let service = WmdService::start_live(
+            Arc::clone(&live),
+            ServiceConfig { threads: 1, ..Default::default() },
+            None,
+        );
+        let q = corpus.query(0).clone();
+        let before = service.submit_wait(QueryRequest::new(q.clone()));
+        assert!(before.is_ok(), "{:?}", before.error);
+        assert_eq!(before.wmd.len(), 40);
+        live.append(delta_docs(500, 6, 11), vec![100; 6]);
+        let after = service.submit_wait(QueryRequest::new(q.clone()));
+        assert!(after.is_ok(), "{:?}", after.error);
+        assert_eq!(after.wmd.len(), 46, "the appended documents are answered");
+        // Columns are independent, so the base prefix of the segmented
+        // post-append solve reproduces the monolithic answer bit for bit.
+        assert_eq!(&after.wmd[..40], &before.wmd[..]);
+        // Epoch-keyed cache regression: the post-append solve must NOT be
+        // served factors admitted at epoch 0 — the same query misses again.
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.prepare_cache_misses, 2, "one miss per epoch");
+        assert_eq!(snap.prepare_cache_hits, 0, "no cross-epoch hit");
+        // Same epoch, same query: now it hits.
+        let warm = service.submit_wait(QueryRequest::new(q));
+        assert!(warm.is_ok());
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.prepare_cache_hits, 1);
+        assert_eq!(warm.wmd, after.wmd);
+        service.shutdown();
+    }
+
+    #[test]
+    fn since_window_restricts_top_k_to_fresh_documents() {
+        let (live, corpus) = live_corpus(7);
+        let service = WmdService::start_live(
+            Arc::clone(&live),
+            ServiceConfig { threads: 1, ..Default::default() },
+            None,
+        );
+        live.append(delta_docs(500, 8, 23), vec![1_000; 8]);
+        let all = service.submit_wait(QueryRequest::top_k(corpus.query(0).clone(), 5));
+        assert!(all.is_ok(), "{:?}", all.error);
+        assert_eq!(all.top.len(), 5);
+        let fresh =
+            service.submit_wait(QueryRequest::top_k_since(corpus.query(0).clone(), 5, 1_000));
+        assert!(fresh.is_ok(), "{:?}", fresh.error);
+        assert!(!fresh.top.is_empty());
+        assert!(
+            fresh.top.iter().all(|&(doc, _)| doc >= 40),
+            "the window admits only appended documents: {:?}",
+            fresh.top
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn deleted_document_is_unreachable() {
+        let (live, corpus) = live_corpus(13);
+        let service = WmdService::start_live(
+            Arc::clone(&live),
+            ServiceConfig { threads: 1, ..Default::default() },
+            None,
+        );
+        live.delete(7).expect("document 7 is in range");
+        let resp = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.wmd.len(), 40, "the slot stays (ids are stable)");
+        assert!(resp.wmd[7].is_infinite(), "a deleted document answers +inf");
+        let topk = service.submit_wait(QueryRequest::top_k(corpus.query(0).clone(), 40));
+        assert!(topk.is_ok(), "{:?}", topk.error);
+        assert!(topk.top.iter().all(|&(doc, _)| doc != 7), "tombstones never surface");
+        service.shutdown();
+    }
+
+    #[test]
+    fn background_compactor_folds_segments() {
+        let (live, corpus) = live_corpus(17);
+        let service = WmdService::start_live(
+            Arc::clone(&live),
+            ServiceConfig {
+                threads: 1,
+                compact_segments: 2,
+                compact_interval_ms: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        live.append(delta_docs(500, 4, 31), vec![10; 4]);
+        live.append(delta_docs(500, 3, 37), vec![20; 3]);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while live.view().num_segments() > 1 {
+            assert!(Instant::now() < deadline, "compactor never folded the segments");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = live.stats();
+        assert!(stats.compactions >= 1);
+        assert_eq!(stats.delta_nnz, 0, "everything folded into the base");
+        let resp = service.submit_wait(QueryRequest::new(corpus.query(0).clone()));
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.wmd.len(), 47);
+        service.shutdown();
     }
 }

@@ -18,10 +18,11 @@
 //! shard shares it through the same `Arc` — no per-shard precompute, no
 //! per-shard cache key.
 
+use super::live::EpochView;
 use super::state::DocStore;
 use crate::corpus::SparseVec;
 use crate::parallel::Pool;
-use crate::prune::{merge_topk, CascadeRetrieval, CascadeSpec, PruneStats, PrunedTopK};
+use crate::prune::{merge_topk, CascadeRetrieval, CascadeSpec, PrunedTopK};
 use crate::sinkhorn::{
     Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver, WorkspaceStats,
 };
@@ -64,24 +65,7 @@ impl ShardedDocStore {
         for j in 0..n {
             prefix[j + 1] += prefix[j];
         }
-        let total = prefix[n];
-        let mut ranges = Vec::with_capacity(s);
-        let mut start = 0usize;
-        for k in 1..=s {
-            let end = if k == s {
-                n
-            } else if total == 0 {
-                crate::parallel::static_chunk(n, k - 1, s).end
-            } else {
-                // First column boundary whose nnz prefix reaches shard
-                // k's fair share.
-                let target = total * k / s;
-                prefix.partition_point(|&p| p < target).clamp(start, n)
-            };
-            ranges.push(start..end);
-            start = end;
-        }
-        Self::with_ranges(store, ranges)
+        Self::with_ranges(store, nnz_balanced_ranges(&prefix, s))
     }
 
     /// Build from explicit ranges: they must tile `0..num_docs` in order
@@ -133,28 +117,85 @@ impl ShardedDocStore {
     }
 }
 
+/// `S` contiguous column ranges balanced by non-zeros, from an nnz
+/// prefix-sum over the columns (`prefix.len() == n + 1`): the per-shard
+/// iterate cost is O(nnz·v_r), so nnz — not column count — is the load
+/// to equalize. Falls back to an even column split when there are no
+/// non-zeros at all.
+fn nnz_balanced_ranges(prefix: &[usize], s: usize) -> Vec<Range<usize>> {
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let mut ranges = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for k in 1..=s {
+        let end = if k == s {
+            n
+        } else if total == 0 {
+            crate::parallel::static_chunk(n, k - 1, s).end
+        } else {
+            // First column boundary whose nnz prefix reaches shard k's
+            // fair share.
+            let target = total * k / s;
+            prefix.partition_point(|&p| p < target).clamp(start, n)
+        };
+        ranges.push(start..end);
+        start = end;
+    }
+    ranges
+}
+
+/// One worker-held slice of the (possibly segmented) target set: a
+/// column range of one epoch segment, with its global start. A static
+/// store gives every worker exactly one sub-segment; live appends add
+/// whole delta segments, so a worker may own several.
+struct WorkerSub {
+    c: Arc<Csr>,
+    start: usize,
+    /// Lazily-built centroid rows for this sub-segment's cascade. Tied to
+    /// the sub's lifetime: replacing the sub (delete, rebalance) drops the
+    /// centroids with it, so they can never go stale.
+    centroids: Option<Dense>,
+}
+
+/// Per-sub-segment solve result: `(global col_start, one output per
+/// prepared query)`.
+type SolvePart = (usize, Vec<SolveOutput>);
+
 enum ShardJob {
-    /// One batched full-length solve over this shard's column slice.
+    /// One batched solve over every sub-segment this worker owns.
     Solve {
         preps: Vec<Arc<Prepared>>,
-        reply: mpsc::Sender<(usize, Vec<SolveOutput>, WorkspaceStats)>,
+        reply: mpsc::Sender<(usize, Vec<SolvePart>, WorkspaceStats)>,
         shard: usize,
     },
-    /// One shard-local cascade retrieval (top-k in local document ids;
-    /// the coordinator rebases by `col_start` and merges).
+    /// One cascade retrieval per owned sub-segment (top-k in global ids
+    /// after the coordinator's merge). `allowed` is the global admission
+    /// mask (deleted / out-of-window documents), sliced per sub.
     Retrieve {
         query: SparseVec,
         prep: Arc<Prepared>,
         k: usize,
-        reply: mpsc::Sender<(usize, PrunedTopK, WorkspaceStats)>,
+        allowed: Option<Arc<Vec<bool>>>,
+        reply: mpsc::Sender<(usize, Vec<(usize, PrunedTopK)>, WorkspaceStats)>,
         shard: usize,
     },
+    /// Live append: take ownership of one whole delta segment.
+    AddSegment { c: Arc<Csr>, start: usize },
+    /// Live rebalance / delete: replace every owned sub-segment.
+    Reset { subs: Vec<(Arc<Csr>, usize)> },
 }
 
 struct ShardWorker {
     tx: Option<mpsc::Sender<ShardJob>>,
     handle: Option<std::thread::JoinHandle<()>>,
-    col_start: usize,
+}
+
+/// Coordinator-side record of one sub-segment assignment.
+#[derive(Clone, Copy, Debug)]
+struct SubMeta {
+    start: usize,
+    len: usize,
+    nnz: usize,
 }
 
 /// Merged result of one sharded batch dispatch.
@@ -173,14 +214,32 @@ pub struct ShardBatchOutput {
     pub workspace: Vec<WorkspaceStats>,
 }
 
+/// Identity of the last [`EpochView`] the workers were synced to: the
+/// epoch, one `(start, Arc pointer)` pair per segment, and the tombstone
+/// count. Segments are immutable once published (deletes copy-on-write
+/// into fresh allocations), so pointer equality is a sound and O(1)
+/// "same segment" test.
+struct SyncedView {
+    epoch: u64,
+    segments: Vec<(usize, usize)>,
+    deleted: usize,
+}
+
 /// A running shard fleet: one worker thread per [`DocShard`], each owning
-/// its slice, its own [`Pool`] and a [`SparseSolver`].
-/// [`ShardSet::solve_batch`] fans one prepared batch out to every shard
-/// concurrently and merges the slices; dropping the set shuts the
-/// workers down.
+/// one or more sub-segments of the target set, its own [`Pool`] and a
+/// [`SparseSolver`]. [`ShardSet::solve_batch`] fans one prepared batch
+/// out to every shard concurrently and merges the slices;
+/// [`ShardSet::sync`] follows a live store across epochs (appended delta
+/// segments ship whole to the least-loaded worker; deletes and
+/// compactions trigger a full nnz-rebalanced repartition). Dropping the
+/// set shuts the workers down.
 pub struct ShardSet {
     workers: Vec<ShardWorker>,
     total_docs: usize,
+    /// Coordinator-side mirror of each worker's sub-segments — drives the
+    /// least-loaded placement of appends and the rebalance decision.
+    assigned: Vec<Vec<SubMeta>>,
+    synced: Option<SyncedView>,
 }
 
 impl ShardSet {
@@ -215,12 +274,27 @@ impl ShardSet {
         assert!(threads_per_shard >= 1, "each shard pool needs at least one thread");
         let ShardedDocStore { store, shards } = sharded;
         let total_docs = store.num_docs();
+        let mut assigned = Vec::with_capacity(shards.len());
         let workers = shards
             .into_iter()
             .enumerate()
             .map(|(idx, shard)| {
+                let start = shard.col_range.start;
+                let metas = if shard.c.ncols() == 0 {
+                    Vec::new()
+                } else {
+                    vec![SubMeta { start, len: shard.c.ncols(), nnz: shard.c.nnz() }]
+                };
+                // A zero-column shard starts with no sub-segments: it
+                // answers every job with zero parts and the merges skip
+                // over it.
+                let initial: Vec<(Arc<Csr>, usize)> = if shard.c.ncols() == 0 {
+                    Vec::new()
+                } else {
+                    vec![(Arc::new(shard.c), start)]
+                };
+                assigned.push(metas);
                 let (tx, rx) = mpsc::channel::<ShardJob>();
-                let c = shard.c;
                 let store = Arc::clone(&store);
                 let spec = spec.clone();
                 let handle = std::thread::Builder::new()
@@ -229,76 +303,86 @@ impl ShardSet {
                         let pool = Pool::new(threads_per_shard);
                         let solver = SparseSolver::new(config);
                         let retrieval = CascadeRetrieval::new(config, spec);
-                        // Shard-local centroid matrix for the cascade's
-                        // WCD stage, built on the first retrieval (solve-
-                        // only deployments never pay for it). Equals the
-                        // `col_range` rows of the full-corpus centroids.
-                        let mut centroids: Option<Dense> = None;
+                        let mut subs: Vec<WorkerSub> = initial
+                            .into_iter()
+                            .map(|(c, start)| WorkerSub { c, start, centroids: None })
+                            .collect();
                         // One long-lived workspace per shard worker: its
-                        // buffers grow to this slice's shapes once, then
-                        // every subsequent batch solves allocation-free.
+                        // buffers grow to the largest sub-segment's shapes
+                        // once, then every subsequent batch solves
+                        // allocation-free.
                         let mut ws = SolveWorkspace::new();
                         while let Ok(job) = rx.recv() {
                             match job {
                                 ShardJob::Solve { preps, reply, shard } => {
-                                    let outs: Vec<SolveOutput> = if c.ncols() == 0 {
-                                        // A zero-column shard has nothing
-                                        // to iterate: empty slice,
-                                        // vacuously converged, no
-                                        // iterations to fold.
-                                        preps
-                                            .iter()
-                                            .map(|_| SolveOutput {
-                                                converged: true,
-                                                ..Default::default()
-                                            })
-                                            .collect()
-                                    } else {
-                                        let refs: Vec<&Prepared> =
-                                            preps.iter().map(|p| p.as_ref()).collect();
-                                        solver.solve_batch_in(&mut ws, &refs, &c, &pool)
-                                    };
-                                    let _ = reply.send((shard, outs, ws.stats()));
-                                }
-                                ShardJob::Retrieve { query, prep, k, reply, shard } => {
-                                    let out = if c.ncols() == 0 {
-                                        PrunedTopK {
-                                            top: Vec::new(),
-                                            stats: PruneStats::default(),
+                                    let refs: Vec<&Prepared> =
+                                        preps.iter().map(|p| p.as_ref()).collect();
+                                    let mut parts: Vec<SolvePart> =
+                                        Vec::with_capacity(subs.len());
+                                    for sub in &subs {
+                                        if sub.c.ncols() == 0 {
+                                            continue;
                                         }
-                                    } else {
-                                        let cents = centroids.get_or_insert_with(|| {
-                                            crate::prune::centroids(
+                                        let outs =
+                                            solver.solve_batch_in(&mut ws, &refs, &sub.c, &pool);
+                                        parts.push((sub.start, outs));
+                                    }
+                                    let _ = reply.send((shard, parts, ws.stats()));
+                                }
+                                ShardJob::Retrieve { query, prep, k, allowed, reply, shard } => {
+                                    let mut parts = Vec::with_capacity(subs.len());
+                                    for sub in &mut subs {
+                                        if sub.c.ncols() == 0 {
+                                            continue;
+                                        }
+                                        // Sub-local centroid rows for the
+                                        // cascade's WCD stage, built on the
+                                        // first retrieval (solve-only
+                                        // deployments never pay for them).
+                                        if sub.centroids.is_none() {
+                                            sub.centroids = Some(crate::prune::centroids(
                                                 &store.embeddings,
-                                                &c,
+                                                &sub.c,
                                                 &pool,
-                                            )
-                                        });
-                                        retrieval.retrieve_prepared_in(
+                                            ));
+                                        }
+                                        let cents =
+                                            sub.centroids.as_ref().expect("just built");
+                                        let local = allowed
+                                            .as_deref()
+                                            .map(|m| &m[sub.start..sub.start + sub.c.ncols()]);
+                                        let out = retrieval.retrieve_prepared_masked_in(
                                             &mut ws,
                                             &store.embeddings,
                                             &query,
                                             &prep,
-                                            &c,
+                                            &sub.c,
                                             cents,
                                             &pool,
                                             k,
-                                        )
-                                    };
-                                    let _ = reply.send((shard, out, ws.stats()));
+                                            local,
+                                        );
+                                        parts.push((sub.start, out));
+                                    }
+                                    let _ = reply.send((shard, parts, ws.stats()));
+                                }
+                                ShardJob::AddSegment { c, start } => {
+                                    subs.push(WorkerSub { c, start, centroids: None });
+                                }
+                                ShardJob::Reset { subs: next } => {
+                                    subs = next
+                                        .into_iter()
+                                        .map(|(c, start)| WorkerSub { c, start, centroids: None })
+                                        .collect();
                                 }
                             }
                         }
                     })
                     .expect("spawn shard worker");
-                ShardWorker {
-                    tx: Some(tx),
-                    handle: Some(handle),
-                    col_start: shard.col_range.start,
-                }
+                ShardWorker { tx: Some(tx), handle: Some(handle) }
             })
             .collect();
-        Self { workers, total_docs }
+        Self { workers, total_docs, assigned, synced: None }
     }
 
     pub fn num_shards(&self) -> usize {
@@ -330,27 +414,39 @@ impl ShardSet {
                 .expect("shard worker alive");
         }
         drop(reply_tx);
-        let mut per_shard: Vec<Option<Vec<SolveOutput>>> = (0..s).map(|_| None).collect();
+        let mut per_shard: Vec<Option<Vec<SolvePart>>> = (0..s).map(|_| None).collect();
         let mut workspace = vec![WorkspaceStats::default(); s];
         for _ in 0..s {
-            let (idx, outs, ws_stats) =
+            let (idx, parts, ws_stats) =
                 reply_rx.recv().expect("a shard worker died mid-batch");
-            debug_assert_eq!(outs.len(), b, "shard {idx} answered a different batch size");
-            per_shard[idx] = Some(outs);
+            debug_assert!(
+                parts.iter().all(|(_, outs)| outs.len() == b),
+                "shard {idx} answered a different batch size"
+            );
+            per_shard[idx] = Some(parts);
             workspace[idx] = ws_stats;
         }
-        let per_shard: Vec<Vec<SolveOutput>> =
+        let per_shard: Vec<Vec<SolvePart>> =
             per_shard.into_iter().map(|o| o.expect("every shard replied")).collect();
-        let shard_iterations: Vec<usize> =
-            per_shard.iter().map(|outs| outs.iter().map(|o| o.iterations).sum()).collect();
-        let mut columns: Vec<std::vec::IntoIter<SolveOutput>> =
-            per_shard.into_iter().map(|v| v.into_iter()).collect();
+        let shard_iterations: Vec<usize> = per_shard
+            .iter()
+            .map(|parts| {
+                parts.iter().map(|(_, outs)| outs.iter().map(|o| o.iterations).sum::<usize>()).sum()
+            })
+            .collect();
+        // One column of outputs per sub-segment part, consumed query by
+        // query; `merge_shards` asserts the parts tile `0..total_docs`
+        // exactly, so a worker/view mismatch is caught, not smeared.
+        let mut columns: Vec<(usize, std::vec::IntoIter<SolveOutput>)> = per_shard
+            .into_iter()
+            .flatten()
+            .map(|(start, outs)| (start, outs.into_iter()))
+            .collect();
         let outputs = (0..b)
             .map(|_| {
                 let parts: Vec<(usize, SolveOutput)> = columns
                     .iter_mut()
-                    .zip(&self.workers)
-                    .map(|(it, w)| (w.col_start, it.next().expect("one output per query")))
+                    .map(|(start, it)| (*start, it.next().expect("one output per query")))
                     .collect();
                 SolveOutput::merge_shards(self.total_docs, &parts)
             })
@@ -371,6 +467,20 @@ impl ShardSet {
         prep: &Arc<Prepared>,
         k: usize,
     ) -> (PrunedTopK, Vec<WorkspaceStats>) {
+        self.retrieve_topk_masked(query, prep, k, None)
+    }
+
+    /// [`ShardSet::retrieve_topk`] under a global admission mask:
+    /// `allowed[j] == false` removes global document `j` from every
+    /// shard-local candidate set (deleted documents, out-of-window
+    /// timestamps). `None` is the unmasked fast path.
+    pub fn retrieve_topk_masked(
+        &self,
+        query: &SparseVec,
+        prep: &Arc<Prepared>,
+        k: usize,
+        allowed: Option<Arc<Vec<bool>>>,
+    ) -> (PrunedTopK, Vec<WorkspaceStats>) {
         let s = self.workers.len();
         let (reply_tx, reply_rx) = mpsc::channel();
         for (idx, w) in self.workers.iter().enumerate() {
@@ -381,26 +491,125 @@ impl ShardSet {
                     query: query.clone(),
                     prep: Arc::clone(prep),
                     k,
+                    allowed: allowed.clone(),
                     reply: reply_tx.clone(),
                     shard: idx,
                 })
                 .expect("shard worker alive");
         }
         drop(reply_tx);
-        let mut per_shard: Vec<Option<PrunedTopK>> = (0..s).map(|_| None).collect();
+        let mut per_shard: Vec<Option<Vec<(usize, PrunedTopK)>>> = (0..s).map(|_| None).collect();
         let mut workspace = vec![WorkspaceStats::default(); s];
         for _ in 0..s {
-            let (idx, out, ws_stats) =
+            let (idx, parts, ws_stats) =
                 reply_rx.recv().expect("a shard worker died mid-retrieval");
-            per_shard[idx] = Some(out);
+            per_shard[idx] = Some(parts);
             workspace[idx] = ws_stats;
         }
         let parts: Vec<(usize, PrunedTopK)> = per_shard
             .into_iter()
-            .zip(&self.workers)
-            .map(|(out, w)| (w.col_start, out.expect("every shard replied")))
+            .flat_map(|p| p.expect("every shard replied"))
             .collect();
         (merge_topk(&parts, k), workspace)
+    }
+
+    /// Bring the workers up to date with a live store's `view`. Epoch
+    /// unchanged ⇒ no-op. An **append-only** bump (same tombstone count,
+    /// the previously-synced segments an identical prefix of the view's)
+    /// ships each new delta segment whole to the worker with the least
+    /// total nnz — per-shard delta segments, no resharding cost. Any
+    /// other bump (delete's copy-on-write segment swap, compaction's
+    /// base fold) repartitions all columns into `S` contiguous
+    /// nnz-balanced ranges and resets every worker.
+    ///
+    /// Callers serialize `sync` with `solve_batch`/`retrieve_topk`
+    /// (&mut self here, dispatcher-thread usage in practice), so a batch
+    /// pinned to view `E` is fully answered before the workers move to
+    /// `E+1` — the epoch-pinning contract.
+    pub fn sync(&mut self, view: &EpochView) {
+        if self.synced.as_ref().is_some_and(|s| s.epoch == view.epoch) {
+            return;
+        }
+        let identity: Vec<(usize, usize)> = view
+            .segments
+            .iter()
+            .map(|seg| (seg.start, Arc::as_ptr(&seg.c) as *const u8 as usize))
+            .collect();
+        let append_only = match &self.synced {
+            Some(s) => {
+                s.deleted == view.deleted.len()
+                    && view.segments.len() >= s.segments.len()
+                    && identity[..s.segments.len()] == s.segments[..]
+            }
+            // Never synced: the constructor's split mirrors the base
+            // segment of an epoch-0 view exactly, so there is nothing to
+            // ship yet. Any other first view (snapshot restore, prior
+            // mutations) needs the full repartition below.
+            None => view.epoch == 0,
+        };
+        if append_only {
+            let start_at = self.synced.as_ref().map_or(1, |s| s.segments.len());
+            for seg in &view.segments[start_at..] {
+                let w = (0..self.workers.len())
+                    .min_by_key(|&i| self.assigned[i].iter().map(|m| m.nnz).sum::<usize>())
+                    .expect("at least one worker");
+                self.workers[w]
+                    .tx
+                    .as_ref()
+                    .expect("shard worker running")
+                    .send(ShardJob::AddSegment { c: Arc::clone(&seg.c), start: seg.start })
+                    .expect("shard worker alive");
+                self.assigned[w].push(SubMeta {
+                    start: seg.start,
+                    len: seg.num_docs(),
+                    nnz: seg.c.nnz(),
+                });
+            }
+        } else {
+            let n = view.num_docs();
+            let mut prefix = vec![0usize; n + 1];
+            for seg in &view.segments {
+                for &j in seg.c.col_idx() {
+                    prefix[seg.start + j as usize + 1] += 1;
+                }
+            }
+            for j in 0..n {
+                prefix[j + 1] += prefix[j];
+            }
+            let ranges = nnz_balanced_ranges(&prefix, self.workers.len());
+            for (w, r) in ranges.into_iter().enumerate() {
+                let mut subs: Vec<(Arc<Csr>, usize)> = Vec::new();
+                let mut metas: Vec<SubMeta> = Vec::new();
+                for seg in &view.segments {
+                    let seg_r = seg.range();
+                    let lo = seg_r.start.max(r.start);
+                    let hi = seg_r.end.min(r.end);
+                    if lo >= hi {
+                        continue;
+                    }
+                    // A segment falling wholly inside one range ships by
+                    // Arc clone; a straddling segment is sliced at the
+                    // range boundary.
+                    let (c, start) = if lo == seg_r.start && hi == seg_r.end {
+                        (Arc::clone(&seg.c), seg.start)
+                    } else {
+                        (Arc::new(seg.c.slice_columns(lo - seg.start..hi - seg.start)), lo)
+                    };
+                    metas.push(SubMeta { start, len: hi - lo, nnz: c.nnz() });
+                    subs.push((c, start));
+                }
+                self.workers[w]
+                    .tx
+                    .as_ref()
+                    .expect("shard worker running")
+                    .send(ShardJob::Reset { subs })
+                    .expect("shard worker alive");
+                self.assigned[w] = metas;
+            }
+        }
+        self.total_docs = view.num_docs();
+        self.synced =
+            Some(SyncedView { epoch: view.epoch, segments: identity, deleted: view.deleted.len() });
     }
 }
 
@@ -558,6 +767,115 @@ mod tests {
         let (merged, _) = set.retrieve_topk(q, &prep, 4);
         assert_eq!(merged.top.len(), 4);
         assert_eq!(merged.stats.total_docs, n, "only the populated shard contributes docs");
+    }
+
+    fn delta(vocab: usize, docs: usize, seed: u64) -> Csr {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let mut coo = crate::sparse::Coo::new(vocab, docs);
+        for j in 0..docs {
+            for _ in 0..3 {
+                coo.push(rng.below(vocab), j, rng.next_f64() + 0.1);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn sync_ships_appended_segments_and_matches_the_monolithic_solve() {
+        // Append-only epoch bumps ship whole delta segments to workers;
+        // with 1-thread pools and a zero tolerance the sharded solve over
+        // base + deltas must be bitwise equal to one monolithic solve over
+        // the rebuilt matrix, for every shard count.
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let config =
+            SinkhornConfig { tolerance: 0.0, max_iter: 12, ..SinkhornConfig::default() };
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(config);
+        let preps: Vec<Arc<Prepared>> = corpus
+            .queries
+            .iter()
+            .map(|q| Arc::new(solver.prepare(&store.embeddings, q, &pool)))
+            .collect();
+        let refs: Vec<&Prepared> = preps.iter().map(|p| p.as_ref()).collect();
+        for s in [1usize, 2, 3] {
+            let live = crate::coordinator::LiveDocStore::new(Arc::clone(&store));
+            let mut set =
+                ShardSet::start(ShardedDocStore::split(Arc::clone(&store), s), config, 1);
+            set.sync(&live.view());
+            live.append(delta(store.vocab_size(), 7, 1000 + s as u64), vec![10; 7]);
+            live.append(delta(store.vocab_size(), 5, 2000 + s as u64), vec![20; 5]);
+            let view = live.view();
+            set.sync(&view);
+            let merged = set.solve_batch(&preps);
+            let mono = solver.solve_batch_in(
+                &mut SolveWorkspace::new(),
+                &refs,
+                &view.rebuild_monolithic(),
+                &pool,
+            );
+            assert_eq!(merged.outputs.len(), mono.len());
+            for (a, b) in merged.outputs.iter().zip(&mono) {
+                assert_eq!(a.wmd, b.wmd, "s={s}");
+                assert_eq!(a.iterations, b.iterations, "s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sync_rebalances_after_delete_and_the_mask_hides_the_document() {
+        // A delete swaps a segment copy-on-write, which is not an
+        // append-only bump: sync must repartition (the Reset path) and the
+        // emptied column must answer +inf while the admission mask keeps
+        // the document out of top-k.
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let config =
+            SinkhornConfig { tolerance: 0.0, max_iter: 12, ..SinkhornConfig::default() };
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(config);
+        let q = corpus.query(0);
+        let prep = Arc::new(solver.prepare(&store.embeddings, q, &pool));
+        let live = crate::coordinator::LiveDocStore::new(Arc::clone(&store));
+        live.append(delta(store.vocab_size(), 6, 77), vec![0; 6]);
+        let victim = 3usize;
+        live.delete(victim).unwrap();
+        let view = live.view();
+        let mut set = ShardSet::start(ShardedDocStore::split(Arc::clone(&store), 2), config, 1);
+        set.sync(&view);
+        let merged = set.solve_batch(&[Arc::clone(&prep)]);
+        assert_eq!(merged.outputs.len(), 1);
+        assert_eq!(merged.outputs[0].wmd.len(), view.num_docs());
+        assert!(
+            merged.outputs[0].wmd[victim].is_infinite(),
+            "deleted document must answer +inf"
+        );
+        let mask = view.allowed_mask(None).map(Arc::new);
+        assert!(mask.is_some(), "a deletion forces a real mask");
+        let (topk, ws) = set.retrieve_topk_masked(q, &prep, view.num_docs(), mask);
+        assert_eq!(ws.len(), 2);
+        assert!(topk.top.iter().all(|&(j, _)| j != victim), "victim must not be retrievable");
+        assert_eq!(topk.stats.total_docs, view.num_docs());
+    }
+
+    #[test]
+    fn sync_is_idempotent_at_a_fixed_epoch() {
+        let corpus = corpus();
+        let store = DocStore::from_synthetic(&corpus).into_arc();
+        let config = SinkhornConfig::default();
+        let live = crate::coordinator::LiveDocStore::new(Arc::clone(&store));
+        live.append(delta(store.vocab_size(), 4, 9), vec![0; 4]);
+        let view = live.view();
+        let mut set = ShardSet::start(ShardedDocStore::split(Arc::clone(&store), 2), config, 1);
+        set.sync(&view);
+        let before: Vec<usize> = set.assigned.iter().map(|a| a.len()).collect();
+        set.sync(&view);
+        set.sync(&live.view());
+        assert_eq!(
+            before,
+            set.assigned.iter().map(|a| a.len()).collect::<Vec<_>>(),
+            "re-syncing an unchanged epoch must not move segments"
+        );
     }
 
     #[test]

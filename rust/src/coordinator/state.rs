@@ -153,24 +153,37 @@ impl DocStore {
 }
 
 /// Content key of a prepared query: the full histogram plus the λ the
-/// factors were built with. Two requests share an entry iff every word,
-/// every mass bit and λ agree — float bits, not float equality, so NaN or
-/// −0.0 oddities can never alias distinct factor sets.
+/// factors were built with, plus the store epoch the entry was admitted
+/// under. Two requests share an entry iff every word, every mass bit and
+/// λ agree — float bits, not float equality, so NaN or −0.0 oddities can
+/// never alias distinct factor sets. The epoch rides along for live
+/// corpora: a mutation bumps it, so a post-append query can never be
+/// served an entry admitted before the append (the factors themselves
+/// depend only on embeddings + query, but staleness must be observable
+/// and testable at the cache boundary).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PreparedKey {
     dim: usize,
     idx: Vec<u32>,
     val_bits: Vec<u64>,
     lambda_bits: u64,
+    epoch: u64,
 }
 
 impl PreparedKey {
+    /// Key for a static store (epoch 0 forever).
     pub fn new(query: &SparseVec, lambda: Real) -> Self {
+        Self::with_epoch(query, lambda, 0)
+    }
+
+    /// Key pinned to a live store epoch.
+    pub fn with_epoch(query: &SparseVec, lambda: Real, epoch: u64) -> Self {
         Self {
             dim: query.dim,
             idx: query.idx.clone(),
             val_bits: query.val.iter().map(|v| v.to_bits()).collect(),
             lambda_bits: lambda.to_bits(),
+            epoch,
         }
     }
 
@@ -187,6 +200,7 @@ impl PreparedKey {
         };
         eat(self.dim as u64);
         eat(self.lambda_bits);
+        eat(self.epoch);
         eat(self.idx.len() as u64);
         for &i in &self.idx {
             eat(i as u64);
@@ -468,5 +482,20 @@ mod tests {
     fn fingerprint_is_content_stable() {
         assert_eq!(key(&[(5, 2), (9, 1)], 10.0).fingerprint(), key(&[(5, 2), (9, 1)], 10.0).fingerprint());
         assert_ne!(key(&[(5, 2)], 10.0).fingerprint(), key(&[(5, 3)], 10.0).fingerprint());
+    }
+
+    #[test]
+    fn epoch_partitions_the_key_space() {
+        // Same query, same λ, different store epoch: distinct keys and
+        // (overwhelmingly) distinct fingerprints — a live-store mutation
+        // must never serve factors cached under an older epoch.
+        let q = SparseVec::from_counts(100, &[(5, 2), (9, 1)]);
+        let zero = PreparedKey::new(&q, 10.0);
+        let same = PreparedKey::with_epoch(&q, 10.0, 0);
+        let later = PreparedKey::with_epoch(&q, 10.0, 3);
+        assert_eq!(zero, same, "new() is the epoch-0 key");
+        assert_eq!(zero.fingerprint(), same.fingerprint());
+        assert_ne!(zero, later);
+        assert_ne!(zero.fingerprint(), later.fingerprint());
     }
 }

@@ -3,7 +3,7 @@
 //! target matrix, queries and topic metadata. No external serialization
 //! crates exist offline; the format is versioned and length-prefixed.
 //!
-//! Two versions coexist:
+//! Three versions coexist:
 //!
 //! * **v1** — the synthetic-corpus snapshot (no word strings, redundant
 //!   per-document histograms). Still written by `gen-corpus` and still
@@ -13,6 +13,12 @@
 //!   the vocabulary's **word strings** (so raw-text queries can be
 //!   histogrammed against a loaded snapshot) and drops the per-document
 //!   histogram list (the documents are exactly the columns of `c`).
+//! * **v3** — a **live** corpus snapshot (`ingest --append`): the exact
+//!   v2 body (with `c` the concatenation of every segment, deleted
+//!   columns already empty) followed by a [`LiveMeta`] trailer — segment
+//!   starts, per-document ingest timestamps and tombstones — so a
+//!   [`crate::coordinator::LiveDocStore`] can be restored segment for
+//!   segment. v1/v2 files keep loading byte-identically.
 
 use super::generator::SyntheticCorpus;
 use super::histogram::SparseVec;
@@ -26,6 +32,7 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"WMDC";
 const VERSION: u32 = 1;
 const VERSION_V2: u32 = 2;
+const VERSION_V3: u32 = 3;
 
 /// Cap on *pre*-allocation from an untrusted length prefix (elements, so
 /// ≤ 8 MiB up front for f64/u64 payloads). A truncated or corrupted file
@@ -78,6 +85,25 @@ fn read_u32s(r: &mut impl Read) -> io::Result<Vec<u32>> {
     for _ in 0..n {
         r.read_exact(&mut buf)?;
         out.push(u32::from_le_bytes(buf));
+    }
+    Ok(out)
+}
+
+fn write_i64s(w: &mut impl Write, xs: &[i64]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_i64s(r: &mut impl Read) -> io::Result<Vec<i64>> {
+    let n = read_u64(r)? as usize;
+    let mut out = Vec::with_capacity(n.min(IO_PREALLOC_CAP));
+    let mut buf = [0u8; 8];
+    for _ in 0..n {
+        r.read_exact(&mut buf)?;
+        out.push(i64::from_le_bytes(buf));
     }
     Ok(out)
 }
@@ -292,17 +318,88 @@ pub fn save_corpus_v2(path: &Path, corpus: &Corpus) -> io::Result<()> {
     let mut w = io::BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&VERSION_V2.to_le_bytes())?;
-    write_strings(&mut w, corpus.vocab.words())?;
-    write_dense(&mut w, &corpus.embeddings)?;
-    write_u32s(&mut w, &corpus.word_topic)?;
-    write_csr(&mut w, &corpus.c)?;
-    write_u32s(&mut w, &corpus.doc_topics)?;
-    write_u64(&mut w, corpus.queries.len() as u64)?;
-    for q in &corpus.queries {
-        write_sparsevec(&mut w, q)?;
-    }
-    write_u32s(&mut w, &corpus.query_topics)?;
+    write_v2_body(&mut w, corpus)?;
     w.flush()
+}
+
+fn write_v2_body(w: &mut impl Write, corpus: &Corpus) -> io::Result<()> {
+    write_strings(w, corpus.vocab.words())?;
+    write_dense(w, &corpus.embeddings)?;
+    write_u32s(w, &corpus.word_topic)?;
+    write_csr(w, &corpus.c)?;
+    write_u32s(w, &corpus.doc_topics)?;
+    write_u64(w, corpus.queries.len() as u64)?;
+    for q in &corpus.queries {
+        write_sparsevec(w, q)?;
+    }
+    write_u32s(w, &corpus.query_topics)
+}
+
+/// The live-store trailer of a WMDC **v3** snapshot: the segment layout,
+/// per-document ingest timestamps and tombstones of a mutated corpus.
+/// The document payload itself travels in the v2 body (`c` is the
+/// concatenation of every segment, deleted columns already empty), so a
+/// v3 file degrades gracefully: [`load_corpus_any`] reads the flattened
+/// corpus and drops the trailer, while [`load_corpus_live`] hands it to
+/// [`crate::coordinator::LiveDocStore::from_snapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LiveMeta {
+    /// Start column of each segment: begins at 0, strictly increasing
+    /// (`[0]` for a never-mutated corpus).
+    pub segment_starts: Vec<usize>,
+    /// Ingest timestamp per document (caller-defined clock; static docs
+    /// conventionally carry 0).
+    pub timestamps: Vec<i64>,
+    /// Strictly increasing global ids of tombstoned documents.
+    pub deleted: Vec<usize>,
+}
+
+/// Serialize a [`Corpus`] plus its live-store state to `path` in the v3
+/// format (the exact v2 body followed by the [`LiveMeta`] trailer).
+pub fn save_corpus_v3(path: &Path, corpus: &Corpus, live: &LiveMeta) -> io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION_V3.to_le_bytes())?;
+    write_v2_body(&mut w, corpus)?;
+    write_usizes(&mut w, &live.segment_starts)?;
+    write_i64s(&mut w, &live.timestamps)?;
+    write_usizes(&mut w, &live.deleted)?;
+    w.flush()
+}
+
+fn read_v3_trailer(r: &mut impl Read, n_docs: usize) -> io::Result<LiveMeta> {
+    let segment_starts = read_usizes(r)?;
+    let timestamps = read_i64s(r)?;
+    let deleted = read_usizes(r)?;
+    // Same validation posture as every other section: a corrupted
+    // trailer is InvalidData here, never a panic later inside
+    // `LiveDocStore::from_snapshot`.
+    if timestamps.len() != n_docs {
+        return Err(invalid("timestamp count does not match document count"));
+    }
+    if segment_starts.first() != Some(&0) {
+        return Err(invalid("segment starts must begin at 0"));
+    }
+    for w in segment_starts.windows(2) {
+        if w[0] >= w[1] {
+            return Err(invalid("segment starts must be strictly increasing"));
+        }
+    }
+    if segment_starts.last().copied().unwrap_or(0) > n_docs {
+        return Err(invalid("segment start past the end of the corpus"));
+    }
+    let mut prev: Option<usize> = None;
+    for &d in &deleted {
+        if d >= n_docs {
+            return Err(invalid("deleted document id out of range"));
+        }
+        if prev.is_some_and(|p| d <= p) {
+            return Err(invalid("deleted ids must be strictly increasing"));
+        }
+        prev = Some(d);
+    }
+    Ok(LiveMeta { segment_starts, timestamps, deleted })
 }
 
 fn invalid(msg: &str) -> io::Error {
@@ -374,9 +471,29 @@ pub fn load_corpus_any(path: &Path) -> io::Result<Corpus> {
 /// byte stream. This is the entry point the structured fuzzer
 /// (`testing::fuzz`) drives with corrupted in-memory snapshots.
 pub fn read_corpus_any(r: &mut impl Read) -> io::Result<Corpus> {
+    read_corpus_live(r).map(|(corpus, _)| corpus)
+}
+
+/// Load a WMDC snapshot together with its live-store state: `Some` for a
+/// v3 file, `None` for v1/v2 (a never-mutated corpus — the caller seeds
+/// timestamps and a single segment itself). This is the `ingest --append`
+/// and streaming serve-demo entry point.
+pub fn load_corpus_live(path: &Path) -> io::Result<(Corpus, Option<LiveMeta>)> {
+    let file = std::fs::File::open(path)?;
+    let mut r = io::BufReader::new(file);
+    read_corpus_live(&mut r)
+}
+
+/// Reader-based form of [`load_corpus_live`].
+pub fn read_corpus_live(r: &mut impl Read) -> io::Result<(Corpus, Option<LiveMeta>)> {
     match read_header(r)? {
-        VERSION => Ok(read_v1_body(r)?.into_corpus()),
-        VERSION_V2 => read_v2_body(r),
+        VERSION => Ok((read_v1_body(r)?.into_corpus(), None)),
+        VERSION_V2 => Ok((read_v2_body(r)?, None)),
+        VERSION_V3 => {
+            let corpus = read_v2_body(r)?;
+            let meta = read_v3_trailer(r, corpus.c.ncols())?;
+            Ok((corpus, Some(meta)))
+        }
         v => Err(io::Error::new(
             io::ErrorKind::InvalidData,
             format!("unsupported WMDC version {v}"),
@@ -656,6 +773,91 @@ mod tests {
         save_corpus_v2(&path, &corpus).unwrap();
         let err = load_corpus_any(&path).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tiny_v3_corpus() -> (Corpus, LiveMeta) {
+        let tiny = crate::corpus::TinyCorpus::load();
+        let c = crate::corpus::docs_to_csr(tiny.vocab.len(), &tiny.docs);
+        let n = c.ncols();
+        let corpus = Corpus {
+            embeddings: tiny.embeddings.clone(),
+            vocab: tiny.vocab.clone(),
+            word_topic: vec![],
+            c,
+            doc_topics: vec![],
+            queries: vec![],
+            query_topics: vec![],
+        };
+        let meta = LiveMeta {
+            segment_starts: vec![0, n - 1],
+            timestamps: (0..n as i64).map(|t| t * 100 - 50).collect(),
+            deleted: vec![0],
+        };
+        (corpus, meta)
+    }
+
+    #[test]
+    fn v3_roundtrips_the_live_trailer() {
+        let (corpus, meta) = tiny_v3_corpus();
+        let dir = std::env::temp_dir().join(format!("wmdc-v3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("live.wmdc");
+        save_corpus_v3(&path, &corpus, &meta).unwrap();
+        let (back, live) = load_corpus_live(&path).unwrap();
+        assert_eq!(back.c, corpus.c);
+        assert_eq!(back.embeddings, corpus.embeddings);
+        assert_eq!(live, Some(meta.clone()));
+        // The generic loader reads the same file as a flat corpus.
+        let flat = load_corpus_any(&path).unwrap();
+        assert_eq!(flat.c, corpus.c);
+        // v1/v2 files come back with no trailer through the live loader.
+        let v2path = dir.join("static.wmdc");
+        save_corpus_v2(&v2path, &corpus).unwrap();
+        let (_, live) = load_corpus_live(&v2path).unwrap();
+        assert!(live.is_none());
+        // Truncations anywhere — including inside the trailer — error.
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [9, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let p = dir.join(format!("cut-{cut}.wmdc"));
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_corpus_live(&p).is_err(), "prefix of {cut} bytes must not load");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_corrupted_trailer_is_invalid_data() {
+        let (corpus, good) = tiny_v3_corpus();
+        let n = corpus.c.ncols();
+        let dir = std::env::temp_dir().join(format!("wmdc-v3bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases: Vec<(&str, LiveMeta)> = vec![
+            (
+                "timestamp count mismatch",
+                LiveMeta { timestamps: vec![0; n - 1], ..good.clone() },
+            ),
+            (
+                "starts not beginning at 0",
+                LiveMeta { segment_starts: vec![1, 2], ..good.clone() },
+            ),
+            (
+                "starts not increasing",
+                LiveMeta { segment_starts: vec![0, 3, 3], ..good.clone() },
+            ),
+            (
+                "start past the end",
+                LiveMeta { segment_starts: vec![0, n + 1], ..good.clone() },
+            ),
+            ("deleted id out of range", LiveMeta { deleted: vec![n], ..good.clone() }),
+            ("deleted ids unsorted", LiveMeta { deleted: vec![2, 1], ..good.clone() }),
+        ];
+        for (what, meta) in cases {
+            let path = dir.join("bad.wmdc");
+            save_corpus_v3(&path, &corpus, &meta).unwrap();
+            let err = load_corpus_live(&path).expect_err(&format!("{what} must not load"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{what}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -131,6 +131,9 @@ pub struct IngestBuilder {
     cols: Vec<u32>,
     vals: Vec<crate::Real>,
     stats: IngestStats,
+    /// Documents already handed out by [`IngestBuilder::drain_delta`];
+    /// pending triplets all belong to columns `>= drained_docs`.
+    drained_docs: usize,
 }
 
 impl IngestBuilder {
@@ -147,6 +150,7 @@ impl IngestBuilder {
             cols: Vec::new(),
             vals: Vec::new(),
             stats: IngestStats::default(),
+            drained_docs: 0,
         }
     }
 
@@ -189,9 +193,47 @@ impl IngestBuilder {
         self.stats
     }
 
+    /// The vocabulary the builder histograms against.
+    pub fn vocab(&self) -> &Vocabulary {
+        &self.vocab
+    }
+
+    /// Documents pushed since the last [`IngestBuilder::drain_delta`].
+    pub fn pending_docs(&self) -> usize {
+        self.stats.docs - self.drained_docs
+    }
+
+    /// Drain the documents pushed since the last drain into an immutable
+    /// **delta segment**: a `V × pending` CSR whose columns are the new
+    /// documents in push order. The vocabulary and embeddings stay in the
+    /// builder, so ingestion continues — this is the live-corpus append
+    /// path, where each drained CSR becomes one epoch-versioned segment.
+    pub fn drain_delta(&mut self) -> Csr {
+        let dim = self.vocab.len();
+        let start = self.drained_docs;
+        let ndocs = self.stats.docs - start;
+        assert!(ndocs <= u32::MAX as usize, "too many documents for u32 column ids");
+        let mut coo = Coo::new(dim, ndocs);
+        coo.rows = std::mem::take(&mut self.rows);
+        coo.cols = std::mem::take(&mut self.cols);
+        // Pending triplets carry global document ids; rebase to the
+        // segment-local column space.
+        for c in &mut coo.cols {
+            *c -= start as u32;
+        }
+        coo.values = std::mem::take(&mut self.vals);
+        self.drained_docs = self.stats.docs;
+        Csr::from_coo(coo)
+    }
+
     /// Assemble the final [`Corpus`] (no queries — they arrive later as
     /// raw text against the persisted vocabulary).
     pub fn finish(self) -> Corpus {
+        assert_eq!(
+            self.drained_docs, 0,
+            "finish() builds the full corpus; after drain_delta() the \
+             drained segments own those documents"
+        );
         let dim = self.vocab.len();
         let ndocs = self.stats.docs;
         assert!(ndocs <= u32::MAX as usize, "too many documents for u32 column ids");
@@ -327,6 +369,35 @@ mod tests {
         let sums = corpus.c.column_sums();
         assert!((sums[0] - 1.0).abs() < 1e-12);
         assert_eq!(&sums[1..], &[0.0, 0.0, 0.0], "empty columns carry no mass");
+    }
+
+    #[test]
+    fn drain_delta_segments_concat_to_the_monolithic_csr() {
+        let (vocab, emb) = tiny_vocab();
+        let texts = ["obama press press", "president media", "", "media obama", "press"];
+        // Monolithic reference.
+        let mut whole = IngestBuilder::new(vocab.clone(), emb.clone());
+        for t in texts {
+            whole.push_text(t);
+        }
+        let reference = whole.finish().c;
+        // Drained in three uneven batches (including an empty drain).
+        let mut b = IngestBuilder::new(vocab, emb);
+        b.push_text(texts[0]);
+        b.push_text(texts[1]);
+        let s0 = b.drain_delta();
+        assert_eq!(b.pending_docs(), 0);
+        let empty = b.drain_delta();
+        assert_eq!(empty.ncols(), 0);
+        for t in &texts[2..] {
+            b.push_text(t);
+        }
+        assert_eq!(b.pending_docs(), 3);
+        let s1 = b.drain_delta();
+        assert_eq!(s0.ncols(), 2);
+        assert_eq!(s1.ncols(), 3);
+        assert_eq!(b.stats().docs, 5, "stats keep counting across drains");
+        assert_eq!(Csr::concat_columns(&[&s0, &s1]), reference);
     }
 
     #[test]

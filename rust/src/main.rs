@@ -13,15 +13,25 @@
 use sinkhorn_wmd::cli::Args;
 use sinkhorn_wmd::config::RunConfig;
 use sinkhorn_wmd::coordinator::{
-    Backend, DocStore, QueryRequest, ServiceConfig, WmdService,
+    Backend, DocStore, LiveDocStore, QueryRequest, ServiceConfig, WmdService,
 };
-use sinkhorn_wmd::corpus::{Corpus, DocFormat, SparseVec, TinyCorpus};
+use sinkhorn_wmd::corpus::{Corpus, DocFormat, DocReader, IngestBuilder, SparseVec, TinyCorpus};
 use sinkhorn_wmd::parallel::Pool;
 use sinkhorn_wmd::sinkhorn::{SinkhornConfig, SparseSolver};
 use sinkhorn_wmd::bench::{SysInfo, Table};
 use sinkhorn_wmd::prune::{evaluate_recall, queries_from_docs, CascadeSpec};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Wall-clock seconds since the Unix epoch — the ingest timestamp the
+/// live-corpus paths stamp on appended documents.
+fn now_secs() -> i64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0)
+}
 
 const USAGE: &str = "\
 sinkhorn-wmd <subcommand> [options]
@@ -33,6 +43,11 @@ Subcommands:
                                build a v2 snapshot from real embeddings +
                                a document stream (one doc per line, or
                                JSONL {\"text\": ...})
+  ingest --append snapshot.wmdc --docs new.txt --out corpus.wmdc
+         [--jsonl] [--timestamp T]
+                               append a document stream to an existing
+                               snapshot as a new delta segment; writes a
+                               v3 (live) snapshot with per-doc timestamps
   query --text \"...\"           WMD against the tiny real corpus
   solve [--threads P] [--queries K] [--vocab N] [--docs N]
         [--corpus FILE] [--text \"...\"]
@@ -42,15 +57,21 @@ Subcommands:
                                (WCD -> LC-RWMD -> Sinkhorn) against the
                                exact top-k; writes a BENCH_prune.json row
   serve-demo [--threads P] [--shards S] [--requests K] [--prefer sparse|dense|pjrt]
-             [--corpus FILE] [--text \"...\"]
+             [--corpus FILE] [--text \"...\"] [--top-k K] [--window-secs S]
+             [--stream docs.txt] [--stream-batch B] [--compact-segments M]
+                               drive the batched query service; with
+                               --stream, documents are appended live while
+                               queries are answered (the tweet-firehose
+                               scenario); --window-secs restricts --top-k
+                               answers to recently ingested documents
   gen-config                   print a default run configuration
 
 Common options:
   --config FILE                load a RunConfig file (TOML subset)
-  --corpus FILE                load a WMDC snapshot (v1 or v2) instead of
-                               generating a synthetic corpus
+  --corpus FILE                load a WMDC snapshot (v1, v2 or v3) instead
+                               of generating a synthetic corpus
   --text \"...\"                 raw-text query, histogrammed against the
-                               snapshot's vocabulary (v2 snapshots only)
+                               snapshot's vocabulary (v2/v3 snapshots only)
 ";
 
 fn main() {
@@ -173,6 +194,9 @@ fn cmd_query(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_ingest(args: &Args) -> Result<(), String> {
+    if let Some(snapshot) = args.get("append") {
+        return cmd_ingest_append(args, snapshot);
+    }
     let vec_path = args.get("vec").ok_or("ingest requires --vec emb.vec")?;
     let docs_path = args.get("docs").ok_or("ingest requires --docs docs.txt")?;
     let out = args.get("out").ok_or("ingest requires --out corpus.wmdc")?;
@@ -203,6 +227,76 @@ fn cmd_ingest(args: &Args) -> Result<(), String> {
         stats.tokens_kept, stats.tokens_oov, stats.empty_docs
     );
     println!("saved v2 snapshot to {out}");
+    Ok(())
+}
+
+/// `ingest --append`: stream new documents through the delta path of an
+/// existing snapshot — histogrammed against the **persisted** vocabulary,
+/// drained as one delta segment, concatenated after the existing columns
+/// — and write the result as a v3 (live) snapshot. Existing documents
+/// round-trip bit for bit; the new ones carry `--timestamp` (default:
+/// now) for time-windowed retrieval.
+fn cmd_ingest_append(args: &Args, snapshot: &str) -> Result<(), String> {
+    let docs_path = args.get("docs").ok_or("ingest --append requires --docs docs.txt")?;
+    let out = args.get("out").ok_or("ingest --append requires --out corpus.wmdc")?;
+    let format = if args.flag("jsonl") {
+        DocFormat::Jsonl
+    } else {
+        DocFormat::infer(Path::new(docs_path))
+    };
+    let t0 = Instant::now();
+    let (corpus, meta) = sinkhorn_wmd::corpus::io::load_corpus_live(Path::new(snapshot))
+        .map_err(|e| format!("loading snapshot: {e}"))?;
+    if !corpus.has_words() {
+        return Err("--append needs a snapshot with word strings (v2/v3); a v1 synthetic \
+                    snapshot cannot histogram new text"
+            .into());
+    }
+    if !corpus.doc_topics.is_empty() {
+        return Err("--append does not support snapshots with per-document topic labels \
+                    (appended documents have none)"
+            .into());
+    }
+    let n = corpus.c.ncols();
+    let mut live = meta.unwrap_or_else(|| sinkhorn_wmd::corpus::io::LiveMeta {
+        segment_starts: vec![0],
+        timestamps: vec![0; n],
+        deleted: vec![],
+    });
+    let mut builder = IngestBuilder::new(corpus.vocab.clone(), corpus.embeddings.clone());
+    let reader = DocReader::open_as(Path::new(docs_path), format)
+        .map_err(|e| format!("opening documents: {e}"))?;
+    for doc in reader {
+        builder.push_text(&doc.map_err(|e| format!("reading documents: {e}"))?);
+    }
+    let stats = builder.stats();
+    let delta = builder.drain_delta();
+    let appended = delta.ncols();
+    let ts = args.get_or("timestamp", now_secs())?;
+    let corpus = if appended == 0 {
+        corpus
+    } else {
+        live.segment_starts.push(n);
+        live.timestamps.resize(n + appended, ts);
+        let c = sinkhorn_wmd::sparse::Csr::concat_columns(&[&corpus.c, &delta]);
+        Corpus { c, ..corpus }
+    };
+    sinkhorn_wmd::corpus::io::save_corpus_v3(Path::new(out), &corpus, &live)
+        .map_err(|e| format!("saving snapshot: {e}"))?;
+    println!(
+        "appended {appended} docs in {:.2}s ({format:?} mode): {} -> {} docs, {} segment(s), \
+         nnz(c)={}",
+        t0.elapsed().as_secs_f64(),
+        n,
+        corpus.c.ncols(),
+        live.segment_starts.len(),
+        corpus.c.nnz(),
+    );
+    println!(
+        "tokens: {} kept, {} out-of-vocabulary; {} empty document(s) (WMD = +inf columns)",
+        stats.tokens_kept, stats.tokens_oov, stats.empty_docs
+    );
+    println!("saved v3 snapshot to {out} (timestamp {ts})");
     Ok(())
 }
 
@@ -398,18 +492,28 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     // synthetic streams keep the old 20-request default.
     let default_requests = if args.get("text").is_some() { 1 } else { 20 };
     let requests = args.get_or("requests", default_requests)?;
+    let top_k: usize = args.get_or("top-k", 0)?;
+    let window_secs: i64 = args.get_or("window-secs", 0)?;
+    let stream = args.get("stream").map(String::from);
     let store = DocStore::from_corpus(&corpus).into_arc();
     let labels = store.labels.clone();
     let pjrt_dir = (prefer == Backend::DensePjrt)
         .then(|| std::path::PathBuf::from(&cfg.artifacts_dir));
-    let service = WmdService::start(
-        store,
+    // The service always runs over a live store (a static one is just a
+    // live store nobody mutates — epoch 0 keeps every legacy code path).
+    // Background compaction only makes sense when documents stream in.
+    let compact_default = if stream.is_some() { 4 } else { cfg.compact_segments };
+    let live = LiveDocStore::new(store).into_arc();
+    let service = WmdService::start_live(
+        Arc::clone(&live),
         ServiceConfig {
             threads,
             shards,
             sinkhorn: cfg.sinkhorn,
             prefer,
             cascade: cfg.prune.clone(),
+            compact_segments: args.get_or("compact-segments", compact_default)?,
+            compact_interval_ms: cfg.compact_interval_ms(),
             ..Default::default()
         },
         pjrt_dir,
@@ -417,10 +521,64 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
     if shards >= 2 {
         println!("sharded dispatch: {shards} target-set shards");
     }
+    // The firehose: a feeder thread histograms the streamed documents
+    // against the snapshot vocabulary and appends them in delta segments
+    // while the main thread keeps submitting queries.
+    let feeder = match &stream {
+        Some(path) => {
+            if !corpus.has_words() {
+                return Err("--stream needs a snapshot with word strings (v2/v3) to \
+                            histogram new documents"
+                    .into());
+            }
+            let format = if args.flag("jsonl") {
+                DocFormat::Jsonl
+            } else {
+                DocFormat::infer(Path::new(path))
+            };
+            let docs = DocReader::open_as(Path::new(path), format)
+                .and_then(|r| r.collect::<std::io::Result<Vec<String>>>())
+                .map_err(|e| format!("reading stream documents: {e}"))?;
+            let batch = args.get_or("stream-batch", 64usize)?.max(1);
+            let mut builder =
+                IngestBuilder::new(corpus.vocab.clone(), corpus.embeddings.clone());
+            let live = Arc::clone(&live);
+            println!("streaming {} documents in batches of {batch} while serving ...", docs.len());
+            Some(std::thread::spawn(move || {
+                let mut appended = 0usize;
+                for chunk in docs.chunks(batch) {
+                    for d in chunk {
+                        builder.push_text(d);
+                    }
+                    let delta = builder.drain_delta();
+                    let k = delta.ncols();
+                    live.append(delta, vec![now_secs(); k]);
+                    appended += k;
+                    // A trickle, not one bulk load: give query batches a
+                    // chance to interleave with (and pin epochs between)
+                    // the appends.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                appended
+            }))
+        }
+        None => None,
+    };
+    let make_request = |q: SparseVec| {
+        if top_k > 0 {
+            if window_secs > 0 {
+                QueryRequest::top_k_since(q, top_k, now_secs() - window_secs)
+            } else {
+                QueryRequest::top_k(q, top_k)
+            }
+        } else {
+            QueryRequest::new(q)
+        }
+    };
     println!("submitting {requests} requests ...");
     let t0 = Instant::now();
     let receivers: Vec<_> = (0..requests)
-        .map(|i| service.submit(QueryRequest::new(queries[i % queries.len()].clone())))
+        .map(|i| service.submit(make_request(queries[i % queries.len()].clone())))
         .collect();
     let mut ok = 0;
     let mut first_response = None;
@@ -440,18 +598,32 @@ fn cmd_serve_demo(args: &Args) -> Result<(), String> {
         wall.as_secs_f64(),
         requests as f64 / wall.as_secs_f64()
     );
+    if let Some(handle) = feeder {
+        let appended = handle.join().map_err(|_| "stream feeder panicked".to_string())?;
+        let s = live.stats();
+        println!(
+            "streamed {appended} documents; live store: epoch={} segments={} docs={} \
+             compactions={}",
+            s.epoch, s.segments, s.num_docs, s.compactions
+        );
+    }
     println!("metrics: {}", service.metrics().snapshot().report());
     // For a raw-text query, show the answer, not just throughput.
     if let (Some(text), Some(resp)) = (args.get("text"), first_response) {
-        let out = sinkhorn_wmd::sinkhorn::SolveOutput {
-            wmd: resp.wmd,
-            iterations: resp.iterations,
-            converged: true,
-            ..Default::default()
+        let ranked = if top_k > 0 {
+            resp.top
+        } else {
+            let out = sinkhorn_wmd::sinkhorn::SolveOutput {
+                wmd: resp.wmd,
+                iterations: resp.iterations,
+                converged: true,
+                ..Default::default()
+            };
+            out.top_k(5)
         };
         println!("\nquery: {text:?}");
         let mut t = Table::new(["rank", "doc", "wmd", "label"]);
-        for (rank, (j, d)) in out.top_k(5).into_iter().enumerate() {
+        for (rank, (j, d)) in ranked.into_iter().enumerate() {
             t.row([
                 (rank + 1).to_string(),
                 j.to_string(),

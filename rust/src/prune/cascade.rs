@@ -364,11 +364,46 @@ impl CascadeRetrieval {
         pool: &Pool,
         k: usize,
     ) -> PrunedTopK {
+        self.retrieve_prepared_masked_in(
+            ws,
+            embeddings,
+            query,
+            prep,
+            c,
+            doc_centroids,
+            pool,
+            k,
+            None,
+        )
+    }
+
+    /// [`CascadeRetrieval::retrieve_prepared_in`] with an optional
+    /// admission mask: when `allowed` is given (length `c.ncols()`),
+    /// documents with `allowed[j] == false` never enter the candidate
+    /// list — the live store's deleted documents and out-of-time-window
+    /// documents are bound at `+inf` in effect, exactly like empty
+    /// documents. `allowed == None` is bit-for-bit the legacy path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn retrieve_prepared_masked_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        embeddings: &Dense,
+        query: &SparseVec,
+        prep: &Prepared,
+        c: &Csr,
+        doc_centroids: &Dense,
+        pool: &Pool,
+        k: usize,
+        allowed: Option<&[bool]>,
+    ) -> PrunedTopK {
         let n = c.ncols();
         let k = k.min(n);
         let mut stats = PruneStats { total_docs: n, ..Default::default() };
         if k == 0 {
             return PrunedTopK { top: Vec::new(), stats };
+        }
+        if let Some(mask) = allowed {
+            assert_eq!(mask.len(), n, "admission mask must cover every document");
         }
 
         // The prune section moves out of the workspace for the duration of
@@ -379,7 +414,10 @@ impl CascadeRetrieval {
         ps.bound.clear();
         ps.bound.resize(n, 0.0);
         ps.order.clear();
-        ps.order.extend(0..n);
+        match allowed {
+            Some(mask) => ps.order.extend((0..n).filter(|&j| mask[j])),
+            None => ps.order.extend(0..n),
+        }
         let values = c.values();
 
         // Bound stages: score all survivors, re-rank by the accumulated
@@ -564,6 +602,62 @@ mod tests {
                 assert_eq!(st.candidates_out, 5, "stage {} cut below k", st.stage);
             }
         }
+    }
+
+    #[test]
+    fn admission_mask_excludes_documents_and_none_is_bitwise_legacy() {
+        use crate::corpus::SyntheticCorpus;
+        let corpus = SyntheticCorpus::builder()
+            .vocab_size(200)
+            .num_docs(30)
+            .embedding_dim(10)
+            .num_queries(1)
+            .query_words(4, 6)
+            .seed(79)
+            .build();
+        let pool = Pool::new(1);
+        let retrieval = CascadeRetrieval::new(SinkhornConfig::default(), CascadeSpec::default());
+        let cents = wcd::centroids(&corpus.embeddings, &corpus.c, &pool);
+        let solver = SparseSolver::new(SinkhornConfig::default());
+        let prep = solver.prepare(&corpus.embeddings, corpus.query(0), &pool);
+        let mut ws = SolveWorkspace::new();
+        let unmasked = retrieval.retrieve_prepared_in(
+            &mut ws, &corpus.embeddings, corpus.query(0), &prep, &corpus.c, &cents, &pool, 5,
+        );
+        // Mask out the unmasked winners: none of them may come back.
+        let mut allowed = vec![true; corpus.c.ncols()];
+        for &(j, _) in &unmasked.top {
+            allowed[j] = false;
+        }
+        let masked = retrieval.retrieve_prepared_masked_in(
+            &mut ws,
+            &corpus.embeddings,
+            corpus.query(0),
+            &prep,
+            &corpus.c,
+            &cents,
+            &pool,
+            5,
+            Some(&allowed),
+        );
+        assert_eq!(masked.top.len(), 5);
+        for (j, _) in &masked.top {
+            assert!(allowed[*j], "masked-out document {j} surfaced");
+        }
+        // An all-true mask is the identity.
+        let all = vec![true; corpus.c.ncols()];
+        let same = retrieval.retrieve_prepared_masked_in(
+            &mut ws,
+            &corpus.embeddings,
+            corpus.query(0),
+            &prep,
+            &corpus.c,
+            &cents,
+            &pool,
+            5,
+            Some(&all),
+        );
+        assert_eq!(same.top, unmasked.top);
     }
 
     #[test]

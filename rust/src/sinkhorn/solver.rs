@@ -756,6 +756,43 @@ impl SparseSolver {
         self.solve_batch_in(&mut SolveWorkspace::new(), preps, c, pool)
     }
 
+    /// Solve a batch against a **segmented** target set: `segments` are
+    /// `(col_start, slice)` pairs that must tile `0..total_docs` (the
+    /// live store's base + delta layout). Each segment is an independent
+    /// Sinkhorn problem — target columns never interact — so solving the
+    /// segments separately and merging by column offset
+    /// ([`SolveOutput::merge_shards`]) is bitwise identical to solving the
+    /// equivalent monolithic CSR; a single full-range segment takes the
+    /// monolithic path outright (same code path, same bits).
+    pub fn solve_segments_in(
+        &self,
+        ws: &mut SolveWorkspace,
+        preps: &[&Prepared],
+        segments: &[(usize, &Csr)],
+        total_docs: usize,
+        pool: &Pool,
+    ) -> Vec<SolveOutput> {
+        if let [(0, c)] = segments {
+            debug_assert_eq!(c.ncols(), total_docs);
+            return self.solve_batch_in(ws, preps, c, pool);
+        }
+        let b = preps.len();
+        let mut parts: Vec<Vec<(usize, SolveOutput)>> = (0..b).map(|_| Vec::new()).collect();
+        for &(start, c) in segments {
+            if c.ncols() == 0 {
+                continue;
+            }
+            let outs = self.solve_batch_in(ws, preps, c, pool);
+            for (q, out) in outs.into_iter().enumerate() {
+                parts[q].push((start, out));
+            }
+        }
+        parts
+            .into_iter()
+            .map(|p| SolveOutput::merge_shards(total_docs, &p))
+            .collect()
+    }
+
     /// [`SparseSolver::solve_batch`] with all per-batch scratch — one
     /// iterate-plane lane per query, shared masks/partitions/pattern,
     /// kernel scratch — borrowed from `ws`. Once warm, nothing
@@ -1256,6 +1293,43 @@ mod tests {
         #[cfg(feature = "mixed-precision")]
         ks.push(IterateKernel::Fused { precision: Precision::Mixed });
         ks
+    }
+
+    #[test]
+    fn solve_segments_matches_monolithic_bitwise() {
+        let corpus = toy();
+        let pool = Pool::new(1);
+        let solver = SparseSolver::new(SinkhornConfig {
+            tolerance: 0.0,
+            max_iter: 12,
+            ..Default::default()
+        });
+        let preps: Vec<Prepared> = corpus
+            .queries
+            .iter()
+            .map(|q| solver.prepare(&corpus.embeddings, q, &pool))
+            .collect();
+        let refs: Vec<&Prepared> = preps.iter().collect();
+        let mono = solver.solve_batch_in(&mut SolveWorkspace::new(), &refs, &corpus.c, &pool);
+        let n = corpus.c.ncols();
+        for cuts in [vec![0, n], vec![0, 13, n], vec![0, 1, 13, 14, n]] {
+            let slices: Vec<(usize, Csr)> = cuts
+                .windows(2)
+                .map(|w| (w[0], corpus.c.slice_columns(w[0]..w[1])))
+                .collect();
+            let segs: Vec<(usize, &Csr)> = slices.iter().map(|(s, c)| (*s, c)).collect();
+            let seg_outs = solver.solve_segments_in(
+                &mut SolveWorkspace::new(),
+                &refs,
+                &segs,
+                n,
+                &pool,
+            );
+            for (q, (a, b)) in mono.iter().zip(&seg_outs).enumerate() {
+                assert_eq!(a.wmd, b.wmd, "query {q}, cuts {cuts:?}");
+                assert_eq!(a.iterations, b.iterations, "query {q}, cuts {cuts:?}");
+            }
+        }
     }
 
     #[test]

@@ -287,6 +287,68 @@ impl Csr {
         Csr { nrows: self.nrows, ncols: range.len(), row_ptr, col_idx, values }
     }
 
+    /// Concatenate matrices column-wise (all must share `nrows`). The
+    /// inverse of slicing a partition: `concat_columns(&parts)` where the
+    /// parts are `slice_columns` of consecutive ranges reproduces the
+    /// original matrix entry-for-entry. This is the compaction primitive
+    /// for the live store — folding delta segments into the base CSR.
+    pub fn concat_columns(parts: &[&Csr]) -> Csr {
+        assert!(!parts.is_empty(), "concat_columns needs at least one part");
+        let nrows = parts[0].nrows;
+        let mut ncols = 0usize;
+        let mut nnz = 0usize;
+        for p in parts {
+            assert_eq!(p.nrows, nrows, "concat_columns: row-count mismatch");
+            ncols = ncols
+                .checked_add(p.ncols)
+                .expect("concat_columns: column count overflow");
+            nnz += p.values.len();
+        }
+        assert!(ncols <= u32::MAX as usize + 1, "concat_columns: too many columns for u32 ids");
+        let mut row_ptr = Vec::with_capacity(nrows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for i in 0..nrows {
+            let mut offset = 0u32;
+            for p in parts {
+                let (cols, vals) = p.row(i);
+                col_idx.extend(cols.iter().map(|&c| c + offset));
+                values.extend_from_slice(vals);
+                offset += p.ncols as u32;
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { nrows, ncols, row_ptr, col_idx, values }
+    }
+
+    /// Copy with the given columns emptied (all entries dropped; the
+    /// column itself remains, so ids are stable). A deleted document in
+    /// the live store becomes an empty column, which the solver already
+    /// maps to `WMD = +inf` — the same semantics as an empty ingest doc.
+    pub fn with_columns_emptied(&self, drop: &[usize]) -> Csr {
+        let mut dead = vec![false; self.ncols];
+        for &j in drop {
+            assert!(j < self.ncols, "column {j} out of range for {} columns", self.ncols);
+            dead[j] = true;
+        }
+        let mut row_ptr = Vec::with_capacity(self.nrows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(self.col_idx.len());
+        let mut values = Vec::with_capacity(self.values.len());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if !dead[c as usize] {
+                    col_idx.push(c);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, col_idx, values }
+    }
+
     /// Keep only the rows in `keep` (by index, ascending); the result has
     /// `keep.len()` rows. Used to restrict `c` to a query's support.
     pub fn select_rows(&self, keep: &[usize]) -> Csr {
@@ -416,6 +478,59 @@ mod tests {
         assert_eq!(s.ncols(), 0);
         assert_eq!(s.nnz(), 0);
         assert_eq!(s.nrows(), 6);
+    }
+
+    #[test]
+    fn concat_columns_inverts_slice_partition() {
+        let mut rng = Pcg64::new(79);
+        for _ in 0..10 {
+            let (nr, nc, nnz) = (rng.range(1, 15), rng.range(2, 20), rng.below(60));
+            let m = random_csr(&mut rng, nr, nc, nnz);
+            let cut1 = rng.below(nc + 1);
+            let cut2 = cut1 + rng.below(nc + 1 - cut1);
+            let parts: Vec<Csr> = [0..cut1, cut1..cut2, cut2..nc]
+                .into_iter()
+                .map(|r| m.slice_columns(r))
+                .collect();
+            let refs: Vec<&Csr> = parts.iter().collect();
+            let back = Csr::concat_columns(&refs);
+            back.validate().unwrap();
+            assert_eq!(back, m, "concat of a slice partition must be bitwise the original");
+        }
+    }
+
+    #[test]
+    fn concat_columns_single_part_is_identity() {
+        let mut rng = Pcg64::new(80);
+        let m = random_csr(&mut rng, 5, 7, 20);
+        assert_eq!(Csr::concat_columns(&[&m]), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "row-count mismatch")]
+    fn concat_columns_rejects_row_mismatch() {
+        let mut rng = Pcg64::new(81);
+        let a = random_csr(&mut rng, 4, 3, 8);
+        let b = random_csr(&mut rng, 5, 3, 8);
+        let _ = Csr::concat_columns(&[&a, &b]);
+    }
+
+    #[test]
+    fn with_columns_emptied_drops_entries_keeps_shape() {
+        let mut rng = Pcg64::new(82);
+        let m = random_csr(&mut rng, 6, 9, 30);
+        let out = m.with_columns_emptied(&[2, 7]);
+        out.validate().unwrap();
+        assert_eq!(out.nrows(), m.nrows());
+        assert_eq!(out.ncols(), m.ncols());
+        for i in 0..m.nrows() {
+            for j in 0..m.ncols() {
+                let want = if j == 2 || j == 7 { 0.0 } else { m.get(i, j) };
+                assert_eq!(out.get(i, j), want);
+            }
+        }
+        // Emptying nothing is the identity.
+        assert_eq!(m.with_columns_emptied(&[]), m);
     }
 
     #[test]

@@ -168,7 +168,10 @@ fn service_end_to_end_with_mixed_backends() {
     let mut receivers = Vec::new();
     for (i, q) in corpus.queries.iter().enumerate() {
         let prefer = if i % 2 == 0 { None } else { Some(Backend::DenseRust) };
-        receivers.push((i, service.submit(QueryRequest { query: q.clone(), prefer })));
+        receivers.push((
+            i,
+            service.submit(QueryRequest { query: q.clone(), prefer, top_k: None, since: None }),
+        ));
     }
     for (i, rx) in receivers {
         let resp = rx.recv().unwrap();

@@ -1,0 +1,261 @@
+//! Live-corpus equivalence suite: the epoch-versioned segmented store
+//! must be **bitwise** indistinguishable from a from-scratch monolithic
+//! rebuild at every quiesced epoch.
+//!
+//! The property rests on column independence: Sinkhorn target columns
+//! never interact, so a segmented solve (base + deltas, deletions
+//! COW-emptied) runs the exact same per-column arithmetic as a solve
+//! over `EpochView::rebuild_monolithic`. The suite pins that down across
+//! S ∈ {1, 2, 3} shards × B ∈ {1, 4} query batches, under concurrent
+//! appends against a pinned view, across background-free compaction, and
+//! end-to-end through the service (windowed retrieval included). All
+//! solves run 1-thread / fixed-iteration so the comparison is exact.
+
+use sinkhorn_wmd::coordinator::{
+    DocStore, LiveDocStore, QueryRequest, ServiceConfig, ShardSet, ShardedDocStore, WmdService,
+};
+use sinkhorn_wmd::corpus::SyntheticCorpus;
+use sinkhorn_wmd::parallel::Pool;
+use sinkhorn_wmd::sinkhorn::{Prepared, SinkhornConfig, SolveOutput, SolveWorkspace, SparseSolver};
+use sinkhorn_wmd::sparse::{Coo, Csr};
+use sinkhorn_wmd::util::Pcg64;
+use std::sync::Arc;
+
+fn corpus() -> SyntheticCorpus {
+    SyntheticCorpus::builder()
+        .vocab_size(300)
+        .num_docs(30)
+        .embedding_dim(8)
+        .n_topics(3)
+        .num_queries(4)
+        .query_words(4, 8)
+        .seed(977)
+        .build()
+}
+
+/// Fixed-iteration config: `tolerance = 0` disables the early exit, so
+/// every path executes exactly `max_iter` iterations — no convergence
+/// check can order-skew the comparison.
+fn cfg() -> SinkhornConfig {
+    SinkhornConfig { tolerance: 0.0, max_iter: 12, ..Default::default() }
+}
+
+fn delta(vocab: usize, docs: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut coo = Coo::new(vocab, docs);
+    for j in 0..docs {
+        for _ in 0..3 {
+            coo.push(rng.below(vocab), j, rng.next_f64() + 0.1);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// A live store with two delta segments and two tombstones (one in the
+/// base segment, one in a delta), quiesced at epoch 4.
+fn mutated_live(corpus: &SyntheticCorpus) -> Arc<LiveDocStore> {
+    let live = LiveDocStore::new(DocStore::from_synthetic(corpus).into_arc()).into_arc();
+    let n = live.num_docs();
+    live.append(delta(corpus.vocab_size(), 10, 7), vec![100; 10]);
+    live.append(delta(corpus.vocab_size(), 6, 8), vec![200; 6]);
+    live.delete(3).unwrap(); // base segment
+    live.delete(n + 2).unwrap(); // first delta segment
+    live
+}
+
+fn assert_bitwise(a: &SolveOutput, b: &SolveOutput, ctx: &str) {
+    assert_eq!(a.wmd.len(), b.wmd.len(), "{ctx}: wmd length");
+    for (j, (x, y)) in a.wmd.iter().zip(&b.wmd).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: doc {j} ({x} vs {y})");
+    }
+}
+
+/// From-scratch reference: rebuild the monolithic CSR and solve it as if
+/// the store had always been that single matrix.
+fn reference(
+    solver: &SparseSolver,
+    preps: &[&Prepared],
+    live: &LiveDocStore,
+    pool: &Pool,
+) -> Vec<SolveOutput> {
+    let mono = live.view().rebuild_monolithic();
+    solver.solve_batch_in(&mut SolveWorkspace::new(), preps, &mono, pool)
+}
+
+#[test]
+fn quiesced_epoch_solve_is_bitwise_monolithic() {
+    let corpus = corpus();
+    let live = mutated_live(&corpus);
+    let view = live.view();
+    assert_eq!(view.num_segments(), 3);
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(cfg());
+    let preps: Vec<Prepared> =
+        corpus.queries.iter().map(|q| solver.prepare(&corpus.embeddings, q, &pool)).collect();
+
+    for b in [1usize, 4] {
+        let batch: Vec<&Prepared> = preps[..b].iter().collect();
+        let refs = reference(&solver, &batch, &live, &pool);
+
+        // S = 1: the segmented batch solve, exactly as the dispatcher
+        // runs it for a mutated monolithic store.
+        let segs: Vec<(usize, &Csr)> =
+            view.segments.iter().map(|s| (s.start, s.c.as_ref())).collect();
+        let got = solver.solve_segments_in(
+            &mut SolveWorkspace::new(),
+            &batch,
+            &segs,
+            view.num_docs(),
+            &pool,
+        );
+        assert_eq!(got.len(), refs.len());
+        for (q, (g, r)) in got.iter().zip(&refs).enumerate() {
+            assert_bitwise(g, r, &format!("segmented b={b} q={q}"));
+        }
+
+        // S ∈ {2, 3}: shard workers synced to the same epoch view.
+        for s in [2usize, 3] {
+            let sharded = ShardedDocStore::split(Arc::clone(live.store()), s);
+            let mut set = ShardSet::start(sharded, cfg(), 1);
+            set.sync(&view);
+            let arc_preps: Vec<Arc<Prepared>> =
+                preps[..b].iter().map(|p| Arc::new(p.clone())).collect();
+            let merged = set.solve_batch(&arc_preps);
+            assert_eq!(merged.outputs.len(), refs.len());
+            for (q, (g, r)) in merged.outputs.iter().zip(&refs).enumerate() {
+                assert_bitwise(g, r, &format!("sharded s={s} b={b} q={q}"));
+            }
+        }
+    }
+
+    // Both tombstones answer +inf, like the empty documents they became.
+    let r = reference(&solver, &[&preps[0]], &live, &pool);
+    assert!(r[0].wmd[3].is_infinite());
+    assert!(r[0].wmd[corpus.num_docs() + 2].is_infinite());
+}
+
+#[test]
+fn pinned_view_is_immune_to_concurrent_appends() {
+    let corpus = corpus();
+    let live = mutated_live(&corpus);
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(cfg());
+    let prep = solver.prepare(&corpus.embeddings, &corpus.queries[0], &pool);
+
+    // Pin the view (what the dispatcher does per popped batch), then
+    // hammer the store from another thread while we solve against it.
+    let pinned = live.view();
+    let epoch = pinned.epoch;
+    let baseline = {
+        let segs: Vec<(usize, &Csr)> =
+            pinned.segments.iter().map(|s| (s.start, s.c.as_ref())).collect();
+        solver.solve_segments_in(
+            &mut SolveWorkspace::new(),
+            &[&prep],
+            &segs,
+            pinned.num_docs(),
+            &pool,
+        )
+    };
+    let writer = {
+        let live = Arc::clone(&live);
+        let vocab = corpus.vocab_size();
+        std::thread::spawn(move || {
+            for i in 0..5 {
+                live.append(delta(vocab, 4, 90 + i), vec![300 + i as i64; 4]);
+            }
+        })
+    };
+    for round in 0..3 {
+        let segs: Vec<(usize, &Csr)> =
+            pinned.segments.iter().map(|s| (s.start, s.c.as_ref())).collect();
+        let again = solver.solve_segments_in(
+            &mut SolveWorkspace::new(),
+            &[&prep],
+            &segs,
+            pinned.num_docs(),
+            &pool,
+        );
+        assert_bitwise(&again[0], &baseline[0], &format!("pinned round {round}"));
+    }
+    writer.join().unwrap();
+    assert_eq!(pinned.epoch, epoch, "a pinned view never moves");
+    assert_eq!(pinned.num_docs(), corpus.num_docs() + 16);
+    assert_eq!(live.view().num_docs(), corpus.num_docs() + 16 + 20);
+    assert!(live.epoch() > epoch);
+}
+
+#[test]
+fn compaction_preserves_answers_bitwise() {
+    let corpus = corpus();
+    let live = mutated_live(&corpus);
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(cfg());
+    let prep = solver.prepare(&corpus.embeddings, &corpus.queries[1], &pool);
+    let before = reference(&solver, &[&prep], &live, &pool);
+
+    live.compact();
+    let view = live.view();
+    assert_eq!(view.num_segments(), 1, "compaction folds to one segment");
+    let segs: Vec<(usize, &Csr)> = view.segments.iter().map(|s| (s.start, s.c.as_ref())).collect();
+    let after = solver.solve_segments_in(
+        &mut SolveWorkspace::new(),
+        &[&prep],
+        &segs,
+        view.num_docs(),
+        &pool,
+    );
+    assert_bitwise(&after[0], &before[0], "compacted");
+    // Tombstones and timestamps survive the fold.
+    assert!(after[0].wmd[3].is_infinite());
+    assert_eq!(view.timestamp(corpus.num_docs()), 100);
+    assert_eq!(live.stats().compactions, 1);
+}
+
+#[test]
+fn service_tracks_the_live_store_across_epochs() {
+    let corpus = corpus();
+    let pool = Pool::new(1);
+    let solver = SparseSolver::new(cfg());
+    for shards in [1usize, 2] {
+        let live = LiveDocStore::new(DocStore::from_synthetic(&corpus).into_arc()).into_arc();
+        let service = WmdService::start_live(
+            Arc::clone(&live),
+            ServiceConfig { threads: 1, shards, sinkhorn: cfg(), ..Default::default() },
+            None,
+        );
+        let n = corpus.num_docs();
+
+        let fresh = service.submit_wait(QueryRequest::new(corpus.queries[0].clone()));
+        assert!(fresh.is_ok(), "{:?}", fresh.error);
+        assert_eq!(fresh.wmd.len(), n, "shards={shards}");
+
+        live.append(delta(corpus.vocab_size(), 8, 55), vec![1_000; 8]);
+        live.delete(5).unwrap();
+        let grown = service.submit_wait(QueryRequest::new(corpus.queries[0].clone()));
+        assert!(grown.is_ok(), "{:?}", grown.error);
+        assert_eq!(grown.wmd.len(), n + 8, "shards={shards}");
+        assert!(grown.wmd[5].is_infinite(), "shards={shards}: tombstone must answer +inf");
+
+        // The service's post-append answer is bitwise the from-scratch
+        // monolithic rebuild's.
+        let prep = solver.prepare(&corpus.embeddings, &corpus.queries[0], &pool);
+        let refs = reference(&solver, &[&prep], &live, &pool);
+        assert_eq!(grown.wmd.len(), refs[0].wmd.len());
+        for (j, (x, y)) in grown.wmd.iter().zip(&refs[0].wmd).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "shards={shards} doc {j} ({x} vs {y})");
+        }
+
+        // Windowed retrieval: only documents ingested at ts >= 1000 may
+        // appear, i.e. the freshly appended ones.
+        let windowed =
+            service.submit_wait(QueryRequest::top_k_since(corpus.queries[0].clone(), 5, 1_000));
+        assert!(windowed.is_ok(), "{:?}", windowed.error);
+        assert!(!windowed.top.is_empty());
+        for &(doc, wmd) in &windowed.top {
+            assert!(doc >= n, "shards={shards}: doc {doc} predates the window");
+            assert!(wmd.is_finite());
+        }
+        service.shutdown();
+    }
+}
